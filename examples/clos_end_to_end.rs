@@ -1,0 +1,76 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §End-to-end).
+//!
+//! Exercises the full three-layer stack on a real workload sweep:
+//! all six evaluated applications x all five frameworks, through the
+//! cycle-level Clos simulator and energy model — and for one
+//! (app, LORAX-OOK) pair routes the live corruption through the
+//! **AOT/PJRT executable** (Pallas kernel -> HLO text -> XLA CPU) and
+//! asserts it matches the native path exactly, proving all layers
+//! compose with Python nowhere on the request path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example clos_end_to_end -- --scale 0.25
+//! ```
+
+use anyhow::Result;
+use lorax::approx::policy::{table3_defaults, PolicyKind};
+use lorax::config::{Args, SystemConfig};
+use lorax::coordinator::{LoraxSystem, NativeCorruptor};
+use lorax::report::figures::{fig8_comparison, headline_summary};
+use lorax::runtime::XlaCorruptor;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = SystemConfig {
+        scale: args.get_f64("scale", 0.25)?,
+        seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    println!(
+        "== LORAX end-to-end: 64-core Clos PNoC, 6 apps x 5 frameworks, scale {} ==\n",
+        cfg.scale
+    );
+
+    // 1. The AOT/PJRT bridge carries real workload traffic.
+    let sys = LoraxSystem::new(&cfg);
+    let bridge_cfg = SystemConfig { scale: cfg.scale.min(0.05), ..cfg.clone() };
+    let bridge_sys = LoraxSystem::new(&bridge_cfg);
+    let tuning = table3_defaults("sobel");
+    println!("[1/3] verifying the AOT/PJRT data plane on live sobel traffic...");
+    let native =
+        bridge_sys.run_app_with_corruptor("sobel", PolicyKind::LoraxOok, tuning, NativeCorruptor)?;
+    let xla = bridge_sys.run_app_with_corruptor(
+        "sobel",
+        PolicyKind::LoraxOok,
+        tuning,
+        XlaCorruptor::new()?,
+    )?;
+    anyhow::ensure!(
+        native.error_pct == xla.error_pct && native.sim.packets == xla.sim.packets,
+        "bridge mismatch: native PE {} vs XLA PE {}",
+        native.error_pct,
+        xla.error_pct
+    );
+    println!(
+        "      native == AOT/PJRT: PE {:.4}%, {} packets, EPB {:.4} pJ/b\n",
+        native.error_pct, native.sim.packets, native.sim.epb_pj
+    );
+
+    // 2. Full Fig.-8 sweep.
+    println!("[2/3] running the Fig.-8 sweep (this is the full simulator)...");
+    let (epb, laser, reports) = fig8_comparison(&cfg)?;
+    println!("{}", epb.render());
+    println!("{}", laser.render());
+
+    // 3. Headline summary + per-run details.
+    println!("[3/3] headline numbers vs the paper:");
+    println!("{}", headline_summary(&reports).render());
+    println!("per-run details:");
+    for app_reports in &reports {
+        for r in app_reports {
+            println!("  {}", r.summary());
+        }
+    }
+    let _ = sys;
+    Ok(())
+}

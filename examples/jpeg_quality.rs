@@ -1,0 +1,25 @@
+//! Fig. 7: JPEG output quality under increasingly aggressive
+//! approximation — writes PGM images you can open to *see* the
+//! artefacts the paper shows.
+//!
+//! ```bash
+//! cargo run --release --example jpeg_quality -- --outdir out/fig7 --scale 1.0
+//! ```
+
+use anyhow::Result;
+use lorax::config::{Args, SystemConfig};
+use lorax::report::figures::fig7_jpeg;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = SystemConfig {
+        scale: args.get_f64("scale", 1.0)?,
+        seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    let outdir = std::path::PathBuf::from(args.get_or("outdir", "out/fig7"));
+    let table = fig7_jpeg(&cfg, &outdir)?;
+    println!("{}", table.render());
+    println!("open the PGMs under {} to compare panels a-d", outdir.display());
+    Ok(())
+}

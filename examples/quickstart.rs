@@ -1,0 +1,42 @@
+//! Quickstart: run one application under every framework and print the
+//! paper's headline metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --app fft --scale 0.2
+//! ```
+
+use anyhow::Result;
+use lorax::approx::policy::PolicyKind;
+use lorax::config::{Args, SystemConfig};
+use lorax::coordinator::LoraxSystem;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let app = args.get_or("app", "blackscholes");
+    let cfg = SystemConfig {
+        scale: args.get_f64("scale", 0.1)?,
+        seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+
+    println!("LORAX quickstart — {app} at scale {}\n", cfg.scale);
+    let sys = LoraxSystem::new(&cfg);
+    let mut base_epb = 0.0;
+    let mut base_laser = 0.0;
+    for kind in PolicyKind::ALL {
+        let r = sys.run_app(&app, kind)?;
+        if kind == PolicyKind::Baseline {
+            base_epb = r.sim.epb_pj;
+            base_laser = r.sim.avg_laser_mw;
+        }
+        println!(
+            "{}   [EPB {:+.1}% | laser {:+.1}% vs baseline]",
+            r.summary(),
+            100.0 * (r.sim.epb_pj / base_epb - 1.0),
+            100.0 * (r.sim.avg_laser_mw / base_laser - 1.0),
+        );
+    }
+    println!("\nSee `lorax reproduce all` for every table/figure of the paper.");
+    Ok(())
+}

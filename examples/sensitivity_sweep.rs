@@ -1,0 +1,39 @@
+//! Fig.-6-style sensitivity sweep for one application, with a custom
+//! grid — the tool a user runs to tune LORAX for *their* workload.
+//!
+//! ```bash
+//! cargo run --release --example sensitivity_sweep -- --app jpeg --scale 0.1
+//! ```
+
+use anyhow::Result;
+use lorax::approx::policy::PolicyKind;
+use lorax::approx::tuning::{select_tuning, sweep_app};
+use lorax::config::{Args, SystemConfig};
+use lorax::coordinator::LoraxSystem;
+use lorax::report::figures::render_surface;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let app = args.get_or("app", "sobel");
+    let cfg = SystemConfig {
+        scale: args.get_f64("scale", 0.05)?,
+        seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    let bits = [4u32, 8, 12, 16, 20, 24, 28, 32];
+    let reds = [0u32, 20, 40, 60, 80, 90, 100];
+
+    let sys = LoraxSystem::new(&cfg);
+    println!("sweeping {app} over {}x{} grid...", bits.len(), reds.len());
+    let surface =
+        sweep_app(&sys.ook, &app, PolicyKind::LoraxOok, cfg.seed, cfg.scale, &bits, &reds);
+    println!("{}", render_surface(&surface));
+
+    let sel = select_tuning(&surface, cfg.error_threshold_pct);
+    println!(
+        "selected tuning under {}% error: approximate {} LSBs at {}% power \
+         reduction (truncation framework would take {} bits)",
+        cfg.error_threshold_pct, sel.approx_bits, sel.power_reduction_pct, sel.trunc_bits
+    );
+    Ok(())
+}

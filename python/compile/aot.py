@@ -1,0 +1,96 @@
+"""AOT compiler: lower every Layer-2 graph to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  HLO *text* — not ``.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every graph is lowered with ``return_tuple=True`` so the Rust side always
+unwraps a tuple, regardless of arity.
+
+Also writes ``artifacts/manifest.txt``: one line per artifact with the
+entry name, input shapes/dtypes and output arity, consumed by
+``rust/src/runtime/artifacts.rs`` as a build sanity check.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)  # print_large_constants: text is the interchange
+
+
+def lower_spec(name, fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def spec_signature(example_args, fn) -> str:
+    """`name inputs -> n_outputs` manifest line body."""
+    ins = ",".join(
+        "{}[{}]".format(a.dtype, ",".join(str(d) for d in a.shape))
+        for a in example_args
+    )
+    outs = jax.eval_shape(fn, *example_args)
+    n_out = len(outs) if isinstance(outs, (tuple, list)) else 1
+    return f"{ins} -> {n_out}"
+
+
+def build(out_dir: str, only=None, force=False) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    wrote = 0
+    for name, (fn, example_args) in model.AOT_SPECS.items():
+        if only and name not in only:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_spec(name, fn, example_args)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        if force or not os.path.exists(path) or open(path).read() != text:
+            with open(path, "w") as f:
+                f.write(text)
+            wrote += 1
+            print(f"  wrote {path} ({len(text)} chars, sha {digest})")
+        else:
+            print(f"  up-to-date {path} (sha {digest})")
+        manifest.append(f"{name} {spec_signature(example_args, fn)} sha256:{digest}")
+    if not only:
+        with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest) + "\n")
+    return wrote
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out
+    # `--out ../artifacts/model.hlo.txt` style (from the Makefile) — treat a
+    # *.hlo.txt path as "directory of that file".
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    print(f"AOT lowering {len(args.only or model.AOT_SPECS)} graph(s) -> {out_dir}")
+    build(out_dir, only=args.only, force=args.force)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()
+    sys.exit(0)

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the LORAX reproduction.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO contains only plain ops that
+the CPU PJRT client (xla_extension 0.5.1) can execute.  On a real TPU the
+same kernels would lower to Mosaic; DESIGN.md records the VMEM/roofline
+reasoning under "Hardware adaptation".
+
+Kernels
+-------
+``lorax_approx``  bit-level corruption of IEEE-754 words transmitted over a
+                  lossy photonic link (mask LSBs, asymmetric stochastic
+                  bit errors derived from the receiver BER model).
+``sobel``         3x3 Sobel gradient-magnitude stencil used by the sobel
+                  workload engine and the Fig.-7-style image studies.
+"""
+
+from .lorax_approx import approx_words, fmix32, make_word_keys  # noqa: F401
+from .sobel import sobel_magnitude  # noqa: F401

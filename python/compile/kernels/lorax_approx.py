@@ -1,0 +1,136 @@
+"""LORAX approximate-transmission kernel (Layer 1, Pallas).
+
+Models what the photonic data plane does to a 32-bit word whose
+mantissa-LSB wavelengths are driven at reduced (or zero) laser power:
+
+* bits *outside* ``mask`` (sign/exponent/kept-mantissa MSBs) are carried at
+  full laser power and are never altered;
+* each bit *inside* ``mask`` is received through a fixed-threshold OOK/PAM4
+  receiver whose error behaviour is summarised by two per-word
+  probabilities: ``p10`` (a transmitted '1' falls under the decision
+  threshold and reads as '0') and ``p01`` (receiver noise pushes a '0' over
+  the threshold).  Layer 3 computes those from the photonic link budget
+  (eq. 2 of the paper) per (source, destination, laser-level) and scales
+  them to u32 thresholds.
+
+Randomness is **counter-based** so that the Pallas kernel, the pure-jnp
+oracle (``ref.py``) and the native Rust channel implementation produce
+bit-identical outputs from the same seed: the per-(word, bit) uniform is
+``fmix32(key ^ (bit+1)*GOLDEN)`` with ``key = make_word_keys(seed, index)``.
+
+Truncation (laser off, the paper's far-destination mode) is the special
+case ``p10 = ALWAYS, p01 = 0`` and reduces exactly to ``word & ~mask``.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the kernel is a pure
+elementwise pass over u32 streams — we tile the word stream into
+``BLOCK``-sized VMEM blocks (4 arrays x BLOCK x 4 B ~ 128 KiB per step,
+well under VMEM), unroll the 32 bit lanes onto the VPU, and never spill
+intermediates to HBM; it is memory-bandwidth-bound with zero MXU use.
+``interpret=True`` keeps the lowered HLO executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Golden-ratio odd constant used for key/bit derivation (Weyl increment).
+GOLDEN = 0x9E3779B9
+# Seed-domain separator for word keys.
+KEY_SALT = 0x5BF03635
+# Threshold value meaning "probability exactly 1" (see module docstring).
+ALWAYS = 0xFFFFFFFF
+
+# Words per Pallas grid step.  8192 keeps interpret-mode grid overhead low
+# while the real-TPU VMEM footprint stays ~128 KiB.
+BLOCK = 8192
+
+
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def fmix32(x):
+    """MurmurHash3 32-bit finalizer — the shared mixing primitive.
+
+    Operates elementwise on uint32 arrays; multiplication wraps mod 2^32
+    (XLA integer semantics), matching ``u32::wrapping_mul`` on the Rust
+    side and the masked-numpy oracle.
+    """
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ lax.shift_right_logical(x, _u32(16))
+    x = x * _u32(0x85EBCA6B)
+    x = x ^ lax.shift_right_logical(x, _u32(13))
+    x = x * _u32(0xC2B2AE35)
+    x = x ^ lax.shift_right_logical(x, _u32(16))
+    return x
+
+
+def make_word_keys(seed, index):
+    """Per-word RNG key: ``fmix32(seed ^ fmix32(index*GOLDEN ^ KEY_SALT))``.
+
+    ``index`` is the word's position in the *transfer* (not the batch), so
+    splitting a transfer into batches does not change the corruption.
+    """
+    index = jnp.asarray(index, jnp.uint32)
+    seed = _u32(seed)
+    return fmix32(seed ^ fmix32(index * _u32(GOLDEN) ^ _u32(KEY_SALT)))
+
+
+def _corrupt_block(words, mask, p10, p01, keys):
+    """Shared block body: corrupt one vector of words (pure jnp/lax ops)."""
+    one = _u32(1)
+    always = _u32(ALWAYS)
+    out = words & ~mask
+    # Unrolled over the 32 bit lanes; each iteration is a full-width VPU op.
+    for b in range(32):
+        bit = _u32(1 << b)
+        r = fmix32(keys ^ _u32(((b + 1) * GOLDEN) & 0xFFFFFFFF))
+        sent = lax.shift_right_logical(words, _u32(b)) & one
+        # `r < t`, with t == ALWAYS meaning probability exactly 1.
+        flip10 = (r < p10) | (p10 == always)
+        set01 = (r < p01) | (p01 == always)
+        recv1 = jnp.where(sent == one, ~flip10, set01)
+        approx_bit = jnp.where(recv1, bit, _u32(0))
+        # Masked lanes take the received value, others keep the sent value.
+        out = out | jnp.where((mask & bit) != 0, approx_bit, words & bit)
+    return out
+
+
+def _approx_kernel(words_ref, mask_ref, p10_ref, p01_ref, keys_ref, out_ref):
+    out_ref[...] = _corrupt_block(
+        words_ref[...], mask_ref[...], p10_ref[...], p01_ref[...], keys_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def approx_words(words, mask, p10, p01, keys, *, block=BLOCK):
+    """Corrupt ``words`` per the LORAX channel model.
+
+    Parameters
+    ----------
+    words : uint32[N]   IEEE-754 words as transmitted (N % block == 0; the
+                        AOT caller pads with zero-mask words).
+    mask  : uint32[N]   set bits = wavelengths driven at reduced/zero power.
+    p10   : uint32[N]   P(1 -> 0) threshold, probability * 2^32 (saturated).
+    p01   : uint32[N]   P(0 -> 1) threshold.
+    keys  : uint32[N]   per-word RNG keys from :func:`make_word_keys`.
+
+    Returns uint32[N] of received words.
+    """
+    n = words.shape[0]
+    block = min(block, n)
+    if n % block != 0:
+        raise ValueError(f"word count {n} not a multiple of block {block}")
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _approx_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(words, mask, p10, p01, keys)

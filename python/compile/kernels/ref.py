@@ -1,0 +1,81 @@
+"""Pure-jnp / numpy oracles for the Layer-1 kernels.
+
+These are the correctness ground truth: simple, obviously-right
+implementations with no Pallas, no tiling, no tricks.  ``pytest`` (and the
+hypothesis sweeps) assert the Pallas kernels match these exactly — the
+channel oracle is *bit-exact* because the counter-based RNG recipe is
+shared (see ``lorax_approx`` module docstring).
+"""
+
+import numpy as np
+
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+_KEY_SALT = np.uint32(0x5BF03635)
+_ALWAYS = np.uint32(0xFFFFFFFF)
+
+
+def fmix32_np(x):
+    """MurmurHash3 finalizer on numpy uint32 arrays (wrapping mul)."""
+    x = np.asarray(x, np.uint32)
+    with np.errstate(over="ignore"):
+        x = x ^ (x >> np.uint32(16))
+        x = x * _M1
+        x = x ^ (x >> np.uint32(13))
+        x = x * _M2
+        x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def make_word_keys_np(seed, index):
+    index = np.asarray(index, np.uint32)
+    with np.errstate(over="ignore"):
+        inner = fmix32_np(index * _GOLDEN ^ _KEY_SALT)
+        return fmix32_np(np.uint32(seed) ^ inner)
+
+
+def approx_words_ref(words, mask, p10, p01, keys):
+    """Scalar-loop oracle for :func:`lorax_approx.approx_words`."""
+    words = np.asarray(words, np.uint32)
+    mask = np.asarray(mask, np.uint32)
+    p10 = np.asarray(p10, np.uint32)
+    p01 = np.asarray(p01, np.uint32)
+    keys = np.asarray(keys, np.uint32)
+    out = np.empty_like(words)
+    for i in range(words.shape[0]):
+        w = int(words[i])
+        m = int(mask[i])
+        t10 = int(p10[i])
+        t01 = int(p01[i])
+        k = int(keys[i])
+        recv = w & ~m & 0xFFFFFFFF
+        for b in range(32):
+            bit = 1 << b
+            if not (m & bit):
+                recv |= w & bit
+                continue
+            r = int(fmix32_np(np.uint32(k ^ (((b + 1) * 0x9E3779B9) & 0xFFFFFFFF))))
+            sent = (w >> b) & 1
+            if sent:
+                received_one = not (r < t10 or t10 == 0xFFFFFFFF)
+            else:
+                received_one = r < t01 or t01 == 0xFFFFFFFF
+            if received_one:
+                recv |= bit
+        out[i] = np.uint32(recv)
+    return out
+
+
+def sobel_magnitude_ref(img):
+    """Edge-replicated 3x3 Sobel magnitude, plain numpy."""
+    img = np.asarray(img, np.float32)
+    p = np.pad(img, 1, mode="edge")
+    h, w = img.shape
+
+    def nb(dy, dx):
+        return p[dy : dy + h, dx : dx + w]
+
+    gx = nb(0, 2) + 2 * nb(1, 2) + nb(2, 2) - nb(0, 0) - 2 * nb(1, 0) - nb(2, 0)
+    gy = nb(2, 0) + 2 * nb(2, 1) + nb(2, 2) - nb(0, 0) - 2 * nb(0, 1) - nb(0, 2)
+    return np.sqrt(gx * gx + gy * gy).astype(np.float32)

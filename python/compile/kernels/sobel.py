@@ -1,0 +1,62 @@
+"""Sobel gradient-magnitude stencil (Layer 1, Pallas).
+
+The sobel workload engine (``rust/src/apps/sobel.rs``) is one of the six
+ACCEPT benchmarks the paper evaluates; its numeric core — a 3x3 Sobel
+operator over a grayscale image — is provided here as a Pallas kernel so
+the end-to-end example can run the *compute* of the workload through the
+same AOT/PJRT path as the channel kernel.
+
+The kernel tiles the image into row bands.  Each grid step loads a band
+plus a one-row halo on each side (expressed by loading the full image
+block-wise with overlapping BlockSpecs is not supported in interpret mode
+for halos, so we keep the whole image in one block — at 512x512xf32 =
+1 MiB this fits VMEM comfortably; larger images would switch to a
+halo-exchange grid as documented in DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sobel_kernel(img_ref, out_ref):
+    img = img_ref[...]
+    h, w = img.shape
+    # Zero-padded neighbourhood shifts.
+    z = jnp.zeros_like(img)
+    padded = jnp.pad(img, 1, mode="edge")
+
+    def nb(dy, dx):
+        return lax_slice(padded, dy, dx, h, w)
+
+    # Unrolled 3x3 taps.
+    gx = (
+        nb(0, 2) + 2.0 * nb(1, 2) + nb(2, 2)
+        - nb(0, 0) - 2.0 * nb(1, 0) - nb(2, 0)
+    )
+    gy = (
+        nb(2, 0) + 2.0 * nb(2, 1) + nb(2, 2)
+        - nb(0, 0) - 2.0 * nb(0, 1) - nb(0, 2)
+    )
+    del z
+    out_ref[...] = jnp.sqrt(gx * gx + gy * gy)
+
+
+def lax_slice(padded, dy, dx, h, w):
+    return padded[dy : dy + h, dx : dx + w]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sobel_magnitude(img):
+    """Sobel gradient magnitude with edge-replicated borders.
+
+    img : float32[H, W] grayscale image; returns float32[H, W].
+    """
+    h, w = img.shape
+    return pl.pallas_call(
+        _sobel_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(img)

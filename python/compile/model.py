@@ -1,0 +1,133 @@
+"""Layer-2 JAX compute graphs for the LORAX reproduction.
+
+Each public function here is a pure JAX function that ``aot.py`` lowers
+*once* to HLO text under ``artifacts/``; the Rust coordinator
+(``rust/src/runtime``) loads and executes them via PJRT with Python never
+on the request path.
+
+Graphs
+------
+``channel``       the LORAX approximate-transmission channel over a fixed
+                  batch of words — wraps the Layer-1 Pallas kernel.
+``blackscholes``  Black-Scholes call/put pricing (the blackscholes ACCEPT
+                  workload's numeric core).
+``sobel``         Sobel gradient magnitude (Pallas stencil kernel).
+``dct8x8``        batched 8x8 type-II DCT used by the jpeg workload.
+
+Batch sizes are fixed at AOT time (one executable per variant); the Rust
+side pads the final batch with zero-mask words / zero blocks.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lorax_approx
+from .kernels.sobel import sobel_magnitude
+
+# Fixed AOT batch shapes (mirrored in rust/src/runtime/artifacts.rs).
+CHANNEL_N = 65536
+CHANNEL_SMALL_N = 4096
+BLACKSCHOLES_N = 8192
+SOBEL_H = 512
+SOBEL_W = 512
+DCT_BLOCKS = 4096
+
+
+def channel(words, mask, p10, p01, keys):
+    """Approximate-transmission channel over ``CHANNEL_N`` words."""
+    return (lorax_approx.approx_words(words, mask, p10, p01, keys),)
+
+
+def _erf(x):
+    """Abramowitz & Stegun 7.1.26 rational erf (|err| < 1.5e-7).
+
+    Written in plain jnp ops: jax >= 0.4.30 lowers ``lax.erf`` to a
+    first-class ``erf`` HLO opcode that the xla_extension 0.5.1 text
+    parser rejects, so the AOT path needs an erf built from mul/exp only.
+    """
+    a = (0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429)
+    p = 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = t * (a[0] + t * (a[1] + t * (a[2] + t * (a[3] + t * a[4]))))
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _norm_cdf(x):
+    return 0.5 * (1.0 + _erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def blackscholes(spot, strike, t, rate, vol):
+    """European call/put prices (Black-Scholes closed form).
+
+    All inputs float32[N]; returns (call[N], put[N]).  This mirrors the
+    PARSEC/ACCEPT blackscholes inner loop, and is the compute half of the
+    blackscholes workload engine — the Rust engine streams option tuples
+    through the PNoC channel model and prices them via this graph in the
+    end-to-end example.
+    """
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * t) / (vol * sqrt_t)
+    d2 = d1 - vol * sqrt_t
+    disc = strike * jnp.exp(-rate * t)
+    call = spot * _norm_cdf(d1) - disc * _norm_cdf(d2)
+    put = disc * _norm_cdf(-d2) - spot * _norm_cdf(-d1)
+    return call, put
+
+
+def sobel(img):
+    """Sobel gradient magnitude over a ``SOBEL_H x SOBEL_W`` image."""
+    return (sobel_magnitude(img),)
+
+
+def _dct_matrix(n=8, dtype=jnp.float32):
+    """Orthonormal DCT-II basis matrix (rows = frequencies)."""
+    rows = []
+    for k in range(n):
+        scale = math.sqrt(1.0 / n) if k == 0 else math.sqrt(2.0 / n)
+        rows.append(
+            [scale * math.cos(math.pi * (2 * i + 1) * k / (2 * n)) for i in range(n)]
+        )
+    return jnp.asarray(rows, dtype)
+
+
+def dct8x8(blocks):
+    """Batched orthonormal 2-D DCT-II: ``D @ X @ D^T`` per 8x8 block.
+
+    blocks : float32[B, 8, 8]; returns (float32[B, 8, 8],).
+    """
+    d = _dct_matrix()
+    out = jnp.einsum("ij,bjk,lk->bil", d, blocks, d)
+    return (out,)
+
+
+def idct8x8(blocks):
+    """Inverse of :func:`dct8x8` (orthonormal, so transpose)."""
+    d = _dct_matrix()
+    out = jnp.einsum("ji,bjk,kl->bil", d, blocks, d)
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# AOT specs: name -> (fn, example ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+def _u32(n):
+    return jax.ShapeDtypeStruct((n,), jnp.uint32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+AOT_SPECS = {
+    "channel": (channel, (_u32(CHANNEL_N),) * 5),
+    "channel_small": (channel, (_u32(CHANNEL_SMALL_N),) * 5),
+    "blackscholes": (blackscholes, (_f32(BLACKSCHOLES_N),) * 5),
+    "sobel": (sobel, (_f32(SOBEL_H, SOBEL_W),)),
+    "dct8x8": (dct8x8, (_f32(DCT_BLOCKS, 8, 8),)),
+    "idct8x8": (idct8x8, (_f32(DCT_BLOCKS, 8, 8),)),
+}

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repository root by putting
+the `python/` directory (home of the `compile` package) on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

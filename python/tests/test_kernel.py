@@ -1,0 +1,157 @@
+"""Layer-1 channel kernel vs pure oracle — the core correctness signal.
+
+The Pallas kernel, the numpy oracle and the Rust native channel all share
+one counter-based RNG recipe, so equality here is *bit-exact*, not
+statistical.  Hypothesis sweeps shapes, masks, thresholds and seeds.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lorax_approx as la
+from compile.kernels import ref
+
+U32 = st.integers(min_value=0, max_value=0xFFFFFFFF)
+
+
+def run_kernel(words, mask, p10, p01, keys, block=la.BLOCK):
+    return np.asarray(
+        la.approx_words(
+            jnp.asarray(words), jnp.asarray(mask), jnp.asarray(p10),
+            jnp.asarray(p01), jnp.asarray(keys), block=block,
+        )
+    )
+
+
+def rand_arrays(seed, n):
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    mask = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    p10 = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    p01 = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    keys = ref.make_word_keys_np(seed, np.arange(n, dtype=np.uint32))
+    return words, mask, p10, p01, keys
+
+
+# ---------------------------------------------------------------------------
+# RNG primitives
+# ---------------------------------------------------------------------------
+
+class TestFmix32:
+    def test_known_values(self):
+        # murmur3 fmix32 fixed points / known outputs.
+        assert int(ref.fmix32_np(np.uint32(0))) == 0
+        # fmix32 is a bijection: distinct inputs stay distinct.
+        xs = np.arange(10000, dtype=np.uint32)
+        assert len(np.unique(ref.fmix32_np(xs))) == 10000
+
+    @given(x=U32)
+    @settings(max_examples=50, deadline=None)
+    def test_jax_matches_numpy(self, x):
+        a = int(np.asarray(la.fmix32(jnp.uint32(x))))
+        b = int(ref.fmix32_np(np.uint32(x)))
+        assert a == b
+
+    @given(seed=U32, i=st.integers(0, 2**20))
+    @settings(max_examples=50, deadline=None)
+    def test_keys_match(self, seed, i):
+        a = int(np.asarray(la.make_word_keys(seed, np.uint32(i))))
+        b = int(ref.make_word_keys_np(seed, np.uint32(i)))
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle
+# ---------------------------------------------------------------------------
+
+class TestKernelVsOracle:
+    @given(seed=st.integers(0, 2**32 - 1), n=st.sampled_from([8, 64, 128]))
+    @settings(max_examples=20, deadline=None)
+    def test_bit_exact(self, seed, n):
+        words, mask, p10, p01, keys = rand_arrays(seed, n)
+        out = run_kernel(words, mask, p10, p01, keys, block=n)
+        exp = ref.approx_words_ref(words, mask, p10, p01, keys)
+        assert np.array_equal(out, exp)
+
+    @given(seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_extreme_thresholds(self, seed):
+        n = 64
+        words, mask, _, _, keys = rand_arrays(seed, n)
+        for t10, t01 in [(0, 0), (0xFFFFFFFF, 0), (0, 0xFFFFFFFF),
+                         (0xFFFFFFFF, 0xFFFFFFFF)]:
+            p10 = np.full(n, t10, np.uint32)
+            p01 = np.full(n, t01, np.uint32)
+            out = run_kernel(words, mask, p10, p01, keys, block=n)
+            exp = ref.approx_words_ref(words, mask, p10, p01, keys)
+            assert np.array_equal(out, exp), (t10, t01)
+
+
+# ---------------------------------------------------------------------------
+# Channel invariants
+# ---------------------------------------------------------------------------
+
+class TestInvariants:
+    def test_truncation_is_mask_clear(self):
+        words, mask, _, _, keys = rand_arrays(7, 256)
+        out = run_kernel(words, mask, np.full(256, 0xFFFFFFFF, np.uint32),
+                         np.zeros(256, np.uint32), keys, block=256)
+        assert np.array_equal(out, words & ~mask)
+
+    def test_zero_prob_is_identity(self):
+        words, mask, _, _, keys = rand_arrays(8, 256)
+        z = np.zeros(256, np.uint32)
+        out = run_kernel(words, mask, z, z, keys, block=256)
+        assert np.array_equal(out, words)
+
+    @given(seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_msbs_never_touched(self, seed):
+        """Bits outside the mask — sign/exponent/kept mantissa — survive."""
+        n = 128
+        words, _, p10, p01, keys = rand_arrays(seed, n)
+        mask = np.full(n, 0x0000FFFF, np.uint32)  # 16 LSBs approximable
+        out = run_kernel(words, mask, p10, p01, keys, block=n)
+        assert np.array_equal(out & ~mask, words & ~mask)
+
+    def test_batch_split_invariance(self):
+        """Corrupting one transfer in two halves equals one shot, because
+        keys are derived from transfer-relative word indices."""
+        n = 256
+        words, mask, p10, p01, keys = rand_arrays(9, n)
+        whole = run_kernel(words, mask, p10, p01, keys, block=n)
+        h = n // 2
+        first = run_kernel(words[:h], mask[:h], p10[:h], p01[:h], keys[:h], block=h)
+        second = run_kernel(words[h:], mask[h:], p10[h:], p01[h:], keys[h:], block=h)
+        assert np.array_equal(whole, np.concatenate([first, second]))
+
+    def test_block_size_invariance(self):
+        n = 512
+        words, mask, p10, p01, keys = rand_arrays(10, n)
+        a = run_kernel(words, mask, p10, p01, keys, block=512)
+        b = run_kernel(words, mask, p10, p01, keys, block=128)
+        assert np.array_equal(a, b)
+
+    def test_non_multiple_block_rejected(self):
+        words, mask, p10, p01, keys = rand_arrays(11, 100)
+        with pytest.raises(ValueError):
+            run_kernel(words, mask, p10, p01, keys, block=64)
+
+    def test_error_rate_tracks_threshold(self):
+        """Statistical sanity: measured 1->0 rate ~ p10 threshold."""
+        n = 8192
+        rng = np.random.default_rng(3)
+        words = np.full(n, 0xFFFFFFFF, np.uint32)  # all ones
+        mask = np.full(n, 0x000000FF, np.uint32)   # 8 approximable bits
+        keys = ref.make_word_keys_np(3, np.arange(n, dtype=np.uint32))
+        for p in (0.1, 0.5, 0.9):
+            t = np.full(n, int(p * 2**32), np.uint32)
+            out = run_kernel(words, mask, t, np.zeros(n, np.uint32), keys)
+            flipped = np.unpackbits(
+                (words & mask ^ out & mask).view(np.uint8)
+            ).sum()
+            rate = flipped / (n * 8)
+            assert abs(rate - p) < 0.02, (p, rate)
+        del rng

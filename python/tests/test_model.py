@@ -1,0 +1,87 @@
+"""Layer-2 graph correctness: blackscholes closed form, DCT algebra,
+channel graph == Layer-1 kernel."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def bs_scalar(s, k, t, r, v):
+    """Scalar Black-Scholes using math.erf — independent reference."""
+    d1 = (math.log(s / k) + (r + 0.5 * v * v) * t) / (v * math.sqrt(t))
+    d2 = d1 - v * math.sqrt(t)
+    n = lambda x: 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+    call = s * n(d1) - k * math.exp(-r * t) * n(d2)
+    put = k * math.exp(-r * t) * n(-d2) - s * n(-d1)
+    return call, put
+
+
+class TestBlackScholes:
+    @given(
+        s=st.floats(10, 500), k=st.floats(10, 500), t=st.floats(0.05, 3.0),
+        r=st.floats(0.0, 0.1), v=st.floats(0.05, 0.9),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_matches_scalar(self, s, k, t, r, v):
+        c, p = model.blackscholes(*(jnp.float32(x) for x in (s, k, t, r, v)))
+        ec, ep = bs_scalar(s, k, t, r, v)
+        assert abs(float(c) - ec) < max(1e-3, 1e-3 * abs(ec))
+        assert abs(float(p) - ep) < max(1e-3, 1e-3 * abs(ep))
+
+    @given(
+        s=st.floats(10, 500), k=st.floats(10, 500), t=st.floats(0.05, 3.0),
+        r=st.floats(0.0, 0.1), v=st.floats(0.05, 0.9),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_put_call_parity(self, s, k, t, r, v):
+        c, p = model.blackscholes(*(jnp.float32(x) for x in (s, k, t, r, v)))
+        lhs = float(c) - float(p)
+        rhs = s - k * math.exp(-r * t)
+        assert abs(lhs - rhs) < max(1e-2, 1e-3 * abs(rhs))
+
+
+class TestDct:
+    def test_matrix_orthonormal(self):
+        d = np.asarray(model._dct_matrix())
+        np.testing.assert_allclose(d @ d.T, np.eye(8), atol=1e-6)
+
+    @given(seed=st.integers(0, 2**31))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip(self, seed):
+        b = np.random.default_rng(seed).standard_normal((16, 8, 8)).astype(np.float32)
+        f = model.dct8x8(jnp.asarray(b))[0]
+        r = np.asarray(model.idct8x8(f)[0])
+        np.testing.assert_allclose(r, b, atol=1e-4)
+
+    def test_dc_coefficient(self):
+        b = np.full((1, 8, 8), 4.0, np.float32)
+        f = np.asarray(model.dct8x8(jnp.asarray(b))[0])
+        # orthonormal DCT: DC = mean * 8
+        assert abs(f[0, 0, 0] - 32.0) < 1e-4
+        assert np.abs(f[0].flatten()[1:]).max() < 1e-4
+
+    def test_parseval(self):
+        b = np.random.default_rng(0).standard_normal((4, 8, 8)).astype(np.float32)
+        f = np.asarray(model.dct8x8(jnp.asarray(b))[0])
+        np.testing.assert_allclose(
+            (f**2).sum(axis=(1, 2)), (b**2).sum(axis=(1, 2)), rtol=1e-5
+        )
+
+
+class TestChannelGraph:
+    def test_equals_kernel(self):
+        n = model.CHANNEL_SMALL_N
+        rng = np.random.default_rng(1)
+        words = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+        mask = np.full(n, 0x007FFFFF, np.uint32)
+        p10 = np.full(n, 0x20000000, np.uint32)
+        p01 = np.zeros(n, np.uint32)
+        keys = ref.make_word_keys_np(42, np.arange(n, dtype=np.uint32))
+        (out,) = model.channel(*(jnp.asarray(a) for a in (words, mask, p10, p01, keys)))
+        exp = ref.approx_words_ref(words[:64], mask[:64], p10[:64], p01[:64], keys[:64])
+        assert np.array_equal(np.asarray(out)[:64], exp)

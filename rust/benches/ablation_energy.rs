@@ -1,0 +1,72 @@
+//! Ablation bench: sensitivity of the Fig.-8 results to the modeling
+//! constants DESIGN.md calls out (detection margin, receiver Q, PAM4
+//! signaling penalty, thermo-optic tuning range, VCSEL efficiency).
+//!
+//! For each knob we re-run blackscholes under LORAX-OOK/PAM4 and report
+//! the laser-power saving vs baseline, showing which conclusions are
+//! robust and which hinge on a constant.
+//!
+//! Run: `cargo bench --bench ablation_energy`
+
+use lorax::approx::policy::PolicyKind;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSystem;
+use lorax::report::Table;
+
+fn laser_saving(cfg: &SystemConfig, kind: PolicyKind) -> (f64, f64) {
+    let sys = LoraxSystem::new(cfg);
+    let base = sys.run_app("blackscholes", PolicyKind::Baseline).unwrap();
+    let r = sys.run_app("blackscholes", kind).unwrap();
+    (
+        100.0 * (1.0 - r.sim.energy.laser_pj / base.sim.energy.laser_pj),
+        r.error_pct,
+    )
+}
+
+fn main() {
+    let scale = 0.05;
+    let mut t = Table::new(
+        "Ablation — laser saving vs baseline (blackscholes), varying model constants",
+        &["knob", "value", "OOK saving %", "OOK PE %", "PAM4 saving %", "PAM4 PE %"],
+    );
+
+    let mut run = |knob: &str, value: &str, f: &dyn Fn(&mut SystemConfig)| {
+        let mut cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+        f(&mut cfg);
+        let (ook, ook_pe) = laser_saving(&cfg, PolicyKind::LoraxOok);
+        let (pam, pam_pe) = laser_saving(&cfg, PolicyKind::LoraxPam4);
+        t.row(&[
+            knob.to_string(),
+            value.to_string(),
+            format!("{ook:.1}"),
+            format!("{ook_pe:.2}"),
+            format!("{pam:.1}"),
+            format!("{pam_pe:.2}"),
+        ]);
+    };
+
+    run("(defaults)", "-", &|_| {});
+    for margin in [0.0, 0.5, 2.0, 4.0] {
+        run("detection_margin_db", &format!("{margin}"), &move |c| {
+            c.photonic.detection_margin_db = margin;
+        });
+    }
+    for q in [5.0, 6.0, 8.0, 10.0] {
+        run("q_calibration", &format!("{q}"), &move |c| c.photonic.q_calibration = q);
+    }
+    for pen in [3.0, 5.8, 8.0] {
+        run("pam4_signaling_loss_db", &format!("{pen}"), &move |c| {
+            c.photonic.pam4_signaling_loss_db = pen;
+        });
+    }
+    for nm in [0.25, 0.5, 1.0] {
+        run("tuning_range_nm", &format!("{nm}"), &move |c| c.photonic.tuning_range_nm = nm);
+    }
+    for wpe in [0.1, 0.15, 0.3] {
+        run("vcsel_wall_plug_efficiency", &format!("{wpe}"), &move |c| {
+            c.photonic.vcsel_wall_plug_efficiency = wpe;
+        });
+    }
+
+    println!("{}", t.render());
+}

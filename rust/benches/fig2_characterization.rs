@@ -1,0 +1,37 @@
+//! Bench + reproduction: Fig. 2 — float/int packet characterization.
+//!
+//! Prints the paper's Fig.-2 rows (per-application float/int breakdown)
+//! and times the workload engines (the gem5 substitute's throughput).
+//!
+//! Run: `cargo bench --bench fig2_characterization`
+//! Env: LORAX_BENCH_SCALE (default 0.1), LORAX_BENCH_ITERS (default 3).
+
+use lorax::apps::{by_name_scaled, ALL_APPS};
+use lorax::approx::channel::{Channel, IdentityChannel};
+use lorax::config::SystemConfig;
+use lorax::report::figures::fig2_characterization;
+use lorax::util::bench::{bench, black_box};
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_f64("LORAX_BENCH_SCALE", 0.1);
+    let iters = env_f64("LORAX_BENCH_ITERS", 3.0) as usize;
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+
+    println!("{}", fig2_characterization(&cfg).unwrap().render());
+
+    println!("-- engine throughput (identity channel, scale {scale}) --");
+    for app in ALL_APPS {
+        let w = by_name_scaled(app, cfg.seed, scale).unwrap();
+        let mut packets = 0u64;
+        let r = bench(&format!("engine:{app}"), 1, iters, || {
+            let mut ch = IdentityChannel::new();
+            black_box(w.run(&mut ch));
+            packets = ch.stats().profile.total_packets();
+        });
+        println!("{}", r.report(packets as f64, "pkts"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench + reproduction: Fig. 6 — per-application sensitivity surfaces.
+//!
+//! Regenerates the output-error grids (LSBs x laser power reduction) for
+//! every evaluated application and times one sweep cell per app.
+//!
+//! Run: `cargo bench --bench fig6_sensitivity`
+//! Env: LORAX_BENCH_SCALE (default 0.05 — a full-grid sweep is 88 runs
+//! per app), LORAX_BENCH_GRID (tiny|small|full, default small).
+
+use lorax::approx::policy::PolicyKind;
+use lorax::approx::tuning::{sweep_app, BITS_AXIS, REDUCTION_AXIS};
+use lorax::apps::EVALUATED_APPS;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSystem;
+use lorax::report::figures::render_surface;
+use lorax::util::bench::bench;
+
+fn main() {
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+    let grid = std::env::var("LORAX_BENCH_GRID").unwrap_or_else(|_| "small".into());
+    let (bits, reds): (Vec<u32>, Vec<u32>) = match grid.as_str() {
+        "tiny" => (vec![16, 32], vec![0, 80, 100]),
+        "full" => (BITS_AXIS.to_vec(), REDUCTION_AXIS.to_vec()),
+        _ => (vec![8, 16, 24, 32], vec![0, 20, 50, 80, 100]),
+    };
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+    let sys = LoraxSystem::new(&cfg);
+
+    for app in EVALUATED_APPS {
+        let surface = sweep_app(&sys.ook, app, PolicyKind::LoraxOok, cfg.seed, scale, &bits, &reds);
+        println!("{}", render_surface(&surface));
+    }
+
+    println!("-- sweep-cell cost (one (bits=16, red=80) run per app) --");
+    for app in EVALUATED_APPS {
+        let r = bench(&format!("sweep-cell:{app}"), 1, 3, || {
+            let s = sweep_app(&sys.ook, app, PolicyKind::LoraxOok, cfg.seed, scale, &[16], &[80]);
+            assert_eq!(s.points.len(), 1);
+        });
+        println!("{}", r.report(1.0, "cell"));
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench + reproduction: Fig. 7 — JPEG output quality panels.
+//!
+//! Writes the four PGM panels (original codec output + 24/28/32-LSB
+//! approximation at 80% power reduction), prints the PSNR/PE table, and
+//! times the jpeg pipeline.
+//!
+//! Run: `cargo bench --bench fig7_jpeg_quality`
+//! Env: LORAX_BENCH_SCALE (default 0.25 => 256x256 panels).
+
+use lorax::apps::jpeg::Jpeg;
+use lorax::apps::Workload;
+use lorax::approx::channel::IdentityChannel;
+use lorax::config::SystemConfig;
+use lorax::report::figures::fig7_jpeg;
+use lorax::util::bench::{bench, black_box};
+
+fn main() {
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+    let outdir = std::path::PathBuf::from("out/fig7");
+
+    println!("{}", fig7_jpeg(&cfg, &outdir).unwrap().render());
+    println!("PGM panels under {}", outdir.display());
+
+    let side = ((512.0 * scale.sqrt()) as usize / 64).max(1) * 64;
+    let jpeg = Jpeg::new(side, cfg.seed);
+    let blocks = (side / 8) * (side / 8);
+    let r = bench("jpeg:roundtrip(identity)", 1, 5, || {
+        let mut ch = IdentityChannel::new();
+        black_box(jpeg.run(&mut ch));
+    });
+    println!("{}", r.report(blocks as f64, "blocks"));
+}

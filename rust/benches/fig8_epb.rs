@@ -1,0 +1,32 @@
+//! Bench + reproduction: Fig. 8(a) — energy-per-bit across frameworks,
+//! plus the §5.3 headline EPB reductions.
+//!
+//! Run: `cargo bench --bench fig8_epb`
+//! Env: LORAX_BENCH_SCALE (default 0.1).
+
+use lorax::approx::policy::PolicyKind;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSystem;
+use lorax::report::figures::{fig8_comparison, headline_summary};
+use lorax::util::bench::{bench, black_box};
+
+fn main() {
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.1);
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+
+    let (epb, _laser, reports) = fig8_comparison(&cfg).unwrap();
+    println!("{}", epb.render());
+    println!("{}", headline_summary(&reports).render());
+
+    // Time one full framework run (app + channel + sim + energy).
+    let sys = LoraxSystem::new(&cfg);
+    for kind in [PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4] {
+        let r = bench(&format!("fig8:blackscholes:{}", kind.name()), 1, 3, || {
+            black_box(sys.run_app("blackscholes", kind).unwrap());
+        });
+        println!("{}", r.report(1.0, "run"));
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench + reproduction: Fig. 8(b) — average laser power across
+//! frameworks, plus laser-power headline reductions and the per-packet
+//! simulator throughput that produces them.
+//!
+//! Run: `cargo bench --bench fig8_laser`
+//! Env: LORAX_BENCH_SCALE (default 0.1).
+
+use lorax::approx::policy::{Policy, PolicyKind};
+use lorax::config::SystemConfig;
+use lorax::coordinator::{GwiDecisionEngine, LoraxSystem};
+use lorax::noc::sim::Simulator;
+use lorax::phys::params::{Modulation, PhotonicParams};
+use lorax::report::figures::{fig8_comparison, headline_summary};
+use lorax::topology::clos::ClosTopology;
+use lorax::traffic::synth::{generate, SynthConfig};
+use lorax::util::bench::{bench, black_box};
+
+fn main() {
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.1);
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+
+    let (_epb, laser, reports) = fig8_comparison(&cfg).unwrap();
+    println!("{}", laser.render());
+    println!("{}", headline_summary(&reports).render());
+    let _ = LoraxSystem::new(&cfg);
+
+    // Simulator replay throughput on synthetic traffic.
+    let trace = generate(&SynthConfig {
+        cycles: 20_000,
+        rate_per_100_cycles: 20,
+        seed: 42,
+        ..Default::default()
+    });
+    let engine = GwiDecisionEngine::new(
+        ClosTopology::default_64core(),
+        PhotonicParams::default(),
+        Modulation::Ook,
+    );
+    let sim = Simulator::new(&engine);
+    for kind in [PolicyKind::Baseline, PolicyKind::LoraxOok] {
+        let policy = Policy::new(kind, "fft");
+        let r = bench(&format!("sim:replay:{}", kind.name()), 1, 5, || {
+            black_box(sim.run(&trace, &policy));
+        });
+        println!("{}", r.report(trace.len() as f64, "pkts"));
+    }
+}

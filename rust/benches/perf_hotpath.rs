@@ -1,0 +1,99 @@
+//! Performance benchmarks for the hot paths (the §Perf deliverable).
+//!
+//! * native corruption kernel (words/s) across regimes (fast paths,
+//!   stochastic, dense mask);
+//! * AOT/PJRT channel executable (words/s incl. PJRT transfer overhead);
+//! * GWI decision engine (decisions/s);
+//! * cycle-level simulator replay (packets/s);
+//! * end-to-end app run (one sobel pass through the full stack).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+//! Env: LORAX_BENCH_XLA=0 to skip the PJRT benches.
+
+use lorax::approx::float_bits::{corrupt_f32_words, mask_for_lsbs};
+use lorax::approx::policy::{Policy, PolicyKind};
+use lorax::config::SystemConfig;
+use lorax::coordinator::channel::Corruptor;
+use lorax::coordinator::{GwiDecisionEngine, LoraxSystem};
+use lorax::noc::sim::Simulator;
+use lorax::phys::params::{Modulation, PhotonicParams};
+use lorax::topology::clos::ClosTopology;
+use lorax::traffic::synth::{generate, SynthConfig};
+use lorax::util::bench::{bench, black_box};
+use lorax::util::Rng;
+
+fn main() {
+    let n = 1 << 20; // 1M words per iteration
+    let mut rng = Rng::new(1);
+    let base: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+
+    // --- native kernel regimes ---------------------------------------
+    let regimes: &[(&str, u32, u32, u32)] = &[
+        ("identity (t=0 fast path)", mask_for_lsbs(16), 0, 0),
+        ("truncation (fast path)", mask_for_lsbs(16), u32::MAX, 0),
+        ("stochastic 16-bit mask", mask_for_lsbs(16), 0x2000_0000, 0x0010_0000),
+        ("stochastic 32-bit mask", u32::MAX, 0x2000_0000, 0x0010_0000),
+    ];
+    let mut buf = base.clone();
+    for (name, mask, t10, t01) in regimes {
+        let r = bench(&format!("native:{name}"), 1, 7, || {
+            buf.copy_from_slice(&base);
+            corrupt_f32_words(black_box(&mut buf), *mask, *t10, *t01, 7);
+        });
+        println!("{}", r.report(n as f64, "words"));
+    }
+
+    // --- AOT/PJRT channel ---------------------------------------------
+    if std::env::var("LORAX_BENCH_XLA").map(|v| v != "0").unwrap_or(true) {
+        match lorax::runtime::XlaCorruptor::new() {
+            Ok(mut xla) => {
+                let nx = 1 << 17; // 2 batches of the large artifact
+                let mut buf = base[..nx].to_vec();
+                let r = bench("xla-pjrt:stochastic 16-bit mask", 1, 5, || {
+                    buf.copy_from_slice(&base[..nx]);
+                    xla.corrupt_words(black_box(&mut buf), 0xFFFF, 0x2000_0000, 0x10_0000, 7);
+                });
+                println!("{}", r.report(nx as f64, "words"));
+            }
+            Err(e) => eprintln!("skipping PJRT benches: {e:#}"),
+        }
+    }
+
+    // --- decision engine -----------------------------------------------
+    let engine = GwiDecisionEngine::new(
+        ClosTopology::default_64core(),
+        PhotonicParams::default(),
+        Modulation::Ook,
+    );
+    let policy = Policy::new(PolicyKind::LoraxOok, "blackscholes");
+    let r = bench("gwi:decide (8x7 pairs)", 10, 20, || {
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    black_box(engine.decide(&policy, s, d));
+                }
+            }
+        }
+    });
+    println!("{}", r.report(56.0, "decisions"));
+
+    // --- simulator replay ----------------------------------------------
+    let trace = generate(&SynthConfig {
+        cycles: 50_000,
+        rate_per_100_cycles: 20,
+        seed: 3,
+        ..Default::default()
+    });
+    let sim = Simulator::new(&engine);
+    let r = bench("sim:replay LORAX-OOK", 1, 5, || {
+        black_box(sim.run(&trace, &policy));
+    });
+    println!("{}", r.report(trace.len() as f64, "pkts"));
+
+    // --- end-to-end app ------------------------------------------------
+    let sys = LoraxSystem::new(&SystemConfig { scale: 0.1, seed: 42, ..Default::default() });
+    let r = bench("e2e:sobel LORAX-OOK (scale 0.1)", 1, 3, || {
+        black_box(sys.run_app("sobel", PolicyKind::LoraxOok).unwrap());
+    });
+    println!("{}", r.report(1.0, "run"));
+}

@@ -1,0 +1,38 @@
+//! Bench + reproduction: Table 3 — application-specific (LSBs, laser
+//! level) selection under the 10% output-error ceiling.
+//!
+//! Run: `cargo bench --bench table3_selection`
+//! Env: LORAX_BENCH_SCALE (default 0.05), LORAX_BENCH_GRID.
+
+use lorax::config::SystemConfig;
+use lorax::report::figures::{fig6_surfaces, table3_selection};
+use lorax::util::bench::bench;
+
+fn main() {
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+    let grid = std::env::var("LORAX_BENCH_GRID").unwrap_or_else(|_| "small".into());
+    let (bits, reds): (Vec<u32>, Vec<u32>) = match grid.as_str() {
+        "tiny" => (vec![16, 32], vec![0, 80, 100]),
+        "full" => (
+            lorax::approx::tuning::BITS_AXIS.to_vec(),
+            lorax::approx::tuning::REDUCTION_AXIS.to_vec(),
+        ),
+        _ => (vec![8, 16, 24, 32], vec![0, 20, 50, 80, 100]),
+    };
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+
+    let surfaces = fig6_surfaces(&cfg, &lorax::apps::EVALUATED_APPS, &bits, &reds);
+    println!("{}", table3_selection(&cfg, &surfaces).render());
+
+    // Selection itself is cheap; what matters is that it is stable.
+    let r = bench("table3:selection", 2, 10, || {
+        for s in &surfaces {
+            let t = lorax::approx::tuning::select_tuning(s, cfg.error_threshold_pct);
+            std::hint::black_box(t);
+        }
+    });
+    println!("{}", r.report(surfaces.len() as f64, "selections"));
+}

@@ -1,0 +1,221 @@
+//! The [`Channel`] abstraction: how workload engines communicate.
+//!
+//! Engines are written against this trait; the backend decides what
+//! happens to the bits.  [`IdentityChannel`] delivers everything intact
+//! (the golden run, and the Fig.-2 characterization counter);
+//! [`crate::coordinator::PhotonicChannel`] applies the full LORAX
+//! decision + corruption model, natively or through the AOT/PJRT
+//! executable.  Output error (paper eq. 3) is always *measured* by
+//! running the same engine over both backends.
+
+use super::policy::TransferMode;
+use crate::topology::clos::NodeId;
+use crate::traffic::packet::{Packet, PayloadKind, TrafficProfile, LINE_WORDS};
+use crate::traffic::trace::TraceRecord;
+
+/// Word-level accounting of what the channel did to float payloads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChannelStats {
+    /// Per-kind packet/word counters (Fig. 2 data).
+    pub profile: TrafficProfile,
+    /// Total transfers (any kind).
+    pub transfers: u64,
+    /// Doubles that crossed a photonic link with LSBs at reduced power.
+    pub values_reduced: u64,
+    /// Doubles that crossed with LSBs truncated.
+    pub values_truncated: u64,
+    /// Doubles delivered fully intact.
+    pub values_exact: u64,
+}
+
+impl ChannelStats {
+    pub fn record_mode(&mut self, mode: TransferMode, values: u64) {
+        match mode {
+            TransferMode::FullPower => self.values_exact += values,
+            TransferMode::Reduced { .. } => self.values_reduced += values,
+            TransferMode::Truncated => self.values_truncated += values,
+        }
+    }
+}
+
+/// Transport abstraction the workload engines call into.
+pub trait Channel {
+    /// Move `data` from `src` to `dst`, mutating it per the channel model
+    /// when `approximable` and the active policy allow.
+    fn send_f64(&mut self, src: NodeId, dst: NodeId, data: &mut [f64], approximable: bool);
+
+    /// Integer payload: counted and charged, never approximated.
+    fn send_ints(&mut self, src: NodeId, dst: NodeId, words: usize);
+
+    /// Control/coherence message of `words` payload words.
+    fn send_control(&mut self, src: NodeId, dst: NodeId, words: u32);
+
+    fn stats(&self) -> &ChannelStats;
+
+    /// Drain the recorded trace (for NoC replay).
+    fn take_trace(&mut self) -> Vec<TraceRecord>;
+}
+
+/// Split a payload of `words` 32-bit words into cache-line packets and
+/// record them.  Returns the number of packets.
+pub(crate) fn packetize(
+    profile: &mut TrafficProfile,
+    trace: &mut Vec<TraceRecord>,
+    clock: &mut u64,
+    src: NodeId,
+    dst: NodeId,
+    kind: PayloadKind,
+    words: usize,
+    approximable: bool,
+) -> u32 {
+    let mut emit = |payload: u32, clock: &mut u64| {
+        let pkt = Packet { src, dst, kind, payload_words: payload, approximable };
+        profile.record(&pkt);
+        trace.push(TraceRecord { inject_cycle: *clock, packet: pkt });
+        *clock += 1;
+    };
+    if kind == PayloadKind::Control {
+        emit(words as u32, clock);
+        return 1;
+    }
+    let mut remaining = words as u32;
+    let mut packets = 0;
+    while remaining > 0 {
+        let take = remaining.min(LINE_WORDS);
+        emit(take, clock);
+        remaining -= take;
+        packets += 1;
+    }
+    packets
+}
+
+/// Golden channel: perfect delivery, full accounting.
+#[derive(Default)]
+pub struct IdentityChannel {
+    stats: ChannelStats,
+    trace: Vec<TraceRecord>,
+    clock: u64,
+}
+
+impl IdentityChannel {
+    pub fn new() -> IdentityChannel {
+        IdentityChannel::default()
+    }
+}
+
+impl Channel for IdentityChannel {
+    fn send_f64(&mut self, src: NodeId, dst: NodeId, data: &mut [f64], approximable: bool) {
+        self.stats.transfers += 1;
+        self.stats.values_exact += data.len() as u64;
+        // The wire carries IEEE-754 single precision (DESIGN.md §5):
+        // even the golden channel pays the SP quantization, so output
+        // error measures *corruption*, not float rounding.
+        for v in data.iter_mut() {
+            *v = *v as f32 as f64;
+        }
+        packetize(
+            &mut self.stats.profile,
+            &mut self.trace,
+            &mut self.clock,
+            src,
+            dst,
+            PayloadKind::Float64,
+            data.len(),
+            approximable,
+        );
+    }
+
+    fn send_ints(&mut self, src: NodeId, dst: NodeId, words: usize) {
+        self.stats.transfers += 1;
+        packetize(
+            &mut self.stats.profile,
+            &mut self.trace,
+            &mut self.clock,
+            src,
+            dst,
+            PayloadKind::Int,
+            words,
+            false,
+        );
+    }
+
+    fn send_control(&mut self, src: NodeId, dst: NodeId, words: u32) {
+        self.stats.transfers += 1;
+        packetize(
+            &mut self.stats.profile,
+            &mut self.trace,
+            &mut self.clock,
+            src,
+            dst,
+            PayloadKind::Control,
+            words as usize,
+            false,
+        );
+    }
+
+    fn stats(&self) -> &ChannelStats {
+        &self.stats
+    }
+
+    fn take_trace(&mut self) -> Vec<TraceRecord> {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_preserves_data() {
+        let mut ch = IdentityChannel::new();
+        let mut xs = vec![1.0f64, -2.5, 3.25];
+        let before = xs.clone();
+        ch.send_f64(NodeId::Core(0), NodeId::Core(9), &mut xs, true);
+        assert_eq!(xs, before);
+        assert_eq!(ch.stats().values_exact, 3);
+    }
+
+    #[test]
+    fn packetization_line_granularity() {
+        let mut ch = IdentityChannel::new();
+        // 20 values = 20 SP words = 1 full line (16) + 1 partial (4).
+        let mut xs = vec![0.5f64; 20];
+        ch.send_f64(NodeId::Core(0), NodeId::Core(9), &mut xs, true);
+        assert_eq!(ch.stats().profile.float_packets, 2);
+        assert_eq!(ch.stats().profile.float_words, 20);
+        let trace = ch.take_trace();
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[0].packet.payload_words, 16);
+        assert_eq!(trace[1].packet.payload_words, 4);
+    }
+
+    #[test]
+    fn identity_pays_sp_quantization_only() {
+        let mut ch = IdentityChannel::new();
+        let mut xs = vec![std::f64::consts::PI, 1.0e-40, -7.25];
+        ch.send_f64(NodeId::Core(0), NodeId::Core(9), &mut xs, true);
+        assert_eq!(xs[0], std::f64::consts::PI as f32 as f64);
+        assert_eq!(xs[2], -7.25); // exactly representable in f32
+    }
+
+    #[test]
+    fn int_and_control_counted_separately() {
+        let mut ch = IdentityChannel::new();
+        ch.send_ints(NodeId::Core(0), NodeId::Core(1), 16);
+        ch.send_control(NodeId::Core(1), NodeId::Core(0), 2);
+        let p = &ch.stats().profile;
+        assert_eq!(p.int_packets, 1);
+        assert_eq!(p.control_packets, 1);
+        assert_eq!(p.float_packets, 0);
+        assert_eq!(ch.stats().transfers, 2);
+    }
+
+    #[test]
+    fn trace_drain_resets() {
+        let mut ch = IdentityChannel::new();
+        ch.send_ints(NodeId::Core(0), NodeId::Core(1), 4);
+        assert_eq!(ch.take_trace().len(), 1);
+        assert!(ch.take_trace().is_empty());
+    }
+}

@@ -1,0 +1,352 @@
+//! IEEE-754 word manipulation and the **native corruption kernel**.
+//!
+//! This is the Rust twin of the Layer-1 Pallas kernel
+//! (`python/compile/kernels/lorax_approx.py`): same counter-based RNG,
+//! same thresholds semantics, bit-identical outputs.  The coordinator uses
+//! it as the in-process hot path; `runtime::channel_exec` routes the same
+//! arrays through the AOT HLO executable, and the integration tests assert
+//! the two agree word-for-word.
+//!
+//! Word layout convention (shared with the AOT path): the PNoC wire
+//! carries IEEE-754 *single precision* (DESIGN.md §5) — a transfer of
+//! `n` values is `n` u32 words, and the word index within the transfer
+//! keys the RNG, so any batching produces the same corruption.  A
+//! double-precision `[lo, hi]` variant is retained below for the DP
+//! channel mode and its tests.
+
+use crate::util::rng::{bit_rand, make_word_key, ALWAYS};
+
+/// Bit mask selecting the `bits` least-significant bits of the low word
+/// of a double (the paper's "number of approximated LSBs", 0..=32).
+#[inline]
+pub fn mask_for_lsbs(bits: u32) -> u32 {
+    match bits {
+        0 => 0,
+        32.. => u32::MAX,
+        b => (1u32 << b) - 1,
+    }
+}
+
+/// Corrupt one word through the photonic channel model.
+///
+/// * `mask` — bits carried on reduced/zero-power wavelengths;
+/// * `t10`/`t01` — error thresholds (probability x 2^32; `ALWAYS` = 1.0);
+/// * `key` — per-word RNG key from [`make_word_key`].
+#[inline]
+pub fn corrupt_word(word: u32, mask: u32, t10: u32, t01: u32, key: u32) -> u32 {
+    if mask == 0 || (t10 == 0 && t01 == 0) {
+        return word; // error-free fast path
+    }
+    if t10 == ALWAYS && t01 == 0 {
+        return word & !mask; // exact truncation fast path
+    }
+    let mut out = word & !mask;
+    let mut m = mask;
+    while m != 0 {
+        let b = m.trailing_zeros();
+        m &= m - 1;
+        let r = bit_rand(key, b);
+        let sent_one = (word >> b) & 1 == 1;
+        let recv_one = if sent_one {
+            !(r < t10 || t10 == ALWAYS)
+        } else {
+            r < t01 || t01 == ALWAYS
+        };
+        if recv_one {
+            out |= 1 << b;
+        }
+    }
+    out
+}
+
+/// Corrupt a full word array with per-word parameters (the exact
+/// signature of the AOT `channel` artifact, for cross-validation).
+pub fn corrupt_words(
+    words: &mut [u32],
+    masks: &[u32],
+    t10s: &[u32],
+    t01s: &[u32],
+    keys: &[u32],
+) {
+    assert!(
+        words.len() == masks.len()
+            && words.len() == t10s.len()
+            && words.len() == t01s.len()
+            && words.len() == keys.len()
+    );
+    for i in 0..words.len() {
+        words[i] = corrupt_word(words[i], masks[i], t10s[i], t01s[i], keys[i]);
+    }
+}
+
+/// Corrupt the low words of a double-precision payload in place.
+///
+/// `mask`/`t10`/`t01` apply to every value's low word (high words ride
+/// full-power wavelengths and are untouched); `seed` identifies the
+/// transfer; word indices follow the shared layout convention.
+pub fn corrupt_f64_slice(data: &mut [f64], mask: u32, t10: u32, t01: u32, seed: u32) {
+    if mask == 0 || (t10 == 0 && t01 == 0) {
+        return;
+    }
+    for (i, v) in data.iter_mut().enumerate() {
+        let bits = v.to_bits();
+        let lo = bits as u32;
+        let key = make_word_key(seed, (2 * i) as u32);
+        let lo2 = corrupt_word(lo, mask, t10, t01, key);
+        if lo2 != lo {
+            *v = f64::from_bits((bits & 0xFFFF_FFFF_0000_0000) | lo2 as u64);
+        }
+    }
+}
+
+/// Convert a compute-side f64 payload to the single-precision wire
+/// format: one u32 word per value (see DESIGN.md §5 — the paper's
+/// 4..32-LSB axis spans a whole SP word, so the PNoC carries floats as
+/// IEEE-754 single precision; word index == value index keys the RNG).
+pub fn f64s_to_f32_words(data: &[f64]) -> Vec<u32> {
+    data.iter().map(|v| (*v as f32).to_bits()).collect()
+}
+
+/// Inverse of [`f64s_to_f32_words`] (back to compute precision).
+pub fn f32_words_to_f64s(words: &[u32]) -> Vec<f64> {
+    words.iter().map(|w| f32::from_bits(*w) as f64).collect()
+}
+
+/// Corrupt a single-precision wire payload in place: every word gets the
+/// same (mask, thresholds); keys come from the word index within the
+/// transfer.
+///
+/// Hot path of the whole stack (§Perf): processed bit-major over chunks
+/// of words with a fully branchless inner loop so LLVM auto-vectorizes
+/// the `fmix32` + compare + select across words.  Bit-for-bit identical
+/// to the scalar [`corrupt_word`] (property-tested) and to the Pallas
+/// kernel.
+pub fn corrupt_f32_words(words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32) {
+    if mask == 0 || (t10 == 0 && t01 == 0) {
+        return;
+    }
+    if t10 == ALWAYS && t01 == 0 {
+        for w in words.iter_mut() {
+            *w &= !mask;
+        }
+        return;
+    }
+    const CHUNK: usize = 512;
+    let t10_always = (t10 == ALWAYS) as u32;
+    let t01_always = (t01 == ALWAYS) as u32;
+    // When t01 == 0, transmitted '0' bits can never flip to '1', so the
+    // result only depends on r where the sent bit is 1 — but computing r
+    // unconditionally is what vectorizes, so we always compute it.
+    let mut keys = [0u32; CHUNK];
+    let mut acc = [0u32; CHUNK];
+    let n = words.len();
+    let mut start = 0;
+    while start < n {
+        let m = CHUNK.min(n - start);
+        for (j, k) in keys[..m].iter_mut().enumerate() {
+            *k = make_word_key(seed, (start + j) as u32);
+        }
+        for a in acc[..m].iter_mut() {
+            *a = 0;
+        }
+        let mut mbits = mask;
+        while mbits != 0 {
+            let b = mbits.trailing_zeros();
+            mbits &= mbits - 1;
+            let cb = (b + 1).wrapping_mul(crate::util::rng::GOLDEN);
+            let chunk = &words[start..start + m];
+            for j in 0..m {
+                let r = fmix32_inline(keys[j] ^ cb);
+                let sent = (chunk[j] >> b) & 1;
+                let flip10 = ((r < t10) as u32) | t10_always;
+                let set01 = ((r < t01) as u32) | t01_always;
+                let recv1 = (sent & (flip10 ^ 1)) | ((sent ^ 1) & set01);
+                acc[j] |= recv1 << b;
+            }
+        }
+        for j in 0..m {
+            words[start + j] = (words[start + j] & !mask) | acc[j];
+        }
+        start += m;
+    }
+}
+
+/// Local always-inline fmix32 copy for the vectorized loop.
+#[inline(always)]
+fn fmix32_inline(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// Flatten doubles to the double-precision `[lo, hi]` word layout
+/// (retained for the DP variant of the channel and its tests).
+pub fn f64s_to_words(data: &[f64]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    for v in data {
+        let bits = v.to_bits();
+        out.push(bits as u32);
+        out.push((bits >> 32) as u32);
+    }
+    out
+}
+
+/// Inverse of [`f64s_to_words`].
+pub fn words_to_f64s(words: &[u32]) -> Vec<f64> {
+    assert!(words.len() % 2 == 0);
+    words
+        .chunks_exact(2)
+        .map(|c| f64::from_bits((c[1] as u64) << 32 | c[0] as u64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn mask_edges() {
+        assert_eq!(mask_for_lsbs(0), 0);
+        assert_eq!(mask_for_lsbs(1), 1);
+        assert_eq!(mask_for_lsbs(16), 0xFFFF);
+        assert_eq!(mask_for_lsbs(31), 0x7FFF_FFFF);
+        assert_eq!(mask_for_lsbs(32), u32::MAX);
+        assert_eq!(mask_for_lsbs(40), u32::MAX);
+    }
+
+    #[test]
+    fn golden_vs_python_oracle() {
+        // Generated with python/compile/kernels/ref.py:
+        //   words=[0xDEADBEEF, 0x12345678, 0xFFFFFFFF, 0x00000000]
+        //   mask=0x0000FFFF t10=0x40000000 t01=0x00100000 seed=123
+        //   keys=make_word_keys_np(123, [0,1,2,3])
+        // (regenerate: python -c "...", see rust/tests/integration_runtime.rs)
+        let seed = 123u32;
+        let words = [0xDEAD_BEEFu32, 0x1234_5678, 0xFFFF_FFFF, 0x0000_0000];
+        let expected = python_oracle_golden();
+        for (i, (&w, &e)) in words.iter().zip(expected.iter()).enumerate() {
+            let key = make_word_key(seed, i as u32);
+            let got = corrupt_word(w, 0x0000_FFFF, 0x4000_0000, 0x0010_0000, key);
+            assert_eq!(got, e, "word {i}: got {got:#x} want {e:#x}");
+        }
+    }
+
+    // Filled in from the python oracle (see integration_runtime test which
+    // revalidates the same vectors through the AOT artifact).
+    fn python_oracle_golden() -> [u32; 4] {
+        [0xDEAD_BEE7, 0x1234_5660, 0xFFFF_BDEA, 0x0000_0000]
+    }
+
+    #[test]
+    fn truncation_and_identity_fast_paths() {
+        check("trunc-identity", 64, |g| {
+            let w = g.u32();
+            let mask = g.u32();
+            let key = make_word_key(g.u32(), 0);
+            assert_eq!(corrupt_word(w, mask, ALWAYS, 0, key), w & !mask);
+            assert_eq!(corrupt_word(w, mask, 0, 0, key), w);
+            assert_eq!(corrupt_word(w, 0, g.u32(), g.u32(), key), w);
+        });
+    }
+
+    #[test]
+    fn bits_outside_mask_never_change() {
+        check("msb-preserved", 64, |g| {
+            let w = g.u32();
+            let mask = g.u32();
+            let out = corrupt_word(w, mask, g.u32(), g.u32(), make_word_key(g.u32(), g.u32()));
+            assert_eq!(out & !mask, w & !mask);
+        });
+    }
+
+    #[test]
+    fn always_thresholds_saturate() {
+        check("always-saturates", 32, |g| {
+            let w = g.u32();
+            let mask = g.u32();
+            let key = make_word_key(g.u32(), 1);
+            // t10 = t01 = ALWAYS: every masked bit inverts.
+            let out = corrupt_word(w, mask, ALWAYS, ALWAYS, key);
+            assert_eq!(out, (w & !mask) | (!w & mask));
+        });
+    }
+
+    #[test]
+    fn f64_layout_roundtrip() {
+        check("f64-words-roundtrip", 32, |g| {
+            let xs = g.vec(17, |g| g.interesting_f64());
+            let words = f64s_to_words(&xs);
+            assert_eq!(words.len(), 34);
+            let back = words_to_f64s(&words);
+            for (a, b) in xs.iter().zip(back.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn slice_corruption_matches_word_corruption() {
+        check("slice-vs-word", 32, |g| {
+            let seed = g.u32();
+            let mask = mask_for_lsbs(g.usize(1, 32) as u32);
+            let t10 = g.u32();
+            let mut xs = g.vec(9, |g| g.interesting_f64());
+            let mut words = f64s_to_words(&xs);
+            corrupt_f64_slice(&mut xs, mask, t10, 0, seed);
+            for i in 0..words.len() / 2 {
+                let key = make_word_key(seed, (2 * i) as u32);
+                words[2 * i] = corrupt_word(words[2 * i], mask, t10, 0, key);
+            }
+            let back = words_to_f64s(&words);
+            for (a, b) in xs.iter().zip(back.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn vectorized_equals_scalar_kernel() {
+        check("vectorized-vs-scalar", 48, |g| {
+            let n = g.usize(1, 1200); // crosses the 512-word chunk boundary
+            let mask = if g.bool() { mask_for_lsbs(g.usize(1, 32) as u32) } else { g.u32() };
+            let (t10, t01, seed) = (g.u32(), g.u32(), g.u32());
+            let mut words: Vec<u32> = g.vec(n, |g| g.u32());
+            let expect: Vec<u32> = words
+                .iter()
+                .enumerate()
+                .map(|(i, w)| corrupt_word(*w, mask, t10, t01, make_word_key(seed, i as u32)))
+                .collect();
+            corrupt_f32_words(&mut words, mask, t10, t01, seed);
+            assert_eq!(words, expect);
+        });
+    }
+
+    #[test]
+    fn vectorized_extreme_thresholds() {
+        for (t10, t01) in [(0u32, 0u32), (ALWAYS, 0), (0, ALWAYS), (ALWAYS, ALWAYS)] {
+            let mut words: Vec<u32> = (0..700u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+            let expect: Vec<u32> = words
+                .iter()
+                .enumerate()
+                .map(|(i, w)| corrupt_word(*w, 0xFFFF, t10, t01, make_word_key(5, i as u32)))
+                .collect();
+            corrupt_f32_words(&mut words, 0xFFFF, t10, t01, 5);
+            assert_eq!(words, expect, "t10={t10:#x} t01={t01:#x}");
+        }
+    }
+
+    #[test]
+    fn high_word_of_double_untouched() {
+        let mut xs: Vec<f64> = vec![1.5e300, -2.25, 3.14159, 1e-300];
+        let before: Vec<u64> = xs.iter().map(|v| v.to_bits()).collect();
+        corrupt_f64_slice(&mut xs, u32::MAX, ALWAYS, 0, 7);
+        for (v, b) in xs.iter().zip(before.iter()) {
+            assert_eq!(v.to_bits() >> 32, b >> 32);
+            assert_eq!(v.to_bits() as u32, 0); // low word truncated
+        }
+    }
+}

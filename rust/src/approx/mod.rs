@@ -1,0 +1,14 @@
+//! Approximation machinery: IEEE-754 bit manipulation, the native
+//! corruption kernel (bit-identical to the Layer-1 Pallas kernel), the
+//! [`Channel`] abstraction workloads communicate through, the five
+//! approximation policies the paper compares, and the application-specific
+//! tuning search behind Table 3.
+
+pub mod channel;
+pub mod float_bits;
+pub mod policy;
+pub mod tuning;
+
+pub use channel::{Channel, ChannelStats, IdentityChannel};
+pub use float_bits::{corrupt_f64_slice, corrupt_word, mask_for_lsbs};
+pub use policy::{AppTuning, Policy, PolicyKind, TransferMode};

@@ -1,0 +1,259 @@
+//! The five transmission frameworks the paper compares (§5.3), plus the
+//! per-application tuning knobs (Table 3).
+//!
+//! * `Baseline`   — plain Clos PNoC, every wavelength at full power.
+//! * `Truncation` — statically truncate a fixed per-app number of LSBs
+//!                  (laser off for those wavelengths), loss-oblivious.
+//! * `Prior16`    — the framework of [16]: 16 LSBs always transmitted at
+//!                  20% laser power, loss-oblivious (LSBs that cannot be
+//!                  recovered are still paid for).
+//! * `LoraxOok`   — this paper: app-specific (bits, power) from Table 3,
+//!                  per-destination choice between reduced power and
+//!                  truncation from the GWI loss table.
+//! * `LoraxPam4`  — LORAX over PAM4 signaling: 32 wavelengths, 1.5x LSB
+//!                  power floor, 5.8 dB signaling loss.
+
+use crate::phys::params::Modulation;
+
+/// Which framework a simulation runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    Baseline,
+    Truncation,
+    Prior16,
+    LoraxOok,
+    LoraxPam4,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Baseline,
+        PolicyKind::Truncation,
+        PolicyKind::Prior16,
+        PolicyKind::LoraxOok,
+        PolicyKind::LoraxPam4,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Baseline => "baseline",
+            PolicyKind::Truncation => "truncation",
+            PolicyKind::Prior16 => "prior[16]",
+            PolicyKind::LoraxOok => "LORAX-OOK",
+            PolicyKind::LoraxPam4 => "LORAX-PAM4",
+        }
+    }
+
+    pub fn modulation(self) -> Modulation {
+        match self {
+            PolicyKind::LoraxPam4 => Modulation::Pam4,
+            _ => Modulation::Ook,
+        }
+    }
+}
+
+/// How one transfer's LSB wavelengths are driven.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TransferMode {
+    /// All wavelengths at full power (MSB-only or non-approximable data).
+    FullPower,
+    /// LSB wavelengths driven at `level` (fraction of full launch power).
+    Reduced { level: f64 },
+    /// LSB wavelengths off.
+    Truncated,
+}
+
+/// Per-application approximation parameters (the knobs of Table 3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AppTuning {
+    /// LSBs approximated under LORAX (of the low word of each double).
+    pub approx_bits: u32,
+    /// Laser power *reduction* for those LSBs, percent (100 = off).
+    pub power_reduction_pct: u32,
+    /// LSBs statically truncated under the `Truncation` framework.
+    pub trunc_bits: u32,
+}
+
+impl AppTuning {
+    /// Laser level (fraction of full) for LSB wavelengths under LORAX.
+    pub fn level(&self) -> f64 {
+        1.0 - self.power_reduction_pct as f64 / 100.0
+    }
+}
+
+/// The paper's literal Table 3 (for the comparison column in reports).
+///
+/// Note these are *not* used as runtime defaults: under this
+/// implementation's physically-consistent SP channel model, truncating
+/// all 32 bits of a word zeroes the value outright, which several of the
+/// paper's entries do not survive (DESIGN.md §Deviations).
+pub fn paper_table3(app: &str) -> AppTuning {
+    match app {
+        "blackscholes" => AppTuning { approx_bits: 32, power_reduction_pct: 90, trunc_bits: 12 },
+        "canneal" => AppTuning { approx_bits: 32, power_reduction_pct: 100, trunc_bits: 32 },
+        "fft" => AppTuning { approx_bits: 32, power_reduction_pct: 50, trunc_bits: 8 },
+        "jpeg" => AppTuning { approx_bits: 24, power_reduction_pct: 80, trunc_bits: 20 },
+        "sobel" => AppTuning { approx_bits: 32, power_reduction_pct: 100, trunc_bits: 32 },
+        "streamcluster" => AppTuning { approx_bits: 28, power_reduction_pct: 80, trunc_bits: 12 },
+        _ => AppTuning { approx_bits: 16, power_reduction_pct: 50, trunc_bits: 8 },
+    }
+}
+
+/// Default per-app tuning for this implementation, measured with
+/// `lorax tune --scale 0.1` (the Table-3 search over the full Fig.-6
+/// grid) under the 10% output-error ceiling.  Regenerate after changing
+/// the channel model (EXPERIMENTS.md records the run).
+pub fn table3_defaults(app: &str) -> AppTuning {
+    match app {
+        "blackscholes" => AppTuning { approx_bits: 20, power_reduction_pct: 80, trunc_bits: 16 },
+        // canneal's approximable floats only steer its annealing search,
+        // so it tolerates deep approximation.
+        "canneal" => AppTuning { approx_bits: 32, power_reduction_pct: 80, trunc_bits: 20 },
+        "fft" => AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 },
+        "jpeg" => AppTuning { approx_bits: 32, power_reduction_pct: 70, trunc_bits: 20 },
+        "sobel" => AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 },
+        "streamcluster" => AppTuning { approx_bits: 12, power_reduction_pct: 100, trunc_bits: 12 },
+        _ => AppTuning { approx_bits: 12, power_reduction_pct: 50, trunc_bits: 8 },
+    }
+}
+
+/// PAM4-specific per-app tuning, measured with a `LoraxPam4` sweep
+/// (`scale 0.1`, full grid): the 1.5x LSB power floor and the PAM4
+/// detectability threshold push the energy-optimal choice to deep
+/// mantissa-only truncation for every app.
+pub fn table3_defaults_pam4(app: &str) -> AppTuning {
+    match app {
+        "blackscholes" => AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 },
+        "canneal" => AppTuning { approx_bits: 20, power_reduction_pct: 100, trunc_bits: 20 },
+        "fft" => AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 },
+        "jpeg" => AppTuning { approx_bits: 20, power_reduction_pct: 100, trunc_bits: 20 },
+        "sobel" => AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 },
+        "streamcluster" => AppTuning { approx_bits: 12, power_reduction_pct: 100, trunc_bits: 12 },
+        _ => AppTuning { approx_bits: 12, power_reduction_pct: 100, trunc_bits: 12 },
+    }
+}
+
+/// Tuning for a (kind, app) pair: PAM4 policies use the PAM4-swept table.
+pub fn default_tuning(kind: PolicyKind, app: &str) -> AppTuning {
+    match kind {
+        PolicyKind::LoraxPam4 => table3_defaults_pam4(app),
+        _ => table3_defaults(app),
+    }
+}
+
+/// A fully-resolved policy for one application run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    pub tuning: AppTuning,
+}
+
+impl Policy {
+    pub fn new(kind: PolicyKind, app: &str) -> Policy {
+        Policy { kind, tuning: default_tuning(kind, app) }
+    }
+
+    pub fn with_tuning(kind: PolicyKind, tuning: AppTuning) -> Policy {
+        Policy { kind, tuning }
+    }
+
+    /// Number of approximable LSBs for this policy (0 = none).
+    pub fn approx_bits(&self) -> u32 {
+        match self.kind {
+            PolicyKind::Baseline => 0,
+            PolicyKind::Truncation => self.tuning.trunc_bits,
+            PolicyKind::Prior16 => 16,
+            PolicyKind::LoraxOok | PolicyKind::LoraxPam4 => self.tuning.approx_bits,
+        }
+    }
+
+    /// Commanded LSB laser level *before* the loss-aware decision
+    /// (the decision may turn it into 0 for far destinations).
+    pub fn commanded_level(&self, pam4_power_factor: f64) -> f64 {
+        match self.kind {
+            PolicyKind::Baseline => 1.0,
+            PolicyKind::Truncation => 0.0,
+            PolicyKind::Prior16 => 0.2,
+            PolicyKind::LoraxOok => self.tuning.level(),
+            // §4.2: PAM4 cannot drop LSB power as low as OOK.
+            PolicyKind::LoraxPam4 => (self.tuning.level() * pam4_power_factor).min(1.0),
+        }
+    }
+
+    /// Does this policy consult the loss table per destination?
+    pub fn loss_aware(&self) -> bool {
+        matches!(self.kind, PolicyKind::LoraxOok | PolicyKind::LoraxPam4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table3_matches_paper() {
+        let bs = paper_table3("blackscholes");
+        assert_eq!((bs.approx_bits, bs.power_reduction_pct, bs.trunc_bits), (32, 90, 12));
+        let fft = paper_table3("fft");
+        assert_eq!((fft.approx_bits, fft.power_reduction_pct, fft.trunc_bits), (32, 50, 8));
+        let jpeg = paper_table3("jpeg");
+        assert_eq!((jpeg.approx_bits, jpeg.power_reduction_pct, jpeg.trunc_bits), (24, 80, 20));
+        assert_eq!(paper_table3("canneal").power_reduction_pct, 100);
+        assert_eq!(paper_table3("sobel").trunc_bits, 32);
+        assert_eq!(paper_table3("streamcluster").approx_bits, 28);
+    }
+
+    #[test]
+    fn our_defaults_exist_for_all_evaluated_apps() {
+        for app in crate::apps::EVALUATED_APPS {
+            let t = table3_defaults(app);
+            assert!(t.approx_bits >= t.trunc_bits || app == "canneal", "{app}");
+            assert!(t.approx_bits <= 32 && t.power_reduction_pct <= 100, "{app}");
+        }
+    }
+
+    #[test]
+    fn level_from_reduction() {
+        let t = AppTuning { approx_bits: 32, power_reduction_pct: 80, trunc_bits: 0 };
+        assert!((t.level() - 0.2).abs() < 1e-12);
+        let t = AppTuning { approx_bits: 32, power_reduction_pct: 100, trunc_bits: 0 };
+        assert_eq!(t.level(), 0.0);
+    }
+
+    #[test]
+    fn policy_bits_per_kind() {
+        let p = Policy::new(PolicyKind::Baseline, "fft");
+        assert_eq!(p.approx_bits(), 0);
+        let p = Policy::new(PolicyKind::Truncation, "fft");
+        assert_eq!(p.approx_bits(), table3_defaults("fft").trunc_bits);
+        let p = Policy::new(PolicyKind::Prior16, "fft");
+        assert_eq!(p.approx_bits(), 16);
+        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        assert_eq!(p.approx_bits(), table3_defaults("fft").approx_bits);
+    }
+
+    #[test]
+    fn commanded_levels() {
+        let p = Policy::new(PolicyKind::Prior16, "fft");
+        assert!((p.commanded_level(1.5) - 0.2).abs() < 1e-12);
+        let t = AppTuning { approx_bits: 16, power_reduction_pct: 50, trunc_bits: 8 };
+        let p = Policy::with_tuning(PolicyKind::LoraxOok, t);
+        assert!((p.commanded_level(1.5) - 0.5).abs() < 1e-12);
+        let p = Policy::with_tuning(PolicyKind::LoraxPam4, t); // 1.5x floor
+        assert!((p.commanded_level(1.5) - 0.75).abs() < 1e-12);
+        // PAM4 level saturates at full power.
+        let p = Policy::with_tuning(
+            PolicyKind::LoraxPam4,
+            AppTuning { approx_bits: 32, power_reduction_pct: 10, trunc_bits: 0 },
+        );
+        assert_eq!(p.commanded_level(1.5), 1.0);
+    }
+
+    #[test]
+    fn modulation_only_pam4_differs() {
+        assert_eq!(PolicyKind::LoraxPam4.modulation(), Modulation::Pam4);
+        for k in [PolicyKind::Baseline, PolicyKind::Truncation, PolicyKind::Prior16, PolicyKind::LoraxOok] {
+            assert_eq!(k.modulation(), Modulation::Ook);
+        }
+    }
+}

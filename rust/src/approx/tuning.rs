@@ -1,0 +1,194 @@
+//! Application-specific sensitivity analysis (paper §5.2).
+//!
+//! [`sweep_app`] regenerates one Fig.-6 surface: application output error
+//! (eq. 3) as a function of the number of approximated LSBs (4..32) and
+//! the laser power reduction for those LSBs (0..100%), measured by
+//! actually running the workload engine through the photonic channel at
+//! every grid point.  [`select_tuning`] then performs the Table-3
+//! search: the most aggressive (bits, power-reduction) pair that keeps
+//! output error under the 10% threshold, preferring more approximated
+//! bits first (more wavelengths eligible for power reduction), then more
+//! reduction — the paper's ordering.
+
+use crate::apps::{by_name_scaled, output_error_pct};
+use crate::approx::channel::IdentityChannel;
+use crate::approx::policy::{AppTuning, Policy, PolicyKind};
+use crate::coordinator::channel::{NativeCorruptor, PhotonicChannel};
+use crate::coordinator::gwi::GwiDecisionEngine;
+
+/// One measured grid point of a sensitivity surface.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub bits: u32,
+    pub reduction_pct: u32,
+    pub error_pct: f64,
+}
+
+/// A full Fig.-6 surface for one application.
+#[derive(Clone, Debug)]
+pub struct SensitivitySurface {
+    pub app: String,
+    pub threshold_pct: f64,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SensitivitySurface {
+    pub fn error_at(&self, bits: u32, reduction_pct: u32) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.bits == bits && p.reduction_pct == reduction_pct)
+            .map(|p| p.error_pct)
+    }
+}
+
+/// The paper's Fig.-6 grid axes.
+pub const BITS_AXIS: [u32; 8] = [4, 8, 12, 16, 20, 24, 28, 32];
+pub const REDUCTION_AXIS: [u32; 11] = [0, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+
+/// Sweep one application over the (bits, reduction) grid.
+///
+/// `scale` shrinks the workload for fast runs (1.0 = the paper's "large
+/// input" size); `kind` is the policy family being swept (LORAX-OOK by
+/// default; PAM4 sweeps use the same grid).
+pub fn sweep_app(
+    engine: &GwiDecisionEngine,
+    app: &str,
+    kind: PolicyKind,
+    seed: u64,
+    scale: f64,
+    bits_axis: &[u32],
+    reduction_axis: &[u32],
+) -> SensitivitySurface {
+    let workload =
+        by_name_scaled(app, seed, scale).unwrap_or_else(|| panic!("unknown app {app:?}"));
+    // Golden run once.
+    let mut golden_ch = IdentityChannel::new();
+    let golden = workload.run(&mut golden_ch);
+
+    let mut points = Vec::with_capacity(bits_axis.len() * reduction_axis.len());
+    for &bits in bits_axis {
+        for &red in reduction_axis {
+            let tuning =
+                AppTuning { approx_bits: bits, power_reduction_pct: red, trunc_bits: bits };
+            let policy = Policy::with_tuning(kind, tuning);
+            let mut ch = PhotonicChannel::new(engine, policy, NativeCorruptor, seed as u32);
+            let out = workload.run(&mut ch);
+            points.push(SweepPoint {
+                bits,
+                reduction_pct: red,
+                error_pct: output_error_pct(&golden, &out),
+            });
+        }
+    }
+    SensitivitySurface { app: app.to_string(), threshold_pct: 10.0, points }
+}
+
+/// Table-3 selection from a measured surface: among grid points with
+/// `error < threshold`, pick the one with the largest expected laser
+/// saving.  Per-wavelength laser power scales linearly with the level,
+/// so the saving on a float flit is proportional to
+/// `bits x reduction_pct` — that product is the selection objective
+/// (ties break toward more bits, then more reduction; the paper states
+/// only "best combination", so we make the energy objective explicit).
+/// `trunc_bits` is the largest truncatable count (reduction=100 column).
+pub fn select_tuning(surface: &SensitivitySurface, threshold_pct: f64) -> AppTuning {
+    let mut best: Option<(u32, u32)> = None;
+    let score = |(b, r): (u32, u32)| (b * r, b, r);
+    for p in &surface.points {
+        if p.error_pct < threshold_pct {
+            let cand = (p.bits, p.reduction_pct);
+            best = Some(match best {
+                None => cand,
+                Some(cur) => {
+                    if score(cand) > score(cur) {
+                        cand
+                    } else {
+                        cur
+                    }
+                }
+            });
+        }
+    }
+    let (approx_bits, power_reduction_pct) = best.unwrap_or((0, 0));
+    let trunc_bits = surface
+        .points
+        .iter()
+        .filter(|p| p.reduction_pct == 100 && p.error_pct < threshold_pct)
+        .map(|p| p.bits)
+        .max()
+        .unwrap_or(0);
+    AppTuning { approx_bits, power_reduction_pct, trunc_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phys::params::{Modulation, PhotonicParams};
+    use crate::topology::clos::ClosTopology;
+
+    fn engine() -> GwiDecisionEngine {
+        GwiDecisionEngine::new(
+            ClosTopology::default_64core(),
+            PhotonicParams::default(),
+            Modulation::Ook,
+        )
+    }
+
+    #[test]
+    fn sweep_corner_cases() {
+        let e = engine();
+        // Tiny grid on a tolerant app to keep the test fast.
+        let s = sweep_app(&e, "sobel", PolicyKind::LoraxOok, 3, 0.02, &[4, 32], &[0, 100]);
+        assert_eq!(s.points.len(), 4);
+        // Zero reduction at full detectability = error-free channel.
+        let e_0 = s.error_at(4, 0).unwrap();
+        assert!(e_0 < 1e-9, "4 bits @ 0% should be error-free, got {e_0}");
+        // Full truncation of 32 bits must dominate 4 bits truncated.
+        let e_4_100 = s.error_at(4, 100).unwrap();
+        let e_32_100 = s.error_at(32, 100).unwrap();
+        assert!(e_32_100 >= e_4_100, "{e_32_100} !>= {e_4_100}");
+    }
+
+    #[test]
+    fn selection_maximizes_laser_saving_product() {
+        let surface = SensitivitySurface {
+            app: "synthetic".into(),
+            threshold_pct: 10.0,
+            points: vec![
+                SweepPoint { bits: 16, reduction_pct: 100, error_pct: 2.0 }, // 1600
+                SweepPoint { bits: 32, reduction_pct: 50, error_pct: 8.0 },  // 1600 (more bits)
+                SweepPoint { bits: 32, reduction_pct: 80, error_pct: 12.0 }, // infeasible
+                SweepPoint { bits: 24, reduction_pct: 90, error_pct: 4.0 },  // 2160 <- winner
+            ],
+        };
+        let t = select_tuning(&surface, 10.0);
+        assert_eq!(t.approx_bits, 24);
+        assert_eq!(t.power_reduction_pct, 90);
+        assert_eq!(t.trunc_bits, 16);
+    }
+
+    #[test]
+    fn selection_ties_break_toward_more_bits() {
+        let surface = SensitivitySurface {
+            app: "synthetic".into(),
+            threshold_pct: 10.0,
+            points: vec![
+                SweepPoint { bits: 16, reduction_pct: 100, error_pct: 2.0 },
+                SweepPoint { bits: 32, reduction_pct: 50, error_pct: 8.0 },
+            ],
+        };
+        let t = select_tuning(&surface, 10.0);
+        assert_eq!((t.approx_bits, t.power_reduction_pct), (32, 50));
+    }
+
+    #[test]
+    fn selection_with_nothing_feasible() {
+        let surface = SensitivitySurface {
+            app: "x".into(),
+            threshold_pct: 10.0,
+            points: vec![SweepPoint { bits: 4, reduction_pct: 10, error_pct: 50.0 }],
+        };
+        let t = select_tuning(&surface, 10.0);
+        assert_eq!((t.approx_bits, t.power_reduction_pct, t.trunc_bits), (0, 0, 0));
+    }
+}

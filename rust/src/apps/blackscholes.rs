@@ -1,0 +1,140 @@
+//! `blackscholes` — PARSEC/ACCEPT option-pricing workload.
+//!
+//! The memory controllers stream five parameter arrays (spot, strike,
+//! expiry, rate, volatility) to the 64 cores (annotated approximable —
+//! option parameters tolerate mantissa noise), each core prices its shard
+//! with the closed-form Black-Scholes model, and the call/put results are
+//! gathered back (also approximable).  Option ids ride as integer
+//! packets.  The paper finds blackscholes *sensitive* to approximation:
+//! `log(S/K)` and `exp(-rT)` amplify low-mantissa noise when parameters
+//! sit near at-the-money, which this engine reproduces.
+
+use crate::approx::channel::Channel;
+use crate::util::math::norm_cdf;
+use crate::util::rng::Rng;
+
+use super::common::{core, gather_f64, mc_of, scatter_f64, shard};
+use super::Workload;
+
+pub struct BlackScholes {
+    n_options: usize,
+    seed: u64,
+}
+
+impl BlackScholes {
+    pub fn new(n_options: usize, seed: u64) -> BlackScholes {
+        BlackScholes { n_options, seed }
+    }
+
+    /// Deterministic synthetic option book (the ACCEPT "large" input
+    /// stand-in): clustered around at-the-money with realistic ranges.
+    fn dataset(&self) -> [Vec<f64>; 5] {
+        let mut rng = Rng::new(self.seed ^ 0xB1AC);
+        let n = self.n_options;
+        let mut spot = Vec::with_capacity(n);
+        let mut strike = Vec::with_capacity(n);
+        let mut t = Vec::with_capacity(n);
+        let mut rate = Vec::with_capacity(n);
+        let mut vol = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = rng.range_f64(20.0, 180.0);
+            spot.push(s);
+            strike.push(s * rng.range_f64(0.7, 1.3));
+            t.push(rng.range_f64(0.1, 2.5));
+            rate.push(rng.range_f64(0.005, 0.08));
+            vol.push(rng.range_f64(0.08, 0.7));
+        }
+        [spot, strike, t, rate, vol]
+    }
+
+    fn price(s: f64, k: f64, t: f64, r: f64, v: f64) -> (f64, f64) {
+        let sqrt_t = t.max(1e-12).sqrt();
+        let d1 = ((s / k).ln() + (r + 0.5 * v * v) * t) / (v * sqrt_t);
+        let d2 = d1 - v * sqrt_t;
+        let disc = k * (-r * t).exp();
+        let call = s * norm_cdf(d1) - disc * norm_cdf(d2);
+        let put = disc * norm_cdf(-d2) - s * norm_cdf(-d1);
+        (call, put)
+    }
+}
+
+impl Workload for BlackScholes {
+    fn name(&self) -> &'static str {
+        "blackscholes"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let arrays = self.dataset();
+        // Distribute option ids (integer metadata, one word per option).
+        for i in 0..64 {
+            let r = shard(self.n_options, i);
+            if !r.is_empty() {
+                ch.send_ints(mc_of(i), core(i), r.len());
+            }
+        }
+        // Stream the five parameter arrays through the channel.
+        let received: Vec<Vec<f64>> =
+            arrays.iter().map(|a| scatter_f64(ch, a, true)).collect();
+        // Price locally on each core (values already shard-local).
+        let n = self.n_options;
+        let mut call = vec![0.0; n];
+        let mut put = vec![0.0; n];
+        for i in 0..n {
+            let (c, p) = Self::price(
+                received[0][i].abs().max(1e-6),
+                received[1][i].abs().max(1e-6),
+                received[2][i].abs().max(1e-6),
+                received[3][i],
+                received[4][i].abs().max(1e-6),
+            );
+            call[i] = c;
+            put[i] = p;
+        }
+        // Gather results (approximable on the way back too).
+        gather_f64(ch, &mut call, true);
+        gather_f64(ch, &mut put, true);
+        // Completion control message per core.
+        for i in 0..64 {
+            ch.send_control(core(i), mc_of(i), 2);
+        }
+        call.extend_from_slice(&put);
+        call
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn prices_satisfy_put_call_parity() {
+        let (c, p) = BlackScholes::price(100.0, 95.0, 1.0, 0.03, 0.25);
+        let parity = c - p;
+        let expect = 100.0 - 95.0 * (-0.03f64).exp();
+        assert!((parity - expect).abs() < 1e-6, "parity {parity} vs {expect}");
+        assert!(c > 0.0 && p > 0.0);
+    }
+
+    #[test]
+    fn golden_run_shapes_and_traffic() {
+        let w = BlackScholes::new(640, 3);
+        let mut ch = IdentityChannel::new();
+        let out = w.run(&mut ch);
+        assert_eq!(out.len(), 1280);
+        assert!(out.iter().all(|v| v.is_finite() && *v >= -1e-9));
+        let prof = &ch.stats().profile;
+        assert!(prof.float_packets > 0);
+        assert!(prof.int_packets > 0);
+        assert!(prof.control_packets > 0);
+        // Float-dominant, like Fig. 2.
+        assert!(prof.float_fraction() > 0.5, "{}", prof.float_fraction());
+    }
+
+    #[test]
+    fn deep_itm_call_approaches_intrinsic() {
+        let (c, _) = BlackScholes::price(200.0, 50.0, 0.5, 0.02, 0.2);
+        let intrinsic = 200.0 - 50.0 * (-0.02f64 * 0.5).exp();
+        assert!((c - intrinsic).abs() < 0.5);
+    }
+}

@@ -1,0 +1,225 @@
+//! `canneal` — simulated-annealing netlist placement (PARSEC/ACCEPT).
+//!
+//! Netlist elements are sharded over the cores; each annealing move picks
+//! two elements and asks their owner cores for the positions of the
+//! elements and their net neighbours — those position responses are the
+//! approximable float traffic (requests are control packets).  The move
+//! is accepted by the Metropolis rule on the (possibly corrupted) delta
+//! cost, but the *stored* positions stay exact — corruption only steers
+//! the search, which is why canneal tolerates even 32-bit truncation
+//! (paper Fig. 6: PE stays under 0.35%): the anneal converges to an
+//! equally good placement either way.
+//!
+//! Output: total wirelength plus the net-length decile profile — a
+//! placement-quality summary that is stable across search paths.
+
+use crate::approx::channel::Channel;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+use super::common::{core, mc_of, shard, N_CORES};
+use super::Workload;
+
+pub struct Canneal {
+    n_elements: usize,
+    n_moves: usize,
+    seed: u64,
+}
+
+impl Canneal {
+    pub fn new(n_elements: usize, n_moves: usize, seed: u64) -> Canneal {
+        Canneal { n_elements, n_moves, seed }
+    }
+
+    /// Random netlist: each element connects to ~4 partners.
+    fn netlist(&self, rng: &mut Rng) -> Vec<Vec<u32>> {
+        let n = self.n_elements;
+        let mut nets = vec![Vec::new(); n];
+        for i in 0..n {
+            for _ in 0..2 {
+                let j = rng.below(n);
+                if j != i {
+                    nets[i].push(j as u32);
+                    nets[j].push(i as u32);
+                }
+            }
+        }
+        nets
+    }
+
+    fn owner(&self, element: usize) -> usize {
+        // Shard-aligned ownership.
+        let per = self.n_elements.div_ceil(N_CORES);
+        (element / per).min(N_CORES - 1)
+    }
+
+    fn wirelength(pos: &[(f64, f64)], a: usize, nets: &[Vec<u32>]) -> f64 {
+        nets[a]
+            .iter()
+            .map(|&b| {
+                let (ax, ay) = pos[a];
+                let (bx, by) = pos[b as usize];
+                (ax - bx).abs() + (ay - by).abs()
+            })
+            .sum()
+    }
+}
+
+impl Workload for Canneal {
+    fn name(&self) -> &'static str {
+        "canneal"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let n = self.n_elements;
+        let mut rng = Rng::new(self.seed ^ 0xCA77);
+        let nets = self.netlist(&mut rng);
+        let grid = (n as f64).sqrt().ceil();
+        // Distribute the netlist itself: element ids + adjacency lists
+        // travel as integer packets (never approximable).
+        {
+            use super::common::N_CORES;
+            for i in 0..N_CORES {
+                let r = shard(n, i);
+                if r.is_empty() {
+                    continue;
+                }
+                let edge_words: usize =
+                    nets[r.clone()].iter().map(|adj| 1 + adj.len()).sum();
+                ch.send_ints(mc_of(i), core(i), edge_words);
+            }
+        }
+        // Initial random placement.
+        let mut pos: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.range_f64(0.0, grid), rng.range_f64(0.0, grid)))
+            .collect();
+        // Distribute initial placement (approximable — it is refined
+        // anyway; corrupted copies are what the cores anneal from).
+        {
+            let mut flat: Vec<f64> = pos.iter().flat_map(|&(x, y)| [x, y]).collect();
+            for i in 0..N_CORES {
+                let r = shard(n, i);
+                if !r.is_empty() {
+                    ch.send_f64(mc_of(i), core(i), &mut flat[2 * r.start..2 * r.end], true);
+                }
+            }
+            for (i, p) in pos.iter_mut().enumerate() {
+                *p = (flat[2 * i], flat[2 * i + 1]);
+            }
+        }
+
+        let mut temperature = grid;
+        let mut moves_done = 0;
+        while moves_done < self.n_moves {
+            let batch = (self.n_moves - moves_done).min(256);
+            for _ in 0..batch {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                if a == b {
+                    continue;
+                }
+                let (oa, ob) = (self.owner(a), self.owner(b));
+                // Evaluating core = owner(a); it requests b's position and
+                // both elements' neighbour positions from their owners.
+                let mut remote: Vec<f64> = Vec::with_capacity(2 + 2 * nets[b].len());
+                remote.push(pos[b].0);
+                remote.push(pos[b].1);
+                for &nb in nets[b].iter().chain(nets[a].iter()) {
+                    let p = pos[nb as usize];
+                    remote.push(p.0);
+                    remote.push(p.1);
+                }
+                if oa != ob {
+                    ch.send_control(core(oa), core(ob), 2); // position request
+                    ch.send_f64(core(ob), core(oa), &mut remote, true);
+                }
+                // Delta cost with (possibly corrupted) remote views.
+                let b_view = (remote[0], remote[1]);
+                let mut view = pos.clone();
+                view[b] = b_view;
+                for (k, &nb) in nets[b].iter().chain(nets[a].iter()).enumerate() {
+                    view[nb as usize] = (remote[2 + 2 * k], remote[3 + 2 * k]);
+                }
+                let before = Self::wirelength(&view, a, &nets) + Self::wirelength(&view, b, &nets);
+                let mut swapped = view.clone();
+                swapped.swap(a, b);
+                let after =
+                    Self::wirelength(&swapped, a, &nets) + Self::wirelength(&swapped, b, &nets);
+                let delta = after - before;
+                let accept = delta < 0.0 || rng.next_f64() < (-delta / temperature).exp();
+                if accept {
+                    pos.swap(a, b); // the *exact* positions swap
+                    if oa != ob {
+                        ch.send_control(core(oa), core(ob), 2); // commit message
+                    }
+                }
+            }
+            moves_done += batch;
+            temperature *= 0.92;
+        }
+
+        // Final quality report gathered at MC 0 (small, approximable).
+        let lengths: Vec<f64> = (0..n)
+            .map(|i| Self::wirelength(&pos, i, &nets) / 2.0)
+            .collect();
+        let total: f64 = lengths.iter().sum();
+        let mut out = vec![total];
+        for q in 1..=9 {
+            out.push(percentile(&lengths, q as f64 / 10.0));
+        }
+        ch.send_f64(core(0), mc_of(0), &mut out, true);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn annealing_reduces_wirelength() {
+        let seed = 11;
+        let short = Canneal::new(256, 64, seed);
+        let long = Canneal::new(256, 8192, seed);
+        let mut ch1 = IdentityChannel::new();
+        let mut ch2 = IdentityChannel::new();
+        let cost_short = short.run(&mut ch1)[0];
+        let cost_long = long.run(&mut ch2)[0];
+        assert!(
+            cost_long < cost_short,
+            "more moves should improve placement: {cost_long} !< {cost_short}"
+        );
+    }
+
+    #[test]
+    fn output_shape_and_monotone_deciles() {
+        let w = Canneal::new(300, 500, 3);
+        let mut ch = IdentityChannel::new();
+        let out = w.run(&mut ch);
+        assert_eq!(out.len(), 10);
+        for k in 2..10 {
+            assert!(out[k] >= out[k - 1] - 1e-12, "deciles must be sorted");
+        }
+        assert!(out[0] > 0.0);
+    }
+
+    #[test]
+    fn traffic_mix_has_control_and_float() {
+        let w = Canneal::new(512, 1024, 5);
+        let mut ch = IdentityChannel::new();
+        w.run(&mut ch);
+        let p = &ch.stats().profile;
+        assert!(p.control_packets > 0);
+        assert!(p.float_packets > 0);
+    }
+
+    #[test]
+    fn owner_sharding_is_consistent() {
+        let w = Canneal::new(1000, 1, 1);
+        for e in 0..1000 {
+            let o = w.owner(e);
+            assert!(shard(1000, o).contains(&e), "element {e} owner {o}");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Shared plumbing for the workload engines: core/MC addressing and
+//! scatter/gather helpers that move data through the [`Channel`].
+
+use crate::approx::channel::Channel;
+use crate::topology::clos::NodeId;
+
+pub const N_CORES: usize = 64;
+
+/// Core `i` of the 64-core system.
+pub fn core(i: usize) -> NodeId {
+    NodeId::Core((i % N_CORES) as u8)
+}
+
+/// Home memory controller for shard/block `i`.
+///
+/// Memory is address-striped across the 8 controllers (as in the
+/// paper's 8-MC platform, Table 1), so a core's data usually lives on a
+/// *remote* cluster's MC — 7/8 of distribution traffic crosses the
+/// photonic network, which is exactly the traffic LORAX approximates.
+pub fn mc_of(i: usize) -> NodeId {
+    NodeId::MemCtrl((i % 8) as u8)
+}
+
+/// Contiguous range of `data` owned by core `i` when split evenly.
+pub fn shard(len: usize, i: usize) -> std::ops::Range<usize> {
+    let per = len.div_ceil(N_CORES);
+    let lo = (i * per).min(len);
+    let hi = ((i + 1) * per).min(len);
+    lo..hi
+}
+
+/// Scatter `data` shards from each core's memory controller to the core
+/// (approximable float transfer); returns the post-channel copy.
+pub fn scatter_f64(ch: &mut dyn Channel, data: &[f64], approximable: bool) -> Vec<f64> {
+    let mut out = data.to_vec();
+    for i in 0..N_CORES {
+        let r = shard(data.len(), i);
+        if r.is_empty() {
+            continue;
+        }
+        ch.send_f64(mc_of(i), core(i), &mut out[r], approximable);
+    }
+    out
+}
+
+/// Gather per-core shards back to the memory controllers.
+pub fn gather_f64(ch: &mut dyn Channel, data: &mut [f64], approximable: bool) {
+    let len = data.len();
+    for i in 0..N_CORES {
+        let r = shard(len, i);
+        if r.is_empty() {
+            continue;
+        }
+        ch.send_f64(core(i), mc_of(i), &mut data[r], approximable);
+    }
+}
+
+/// Broadcast a small float vector from core `src` to every other core.
+pub fn broadcast_f64(ch: &mut dyn Channel, src: usize, data: &mut [f64], approximable: bool) {
+    for i in 0..N_CORES {
+        if i != src {
+            ch.send_f64(core(src), core(i), data, approximable);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn shards_partition_exactly() {
+        for len in [0usize, 1, 63, 64, 65, 1000, 4096] {
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for i in 0..N_CORES {
+                let r = shard(len, i);
+                assert!(r.start <= r.end);
+                assert_eq!(r.start, prev_end.min(len).max(r.start.min(r.start)));
+                covered += r.len();
+                prev_end = r.end;
+            }
+            assert_eq!(covered, len, "len={len}");
+            assert_eq!(prev_end, len);
+        }
+    }
+
+    #[test]
+    fn node_addressing() {
+        assert_eq!(core(0), NodeId::Core(0));
+        assert_eq!(core(63), NodeId::Core(63));
+        assert_eq!(mc_of(0), NodeId::MemCtrl(0));
+        assert_eq!(mc_of(63), NodeId::MemCtrl(7));
+        assert_eq!(mc_of(9), NodeId::MemCtrl(1));
+    }
+
+    #[test]
+    fn scatter_gather_identity_roundtrip() {
+        let mut ch = IdentityChannel::new();
+        let data: Vec<f64> = (0..777).map(|i| i as f64 * 0.5).collect();
+        let mut got = scatter_f64(&mut ch, &data, true);
+        gather_f64(&mut ch, &mut got, true);
+        assert_eq!(got, data);
+        assert!(ch.stats().profile.float_packets > 0);
+    }
+
+    #[test]
+    fn broadcast_counts_transfers() {
+        let mut ch = IdentityChannel::new();
+        let mut v = vec![1.0, 2.0];
+        broadcast_f64(&mut ch, 0, &mut v, false);
+        assert_eq!(ch.stats().transfers, 63);
+    }
+}

@@ -1,0 +1,220 @@
+//! `fft` — distributed radix-2 FFT (the SPLASH-2/ACCEPT kernel).
+//!
+//! `n` complex points are bit-reverse scattered over the 64 cores.  The
+//! first `log2(n/64)` butterfly stages are core-local; the remaining six
+//! stages pair cores hypercube-style and exchange whole blocks through
+//! the channel (approximable float) before computing — each side computes
+//! from its *received* (possibly corrupted) copy of the partner block,
+//! exactly like the real message-passing kernel.  The paper finds FFT the
+//! most approximation-sensitive app: butterfly stages multiply corrupted
+//! values into every output, which this engine reproduces.
+
+use crate::approx::channel::Channel;
+use crate::util::rng::Rng;
+
+use super::common::{core, gather_f64, mc_of, N_CORES};
+use super::Workload;
+
+pub struct DistributedFft {
+    n: usize,
+    seed: u64,
+}
+
+impl DistributedFft {
+    pub fn new(n: usize, seed: u64) -> DistributedFft {
+        assert!(n.is_power_of_two() && n >= N_CORES * 2, "n must be a power of two >= 128");
+        DistributedFft { n, seed }
+    }
+
+    /// Deterministic input: a few tones + broadband noise (interleaved
+    /// re/im).
+    fn dataset(&self) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed ^ 0xFF7);
+        let n = self.n;
+        let mut d = vec![0.0f64; 2 * n];
+        for i in 0..n {
+            let t = i as f64 / n as f64;
+            let mut re = (std::f64::consts::TAU * 7.0 * t).sin()
+                + 0.5 * (std::f64::consts::TAU * 41.0 * t).sin()
+                + 0.25 * (std::f64::consts::TAU * 200.0 * t).cos();
+            re += rng.range_f64(-0.05, 0.05);
+            d[2 * i] = re;
+            d[2 * i + 1] = rng.range_f64(-0.02, 0.02);
+        }
+        d
+    }
+}
+
+fn bit_reverse_permute(d: &mut [f64], n: usize) {
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u64).reverse_bits() >> (64 - bits) as u64;
+        let j = j as usize;
+        if j > i {
+            d.swap(2 * i, 2 * j);
+            d.swap(2 * i + 1, 2 * j + 1);
+        }
+    }
+}
+
+impl Workload for DistributedFft {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let n = self.n;
+        let block_c = n / N_CORES; // complex elements per core
+        let mut data = self.dataset();
+        bit_reverse_permute(&mut data, n);
+        // Scatter blocks to cores (stage indices as int metadata).
+        for i in 0..N_CORES {
+            ch.send_ints(mc_of(i), core(i), 4);
+            let r = 2 * i * block_c..2 * (i + 1) * block_c;
+            ch.send_f64(mc_of(i), core(i), &mut data[r], true);
+        }
+        // Iterative Cooley-Tukey.
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            if half < block_c {
+                // Core-local stage: butterflies never cross a block.
+                butterfly_stage(&mut data, n, len, None);
+            } else {
+                // Cross-core stage: partner blocks exchange first.
+                let stride_blocks = half / block_c;
+                let mut views: Vec<Option<Vec<f64>>> = vec![None; N_CORES];
+                for a in 0..N_CORES {
+                    let b = a ^ stride_blocks;
+                    if b < a {
+                        continue;
+                    }
+                    // a receives b's block, b receives a's block.
+                    let mut b_copy =
+                        data[2 * b * block_c..2 * (b + 1) * block_c].to_vec();
+                    ch.send_f64(core(b), core(a), &mut b_copy, true);
+                    let mut a_copy =
+                        data[2 * a * block_c..2 * (a + 1) * block_c].to_vec();
+                    ch.send_f64(core(a), core(b), &mut a_copy, true);
+                    views[a] = Some(b_copy);
+                    views[b] = Some(a_copy);
+                }
+                butterfly_stage(&mut data, n, len, Some((&views, block_c)));
+            }
+            len <<= 1;
+        }
+        // Spectrum magnitudes gathered back (approximable).
+        let mut mags: Vec<f64> = (0..n)
+            .map(|i| (data[2 * i] * data[2 * i] + data[2 * i + 1] * data[2 * i + 1]).sqrt())
+            .collect();
+        gather_f64(ch, &mut mags, true);
+        mags
+    }
+}
+
+/// One butterfly stage.  For cross-core stages, `views` holds each
+/// core's received copy of its partner block: the `u + w*v` side reads
+/// `v` from its view, the `u - w*v` side reads `u` from its own view.
+fn butterfly_stage(data: &mut [f64], n: usize, len: usize, views: Option<(&[Option<Vec<f64>>], usize)>) {
+    let half = len / 2;
+    let ang = -std::f64::consts::TAU / len as f64;
+    for start in (0..n).step_by(len) {
+        for k in 0..half {
+            let i = start + k;
+            let j = i + half;
+            let w_re = (ang * k as f64).cos();
+            let w_im = (ang * k as f64).sin();
+            let (u_re, u_im) = (data[2 * i], data[2 * i + 1]);
+            let (v_re, v_im) = (data[2 * j], data[2 * j + 1]);
+            // Remote reads go through the exchanged (corrupted) views.
+            let (ru_re, ru_im, rv_re, rv_im) = if let Some((views, block_c)) = views {
+                let block_i = i / block_c;
+                let block_j = j / block_c;
+                let vi = views[block_i].as_ref().expect("missing view");
+                let vj = views[block_j].as_ref().expect("missing view");
+                // Core of block_i sees block_j through its view and vice
+                // versa; offsets are block-local.
+                let oj = j % block_c;
+                let oi = i % block_c;
+                (
+                    vj[2 * oi],     // block_j's copy of u
+                    vj[2 * oi + 1],
+                    vi[2 * oj],     // block_i's copy of v
+                    vi[2 * oj + 1],
+                )
+            } else {
+                (u_re, u_im, v_re, v_im)
+            };
+            // Core owning i computes u + w*v from its view of v.
+            let t_re = w_re * rv_re - w_im * rv_im;
+            let t_im = w_re * rv_im + w_im * rv_re;
+            data[2 * i] = u_re + t_re;
+            data[2 * i + 1] = u_im + t_im;
+            // Core owning j computes u' - w*v from its view of u.
+            let s_re = w_re * v_re - w_im * v_im;
+            let s_im = w_re * v_im + w_im * v_re;
+            data[2 * j] = ru_re - s_re;
+            data[2 * j + 1] = ru_im - s_im;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    /// Naive O(n^2) DFT magnitude reference.
+    fn dft_mags(signal: &[f64]) -> Vec<f64> {
+        let n = signal.len() / 2;
+        (0..n)
+            .map(|k| {
+                let (mut re, mut im) = (0.0f64, 0.0f64);
+                for t in 0..n {
+                    let ang = -std::f64::consts::TAU * (k * t) as f64 / n as f64;
+                    let (c, s) = (ang.cos(), ang.sin());
+                    re += signal[2 * t] * c - signal[2 * t + 1] * s;
+                    im += signal[2 * t] * s + signal[2 * t + 1] * c;
+                }
+                (re * re + im * im).sqrt()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn golden_matches_naive_dft() {
+        let w = DistributedFft::new(256, 9);
+        let signal = w.dataset();
+        let mut ch = IdentityChannel::new();
+        let got = w.run(&mut ch);
+        let want = dft_mags(&signal);
+        for (i, (g, e)) in got.iter().zip(want.iter()).enumerate() {
+            assert!((g - e).abs() < 1e-4 * (1.0 + e), "bin {i}: {g} vs {e}"); // SP wire quantization
+        }
+    }
+
+    #[test]
+    fn tones_appear_in_spectrum() {
+        let w = DistributedFft::new(1024, 2);
+        let mut ch = IdentityChannel::new();
+        let mags = w.run(&mut ch);
+        // Tone at bin 7 (and its conjugate at n-7) dominates noise bins.
+        assert!(mags[7] > 20.0 * mags[13], "mags[7]={} mags[13]={}", mags[7], mags[13]);
+        assert!(mags[41] > 5.0 * mags[13]);
+    }
+
+    #[test]
+    fn traffic_is_float_dominant() {
+        let w = DistributedFft::new(4096, 3);
+        let mut ch = IdentityChannel::new();
+        w.run(&mut ch);
+        let f = ch.stats().profile.float_fraction();
+        assert!(f > 0.7, "float fraction {f}");
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        DistributedFft::new(1000, 1);
+    }
+}

@@ -1,0 +1,283 @@
+//! `jpeg` — DCT-based image compression workload.
+//!
+//! The pipeline mirrors a parallel JPEG encoder: pixel blocks stream to
+//! the DCT cores as *integer* packets (pixels), each DCT core transforms
+//! its 8x8 blocks and forwards the **float DCT coefficients** to a
+//! quantization core — that coefficient stream is the only approximable
+//! float traffic, which is why jpeg sits low in Fig. 2 and serves as the
+//! paper's low-float-traffic case study.  Quantized coefficients return
+//! as integer packets; the decoder (dequantize + IDCT) reconstructs the
+//! image, whose pixels are the output vector (and the Fig.-7 images).
+
+use crate::approx::channel::Channel;
+use crate::util::rng::Rng;
+
+use super::common::{core, mc_of};
+use super::Workload;
+
+/// Standard JPEG luminance quantization table (quality 50 base).
+const QTABLE: [f64; 64] = [
+    16.0, 11.0, 10.0, 16.0, 24.0, 40.0, 51.0, 61.0,
+    12.0, 12.0, 14.0, 19.0, 26.0, 58.0, 60.0, 55.0,
+    14.0, 13.0, 16.0, 24.0, 40.0, 57.0, 69.0, 56.0,
+    14.0, 17.0, 22.0, 29.0, 51.0, 87.0, 80.0, 62.0,
+    18.0, 22.0, 37.0, 56.0, 68.0, 109.0, 103.0, 77.0,
+    24.0, 35.0, 55.0, 64.0, 81.0, 104.0, 113.0, 92.0,
+    49.0, 64.0, 78.0, 87.0, 103.0, 121.0, 120.0, 101.0,
+    72.0, 92.0, 95.0, 98.0, 112.0, 100.0, 103.0, 99.0,
+];
+
+pub struct Jpeg {
+    side: usize,
+    seed: u64,
+    /// Quality scaling of the quantization table (1.0 = quality 50).
+    pub quality_scale: f64,
+}
+
+impl Jpeg {
+    pub fn new(side: usize, seed: u64) -> Jpeg {
+        assert!(side % 8 == 0, "side must be a multiple of 8");
+        Jpeg { side, seed, quality_scale: 0.5 } // ~quality 75
+    }
+
+    /// Photo-like synthetic test image: vignette + shapes + texture.
+    pub fn dataset(side: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ 0x1BE6);
+        let mut img = vec![0.0f64; side * side];
+        let c = side as f64 / 2.0;
+        for y in 0..side {
+            for x in 0..side {
+                let dx = (x as f64 - c) / c;
+                let dy = (y as f64 - c) / c;
+                let r2 = dx * dx + dy * dy;
+                let mut v = 190.0 * (1.0 - 0.55 * r2);
+                // Diagonal stripes and a disc.
+                if ((x + 2 * y) / 24) % 2 == 0 {
+                    v -= 28.0;
+                }
+                if r2 < 0.12 {
+                    v += 45.0;
+                }
+                v += rng.range_f64(-4.0, 4.0);
+                img[y * side + x] = v.clamp(0.0, 255.0);
+            }
+        }
+        img
+    }
+
+    fn dct_basis() -> [[f64; 8]; 8] {
+        let mut d = [[0.0; 8]; 8];
+        for (k, row) in d.iter_mut().enumerate() {
+            let scale = if k == 0 { (1.0f64 / 8.0).sqrt() } else { (2.0f64 / 8.0).sqrt() };
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = scale
+                    * (std::f64::consts::PI * (2.0 * i as f64 + 1.0) * k as f64 / 16.0).cos();
+            }
+        }
+        d
+    }
+
+    /// 2-D DCT-II via `D X D^T` (matches the L2 `dct8x8` graph).
+    fn dct2(block: &[f64; 64], d: &[[f64; 8]; 8]) -> [f64; 64] {
+        let mut tmp = [0.0f64; 64];
+        let mut out = [0.0f64; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += d[i][k] * block[k * 8 + j];
+                }
+                tmp[i * 8 + j] = s;
+            }
+        }
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += tmp[i * 8 + k] * d[j][k];
+                }
+                out[i * 8 + j] = s;
+            }
+        }
+        out
+    }
+
+    fn idct2(block: &[f64; 64], d: &[[f64; 8]; 8]) -> [f64; 64] {
+        let mut tmp = [0.0f64; 64];
+        let mut out = [0.0f64; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += d[k][i] * block[k * 8 + j];
+                }
+                tmp[i * 8 + j] = s;
+            }
+        }
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += tmp[i * 8 + k] * d[k][j];
+                }
+                out[i * 8 + j] = s;
+            }
+        }
+        out
+    }
+
+    /// Encode+decode the image through the channel; returns the
+    /// reconstructed pixels.
+    pub fn roundtrip(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let side = self.side;
+        let img = Self::dataset(side, self.seed);
+        let blocks_per_side = side / 8;
+        let n_blocks = blocks_per_side * blocks_per_side;
+        let d = Self::dct_basis();
+        let mut recon = vec![0.0f64; side * side];
+        let q: Vec<f64> = QTABLE.iter().map(|v| (v * self.quality_scale).max(1.0)).collect();
+
+        for b in 0..n_blocks {
+            let by = b / blocks_per_side;
+            let bx = b % blocks_per_side;
+            let dct_core = b % 32;
+            let quant_core = 32 + (b % 32);
+            // Pixels to the DCT core: integer packets (16 words = 64 u8).
+            ch.send_ints(mc_of(dct_core), core(dct_core), 16);
+            // Extract and level-shift the block.
+            let mut blk = [0.0f64; 64];
+            for r in 0..8 {
+                for c in 0..8 {
+                    blk[r * 8 + c] = img[(by * 8 + r) * side + (bx * 8 + c)] - 128.0;
+                }
+            }
+            // DCT, then ship float coefficients to the quantization core
+            // — the approximable hop.
+            let mut coeffs = Self::dct2(&blk, &d).to_vec();
+            ch.send_f64(core(dct_core), core(quant_core), &mut coeffs, true);
+            // Quantize (integer result returns to the MC as int packets).
+            let mut quant = [0i32; 64];
+            for i in 0..64 {
+                quant[i] = (coeffs[i] / q[i]).round() as i32;
+            }
+            // Quantized coefficients to the entropy core, then the
+            // encoded bitstream to the MC — both integer streams.
+            let entropy_core = (quant_core + 7) % 32 + 32;
+            ch.send_ints(core(quant_core), core(entropy_core), 64);
+            let nonzero = quant.iter().filter(|v| **v != 0).count().max(1);
+            ch.send_ints(core(entropy_core), mc_of(entropy_core), nonzero);
+            // Decode: dequantize + IDCT (decoder side, local).
+            let mut deq = [0.0f64; 64];
+            for i in 0..64 {
+                deq[i] = quant[i] as f64 * q[i];
+            }
+            let pix = Self::idct2(&deq, &d);
+            for r in 0..8 {
+                for c in 0..8 {
+                    recon[(by * 8 + r) * side + (bx * 8 + c)] =
+                        (pix[r * 8 + c] + 128.0).clamp(0.0, 255.0);
+                }
+            }
+        }
+        recon
+    }
+
+    /// PSNR of the reconstruction against the original, dB.
+    pub fn psnr(original: &[f64], recon: &[f64]) -> f64 {
+        let mse: f64 = original
+            .iter()
+            .zip(recon.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / original.len() as f64;
+        if mse <= 0.0 {
+            f64::INFINITY
+        } else {
+            10.0 * (255.0f64 * 255.0 / mse).log10()
+        }
+    }
+
+    /// Write a binary PGM (P5) of pixel data for visual inspection
+    /// (the Fig.-7 outputs).
+    pub fn write_pgm(path: &std::path::Path, pixels: &[f64], side: usize) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "P5\n{side} {side}\n255\n")?;
+        let bytes: Vec<u8> = pixels.iter().map(|v| v.clamp(0.0, 255.0) as u8).collect();
+        f.write_all(&bytes)
+    }
+}
+
+impl Workload for Jpeg {
+    fn name(&self) -> &'static str {
+        "jpeg"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        self.roundtrip(ch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn dct_idct_roundtrip() {
+        let d = Jpeg::dct_basis();
+        let mut blk = [0.0f64; 64];
+        for (i, v) in blk.iter_mut().enumerate() {
+            *v = ((i * 37) % 255) as f64 - 128.0;
+        }
+        let f = Jpeg::dct2(&blk, &d);
+        let r = Jpeg::idct2(&f, &d);
+        for i in 0..64 {
+            assert!((r[i] - blk[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn dc_coefficient_is_scaled_mean() {
+        let d = Jpeg::dct_basis();
+        let blk = [40.0f64; 64];
+        let f = Jpeg::dct2(&blk, &d);
+        assert!((f[0] - 8.0 * 40.0).abs() < 1e-9);
+        assert!(f[1..].iter().all(|v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn golden_roundtrip_quality_is_high() {
+        let j = Jpeg::new(64, 4);
+        let mut ch = IdentityChannel::new();
+        let recon = j.run(&mut ch);
+        let orig = Jpeg::dataset(64, 4);
+        let psnr = Jpeg::psnr(&orig, &recon);
+        assert!(psnr > 30.0, "psnr={psnr}");
+    }
+
+    #[test]
+    fn traffic_is_int_dominant() {
+        let j = Jpeg::new(64, 4);
+        let mut ch = IdentityChannel::new();
+        j.run(&mut ch);
+        // Every DCT block's f64 coefficients spill through the NoC in
+        // this memory-traffic model, so jpeg's float share sits higher
+        // than the paper's Fig. 2 (documented in DESIGN.md); the
+        // *ordering* vs the float-heavy apps is what matters.
+        let f = ch.stats().profile.float_fraction();
+        assert!(f < 0.65, "float fraction {f}");
+        assert!(ch.stats().profile.int_packets > 0);
+    }
+
+    #[test]
+    fn pgm_write_roundtrip_header() {
+        let dir = std::env::temp_dir().join("lorax_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        Jpeg::write_pgm(&path, &[0.0, 128.0, 255.0, 300.0], 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(&bytes[bytes.len() - 4..], &[0u8, 128, 255, 255]);
+    }
+}

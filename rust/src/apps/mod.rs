@@ -1,0 +1,197 @@
+//! Workload engines — the gem5 + ACCEPT-benchmark stand-in.
+//!
+//! Each engine is a real implementation of one of the paper's evaluated
+//! applications, written against the [`Channel`] abstraction: every
+//! distributed data movement (input distribution, halo/intermediate
+//! exchange, result gathering) goes through the channel, which may
+//! corrupt approximable float payloads exactly as the photonic data
+//! plane would.  Output error (paper eq. 3) is *measured* by running the
+//! same engine over the golden [`IdentityChannel`] and the policy
+//! channel and comparing outputs — the paper's two-pass gem5 methodology
+//! collapsed into one process.
+//!
+//! The six evaluated apps (paper Fig. 2/6, Table 3): `blackscholes`,
+//! `canneal`, `fft`, `jpeg`, `sobel`, `streamcluster`; plus the two
+//! float-negligible PARSEC proxies the paper shows only in Fig. 2
+//! (`fluidanimate`, `x264`).
+
+pub mod blackscholes;
+pub mod canneal;
+pub mod common;
+pub mod fft;
+pub mod jpeg;
+pub mod proxies;
+pub mod sobel;
+pub mod streamcluster;
+
+use crate::approx::channel::Channel;
+
+/// A distributed workload engine.
+pub trait Workload {
+    fn name(&self) -> &'static str;
+
+    /// Execute the full workload, moving all distributed data through
+    /// `channel`; returns the canonical output vector used for the
+    /// eq.-3 error metric.
+    fn run(&self, channel: &mut dyn Channel) -> Vec<f64>;
+}
+
+/// Paper eq. 3, aggregated over a whole output vector as a normalized L1
+/// relative error: `100 * sum|approx - exact| / sum|exact|`.
+///
+/// (The aggregate form is robust to individual near-zero outputs, which
+/// would make the pointwise ratio blow up on e.g. flat image regions.)
+pub fn output_error_pct(exact: &[f64], approx: &[f64]) -> f64 {
+    assert_eq!(exact.len(), approx.len(), "output length mismatch");
+    assert!(!exact.is_empty(), "empty outputs");
+    let num: f64 = exact
+        .iter()
+        .zip(approx.iter())
+        .map(|(e, a)| {
+            // Corrupted NaN/inf (exponent bits only move under 32-bit
+            // masks on subnormal-adjacent values) count as full error.
+            if a.is_finite() {
+                (a - e).abs()
+            } else {
+                e.abs().max(1.0)
+            }
+        })
+        .sum();
+    let den: f64 = exact.iter().map(|e| e.abs()).sum();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            100.0
+        }
+    } else {
+        100.0 * num / den
+    }
+}
+
+/// The six evaluated applications at their "large input" default sizes.
+pub const EVALUATED_APPS: [&str; 6] =
+    ["blackscholes", "canneal", "fft", "jpeg", "sobel", "streamcluster"];
+
+/// All characterized applications (Fig. 2), including the two
+/// float-negligible proxies.
+pub const ALL_APPS: [&str; 8] = [
+    "blackscholes",
+    "canneal",
+    "fft",
+    "jpeg",
+    "sobel",
+    "streamcluster",
+    "fluidanimate",
+    "x264",
+];
+
+/// Instantiate a workload by name at its default ("large input") size.
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Workload>> {
+    by_name_scaled(name, seed, 1.0)
+}
+
+/// Instantiate a workload scaled down for fast tests (`scale` in (0, 1]).
+pub fn by_name_scaled(name: &str, seed: u64, scale: f64) -> Option<Box<dyn Workload>> {
+    let s = |n: usize| ((n as f64 * scale) as usize).max(64);
+    Some(match name {
+        "blackscholes" => Box::new(blackscholes::BlackScholes::new(s(16384), seed)),
+        "canneal" => Box::new(canneal::Canneal::new(s(4096), s(2048), seed)),
+        "fft" => Box::new(fft::DistributedFft::new(s(65536).next_power_of_two(), seed)),
+        "jpeg" => Box::new(jpeg::Jpeg::new(image_side(scale), seed)),
+        "sobel" => Box::new(sobel::Sobel::new(image_side(scale), seed)),
+        "streamcluster" => {
+            Box::new(streamcluster::StreamCluster::new(s(8192), 16, 24, seed))
+        }
+        "fluidanimate" => Box::new(proxies::FluidAnimateProxy::new(s(8192), seed)),
+        "x264" => Box::new(proxies::X264Proxy::new(image_side(scale / 2.0), seed)),
+        _ => return None,
+    })
+}
+
+fn image_side(scale: f64) -> usize {
+    // Keep images block-aligned (multiples of 64 for 8x8 DCT + 64-core
+    // row distribution).
+    let side = (512.0 * scale.sqrt()) as usize;
+    (side / 64).max(1) * 64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn error_metric_basics() {
+        let e = [1.0, 2.0, -3.0];
+        assert_eq!(output_error_pct(&e, &e), 0.0);
+        let a = [1.1, 2.0, -3.0];
+        let pe = output_error_pct(&e, &a);
+        assert!((pe - 100.0 * 0.1 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_metric_nan_counts_as_error() {
+        let e = [1.0, 2.0];
+        let a = [f64::NAN, 2.0];
+        assert!(output_error_pct(&e, &a) > 0.0);
+    }
+
+    #[test]
+    fn error_metric_zero_exact() {
+        assert_eq!(output_error_pct(&[0.0], &[0.0]), 0.0);
+        assert_eq!(output_error_pct(&[0.0], &[0.5]), 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn error_metric_length_mismatch_panics() {
+        output_error_pct(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn registry_covers_all_apps() {
+        for app in ALL_APPS {
+            assert!(by_name_scaled(app, 1, 0.02).is_some(), "{app} missing");
+        }
+        assert!(by_name("unknown", 1).is_none());
+    }
+
+    #[test]
+    fn all_apps_run_and_are_deterministic_small() {
+        for app in ALL_APPS {
+            let w = by_name_scaled(app, 7, 0.02).unwrap();
+            let mut ch1 = IdentityChannel::new();
+            let out1 = w.run(&mut ch1);
+            let mut ch2 = IdentityChannel::new();
+            let out2 = w.run(&mut ch2);
+            assert!(!out1.is_empty(), "{app} produced no output");
+            assert_eq!(out1, out2, "{app} not deterministic");
+            assert!(out1.iter().all(|v| v.is_finite()), "{app} non-finite output");
+            assert!(ch1.stats().transfers > 0, "{app} moved no data");
+        }
+    }
+
+    #[test]
+    fn float_fractions_are_ordered_like_fig2() {
+        // The qualitative Fig.-2 shape: fft/blackscholes float-heavy,
+        // jpeg light, proxies negligible.
+        let frac = |app: &str| {
+            let w = by_name_scaled(app, 3, 0.05).unwrap();
+            let mut ch = IdentityChannel::new();
+            w.run(&mut ch);
+            ch.stats().profile.float_fraction()
+        };
+        let fft = frac("fft");
+        let bs = frac("blackscholes");
+        let jpeg = frac("jpeg");
+        let fluid = frac("fluidanimate");
+        let x264 = frac("x264");
+        assert!(fft > 0.6, "fft float fraction {fft}");
+        assert!(bs > 0.5, "blackscholes float fraction {bs}");
+        assert!(jpeg < fft && jpeg < bs, "jpeg {jpeg} should sit below fft/bs");
+        assert!(jpeg < 0.65, "jpeg float fraction {jpeg}");
+        assert!(fluid < 0.15, "fluidanimate float fraction {fluid}");
+        assert!(x264 < 0.15, "x264 float fraction {x264}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Float-negligible PARSEC proxies for the Fig.-2 characterization.
+//!
+//! The paper *characterizes* `fluidanimate` and `x264` (Fig. 2) but
+//! excludes them from evaluation because their float traffic is
+//! negligible.  These are small-but-real engines that reproduce that
+//! traffic shape: almost everything they move is integer data.
+
+use crate::approx::channel::Channel;
+use crate::util::rng::Rng;
+
+use super::common::{core, mc_of, shard, N_CORES};
+use super::Workload;
+
+/// Particle-to-cell binning + density counting (the traffic skeleton of
+/// fluidanimate's neighbour search, which exchanges cell indices and
+/// particle lists as integers).
+pub struct FluidAnimateProxy {
+    n_particles: usize,
+    seed: u64,
+}
+
+impl FluidAnimateProxy {
+    pub fn new(n_particles: usize, seed: u64) -> FluidAnimateProxy {
+        FluidAnimateProxy { n_particles, seed }
+    }
+}
+
+impl Workload for FluidAnimateProxy {
+    fn name(&self) -> &'static str {
+        "fluidanimate"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed ^ 0xF1D);
+        let grid = 16usize;
+        // Quantized particle positions travel as integer packets.
+        let cells: Vec<usize> = (0..self.n_particles)
+            .map(|_| rng.below(grid) * grid + rng.below(grid))
+            .collect();
+        let mut density = vec![0.0f64; grid * grid];
+        for i in 0..N_CORES {
+            let r = shard(self.n_particles, i);
+            if r.is_empty() {
+                continue;
+            }
+            // Particle cell ids to the core (1 word each).
+            ch.send_ints(mc_of(i), core(i), r.len());
+            for &c in &cells[r.clone()] {
+                density[c] += 1.0;
+            }
+            // Neighbour-list exchange with the next core: int packets.
+            if i + 1 < N_CORES {
+                ch.send_ints(core(i), core(i + 1), 32);
+            }
+            // Per-core cell histogram back to the MC: int packets.
+            ch.send_ints(core(i), mc_of(i), grid);
+        }
+        // One small float summary (cell densities), non-annotated.
+        ch.send_f64(core(0), mc_of(0), &mut density[..16.min(grid * grid)].to_vec(), false);
+        density
+    }
+}
+
+/// SAD motion-estimation proxy: the integer-dominant core of x264.
+pub struct X264Proxy {
+    side: usize,
+    seed: u64,
+}
+
+impl X264Proxy {
+    pub fn new(side: usize, seed: u64) -> X264Proxy {
+        X264Proxy { side: side.max(64), seed }
+    }
+
+    fn frame(side: usize, seed: u64, shift: usize) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..side * side)
+            .map(|i| {
+                let (y, x) = (i / side, i % side);
+                let v = 120.0
+                    + 80.0 * (((x + shift) as f64) / 24.0).sin()
+                    + 40.0 * ((y as f64) / 17.0).cos()
+                    + rng.range_f64(-8.0, 8.0);
+                v.clamp(0.0, 255.0) as u8
+            })
+            .collect()
+    }
+}
+
+impl Workload for X264Proxy {
+    fn name(&self) -> &'static str {
+        "x264"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let side = self.side;
+        let cur = Self::frame(side, self.seed, 3);
+        let reff = Self::frame(side, self.seed, 0);
+        let mb = 16usize;
+        let mbs = side / mb;
+        let mut residuals = Vec::with_capacity(mbs * mbs);
+        for by in 0..mbs {
+            for bx in 0..mbs {
+                let c = (by * mbs + bx) % N_CORES;
+                // Current + reference macroblock pixels: int packets
+                // (16x16 u8 = 64 words each).
+                ch.send_ints(mc_of(c), core(c), 64);
+                ch.send_ints(mc_of(c), core(c), 64);
+                // +/-4 pixel SAD search.
+                let mut best = u64::MAX;
+                for dy in -4i64..=4 {
+                    for dx in -4i64..=4 {
+                        let mut sad = 0u64;
+                        for r in 0..mb {
+                            for s in 0..mb {
+                                let cy = by * mb + r;
+                                let cx = bx * mb + s;
+                                let ry = (cy as i64 + dy).clamp(0, side as i64 - 1) as usize;
+                                let rx = (cx as i64 + dx).clamp(0, side as i64 - 1) as usize;
+                                sad += (cur[cy * side + cx] as i64 - reff[ry * side + rx] as i64)
+                                    .unsigned_abs();
+                            }
+                        }
+                        best = best.min(sad);
+                    }
+                }
+                // Motion vector + SAD back as ints.
+                ch.send_ints(core(c), mc_of(c), 3);
+                residuals.push(best as f64);
+            }
+        }
+        residuals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn fluid_densities_conserve_particles() {
+        let w = FluidAnimateProxy::new(2000, 3);
+        let mut ch = IdentityChannel::new();
+        let density = w.run(&mut ch);
+        let total: f64 = density.iter().sum();
+        assert_eq!(total as usize, 2000);
+        assert!(ch.stats().profile.float_fraction() < 0.1);
+    }
+
+    #[test]
+    fn x264_finds_shift_motion() {
+        let w = X264Proxy::new(64, 5);
+        let mut ch = IdentityChannel::new();
+        let residuals = w.run(&mut ch);
+        assert_eq!(residuals.len(), 16);
+        // A pure-translation pair should have modest SADs vs worst case.
+        let avg = residuals.iter().sum::<f64>() / residuals.len() as f64;
+        assert!(avg < 255.0 * 256.0 / 4.0, "avg SAD {avg}");
+        assert!(ch.stats().profile.float_fraction() < 0.05);
+    }
+}

@@ -1,0 +1,189 @@
+//! `sobel` — edge-detection workload (ACCEPT).
+//!
+//! A grayscale image is banded over the 64 cores (8 rows each at the
+//! default 512² size).  Band distribution, halo-row exchange with the
+//! ring-adjacent cores and result gathering are all approximable float
+//! transfers; pixel row indices ride as integer packets.  Edge maps
+//! tolerate mantissa noise well (the output is dominated by large
+//! gradients), matching the paper's finding that sobel sustains 32-bit
+//! truncation under 10% output error.
+
+use crate::approx::channel::Channel;
+use crate::util::rng::Rng;
+
+use super::common::{core, gather_f64, mc_of, N_CORES};
+use super::Workload;
+
+pub struct Sobel {
+    side: usize,
+    seed: u64,
+}
+
+impl Sobel {
+    pub fn new(side: usize, seed: u64) -> Sobel {
+        assert!(side % N_CORES == 0, "side must divide over 64 cores");
+        Sobel { side, seed }
+    }
+
+    /// Synthetic test image: smooth gradients + rectangles + texture
+    /// (deterministic; exercises flat regions, hard edges and noise).
+    pub fn dataset(side: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ 0x50BE);
+        let mut img = vec![0.0f64; side * side];
+        for y in 0..side {
+            for x in 0..side {
+                let mut v = 96.0 + 64.0 * ((x as f64 / side as f64) * std::f64::consts::PI).sin();
+                // Rectangles.
+                if (side / 8..side / 3).contains(&x) && (side / 6..side / 2).contains(&y) {
+                    v = 220.0;
+                }
+                if (side / 2..side * 7 / 8).contains(&x) && (side / 2..side * 3 / 4).contains(&y) {
+                    v = 30.0;
+                }
+                // Texture noise.
+                v += rng.range_f64(-6.0, 6.0);
+                img[y * side + x] = v.clamp(0.0, 255.0);
+            }
+        }
+        img
+    }
+
+    fn rows_per_core(&self) -> usize {
+        self.side / N_CORES
+    }
+}
+
+impl Workload for Sobel {
+    fn name(&self) -> &'static str {
+        "sobel"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let side = self.side;
+        let rpc = self.rows_per_core();
+        let img = Self::dataset(side, self.seed);
+        // Band scatter: MC -> core, rpc rows each (approximable).
+        let mut bands: Vec<Vec<f64>> = (0..N_CORES)
+            .map(|i| img[i * rpc * side..(i + 1) * rpc * side].to_vec())
+            .collect();
+        for (i, band) in bands.iter_mut().enumerate() {
+            ch.send_ints(mc_of(i), core(i), 2); // row-range metadata
+            ch.send_f64(mc_of(i), core(i), band, true);
+        }
+        // Halo exchange: top row to previous core, bottom row to next.
+        let mut halos_above: Vec<Vec<f64>> = Vec::with_capacity(N_CORES);
+        let mut halos_below: Vec<Vec<f64>> = Vec::with_capacity(N_CORES);
+        for i in 0..N_CORES {
+            // Row arriving from the core above (its bottom row).
+            let above = if i > 0 {
+                let mut row = bands[i - 1][(rpc - 1) * side..rpc * side].to_vec();
+                ch.send_f64(core(i - 1), core(i), &mut row, true);
+                row
+            } else {
+                bands[0][..side].to_vec() // replicate edge
+            };
+            let below = if i + 1 < N_CORES {
+                let mut row = bands[i + 1][..side].to_vec();
+                ch.send_f64(core(i + 1), core(i), &mut row, true);
+                row
+            } else {
+                bands[N_CORES - 1][(rpc - 1) * side..].to_vec()
+            };
+            halos_above.push(above);
+            halos_below.push(below);
+        }
+        // Local 3x3 Sobel per band with halos.
+        let mut out = vec![0.0f64; side * side];
+        for i in 0..N_CORES {
+            let band = &bands[i];
+            let px = |r: isize, c: isize| -> f64 {
+                let c = c.clamp(0, side as isize - 1) as usize;
+                if r < 0 {
+                    halos_above[i][c]
+                } else if r >= rpc as isize {
+                    halos_below[i][c]
+                } else {
+                    band[r as usize * side + c]
+                }
+            };
+            for r in 0..rpc as isize {
+                for c in 0..side as isize {
+                    let gx = px(r - 1, c + 1) + 2.0 * px(r, c + 1) + px(r + 1, c + 1)
+                        - px(r - 1, c - 1)
+                        - 2.0 * px(r, c - 1)
+                        - px(r + 1, c - 1);
+                    let gy = px(r + 1, c - 1) + 2.0 * px(r + 1, c) + px(r + 1, c + 1)
+                        - px(r - 1, c - 1)
+                        - 2.0 * px(r - 1, c)
+                        - px(r - 1, c + 1);
+                    out[(i * rpc + r as usize) * side + c as usize] =
+                        (gx * gx + gy * gy).sqrt();
+                }
+            }
+        }
+        // Gather the edge map (approximable).
+        gather_f64(ch, &mut out, true);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn golden_matches_serial_reference() {
+        // The banded/halo version must equal a straightforward serial
+        // Sobel with edge replication.
+        let side = 64;
+        let w = Sobel::new(side, 5);
+        let mut ch = IdentityChannel::new();
+        let got = w.run(&mut ch);
+        let img = Sobel::dataset(side, 5);
+        let px = |r: isize, c: isize| {
+            let r = r.clamp(0, side as isize - 1) as usize;
+            let c = c.clamp(0, side as isize - 1) as usize;
+            img[r * side + c]
+        };
+        for r in 0..side as isize {
+            for c in 0..side as isize {
+                let gx = px(r - 1, c + 1) + 2.0 * px(r, c + 1) + px(r + 1, c + 1)
+                    - px(r - 1, c - 1)
+                    - 2.0 * px(r, c - 1)
+                    - px(r + 1, c - 1);
+                let gy = px(r + 1, c - 1) + 2.0 * px(r + 1, c) + px(r + 1, c + 1)
+                    - px(r - 1, c - 1)
+                    - 2.0 * px(r - 1, c)
+                    - px(r - 1, c + 1);
+                let want = (gx * gx + gy * gy).sqrt();
+                let g = got[(r as usize) * side + c as usize];
+                assert!(
+                    (g - want).abs() < 1e-3, // SP wire quantization
+                    "pixel ({r},{c}): {g} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn detects_rectangle_edges() {
+        let side = 128;
+        let w = Sobel::new(side, 1);
+        let mut ch = IdentityChannel::new();
+        let out = w.run(&mut ch);
+        // Energy on the rectangle border should dwarf the flat interior.
+        let border = out[(side / 6) * side + side / 4];
+        let interior = out[(side / 3) * side + side / 4];
+        assert!(border > interior);
+    }
+
+    #[test]
+    fn traffic_is_float_leaning() {
+        let w = Sobel::new(64, 2);
+        let mut ch = IdentityChannel::new();
+        w.run(&mut ch);
+        let f = ch.stats().profile.float_fraction();
+        assert!(f > 0.4, "float fraction {f}");
+    }
+}

@@ -1,0 +1,219 @@
+//! `streamcluster` — online k-median clustering (PARSEC/ACCEPT).
+//!
+//! Points stream from the memory controllers to the cores in chunks
+//! (approximable float).  Each core runs online facility location on its
+//! stream (open a new local center with probability d/alpha, else assign
+//! to the nearest), then ships its weighted centers to core 0
+//! (approximable) for a weighted k-median consolidation pass.  The
+//! output — final center coordinates and total cost — aggregates over
+//! thousands of points, so mantissa-LSB noise averages out; the paper
+//! finds streamcluster tolerant up to 28 bits at 80% power reduction.
+
+use crate::approx::channel::Channel;
+use crate::util::rng::Rng;
+
+use super::common::{core, mc_of, shard, N_CORES};
+use super::Workload;
+
+pub struct StreamCluster {
+    n_points: usize,
+    dim: usize,
+    k: usize,
+    seed: u64,
+}
+
+impl StreamCluster {
+    pub fn new(n_points: usize, dim: usize, k: usize, seed: u64) -> StreamCluster {
+        StreamCluster { n_points, dim, k, seed }
+    }
+
+    /// Gaussian mixture dataset (a fixed 8-component mixture, independent
+    /// of the requested median count so runs with different `k` are
+    /// comparable).
+    fn dataset(&self) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed ^ 0x57C1);
+        let mixture = 8;
+        let mut centers = Vec::with_capacity(mixture * self.dim);
+        for _ in 0..mixture * self.dim {
+            centers.push(rng.range_f64(-50.0, 50.0));
+        }
+        let mut pts = Vec::with_capacity(self.n_points * self.dim);
+        for _ in 0..self.n_points {
+            let c = rng.below(mixture);
+            for d in 0..self.dim {
+                pts.push(centers[c * self.dim + d] + rng.next_gaussian() * 2.5);
+            }
+        }
+        pts
+    }
+
+    fn dist2(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+}
+
+impl Workload for StreamCluster {
+    fn name(&self) -> &'static str {
+        "streamcluster"
+    }
+
+    fn run(&self, ch: &mut dyn Channel) -> Vec<f64> {
+        let dim = self.dim;
+        let pts = self.dataset();
+        let mut rng = Rng::new(self.seed ^ 0x57C2);
+        // Stream chunks to cores (approximable float).
+        let mut local_centers: Vec<Vec<f64>> = vec![Vec::new(); N_CORES];
+        let mut local_weights: Vec<Vec<f64>> = vec![Vec::new(); N_CORES];
+        let alpha = 220.0 * dim as f64; // facility cost
+        for i in 0..N_CORES {
+            let r = shard(self.n_points, i);
+            if r.is_empty() {
+                continue;
+            }
+            let mut chunk = pts[r.start * dim..r.end * dim].to_vec();
+            ch.send_ints(mc_of(i), core(i), 2); // chunk header
+            ch.send_f64(mc_of(i), core(i), &mut chunk, true);
+            // Online facility location over the received (possibly
+            // corrupted) chunk.
+            let centers = &mut local_centers[i];
+            let weights = &mut local_weights[i];
+            for p in chunk.chunks_exact(dim) {
+                if centers.is_empty() {
+                    centers.extend_from_slice(p);
+                    weights.push(1.0);
+                    continue;
+                }
+                let (best, d2) = centers
+                    .chunks_exact(dim)
+                    .enumerate()
+                    .map(|(ci, c)| (ci, Self::dist2(p, c)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                if d2 > alpha * rng.next_f64() {
+                    centers.extend_from_slice(p);
+                    weights.push(1.0);
+                } else {
+                    // Weighted running mean keeps centers representative.
+                    let w = weights[best];
+                    for d in 0..dim {
+                        centers[best * dim + d] =
+                            (centers[best * dim + d] * w + p[d]) / (w + 1.0);
+                    }
+                    weights[best] = w + 1.0;
+                }
+            }
+        }
+        // Ship local centers + weights to core 0 (approximable).
+        let mut all_centers: Vec<f64> = Vec::new();
+        let mut all_weights: Vec<f64> = Vec::new();
+        for i in 0..N_CORES {
+            if local_centers[i].is_empty() {
+                continue;
+            }
+            let mut payload = local_centers[i].clone();
+            payload.extend_from_slice(&local_weights[i]);
+            if i != 0 {
+                ch.send_f64(core(i), core(0), &mut payload, true);
+            }
+            let nc = local_weights[i].len();
+            all_centers.extend_from_slice(&payload[..nc * dim]);
+            all_weights.extend_from_slice(&payload[nc * dim..]);
+        }
+        // Weighted k-median consolidation on core 0: greedy farthest-point
+        // init + assignment refinement.
+        let n_cand = all_weights.len();
+        let k = self.k.min(n_cand.max(1));
+        let mut chosen: Vec<usize> = vec![0];
+        while chosen.len() < k {
+            let far = (0..n_cand)
+                .max_by(|&a, &b| {
+                    let da = chosen
+                        .iter()
+                        .map(|&c| {
+                            Self::dist2(
+                                &all_centers[a * dim..(a + 1) * dim],
+                                &all_centers[c * dim..(c + 1) * dim],
+                            )
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    let db = chosen
+                        .iter()
+                        .map(|&c| {
+                            Self::dist2(
+                                &all_centers[b * dim..(b + 1) * dim],
+                                &all_centers[c * dim..(c + 1) * dim],
+                            )
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if chosen.contains(&far) {
+                break;
+            }
+            chosen.push(far);
+        }
+        // Final cost: weighted distance of every candidate center to its
+        // nearest chosen median.
+        let mut cost = 0.0;
+        for i in 0..n_cand {
+            let d2 = chosen
+                .iter()
+                .map(|&c| {
+                    Self::dist2(
+                        &all_centers[i * dim..(i + 1) * dim],
+                        &all_centers[c * dim..(c + 1) * dim],
+                    )
+                })
+                .fold(f64::INFINITY, f64::min);
+            cost += all_weights[i] * d2.sqrt();
+        }
+        // Output: cost + chosen medians, reported to the MC.  Fixed
+        // length (1 + k*dim) regardless of how many medians the search
+        // produced, so golden/approx outputs stay comparable.
+        let mut out = vec![cost];
+        for &c in &chosen {
+            out.extend_from_slice(&all_centers[c * dim..(c + 1) * dim]);
+        }
+        out.resize(1 + self.k * dim, 0.0);
+        ch.send_f64(core(0), mc_of(0), &mut out, true);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::channel::IdentityChannel;
+
+    #[test]
+    fn recovers_cluster_structure() {
+        let w = StreamCluster::new(2048, 4, 8, 7);
+        let mut ch = IdentityChannel::new();
+        let out = w.run(&mut ch);
+        // cost + 8 centers x 4 dims
+        assert_eq!(out.len(), 1 + 8 * 4);
+        assert!(out[0] > 0.0 && out[0].is_finite());
+        // Cost should be far below the unclustered scale (points span
+        // [-50,50]^4; thousands of points * ~50 distance would be huge).
+        assert!(out[0] < 2048.0 * 60.0, "cost {}", out[0]);
+    }
+
+    #[test]
+    fn more_clusters_lower_cost() {
+        let mut c1 = IdentityChannel::new();
+        let mut c2 = IdentityChannel::new();
+        let few = StreamCluster::new(1024, 4, 3, 9).run(&mut c1)[0];
+        let many = StreamCluster::new(1024, 4, 16, 9).run(&mut c2)[0];
+        assert!(many < few, "{many} !< {few}");
+    }
+
+    #[test]
+    fn float_heavy_traffic() {
+        let w = StreamCluster::new(1024, 8, 8, 3);
+        let mut ch = IdentityChannel::new();
+        w.run(&mut ch);
+        let f = ch.stats().profile.float_fraction();
+        assert!(f > 0.6, "float fraction {f}");
+    }
+}

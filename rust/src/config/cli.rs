@@ -1,0 +1,124 @@
+//! Dependency-free command-line argument parser.
+//!
+//! Grammar: positionals, `--key value`, `--key=value`, and boolean
+//! `--flag` (an option followed by another `--...` token or end of args).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not a number")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} {s:?} is not an integer")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Error out on unknown option names (catch typos early).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_grammar() {
+        let a = parse("simulate --app fft --scale=0.5 --verbose --seed 7 extra");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get("app"), Some("fft"));
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["simulate", "extra"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert!(a.get_f64("n", 0.0).is_err());
+        assert!(a.get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("cmd --good 1 --bad 2");
+        assert!(a.expect_known(&["good"]).is_err());
+        assert!(a.expect_known(&["good", "bad"]).is_ok());
+    }
+}

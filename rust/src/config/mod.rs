@@ -1,0 +1,10 @@
+//! Configuration system: typed system config with paper defaults, a
+//! minimal TOML-subset file parser, and a dependency-free CLI argument
+//! parser (the vendor set has no clap/serde — DESIGN.md §4).
+
+pub mod cli;
+pub mod system;
+pub mod toml_lite;
+
+pub use cli::Args;
+pub use system::SystemConfig;

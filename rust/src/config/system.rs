@@ -1,0 +1,225 @@
+//! Typed system configuration with the paper's defaults (Tables 1 & 2,
+//! §5.1), loadable from a TOML-subset file with CLI overrides — the
+//! "real config system" a deployment would drive.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::energy::params::EnergyParams;
+use crate::phys::params::PhotonicParams;
+
+use super::toml_lite::TomlLite;
+
+/// Full system configuration.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Master seed for datasets, channel corruption and traffic.
+    pub seed: u64,
+    /// Workload scale (1.0 = the paper's "large input" sizes).
+    pub scale: f64,
+    /// Output-error ceiling, percent (paper §5.1: 10%).
+    pub error_threshold_pct: f64,
+    pub photonic: PhotonicParams,
+    pub energy: EnergyParams,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            seed: 42,
+            scale: 1.0,
+            error_threshold_pct: 10.0,
+            photonic: PhotonicParams::default(),
+            energy: EnergyParams::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load from a config file (all keys optional; defaults fill in).
+    pub fn from_file(path: &Path) -> Result<SystemConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let t = TomlLite::parse(&text)?;
+        let mut cfg = SystemConfig::default();
+        for ((section, key), value) in &t.entries {
+            cfg.set(section, key, value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `section.key = value` override (used by both the file
+    /// loader and `--set photonic.detector_sensitivity_dbm=-25` CLI
+    /// overrides).
+    pub fn set(&mut self, section: &str, key: &str, value: &str) -> Result<()> {
+        let f = || -> Result<f64> {
+            value
+                .parse()
+                .map_err(|_| anyhow::anyhow!("[{section}] {key} = {value:?}: not a number"))
+        };
+        let u = || -> Result<u64> {
+            value
+                .parse()
+                .map_err(|_| anyhow::anyhow!("[{section}] {key} = {value:?}: not an integer"))
+        };
+        match (section, key) {
+            ("run", "seed") | ("", "seed") => self.seed = u()?,
+            ("run", "scale") | ("", "scale") => self.scale = f()?,
+            ("run", "error_threshold_pct") => self.error_threshold_pct = f()?,
+            ("photonic", "detector_sensitivity_dbm") => {
+                self.photonic.detector_sensitivity_dbm = f()?
+            }
+            ("photonic", "mr_through_loss_db") => self.photonic.mr_through_loss_db = f()?,
+            ("photonic", "mr_drop_loss_db") => self.photonic.mr_drop_loss_db = f()?,
+            ("photonic", "wg_prop_loss_db_per_cm") => {
+                self.photonic.wg_prop_loss_db_per_cm = f()?
+            }
+            ("photonic", "wg_bend_loss_db_per_90") => {
+                self.photonic.wg_bend_loss_db_per_90 = f()?
+            }
+            ("photonic", "thermo_tuning_uw_per_nm") => {
+                self.photonic.thermo_tuning_uw_per_nm = f()?
+            }
+            ("photonic", "tuning_range_nm") => self.photonic.tuning_range_nm = f()?,
+            ("photonic", "pam4_signaling_loss_db") => {
+                self.photonic.pam4_signaling_loss_db = f()?
+            }
+            ("photonic", "pam4_power_factor") => self.photonic.pam4_power_factor = f()?,
+            ("photonic", "n_lambda_ook") => self.photonic.n_lambda_ook = u()? as u32,
+            ("photonic", "n_lambda_pam4") => self.photonic.n_lambda_pam4 = u()? as u32,
+            ("photonic", "q_calibration") => self.photonic.q_calibration = f()?,
+            ("photonic", "detection_margin_db") => {
+                self.photonic.detection_margin_db = f()?
+            }
+            ("photonic", "vcsel_wall_plug_efficiency") => {
+                self.photonic.vcsel_wall_plug_efficiency = f()?
+            }
+            ("energy", "clock_ghz") => self.energy.clock_ghz = f()?,
+            ("energy", "router_pj_per_word") => self.energy.router_pj_per_word = f()?,
+            ("energy", "gwi_pj_per_word") => self.energy.gwi_pj_per_word = f()?,
+            ("energy", "mod_fj_per_bit") => self.energy.mod_fj_per_bit = f()?,
+            ("energy", "pam4_mod_fj_per_symbol") => {
+                self.energy.pam4_mod_fj_per_symbol = f()?
+            }
+            ("energy", "rx_fj_per_bit") => self.energy.rx_fj_per_bit = f()?,
+            ("energy", "lut_static_mw_total") => self.energy.lut_static_mw_total = f()?,
+            ("energy", "lut_access_pj") => self.energy.lut_access_pj = f()?,
+            _ => bail!("unknown config key [{section}] {key}"),
+        }
+        Ok(())
+    }
+
+    /// Apply `--set section.key=value` style overrides.
+    pub fn apply_overrides<'a, I: IntoIterator<Item = &'a str>>(&mut self, sets: I) -> Result<()> {
+        for s in sets {
+            let (path, value) = s
+                .split_once('=')
+                .with_context(|| format!("--set {s:?}: expected section.key=value"))?;
+            let (section, key) = path.split_once('.').unwrap_or(("run", path));
+            self.set(section.trim(), key.trim(), value.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Pretty-print the Table-1/Table-2 style configuration summary.
+    pub fn describe(&self) -> String {
+        let p = &self.photonic;
+        let e = &self.energy;
+        format!(
+            "LORAX system configuration\n\
+             == platform (Table 1) ==\n\
+             cores: 64 x86-class @ {} GHz, 8 clusters x 8 cores, 2 concentrators/cluster\n\
+             die: 20 x 20 mm (400 mm^2), 22 nm\n\
+             == photonics (Table 2) ==\n\
+             detector sensitivity: {} dBm\n\
+             MR through loss: {} dB   drop loss: {} dB\n\
+             waveguide: {} dB/cm propagation, {} dB/90-deg bend\n\
+             thermo-optic tuning: {} uW/nm ({} nm range)\n\
+             PAM4: +{} dB signaling loss, {}x LSB power floor, N_lambda {} -> {}\n\
+             receiver Q at calibration: {}   LORAX detection margin: {} dB\n\
+             == energy ==\n\
+             router {} pJ/word, GWI {} pJ/word, mod {} fJ/b, rx {} fJ/b\n\
+             lookup tables: {} mW static total, {} pJ/access, {}-cycle latency\n\
+             == run ==\n\
+             seed {}  scale {}  error threshold {}%",
+            e.clock_ghz,
+            p.detector_sensitivity_dbm,
+            p.mr_through_loss_db,
+            p.mr_drop_loss_db,
+            p.wg_prop_loss_db_per_cm,
+            p.wg_bend_loss_db_per_90,
+            p.thermo_tuning_uw_per_nm,
+            p.tuning_range_nm,
+            p.pam4_signaling_loss_db,
+            p.pam4_power_factor,
+            p.n_lambda_ook,
+            p.n_lambda_pam4,
+            p.q_calibration,
+            p.detection_margin_db,
+            e.router_pj_per_word,
+            e.gwi_pj_per_word,
+            e.mod_fj_per_bit,
+            e.rx_fj_per_bit,
+            e.lut_static_mw_total,
+            e.lut_access_pj,
+            e.lut_latency_cycles,
+            self.seed,
+            self.scale,
+            self.error_threshold_pct,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_values() {
+        let c = SystemConfig::default();
+        assert_eq!(c.error_threshold_pct, 10.0);
+        assert_eq!(c.photonic.detector_sensitivity_dbm, -23.4);
+        assert_eq!(c.energy.clock_ghz, 5.0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = SystemConfig::default();
+        c.apply_overrides(["photonic.q_calibration=6", "run.seed=9", "scale=0.5"]).unwrap();
+        assert_eq!(c.photonic.q_calibration, 6.0);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.scale, 0.5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SystemConfig::default();
+        assert!(c.set("photonic", "nonsense", "1").is_err());
+        assert!(c.apply_overrides(["bad"]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("lorax_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.toml");
+        std::fs::write(
+            &path,
+            "[run]\nseed = 123\n[photonic]\ndetection_margin_db = 2.0\n[energy]\nrouter_pj_per_word = 1.5\n",
+        )
+        .unwrap();
+        let c = SystemConfig::from_file(&path).unwrap();
+        assert_eq!(c.seed, 123);
+        assert_eq!(c.photonic.detection_margin_db, 2.0);
+        assert_eq!(c.energy.router_pj_per_word, 1.5);
+    }
+
+    #[test]
+    fn describe_mentions_key_constants() {
+        let d = SystemConfig::default().describe();
+        assert!(d.contains("-23.4"));
+        assert!(d.contains("400 mm^2"));
+        assert!(d.contains("5 GHz") || d.contains("5 GHz") || d.contains("@ 5 GHz"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` pairs,
+//! `#` comments.  Values stay strings; typed access happens at the
+//! consumer ([`crate::config::system`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed file: `(section, key) -> value`.  Keys outside any section land
+/// in section `""`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlLite {
+    pub entries: BTreeMap<(String, String), String>,
+}
+
+impl TomlLite {
+    pub fn parse(text: &str) -> Result<TomlLite> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let value = value.trim().trim_matches('"').to_string();
+            entries.insert((section.clone(), key.trim().to_string()), value);
+        }
+        Ok(TomlLite { entries })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .get(&(section.to_string(), key.to_string()))
+            .map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse().map_err(|_| {
+                anyhow::anyhow!("[{section}] {key} = {s:?} is not a number")
+            })?)),
+        }
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse().map_err(|_| {
+                anyhow::anyhow!("[{section}] {key} = {s:?} is not an integer")
+            })?)),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let t = TomlLite::parse(
+            "top = 1\n[photonic]\n# comment\ndetector_sensitivity_dbm = -23.4\nname = \"x\"\n[run]\nseed = 42\n",
+        )
+        .unwrap();
+        assert_eq!(t.get("", "top"), Some("1"));
+        assert_eq!(t.get_f64("photonic", "detector_sensitivity_dbm").unwrap(), Some(-23.4));
+        assert_eq!(t.get("photonic", "name"), Some("x"));
+        assert_eq!(t.get_u64("run", "seed").unwrap(), Some(42));
+        assert_eq!(t.get("run", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlLite::parse("[unterminated\n").is_err());
+        assert!(TomlLite::parse("no equals here\n").is_err());
+        let t = TomlLite::parse("[s]\nk = abc\n").unwrap();
+        assert!(t.get_f64("s", "k").is_err());
+    }
+
+    #[test]
+    fn inline_comments_and_whitespace() {
+        let t = TomlLite::parse("  k   =   5.5   # trailing\n").unwrap();
+        assert_eq!(t.get_f64("", "k").unwrap(), Some(5.5));
+    }
+}

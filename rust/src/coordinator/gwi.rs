@@ -1,0 +1,251 @@
+//! Gateway-interface (GWI) decision engine.
+//!
+//! Implements the paper's §4.1 control flow: for every approximable
+//! transfer the source GWI reads the packet flag, looks up the
+//! accumulated loss to the destination GWI in its (offline-populated)
+//! table, and decides — *per destination* — whether the LSB wavelengths
+//! are driven at the application-specific reduced level or switched off
+//! entirely (truncation), commanding the VCSEL drivers accordingly.
+
+use crate::approx::float_bits::mask_for_lsbs;
+use crate::approx::policy::{Policy, PolicyKind, TransferMode};
+use crate::phys::params::{Modulation, PhotonicParams};
+use crate::phys::signaling::BitErrorProbs;
+use crate::topology::clos::ClosTopology;
+use crate::topology::losstable::WaveguideSet;
+use crate::util::math::prob_to_threshold;
+
+/// Resolved transmission parameters for one transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    pub mode: TransferMode,
+    /// Low-word mask of approximated bits (0 when `mode == FullPower`).
+    pub mask: u32,
+    /// Channel-kernel thresholds for the masked bits.
+    pub t10: u32,
+    pub t01: u32,
+    /// Laser level actually driven on the masked wavelengths.
+    pub level: f64,
+}
+
+impl Decision {
+    pub const FULL: Decision = Decision {
+        mode: TransferMode::FullPower,
+        mask: 0,
+        t10: 0,
+        t01: 0,
+        level: 1.0,
+    };
+
+    fn from_probs(mode: TransferMode, mask: u32, probs: BitErrorProbs, level: f64) -> Decision {
+        Decision {
+            mode,
+            mask,
+            t10: prob_to_threshold(probs.p10),
+            t01: prob_to_threshold(probs.p01),
+            level,
+        }
+    }
+}
+
+/// Per-source-cluster decision engine with the loss lookup table.
+pub struct GwiDecisionEngine {
+    pub topo: ClosTopology,
+    pub params: PhotonicParams,
+    /// Loss/provisioning/receiver set for the active modulation.
+    pub waveguides: WaveguideSet,
+}
+
+impl GwiDecisionEngine {
+    pub fn new(topo: ClosTopology, params: PhotonicParams, m: Modulation) -> GwiDecisionEngine {
+        let waveguides = WaveguideSet::build(&topo, &params, m);
+        GwiDecisionEngine { topo, params, waveguides }
+    }
+
+    /// Decide how an approximable float transfer from `src_cluster` to
+    /// `dst_cluster` is transmitted under `policy`.
+    ///
+    /// Pure function of static data — the NoC replay recomputes the exact
+    /// same decisions the live channel made.
+    pub fn decide(&self, policy: &Policy, src_cluster: usize, dst_cluster: usize) -> Decision {
+        if src_cluster == dst_cluster {
+            // Intra-cluster traffic rides the electrical router: exact.
+            return Decision::FULL;
+        }
+        let bits = policy.approx_bits();
+        if bits == 0 {
+            return Decision::FULL;
+        }
+        let mask = mask_for_lsbs(bits);
+        let level = policy.commanded_level(self.params.pam4_power_factor);
+        match policy.kind {
+            PolicyKind::Baseline => Decision::FULL,
+            PolicyKind::Truncation => Decision::from_probs(
+                TransferMode::Truncated,
+                mask,
+                BitErrorProbs::TRUNCATED,
+                0.0,
+            ),
+            PolicyKind::Prior16 => {
+                // Loss-oblivious: always drive at the fixed reduced level;
+                // whatever the physics does to the bits, happens.
+                let probs = self.physical_probs(src_cluster, dst_cluster, level);
+                Decision::from_probs(TransferMode::Reduced { level }, mask, probs, level)
+            }
+            PolicyKind::LoraxOok | PolicyKind::LoraxPam4 => {
+                if level <= 0.0 {
+                    return Decision::from_probs(
+                        TransferMode::Truncated,
+                        mask,
+                        BitErrorProbs::TRUNCATED,
+                        0.0,
+                    );
+                }
+                // The loss-aware step: consult the table, check
+                // detectability at the destination, truncate otherwise.
+                let mu = self.waveguides.received_mw(src_cluster, dst_cluster, level);
+                let cal = &self.waveguides.receiver_cal[src_cluster];
+                if cal.detectable(mu) {
+                    Decision::from_probs(
+                        TransferMode::Reduced { level },
+                        mask,
+                        cal.error_probs(mu),
+                        level,
+                    )
+                } else {
+                    Decision::from_probs(
+                        TransferMode::Truncated,
+                        mask,
+                        BitErrorProbs::TRUNCATED,
+                        0.0,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Physical channel outcome for LSBs driven at `level` on the
+    /// src→dst path (used by loss-oblivious policies).
+    fn physical_probs(&self, src: usize, dst: usize, level: f64) -> BitErrorProbs {
+        let mu = self.waveguides.received_mw(src, dst, level);
+        self.waveguides.receiver_cal[src].error_probs(mu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::policy::AppTuning;
+    use crate::util::rng::ALWAYS;
+
+    fn engine(m: Modulation) -> GwiDecisionEngine {
+        GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), m)
+    }
+
+    fn lorax_ook(bits: u32, reduction: u32) -> Policy {
+        Policy::with_tuning(
+            PolicyKind::LoraxOok,
+            AppTuning { approx_bits: bits, power_reduction_pct: reduction, trunc_bits: 0 },
+        )
+    }
+
+    #[test]
+    fn baseline_never_approximates() {
+        let e = engine(Modulation::Ook);
+        let p = Policy::new(PolicyKind::Baseline, "fft");
+        for d in 1..8 {
+            assert_eq!(e.decide(&p, 0, d), Decision::FULL);
+        }
+    }
+
+    #[test]
+    fn intra_cluster_always_exact() {
+        let e = engine(Modulation::Ook);
+        for kind in PolicyKind::ALL {
+            let p = Policy::new(kind, "fft");
+            assert_eq!(e.decide(&p, 3, 3), Decision::FULL);
+        }
+    }
+
+    #[test]
+    fn truncation_policy_truncates_everywhere() {
+        let e = engine(Modulation::Ook);
+        let p = Policy::new(PolicyKind::Truncation, "fft"); // 8 bits
+        for d in 1..8 {
+            let dec = e.decide(&p, 0, d);
+            assert_eq!(dec.mode, TransferMode::Truncated);
+            assert_eq!(dec.mask, (1u32 << Policy::new(PolicyKind::Truncation, "fft").tuning.trunc_bits) - 1);
+            assert_eq!(dec.t10, ALWAYS);
+            assert_eq!(dec.t01, 0);
+        }
+    }
+
+    #[test]
+    fn lorax_switches_by_distance() {
+        // At 80% reduction (level 0.2), near readers recover, far readers
+        // get truncated — the paper's Fig. 3 scenario.
+        let e = engine(Modulation::Ook);
+        let p = lorax_ook(32, 80);
+        let near = e.decide(&p, 0, 1);
+        let far = e.decide(&p, 0, 7);
+        assert!(
+            matches!(near.mode, TransferMode::Reduced { .. }),
+            "near should be reduced, got {:?}",
+            near.mode
+        );
+        assert_eq!(far.mode, TransferMode::Truncated);
+        assert_eq!(far.level, 0.0);
+        // Reduced-mode error rate is small but may be nonzero.
+        assert!(near.t10 < ALWAYS / 4);
+    }
+
+    #[test]
+    fn lorax_100pct_reduction_is_truncation() {
+        let e = engine(Modulation::Ook);
+        let p = lorax_ook(32, 100);
+        for d in 1..8 {
+            assert_eq!(e.decide(&p, 0, d).mode, TransferMode::Truncated);
+        }
+    }
+
+    #[test]
+    fn prior16_pays_for_undetectable_lsbs() {
+        // Loss-oblivious: level stays 0.2 even where the signal cannot be
+        // recovered (t10 saturates to ~1 there).
+        let e = engine(Modulation::Ook);
+        let p = Policy::new(PolicyKind::Prior16, "fft");
+        let far = e.decide(&p, 0, 7);
+        assert!(matches!(far.mode, TransferMode::Reduced { .. }));
+        assert!((far.level - 0.2).abs() < 1e-12);
+        assert!(far.t10 > ALWAYS - (ALWAYS / 1000), "t10={:#x}", far.t10);
+        assert_eq!(far.mask, 0xFFFF);
+    }
+
+    #[test]
+    fn pam4_level_floor_applies() {
+        let e = engine(Modulation::Pam4);
+        let p = Policy::with_tuning(
+            PolicyKind::LoraxPam4,
+            AppTuning { approx_bits: 32, power_reduction_pct: 80, trunc_bits: 0 },
+        );
+        for d in 1..8 {
+            let dec = e.decide(&p, 0, d);
+            if let TransferMode::Reduced { level } = dec.mode {
+                assert!((level - 0.3).abs() < 1e-12, "level={level}");
+            }
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let e = engine(Modulation::Ook);
+        let p = lorax_ook(24, 70);
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    assert_eq!(e.decide(&p, s, d), e.decide(&p, s, d));
+                }
+            }
+        }
+    }
+}

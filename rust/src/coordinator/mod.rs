@@ -1,0 +1,21 @@
+//! The LORAX coordinator — the paper's §4 contribution.
+//!
+//! * [`gwi`] — the gateway-interface decision engine: reads the
+//!   approximable flag, consults the per-destination loss lookup table,
+//!   and picks truncation vs reduced-power transmission per transfer
+//!   (paper Fig. 3/4), emitting the per-word channel parameters.
+//! * [`channel`] — the [`crate::approx::Channel`] implementation that
+//!   applies those decisions to live workload data, through either the
+//!   native corruption kernel or the AOT/PJRT executable.
+//! * [`system`] — the [`LoraxSystem`] facade gluing config, topology,
+//!   policies, workloads, the NoC simulator and energy accounting into
+//!   one entry point (what `lorax simulate` drives).
+
+pub mod channel;
+pub mod gwi;
+pub mod system;
+
+pub use channel::{Corruptor, NativeCorruptor, PhotonicChannel};
+pub use gwi::{Decision, GwiDecisionEngine};
+pub use system::{AppRunReport, LoraxSystem};
+

@@ -1,0 +1,169 @@
+//! [`LoraxSystem`] — the top-level facade gluing configuration, topology,
+//! decision engines, workload engines, the cycle-level simulator and
+//! energy accounting into single-call experiment runs.
+
+use anyhow::{Context, Result};
+
+use crate::approx::channel::{Channel, ChannelStats, IdentityChannel};
+use crate::approx::policy::{AppTuning, Policy, PolicyKind};
+use crate::apps::{by_name_scaled, output_error_pct};
+use crate::config::SystemConfig;
+use crate::noc::sim::{SimReport, Simulator};
+use crate::phys::params::Modulation;
+use crate::topology::clos::ClosTopology;
+
+use super::channel::{Corruptor, NativeCorruptor, PhotonicChannel};
+use super::gwi::GwiDecisionEngine;
+
+/// Results of one (application, policy) experiment.
+#[derive(Clone, Debug)]
+pub struct AppRunReport {
+    pub app: String,
+    pub policy: Policy,
+    /// Measured output error vs the golden run (paper eq. 3), percent.
+    pub error_pct: f64,
+    pub sim: SimReport,
+    pub stats: ChannelStats,
+    pub lut_accesses: u64,
+}
+
+impl AppRunReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} {:<11} PE={:>7.3}%  EPB={:.4} pJ/b  laser={:.3} mW  pkts={} (reduced {} / truncated {})",
+            self.app,
+            self.policy.kind.name(),
+            self.error_pct,
+            self.sim.epb_pj,
+            self.sim.avg_laser_mw,
+            self.sim.packets,
+            self.sim.reduced_packets,
+            self.sim.truncated_packets,
+        )
+    }
+}
+
+/// The assembled LORAX system.
+pub struct LoraxSystem {
+    pub cfg: SystemConfig,
+    pub topo: ClosTopology,
+    pub ook: GwiDecisionEngine,
+    pub pam4: GwiDecisionEngine,
+}
+
+impl LoraxSystem {
+    pub fn new(cfg: &SystemConfig) -> LoraxSystem {
+        let topo = ClosTopology::default_64core();
+        LoraxSystem {
+            cfg: cfg.clone(),
+            topo: topo.clone(),
+            ook: GwiDecisionEngine::new(topo.clone(), cfg.photonic.clone(), Modulation::Ook),
+            pam4: GwiDecisionEngine::new(topo, cfg.photonic.clone(), Modulation::Pam4),
+        }
+    }
+
+    pub fn engine_for(&self, kind: PolicyKind) -> &GwiDecisionEngine {
+        match kind.modulation() {
+            Modulation::Ook => &self.ook,
+            Modulation::Pam4 => &self.pam4,
+        }
+    }
+
+    /// Run `app` under `kind` with the measured Table-3 default tuning
+    /// (PAM4 policies use the PAM4-swept table).
+    pub fn run_app(&self, app: &str, kind: PolicyKind) -> Result<AppRunReport> {
+        self.run_app_with_tuning(app, kind, crate::approx::policy::default_tuning(kind, app))
+    }
+
+    /// Run `app` under `kind` with explicit tuning, using the native
+    /// corruption backend.
+    pub fn run_app_with_tuning(
+        &self,
+        app: &str,
+        kind: PolicyKind,
+        tuning: AppTuning,
+    ) -> Result<AppRunReport> {
+        self.run_app_with_corruptor(app, kind, tuning, NativeCorruptor)
+    }
+
+    /// Run with an arbitrary corruption backend (e.g. the AOT/PJRT
+    /// executor from [`crate::runtime`]).
+    pub fn run_app_with_corruptor<C: Corruptor>(
+        &self,
+        app: &str,
+        kind: PolicyKind,
+        tuning: AppTuning,
+        corruptor: C,
+    ) -> Result<AppRunReport> {
+        let workload = by_name_scaled(app, self.cfg.seed, self.cfg.scale)
+            .with_context(|| format!("unknown application {app:?}"))?;
+        // Golden pass.
+        let mut golden_ch = IdentityChannel::new();
+        let golden = workload.run(&mut golden_ch);
+        // Policy pass.
+        let policy = Policy::with_tuning(kind, tuning);
+        let engine = self.engine_for(kind);
+        let mut ch = PhotonicChannel::new(engine, policy, corruptor, self.cfg.seed as u32);
+        let out = workload.run(&mut ch);
+        let error_pct = output_error_pct(&golden, &out);
+        // Cycle-level replay for energy/latency.
+        let trace = ch.take_trace();
+        let mut sim = Simulator::new(engine);
+        sim.energy_params = self.cfg.energy.clone();
+        let sim_report = sim.run(&trace, &policy);
+        Ok(AppRunReport {
+            app: app.to_string(),
+            policy,
+            error_pct,
+            sim: sim_report,
+            stats: *ch.stats(),
+            lut_accesses: ch.lut_accesses,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn baseline_run_has_zero_error() {
+        let sys = LoraxSystem::new(&small_cfg());
+        let r = sys.run_app("sobel", PolicyKind::Baseline).unwrap();
+        assert_eq!(r.error_pct, 0.0);
+        assert!(r.sim.epb_pj > 0.0);
+        assert_eq!(r.lut_accesses, 0);
+    }
+
+    #[test]
+    fn lorax_run_reduces_laser_with_bounded_error() {
+        let sys = LoraxSystem::new(&small_cfg());
+        let base = sys.run_app("sobel", PolicyKind::Baseline).unwrap();
+        let lorax = sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+        assert!(lorax.sim.energy.laser_pj < base.sim.energy.laser_pj);
+        // Sobel tolerates its Table-3 tuning well under the threshold.
+        assert!(lorax.error_pct < 10.0, "PE={}", lorax.error_pct);
+        assert!(lorax.lut_accesses > 0);
+    }
+
+    #[test]
+    fn unknown_app_errors() {
+        let sys = LoraxSystem::new(&small_cfg());
+        assert!(sys.run_app("nope", PolicyKind::Baseline).is_err());
+    }
+
+    #[test]
+    fn pam4_uses_pam4_engine() {
+        let sys = LoraxSystem::new(&small_cfg());
+        let r = sys.run_app("canneal", PolicyKind::LoraxPam4).unwrap();
+        assert_eq!(
+            sys.engine_for(PolicyKind::LoraxPam4).waveguides.modulation,
+            Modulation::Pam4
+        );
+        assert!(r.sim.epb_pj > 0.0);
+    }
+}

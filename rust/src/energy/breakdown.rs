@@ -1,0 +1,124 @@
+//! Per-component energy aggregation and the EPB metric (Fig. 8a).
+
+/// Accumulated energy by component, picojoules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// VCSEL electrical energy (the paper's headline component, Fig. 8b).
+    pub laser_pj: f64,
+    /// Thermo-optic MR tuning (static while banks are active).
+    pub tuning_pj: f64,
+    /// Electrical routers/concentrators.
+    pub router_pj: f64,
+    /// Gateway interfaces (serialization + clocking).
+    pub gwi_pj: f64,
+    /// Modulators + receivers.
+    pub modulation_pj: f64,
+    /// GWI lookup tables (static share + accesses).
+    pub lut_pj: f64,
+    /// Bits delivered end-to-end (payload + header).
+    pub bits_delivered: u64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.laser_pj
+            + self.tuning_pj
+            + self.router_pj
+            + self.gwi_pj
+            + self.modulation_pj
+            + self.lut_pj
+    }
+
+    /// Energy per delivered bit, pJ/bit (Fig. 8a's metric).
+    pub fn epb_pj(&self) -> f64 {
+        if self.bits_delivered == 0 {
+            f64::NAN
+        } else {
+            self.total_pj() / self.bits_delivered as f64
+        }
+    }
+
+    /// Average laser power over a run of `cycles` cycles, mW
+    /// (Fig. 8b's metric; pJ / ns = mW).
+    pub fn avg_laser_power_mw(&self, cycles: u64, cycle_ns: f64) -> f64 {
+        if cycles == 0 {
+            f64::NAN
+        } else {
+            self.laser_pj / (cycles as f64 * cycle_ns)
+        }
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.laser_pj += other.laser_pj;
+        self.tuning_pj += other.tuning_pj;
+        self.router_pj += other.router_pj;
+        self.gwi_pj += other.gwi_pj;
+        self.modulation_pj += other.modulation_pj;
+        self.lut_pj += other.lut_pj;
+        self.bits_delivered += other.bits_delivered;
+    }
+
+    /// Component shares as fractions of the total (for reports).
+    pub fn shares(&self) -> [(&'static str, f64); 6] {
+        let t = self.total_pj().max(f64::MIN_POSITIVE);
+        [
+            ("laser", self.laser_pj / t),
+            ("tuning", self.tuning_pj / t),
+            ("router", self.router_pj / t),
+            ("gwi", self.gwi_pj / t),
+            ("modulation", self.modulation_pj / t),
+            ("lut", self.lut_pj / t),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EnergyBreakdown {
+        EnergyBreakdown {
+            laser_pj: 60.0,
+            tuning_pj: 20.0,
+            router_pj: 10.0,
+            gwi_pj: 5.0,
+            modulation_pj: 4.0,
+            lut_pj: 1.0,
+            bits_delivered: 100,
+        }
+    }
+
+    #[test]
+    fn totals_and_epb() {
+        let e = sample();
+        assert!((e.total_pj() - 100.0).abs() < 1e-12);
+        assert!((e.epb_pj() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_epb_is_nan() {
+        assert!(EnergyBreakdown::default().epb_pj().is_nan());
+    }
+
+    #[test]
+    fn avg_laser_power() {
+        let e = sample();
+        // 60 pJ over 100 cycles of 0.2 ns = 60 / 20 ns = 3 mW.
+        assert!((e.avg_laser_power_mw(100, 0.2) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_accumulates_all_fields() {
+        let mut a = sample();
+        a.add(&sample());
+        assert!((a.total_pj() - 200.0).abs() < 1e-12);
+        assert_eq!(a.bits_delivered, 200);
+        assert!((a.epb_pj() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let s: f64 = sample().shares().iter().map(|(_, f)| f).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

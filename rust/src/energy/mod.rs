@@ -1,0 +1,16 @@
+//! Energy accounting substrate — the DSENT/CACTI stand-in.
+//!
+//! The paper runs DSENT for router/GWI energy and CACTI for the lookup
+//! tables; neither is available here, so [`params`] carries analytic
+//! per-event energies calibrated to the constants the paper *does*
+//! publish (0.06 mW total table power, 0.105 mm² table area, 1-cycle
+//! access, 5 GHz, 22 nm) with the remaining coefficients set to
+//! representative 22 nm DSENT values (documented per field).
+//! [`breakdown`] aggregates per-component energy over a simulation and
+//! produces the energy-per-bit metric of Fig. 8(a).
+
+pub mod breakdown;
+pub mod params;
+
+pub use breakdown::EnergyBreakdown;
+pub use params::EnergyParams;

@@ -1,0 +1,85 @@
+//! Electrical/photonic energy coefficients (DSENT/CACTI stand-ins).
+
+/// Per-event and static energy coefficients for the 22 nm, 5 GHz platform.
+#[derive(Clone, Debug)]
+pub struct EnergyParams {
+    /// Core/router clock, GHz (paper §5.1: 5 GHz).
+    pub clock_ghz: f64,
+    /// Electrical router traversal energy per 32-bit word, pJ
+    /// (DSENT-class value for a 22 nm concentrator/router hop).
+    pub router_pj_per_word: f64,
+    /// GWI serialization/deserialization energy per 32-bit word, pJ.
+    pub gwi_pj_per_word: f64,
+    /// OOK modulator + driver dynamic energy per bit, fJ.
+    pub mod_fj_per_bit: f64,
+    /// PAM4 ODAC modulator energy per 2-bit symbol, fJ [21].
+    pub pam4_mod_fj_per_symbol: f64,
+    /// Receiver (TIA + comparator) energy per bit, fJ.
+    pub rx_fj_per_bit: f64,
+    /// Static power of all GWI lookup tables together, mW
+    /// (paper §5.1, CACTI: 0.06 mW; area 0.105 mm²).
+    pub lut_static_mw_total: f64,
+    /// Dynamic energy per lookup-table access, pJ (CACTI-class, 64-entry).
+    pub lut_access_pj: f64,
+    /// Lookup-table access latency, cycles (paper §5.1: 1).
+    pub lut_latency_cycles: u64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            clock_ghz: 5.0,
+            router_pj_per_word: 0.8,
+            gwi_pj_per_word: 0.4,
+            mod_fj_per_bit: 50.0,
+            pam4_mod_fj_per_symbol: 65.0,
+            rx_fj_per_bit: 30.0,
+            lut_static_mw_total: 0.06,
+            lut_access_pj: 0.25,
+            lut_latency_cycles: 1,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// One clock cycle in nanoseconds.
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+
+    /// Convert a power in mW held for `cycles` cycles into pJ.
+    /// (mW x ns = pJ.)
+    pub fn mw_cycles_to_pj(&self, mw: f64, cycles: u64) -> f64 {
+        mw * self.cycle_ns() * cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_time_at_5ghz() {
+        let e = EnergyParams::default();
+        assert!((e.cycle_ns() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_time_energy_identity() {
+        let e = EnergyParams::default();
+        // 1 mW for 5 cycles at 5 GHz = 1 mW * 1 ns = 1 pJ.
+        assert!((e.mw_cycles_to_pj(1.0, 5) - 1.0).abs() < 1e-12);
+        // Linearity.
+        assert!(
+            (e.mw_cycles_to_pj(3.0, 10) - 3.0 * e.mw_cycles_to_pj(1.0, 10)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let e = EnergyParams::default();
+        assert_eq!(e.clock_ghz, 5.0);
+        assert_eq!(e.lut_static_mw_total, 0.06);
+        assert_eq!(e.lut_latency_cycles, 1);
+    }
+}

@@ -1,0 +1,44 @@
+//! # LORAX — loss-aware approximation for silicon-photonic NoCs
+//!
+//! Production-quality reproduction of *LORAX: Loss-Aware Approximations
+//! for Energy-Efficient Silicon Photonic Networks-on-Chip* (Sunny, Mirza,
+//! Thakkar, Pasricha, Nikdast — 2020), built as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: Clos-PNoC cycle-level
+//!   simulator, GWI loss-lookup tables, approximation policies, workload
+//!   engines, energy accounting and the reproduction harness for every
+//!   table/figure in the paper.
+//! * **Layer 2 (`python/compile/model.py`)** — JAX compute graphs
+//!   (channel, blackscholes, sobel, DCT), AOT-lowered once to HLO text.
+//! * **Layer 1 (`python/compile/kernels/`)** — the Pallas corruption
+//!   kernel, bit-identical to the native channel in [`approx`].
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
+//! client (`xla` crate); Python never runs on the request path.
+//!
+//! Quickstart (see also `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use lorax::approx::policy::PolicyKind;
+//! use lorax::config::SystemConfig;
+//! use lorax::coordinator::LoraxSystem;
+//!
+//! let cfg = SystemConfig { scale: 0.1, ..Default::default() };
+//! let sys = LoraxSystem::new(&cfg);
+//! let report = sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod approx;
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod noc;
+pub mod phys;
+pub mod report;
+pub mod runtime;
+pub mod topology;
+pub mod traffic;
+pub mod util;

@@ -1,0 +1,220 @@
+//! `lorax` — CLI for the LORAX reproduction.
+//!
+//! ```text
+//! lorax config                               # Table 1/2 constants
+//! lorax characterize                         # Fig. 2
+//! lorax sweep --app fft [--grid small]       # Fig. 6 (one app)
+//! lorax tune                                 # Table 3 (sweep + select, all apps)
+//! lorax simulate --app fft --policy LORAX-OOK [--xla]
+//! lorax jpeg --outdir out/                   # Fig. 7 (writes PGMs)
+//! lorax reproduce [fig2|fig6|table3|fig7|fig8|headline|all]
+//! lorax verify-bridge                        # native channel == AOT/PJRT channel
+//!
+//! Common options: --config <file>  --set section.key=value[,..]
+//!                 --scale <f>  --seed <n>  --csv
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use lorax::approx::policy::{default_tuning, PolicyKind};
+use lorax::approx::tuning::{BITS_AXIS, REDUCTION_AXIS};
+use lorax::config::{Args, SystemConfig};
+use lorax::coordinator::LoraxSystem;
+use lorax::report::figures;
+
+fn main() {
+    // Die quietly on SIGPIPE (e.g. `lorax reproduce | head`) instead of
+    // panicking in println!.
+    #[cfg(unix)]
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<SystemConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(std::path::Path::new(path))?,
+        None => SystemConfig::default(),
+    };
+    if let Some(sets) = args.get("set") {
+        cfg.apply_overrides(sets.split(','))?;
+    }
+    cfg.scale = args.get_f64("scale", cfg.scale)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn parse_policy(name: &str) -> Result<PolicyKind> {
+    PolicyKind::ALL
+        .iter()
+        .copied()
+        .find(|k| k.name().eq_ignore_ascii_case(name))
+        .with_context(|| {
+            format!(
+                "unknown policy {name:?} (one of: {})",
+                PolicyKind::ALL.map(|k| k.name()).join(", ")
+            )
+        })
+}
+
+fn grid(args: &Args) -> (Vec<u32>, Vec<u32>) {
+    match args.get("grid").unwrap_or("full") {
+        "small" => (vec![8, 16, 24, 32], vec![0, 20, 50, 80, 100]),
+        "tiny" => (vec![16, 32], vec![0, 80, 100]),
+        _ => (BITS_AXIS.to_vec(), REDUCTION_AXIS.to_vec()),
+    }
+}
+
+fn emit(table: &lorax::report::Table, csv: bool) {
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        println!("{}", table.render());
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = load_config(&args)?;
+    let csv = args.flag("csv");
+    match args.subcommand().unwrap_or("help") {
+        "config" => println!("{}", cfg.describe()),
+        "characterize" => emit(&figures::fig2_characterization(&cfg)?, csv),
+        "sweep" => {
+            let app = args.get("app").context("--app required for sweep")?;
+            let (bits, reds) = grid(&args);
+            let surfaces = figures::fig6_surfaces(&cfg, &[app], &bits, &reds);
+            println!("{}", figures::render_surface(&surfaces[0]));
+        }
+        "tune" => {
+            let (bits, reds) = grid(&args);
+            let apps = lorax::apps::EVALUATED_APPS;
+            let surfaces = figures::fig6_surfaces(&cfg, &apps, &bits, &reds);
+            emit(&figures::table3_selection(&cfg, &surfaces), csv);
+        }
+        "simulate" => {
+            let app = args.get("app").context("--app required for simulate")?;
+            let kind = parse_policy(&args.get_or("policy", "LORAX-OOK"))?;
+            let sys = LoraxSystem::new(&cfg);
+            let report = if args.flag("xla") {
+                let corruptor = lorax::runtime::XlaCorruptor::new()?;
+                sys.run_app_with_corruptor(app, kind, default_tuning(kind, app), corruptor)?
+            } else {
+                sys.run_app(app, kind)?
+            };
+            println!("{}", report.summary());
+            println!("{}", report.sim.summary());
+            for (name, share) in report.sim.energy.shares() {
+                println!("  energy share {name:<11} {:>5.1}%", share * 100.0);
+            }
+        }
+        "jpeg" => {
+            let outdir = PathBuf::from(args.get_or("outdir", "out/fig7"));
+            emit(&figures::fig7_jpeg(&cfg, &outdir)?, csv);
+            println!("PGM images written to {}", outdir.display());
+        }
+        "reproduce" => {
+            let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            reproduce(&cfg, what, &args, csv)?;
+        }
+        "verify-bridge" => verify_bridge(&cfg)?,
+        _ => {
+            println!("{}", main_doc());
+        }
+    }
+    Ok(())
+}
+
+fn reproduce(cfg: &SystemConfig, what: &str, args: &Args, csv: bool) -> Result<()> {
+    if !["all", "fig2", "fig6", "table3", "fig7", "fig8", "headline"].contains(&what) {
+        bail!("unknown reproduction target {what:?}");
+    }
+    let all = what == "all";
+    if all || what == "fig2" {
+        emit(&figures::fig2_characterization(cfg)?, csv);
+    }
+    if all || what == "fig6" || what == "table3" {
+        let (bits, reds) = grid(args);
+        let surfaces =
+            figures::fig6_surfaces(cfg, &lorax::apps::EVALUATED_APPS, &bits, &reds);
+        if all || what == "fig6" {
+            for s in &surfaces {
+                println!("{}", figures::render_surface(s));
+            }
+        }
+        emit(&figures::table3_selection(cfg, &surfaces), csv);
+    }
+    if all || what == "fig7" {
+        let outdir = PathBuf::from(args.get_or("outdir", "out/fig7"));
+        emit(&figures::fig7_jpeg(cfg, &outdir)?, csv);
+    }
+    if all || what == "fig8" || what == "headline" {
+        let (epb, laser, reports) = figures::fig8_comparison(cfg)?;
+        if all || what == "fig8" {
+            emit(&epb, csv);
+            emit(&laser, csv);
+        }
+        emit(&figures::headline_summary(&reports), csv);
+    }
+    Ok(())
+}
+
+/// End-to-end bridge check: the native corruption kernel and the
+/// AOT/PJRT executable must agree word-for-word on live data.
+fn verify_bridge(cfg: &SystemConfig) -> Result<()> {
+    use lorax::coordinator::channel::Corruptor;
+    let mut xla = lorax::runtime::XlaCorruptor::new()?;
+    let mut rng = lorax::util::Rng::new(cfg.seed);
+    let mut checked = 0usize;
+    for case in 0..24 {
+        let n = [8usize, 100, 1000, 5000][case % 4];
+        let values: Vec<f64> = (0..n).map(|_| rng.range_f64(-1e6, 1e6)).collect();
+        let mask = lorax::approx::float_bits::mask_for_lsbs(4 + (case as u32 * 7) % 29);
+        let t10 = rng.next_u32();
+        let t01 = rng.next_u32() / 1024;
+        let seed = rng.next_u32();
+        let mut native = lorax::approx::float_bits::f64s_to_f32_words(&values);
+        let mut via_xla = native.clone();
+        lorax::approx::float_bits::corrupt_f32_words(&mut native, mask, t10, t01, seed);
+        xla.corrupt_words(&mut via_xla, mask, t10, t01, seed);
+        for (i, (x, y)) in native.iter().zip(via_xla.iter()).enumerate() {
+            if x != y {
+                bail!("bridge mismatch case {case} word {i}: {x:#x} vs {y:#x}");
+            }
+        }
+        checked += n;
+    }
+    println!(
+        "bridge OK: native == AOT/PJRT over {checked} SP words ({} batches)",
+        xla.batches
+    );
+    Ok(())
+}
+
+fn main_doc() -> &'static str {
+    "lorax — LORAX PNoC reproduction
+USAGE: lorax <command> [options]
+
+COMMANDS
+  config         print the Table-1/Table-2 system configuration
+  characterize   Fig. 2  — float/int traffic per application
+  sweep          Fig. 6  — sensitivity surface (--app <name> [--grid small|tiny])
+  tune           Table 3 — application-specific parameter selection
+  simulate       one (app, policy) run (--app <name> --policy <name> [--xla])
+  jpeg           Fig. 7  — JPEG quality panels (--outdir <dir>)
+  reproduce      regenerate [fig2|fig6|table3|fig7|fig8|headline|all]
+  verify-bridge  assert native channel == AOT/PJRT channel bit-for-bit
+
+OPTIONS
+  --config <file>    TOML-subset config file
+  --set k=v[,k=v]    override config keys (section.key=value)
+  --scale <f>        workload scale (1.0 = paper-size inputs)
+  --seed <n>         master seed
+  --csv              emit tables as CSV"
+}

@@ -1,0 +1,251 @@
+//! Per-packet link occupancy and energy model.
+//!
+//! Bit-to-wavelength mapping: a 64-bit flit crosses the waveguide per
+//! cycle — under OOK on 64 wavelengths (bit *i* on λ_i), under PAM4 on 32
+//! wavelengths (bits (2i, 2i+1) Gray-coded on λ_i).  A float payload
+//! cycle carries one double (lo word on λ_0..31, hi word on λ_32..63
+//! under OOK); the decision's masked LSB wavelengths are driven at the
+//! reduced level, everything else at full.  Lasers are VCSELs gated at
+//! cycle granularity (paper §4.1's dynamic laser control), so idle links
+//! burn no laser power under *all* frameworks.
+
+use crate::coordinator::gwi::Decision;
+use crate::energy::breakdown::EnergyBreakdown;
+use crate::energy::params::EnergyParams;
+use crate::phys::laser::LaserProvisioning;
+use crate::phys::params::{Modulation, PhotonicParams};
+use crate::traffic::packet::{Packet, PayloadKind};
+
+/// Static per-waveguide context for energy computation.
+pub struct LinkContext<'a> {
+    pub params: &'a PhotonicParams,
+    pub energy: &'a EnergyParams,
+    pub provisioning: &'a LaserProvisioning,
+    /// Reader banks on the waveguide (for selection-phase tuning).
+    pub n_reader_banks: u32,
+}
+
+/// Bits moved across the waveguide per cycle (64 for both modulations at
+/// iso-bandwidth).
+fn bits_per_cycle(p: &PhotonicParams, m: Modulation) -> u32 {
+    p.n_lambda(m) * m.bits_per_symbol()
+}
+
+/// Waveguide occupancy in cycles: 1 receiver-selection cycle plus
+/// serialization of header + payload.
+pub fn packet_occupancy_cycles(pkt: &Packet, p: &PhotonicParams, m: Modulation) -> u64 {
+    let bits = pkt.total_bits();
+    let bpc = bits_per_cycle(p, m) as u64;
+    1 + bits.div_ceil(bpc)
+}
+
+/// Wavelengths carrying masked (approximated) bits of a float flit.
+///
+/// A 64-bit flit carries two single-precision words, each masked `mask`:
+/// 2x `popcount(mask)` of the 64 bits ride reduced/zero-power
+/// wavelengths (OOK: one bit per lambda; PAM4: two bits per lambda).
+fn masked_lambdas(mask: u32, p: &PhotonicParams, m: Modulation) -> u32 {
+    let words_per_flit = p.n_lambda(m) * m.bits_per_symbol() / 32;
+    let masked_bits = mask.count_ones() * words_per_flit;
+    match m {
+        Modulation::Ook => masked_bits,
+        Modulation::Pam4 => masked_bits.div_ceil(2),
+    }
+}
+
+/// Full energy breakdown for one photonic packet transmission.
+pub fn packet_energy(
+    ctx: &LinkContext,
+    pkt: &Packet,
+    decision: &Decision,
+    electrical_hops: u32,
+) -> EnergyBreakdown {
+    let p = ctx.params;
+    let e = ctx.energy;
+    let m = ctx.provisioning.modulation;
+    let n_lambda = p.n_lambda(m);
+    let bpc = bits_per_cycle(p, m) as u64;
+    let bits = pkt.total_bits();
+    let data_cycles = bits.div_ceil(bpc);
+    let payload_bits = pkt.payload_words as u64 * 32;
+    // Cycles that carry approximable float payload vs full-power words
+    // (header + any tail). Float payload cycles are whole doubles.
+    let (approx_cycles, full_cycles) = if pkt.kind == PayloadKind::Float64
+        && decision.mask != 0
+    {
+        let fc = payload_bits.div_ceil(bpc).min(data_cycles);
+        (fc, data_cycles - fc)
+    } else {
+        (0, data_cycles)
+    };
+
+    // --- Laser ---------------------------------------------------------
+    let full_mw = ctx.provisioning.total_optical_mw();
+    let n_masked = masked_lambdas(decision.mask, p, m) as f64;
+    let per_lambda = ctx.provisioning.per_lambda_mw;
+    // Optical power during an approximated-payload cycle.
+    let approx_mw =
+        per_lambda * ((n_lambda as f64 - n_masked) + n_masked * decision.level);
+    // Selection cycle broadcasts at full power.
+    let optical_pj = e.mw_cycles_to_pj(full_mw, 1 + full_cycles)
+        + e.mw_cycles_to_pj(approx_mw, approx_cycles);
+    let laser_pj = optical_pj / p.vcsel_wall_plug_efficiency;
+
+    // --- Tuning --------------------------------------------------------
+    let tuning_mw_bank = p.tuning_power_mw_per_mr() * n_lambda as f64;
+    // Selection cycle: source bank + every reader bank listens.
+    let selection_pj = e.mw_cycles_to_pj(tuning_mw_bank * (1.0 + ctx.n_reader_banks as f64), 1);
+    // Data cycles: source + destination banks only (others powered down).
+    let data_pj = e.mw_cycles_to_pj(tuning_mw_bank * 2.0, data_cycles);
+    let tuning_pj = selection_pj + data_pj;
+
+    // --- Electrical routers & GWIs --------------------------------------
+    let words = pkt.total_words() as f64;
+    let router_pj = electrical_hops as f64 * words * e.router_pj_per_word;
+    let gwi_pj = 2.0 * words * e.gwi_pj_per_word;
+
+    // --- Modulation + receive ------------------------------------------
+    let modulation_pj = match m {
+        Modulation::Ook => bits as f64 * e.mod_fj_per_bit / 1000.0,
+        Modulation::Pam4 => (bits as f64 / 2.0) * e.pam4_mod_fj_per_symbol / 1000.0,
+    } + bits as f64 * e.rx_fj_per_bit / 1000.0;
+
+    EnergyBreakdown {
+        laser_pj,
+        tuning_pj,
+        router_pj,
+        gwi_pj,
+        modulation_pj,
+        lut_pj: 0.0, // charged by the simulator per lookup
+        bits_delivered: bits,
+    }
+}
+
+/// Energy for an intra-cluster (electrical-only) packet.
+pub fn electrical_packet_energy(
+    energy: &EnergyParams,
+    pkt: &Packet,
+    electrical_hops: u32,
+) -> EnergyBreakdown {
+    let words = pkt.total_words() as f64;
+    EnergyBreakdown {
+        router_pj: electrical_hops.max(1) as f64 * words * energy.router_pj_per_word,
+        bits_delivered: pkt.total_bits(),
+        ..EnergyBreakdown::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::policy::TransferMode;
+    use crate::topology::clos::{ClosTopology, NodeId};
+    use crate::topology::losstable::WaveguideSet;
+
+    fn ctx(m: Modulation) -> (PhotonicParams, EnergyParams, WaveguideSet) {
+        let p = PhotonicParams::default();
+        let topo = ClosTopology::default_64core();
+        let ws = WaveguideSet::build(&topo, &p, m);
+        (p, EnergyParams::default(), ws)
+    }
+
+    fn float_pkt() -> Packet {
+        Packet {
+            src: NodeId::Core(0),
+            dst: NodeId::Core(9),
+            kind: PayloadKind::Float64,
+            payload_words: 16,
+            approximable: true,
+        }
+    }
+
+    fn reduced(mask: u32, level: f64) -> Decision {
+        Decision { mode: TransferMode::Reduced { level }, mask, t10: 0, t01: 0, level }
+    }
+
+    #[test]
+    fn occupancy_counts() {
+        let p = PhotonicParams::default();
+        // 18 words * 32 = 576 bits over 64 bits/cycle = 9 (+1 selection).
+        assert_eq!(packet_occupancy_cycles(&float_pkt(), &p, Modulation::Ook), 10);
+        assert_eq!(packet_occupancy_cycles(&float_pkt(), &p, Modulation::Pam4), 10);
+        let small = Packet { payload_words: 1, ..float_pkt() };
+        assert_eq!(packet_occupancy_cycles(&small, &p, Modulation::Ook), 3);
+    }
+
+    #[test]
+    fn truncation_saves_laser_vs_baseline() {
+        let (p, e, ws) = ctx(Modulation::Ook);
+        let lc = LinkContext { params: &p, energy: &e, provisioning: &ws.provisioning[0], n_reader_banks: 7 };
+        let full = packet_energy(&lc, &float_pkt(), &Decision::FULL, 4);
+        let trunc = packet_energy(
+            &lc,
+            &float_pkt(),
+            &Decision { mode: TransferMode::Truncated, mask: u32::MAX, t10: 0, t01: 0, level: 0.0 },
+            4,
+        );
+        assert!(trunc.laser_pj < full.laser_pj * 0.7, "{} vs {}", trunc.laser_pj, full.laser_pj);
+        // Non-laser components unchanged.
+        assert_eq!(trunc.router_pj, full.router_pj);
+        assert_eq!(trunc.bits_delivered, full.bits_delivered);
+    }
+
+    #[test]
+    fn laser_energy_monotone_in_level() {
+        let (p, e, ws) = ctx(Modulation::Ook);
+        let lc = LinkContext { params: &p, energy: &e, provisioning: &ws.provisioning[0], n_reader_banks: 7 };
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let level = i as f64 / 10.0;
+            let en = packet_energy(&lc, &float_pkt(), &reduced(u32::MAX, level), 4);
+            assert!(en.laser_pj >= prev, "level={level}");
+            prev = en.laser_pj;
+        }
+    }
+
+    #[test]
+    fn masked_lambda_counting() {
+        let p = PhotonicParams::default();
+        // Two SP words per 64-bit flit: 16 masked bits/word -> 32 lambdas.
+        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::Ook), 32);
+        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::Pam4), 16);
+        assert_eq!(masked_lambdas(0x7, &p, Modulation::Pam4), 3); // 6 bits -> 3 lambdas
+        assert_eq!(masked_lambdas(0, &p, Modulation::Ook), 0);
+        // Full 32-bit mask turns every wavelength off during payload.
+        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::Ook), 64);
+        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::Pam4), 32);
+    }
+
+    #[test]
+    fn pam4_baseline_laser_below_ook_baseline() {
+        // Structural PAM4 advantage at iso-bandwidth (see DESIGN.md §5).
+        let (p, e, ws_o) = ctx(Modulation::Ook);
+        let (_, _, ws_p) = ctx(Modulation::Pam4);
+        let lc_o = LinkContext { params: &p, energy: &e, provisioning: &ws_o.provisioning[0], n_reader_banks: 7 };
+        let lc_p = LinkContext { params: &p, energy: &e, provisioning: &ws_p.provisioning[0], n_reader_banks: 7 };
+        let eo = packet_energy(&lc_o, &float_pkt(), &Decision::FULL, 4);
+        let ep = packet_energy(&lc_p, &float_pkt(), &Decision::FULL, 4);
+        assert!(ep.laser_pj < eo.laser_pj, "pam4 {} !< ook {}", ep.laser_pj, eo.laser_pj);
+        // And tuning halves with the MR count.
+        assert!(ep.tuning_pj < eo.tuning_pj);
+    }
+
+    #[test]
+    fn int_packets_ignore_decision_mask() {
+        let (p, e, ws) = ctx(Modulation::Ook);
+        let lc = LinkContext { params: &p, energy: &e, provisioning: &ws.provisioning[0], n_reader_banks: 7 };
+        let int_pkt = Packet { kind: PayloadKind::Int, approximable: false, ..float_pkt() };
+        let a = packet_energy(&lc, &int_pkt, &Decision::FULL, 4);
+        let b = packet_energy(&lc, &int_pkt, &reduced(u32::MAX, 0.1), 4);
+        assert!((a.laser_pj - b.laser_pj).abs() < 1e-12);
+    }
+
+    #[test]
+    fn electrical_only_energy() {
+        let e = EnergyParams::default();
+        let en = electrical_packet_energy(&e, &float_pkt(), 2);
+        assert_eq!(en.laser_pj, 0.0);
+        assert!(en.router_pj > 0.0);
+        assert_eq!(en.bits_delivered, 18 * 32);
+    }
+}

@@ -1,0 +1,13 @@
+//! Cycle-level PNoC simulation (the SystemC-simulator stand-in).
+//!
+//! [`linkmodel`] computes, for one packet and one GWI decision, the
+//! serialization occupancy and the full per-component energy; [`sim`]
+//! replays a recorded trace through per-waveguide FIFOs and electrical
+//! hop latencies, producing the cycle counts, latency distribution and
+//! energy breakdown behind Fig. 8.
+
+pub mod linkmodel;
+pub mod sim;
+
+pub use linkmodel::{packet_energy, packet_occupancy_cycles, LinkContext};
+pub use sim::{SimReport, Simulator};

@@ -1,0 +1,140 @@
+//! Laser power provisioning (paper eq. 2) and the VCSEL electrical model.
+//!
+//! `P_laser - S_detector >= P_phot_loss + 10*log10(N_lambda)`  (eq. 2)
+//!
+//! The link laser is provisioned for the *worst-case* reader on the SWMR
+//! waveguide: that reader receives exactly `S_detector` per wavelength at
+//! full power; nearer readers enjoy the loss differential as margin —
+//! the margin LORAX spends when it transmits LSBs at reduced power.
+
+use super::loss::PathLoss;
+use super::params::{Modulation, PhotonicParams};
+use crate::util::math::{dbm_to_mw, ratio_to_db};
+
+/// Total link laser power (dBm) required by eq. 2 for a path loss and
+/// wavelength count.
+pub fn required_laser_power_dbm(loss_db: f64, n_lambda: u32, p: &PhotonicParams) -> f64 {
+    p.detector_sensitivity_dbm + loss_db + ratio_to_db(n_lambda as f64)
+}
+
+/// Per-wavelength launch power (dBm): the total split evenly over Nλ.
+pub fn per_lambda_launch_dbm(loss_db: f64, p: &PhotonicParams) -> f64 {
+    p.detector_sensitivity_dbm + loss_db
+}
+
+/// Per-waveguide laser provisioning, computed offline from the topology's
+/// reader loss profile (the same data that populates the GWI lookup
+/// tables).
+#[derive(Clone, Debug)]
+pub struct LaserProvisioning {
+    pub modulation: Modulation,
+    /// Worst-case reader loss on this waveguide, dB.
+    pub worst_loss_db: f64,
+    /// Per-wavelength optical launch power at full level, mW.
+    pub per_lambda_mw: f64,
+    /// Wavelength count.
+    pub n_lambda: u32,
+}
+
+impl LaserProvisioning {
+    /// Provision a waveguide given the loss of every candidate reader path.
+    pub fn for_reader_losses(
+        reader_paths: &[PathLoss],
+        p: &PhotonicParams,
+        m: Modulation,
+    ) -> LaserProvisioning {
+        assert!(!reader_paths.is_empty(), "waveguide with no readers");
+        let worst = reader_paths
+            .iter()
+            .map(|pl| pl.total_db(p, m))
+            .fold(f64::NEG_INFINITY, f64::max);
+        LaserProvisioning {
+            modulation: m,
+            worst_loss_db: worst,
+            per_lambda_mw: dbm_to_mw(per_lambda_launch_dbm(worst, p)),
+            n_lambda: p.n_lambda(m),
+        }
+    }
+
+    /// Total optical launch power at full level, mW.
+    pub fn total_optical_mw(&self) -> f64 {
+        self.per_lambda_mw * self.n_lambda as f64
+    }
+
+    /// Total *electrical* laser power at full level, mW (wall-plug).
+    pub fn total_electrical_mw(&self, p: &PhotonicParams) -> f64 {
+        self.total_optical_mw() / p.vcsel_wall_plug_efficiency
+    }
+
+    /// Received '1'-level power (mW) at a reader whose path loss is
+    /// `loss_db`, when the wavelength is driven at `level` (fraction of
+    /// full launch power; 1.0 = full, 0.0 = off).
+    pub fn received_mw(&self, loss_db: f64, level: f64) -> f64 {
+        crate::util::math::attenuate_mw(self.per_lambda_mw * level, loss_db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> PhotonicParams {
+        PhotonicParams::default()
+    }
+
+    #[test]
+    fn eq2_matches_hand_computation() {
+        // loss 10 dB, 64 lambda: P = -23.4 + 10 + 10*log10(64) = 4.663 dBm
+        let dbm = required_laser_power_dbm(10.0, 64, &p());
+        assert!((dbm - (-23.4 + 10.0 + 18.0617997398)).abs() < 1e-6, "{dbm}");
+    }
+
+    #[test]
+    fn laser_power_monotone_in_loss_and_lambda() {
+        let a = required_laser_power_dbm(5.0, 64, &p());
+        let b = required_laser_power_dbm(6.0, 64, &p());
+        let c = required_laser_power_dbm(5.0, 32, &p());
+        assert!(b > a);
+        assert!(c < a);
+    }
+
+    #[test]
+    fn provisioning_targets_worst_reader() {
+        let near = PathLoss::new(1.0, 2, 1);
+        let far = PathLoss::new(5.0, 8, 6);
+        let prov =
+            LaserProvisioning::for_reader_losses(&[near, far], &p(), Modulation::Ook);
+        let worst = far.total_db(&p(), Modulation::Ook);
+        assert!((prov.worst_loss_db - worst).abs() < 1e-12);
+        // The worst reader receives exactly the sensitivity at full level.
+        let rx = prov.received_mw(worst, 1.0);
+        assert!((rx - p().sensitivity_mw()).abs() / rx < 1e-9);
+        // A nearer reader receives strictly more.
+        let rx_near = prov.received_mw(near.total_db(&p(), Modulation::Ook), 1.0);
+        assert!(rx_near > rx * 2.0);
+    }
+
+    #[test]
+    fn electrical_exceeds_optical_by_wpe() {
+        let prov = LaserProvisioning::for_reader_losses(
+            &[PathLoss::new(2.0, 4, 3)],
+            &p(),
+            Modulation::Ook,
+        );
+        let ratio = prov.total_electrical_mw(&p()) / prov.total_optical_mw();
+        assert!((ratio - 1.0 / 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn received_power_scales_linearly_with_level() {
+        let prov = LaserProvisioning::for_reader_losses(
+            &[PathLoss::new(2.0, 4, 3)],
+            &p(),
+            Modulation::Ook,
+        );
+        let full = prov.received_mw(3.0, 1.0);
+        let fifth = prov.received_mw(3.0, 0.2);
+        assert!((fifth / full - 0.2).abs() < 1e-12);
+        assert_eq!(prov.received_mw(3.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Photonic path-loss accounting.
+//!
+//! A [`PathLoss`] records the physical composition of one source→reader
+//! path on a waveguide — propagation length, bend count, MR banks passed
+//! by, and the final drop — and evaluates eq. 2's `P_phot_loss` term for a
+//! given modulation.  Through-loss scales with the wavelength count per
+//! bank (a PAM4 bank has half as many MRs), which is one of the two
+//! structural reasons PAM4 wins despite its 5.8 dB signaling penalty.
+
+use super::params::{Modulation, PhotonicParams};
+
+/// Composition of the photonic loss along one source→destination path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PathLoss {
+    /// Waveguide propagation distance, cm.
+    pub length_cm: f64,
+    /// Number of 90° bends along the path.
+    pub bends: u32,
+    /// MR banks the signal passes *through* without being dropped
+    /// (the source's own modulator bank plus intermediate readers).
+    pub banks_passed: u32,
+    /// Whether the path terminates in a detector drop (always true for a
+    /// real destination; false for "loss up to but excluding the reader",
+    /// used when provisioning).
+    pub dropped: bool,
+}
+
+impl PathLoss {
+    pub fn new(length_cm: f64, bends: u32, banks_passed: u32) -> Self {
+        PathLoss { length_cm, bends, banks_passed, dropped: true }
+    }
+
+    /// Total loss in dB for `m`-modulated signals (eq. 2's `P_phot_loss`).
+    pub fn total_db(&self, p: &PhotonicParams, m: Modulation) -> f64 {
+        let n_mr_per_bank = p.n_lambda(m) as f64;
+        let mut db = self.length_cm * p.wg_prop_loss_db_per_cm
+            + self.bends as f64 * p.wg_bend_loss_db_per_90
+            + self.banks_passed as f64 * n_mr_per_bank * p.mr_through_loss_db;
+        if self.dropped {
+            db += p.mr_drop_loss_db;
+        }
+        if m == Modulation::Pam4 {
+            db += p.pam4_signaling_loss_db;
+        }
+        db
+    }
+
+    /// Extend this path by another segment (e.g. provisioning walks).
+    pub fn extended(&self, length_cm: f64, bends: u32, banks: u32) -> PathLoss {
+        PathLoss {
+            length_cm: self.length_cm + length_cm,
+            bends: self.bends + bends,
+            banks_passed: self.banks_passed + banks,
+            dropped: self.dropped,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> PhotonicParams {
+        PhotonicParams::default()
+    }
+
+    #[test]
+    fn hand_computed_ook_loss() {
+        // 2 cm, 4 bends, 3 banks passed, dropped, OOK:
+        // 2*0.25 + 4*0.01 + 3*64*0.02 + 0.7 = 0.5+0.04+3.84+0.7 = 5.08 dB
+        let path = PathLoss::new(2.0, 4, 3);
+        let db = path.total_db(&p(), Modulation::Ook);
+        assert!((db - 5.08).abs() < 1e-9, "db={db}");
+    }
+
+    #[test]
+    fn hand_computed_pam4_loss() {
+        // Same path under PAM4: through loss halves (32 MRs/bank), +5.8 dB:
+        // 0.5 + 0.04 + 3*32*0.02 + 0.7 + 5.8 = 8.96 dB
+        let path = PathLoss::new(2.0, 4, 3);
+        let db = path.total_db(&p(), Modulation::Pam4);
+        assert!((db - 8.96).abs() < 1e-9, "db={db}");
+    }
+
+    #[test]
+    fn loss_monotone_in_distance_and_banks() {
+        let base = PathLoss::new(1.0, 0, 1);
+        let longer = base.extended(1.0, 0, 0);
+        let more_banks = base.extended(0.0, 0, 2);
+        for m in [Modulation::Ook, Modulation::Pam4] {
+            assert!(longer.total_db(&p(), m) > base.total_db(&p(), m));
+            assert!(more_banks.total_db(&p(), m) > base.total_db(&p(), m));
+        }
+    }
+
+    #[test]
+    fn undropped_path_excludes_drop_loss() {
+        let mut path = PathLoss::new(1.0, 2, 2);
+        let with_drop = path.total_db(&p(), Modulation::Ook);
+        path.dropped = false;
+        let without = path.total_db(&p(), Modulation::Ook);
+        assert!((with_drop - without - 0.7).abs() < 1e-12);
+    }
+}

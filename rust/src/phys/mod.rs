@@ -1,0 +1,17 @@
+//! Photonic physical-layer substrate.
+//!
+//! Everything the paper takes from its device literature (Table 2) and its
+//! link-budget equation (eq. 2) lives here: device parameters, path-loss
+//! accounting, laser-power provisioning, and the OOK/PAM4 receiver models
+//! that turn "mantissa LSBs sent at 20% laser power over a 7.3 dB path"
+//! into concrete per-bit error probabilities for the channel kernel.
+
+pub mod laser;
+pub mod loss;
+pub mod params;
+pub mod signaling;
+
+pub use laser::{per_lambda_launch_dbm, required_laser_power_dbm, LaserProvisioning};
+pub use loss::PathLoss;
+pub use params::{Modulation, PhotonicParams};
+pub use signaling::{BitErrorProbs, ReceiverCal};

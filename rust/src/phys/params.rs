@@ -1,0 +1,159 @@
+//! Photonic device and system parameters.
+//!
+//! Defaults reproduce Table 2 of the paper plus the §5.1 experimental
+//! constants; every value is overridable through the config system so the
+//! `ablation_energy` bench can sweep them.
+
+/// Signal modulation scheme on a photonic link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Modulation {
+    /// On-off keying: 1 bit per wavelength per cycle.
+    Ook,
+    /// 4-level pulse-amplitude modulation: 2 bits per wavelength per cycle.
+    Pam4,
+}
+
+impl Modulation {
+    /// Bits carried per wavelength per modulation cycle.
+    pub fn bits_per_symbol(self) -> u32 {
+        match self {
+            Modulation::Ook => 1,
+            Modulation::Pam4 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Modulation::Ook => "OOK",
+            Modulation::Pam4 => "PAM4",
+        }
+    }
+}
+
+/// Photonic device / link parameters (paper Table 2 + §5.1).
+#[derive(Clone, Debug)]
+pub struct PhotonicParams {
+    /// MR detector sensitivity, dBm [30].
+    pub detector_sensitivity_dbm: f64,
+    /// Per-MR through (pass-by) loss, dB [28].
+    pub mr_through_loss_db: f64,
+    /// MR drop loss at the destination detector bank, dB [32].
+    pub mr_drop_loss_db: f64,
+    /// Waveguide propagation loss, dB/cm [33].
+    pub wg_prop_loss_db_per_cm: f64,
+    /// Waveguide bend loss, dB per 90° [31].
+    pub wg_bend_loss_db_per_90: f64,
+    /// Thermo-optic MR tuning power, µW/nm [29].
+    pub thermo_tuning_uw_per_nm: f64,
+    /// Assumed average tuning range per MR, nm (DESIGN.md substitution:
+    /// the paper reports only the per-nm figure; 0.5 nm mean detuning is
+    /// the common assumption in the DSENT-based literature).
+    pub tuning_range_nm: f64,
+    /// Extra signaling loss when using PAM4, dB (§5.1).
+    pub pam4_signaling_loss_db: f64,
+    /// LSB laser level floor for PAM4 relative to the OOK reduced level
+    /// (§4.2: "1.5x that of OOK").
+    pub pam4_power_factor: f64,
+    /// Wavelengths per waveguide under OOK (§5.1: 64).
+    pub n_lambda_ook: u32,
+    /// Wavelengths per waveguide under PAM4 for equal bandwidth (§5.1: 32).
+    pub n_lambda_pam4: u32,
+    /// Receiver Q-factor at the calibration point (full laser power,
+    /// worst-case reader): Q = 7 -> BER ~ 1.28e-12.
+    pub q_calibration: f64,
+    /// Detection margin (dB) LORAX requires above the decision threshold
+    /// before it chooses reduced-power transmission over truncation.
+    pub detection_margin_db: f64,
+    /// VCSEL wall-plug efficiency (optical out / electrical in) for the
+    /// on-chip laser array [17]; affects absolute laser power only, all
+    /// paper comparisons are ratios.
+    pub vcsel_wall_plug_efficiency: f64,
+    /// Modulator + driver dynamic energy, fJ per bit (OOK).
+    pub mod_energy_fj_per_bit: f64,
+    /// ODAC PAM4 modulator dynamic energy, fJ per 2-bit symbol [21].
+    pub pam4_mod_energy_fj_per_symbol: f64,
+}
+
+impl Default for PhotonicParams {
+    fn default() -> Self {
+        PhotonicParams {
+            detector_sensitivity_dbm: -23.4,
+            mr_through_loss_db: 0.02,
+            mr_drop_loss_db: 0.7,
+            wg_prop_loss_db_per_cm: 0.25,
+            wg_bend_loss_db_per_90: 0.01,
+            thermo_tuning_uw_per_nm: 240.0,
+            tuning_range_nm: 0.5,
+            pam4_signaling_loss_db: 5.8,
+            pam4_power_factor: 1.5,
+            n_lambda_ook: 64,
+            n_lambda_pam4: 32,
+            q_calibration: 7.0,
+            detection_margin_db: 1.0,
+            vcsel_wall_plug_efficiency: 0.15,
+            mod_energy_fj_per_bit: 50.0,
+            pam4_mod_energy_fj_per_symbol: 65.0,
+        }
+    }
+}
+
+impl PhotonicParams {
+    /// Wavelength count for a modulation at iso-bandwidth (64 bits/cycle).
+    pub fn n_lambda(&self, m: Modulation) -> u32 {
+        match m {
+            Modulation::Ook => self.n_lambda_ook,
+            Modulation::Pam4 => self.n_lambda_pam4,
+        }
+    }
+
+    /// Static thermo-optic tuning power for one MR, in mW.
+    pub fn tuning_power_mw_per_mr(&self) -> f64 {
+        self.thermo_tuning_uw_per_nm * self.tuning_range_nm / 1000.0
+    }
+
+    /// Detector sensitivity in mW.
+    pub fn sensitivity_mw(&self) -> f64 {
+        crate::util::math::dbm_to_mw(self.detector_sensitivity_dbm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let p = PhotonicParams::default();
+        assert_eq!(p.detector_sensitivity_dbm, -23.4);
+        assert_eq!(p.mr_through_loss_db, 0.02);
+        assert_eq!(p.mr_drop_loss_db, 0.7);
+        assert_eq!(p.wg_prop_loss_db_per_cm, 0.25);
+        assert_eq!(p.wg_bend_loss_db_per_90, 0.01);
+        assert_eq!(p.thermo_tuning_uw_per_nm, 240.0);
+        assert_eq!(p.pam4_signaling_loss_db, 5.8);
+        assert_eq!(p.pam4_power_factor, 1.5);
+    }
+
+    #[test]
+    fn iso_bandwidth_lambda_counts() {
+        let p = PhotonicParams::default();
+        assert_eq!(
+            p.n_lambda(Modulation::Ook) * Modulation::Ook.bits_per_symbol(),
+            p.n_lambda(Modulation::Pam4) * Modulation::Pam4.bits_per_symbol()
+        );
+    }
+
+    #[test]
+    fn tuning_power_derivation() {
+        let p = PhotonicParams::default();
+        // 240 uW/nm * 0.5 nm = 120 uW = 0.12 mW.
+        assert!((p.tuning_power_mw_per_mr() - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sensitivity_mw_value() {
+        let p = PhotonicParams::default();
+        // -23.4 dBm = 10^(-2.34) mW ~ 4.57e-3 mW.
+        assert!((p.sensitivity_mw() - 4.5709e-3).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,272 @@
+//! Receiver models: OOK fixed-threshold detection and PAM4 4-level eyes.
+//!
+//! The paper specifies only the *threshold* behaviour ("if the received
+//! power is below `S_detector` the LSBs are detected as all '0's") and
+//! that PAM4 is more error-prone for a given power.  DESIGN.md §5 records
+//! the concrete receiver model we built around those constraints:
+//!
+//! * **OOK** — a fixed absolute decision threshold `T = μ_cal/2`, where
+//!   `μ_cal` is the worst-case-reader full-power '1' level (which equals
+//!   the detector sensitivity, by eq.-2 provisioning).  Gaussian receiver
+//!   noise `σ = μ_cal / (2·Q_cal)` makes full-power worst-case operation
+//!   run at `Q_cal` (default 7, BER ≈ 1.3e-12).  Reduced-power '1's that
+//!   fall below `T` are read as '0' — the paper's far-destination
+//!   truncation regime — while near readers spend their loss margin and
+//!   see graded errors.
+//! * **PAM4** — the destination GWI knows (from the receiver-selection
+//!   phase and the static table) the amplitude regime of the incoming
+//!   transfer, so its slicer thresholds scale with the commanded level
+//!   (design-time AGC); errors come from the 3x-smaller eye against the
+//!   same absolute noise, and detection fails outright when the top level
+//!   falls under the photodetector sensitivity.  Symbols are Gray-coded;
+//!   per-bit probabilities are exact marginals of the 4x4 symbol
+//!   transition matrix under equiprobable symbols.
+
+use super::laser::LaserProvisioning;
+use super::params::{Modulation, PhotonicParams};
+use crate::util::math::q_function;
+
+/// Per-bit channel error probabilities handed to the corruption kernel.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BitErrorProbs {
+    /// P(transmitted '1' is received as '0').
+    pub p10: f64,
+    /// P(transmitted '0' is received as '1').
+    pub p01: f64,
+}
+
+impl BitErrorProbs {
+    pub const ERROR_FREE: BitErrorProbs = BitErrorProbs { p10: 0.0, p01: 0.0 };
+    /// Laser off: every masked bit reads '0'.
+    pub const TRUNCATED: BitErrorProbs = BitErrorProbs { p10: 1.0, p01: 0.0 };
+
+    /// Average bit error rate assuming equiprobable bits.
+    pub fn ber(&self) -> f64 {
+        0.5 * (self.p10 + self.p01)
+    }
+}
+
+/// Receiver calibration for one waveguide (per modulation).
+#[derive(Clone, Debug)]
+pub struct ReceiverCal {
+    pub modulation: Modulation,
+    /// Worst-case-reader full-power '1' (or PAM4 top) level, mW.
+    pub mu_cal_mw: f64,
+    /// Absolute receiver noise, mW RMS.
+    pub sigma_mw: f64,
+    /// OOK absolute decision threshold, mW.
+    pub threshold_mw: f64,
+    /// Photodetector absolute sensitivity floor, mW.
+    pub sensitivity_mw: f64,
+    /// Detection margin factor (linear) required by the LORAX decision.
+    margin_lin: f64,
+}
+
+impl ReceiverCal {
+    /// Calibrate receivers for a provisioned waveguide.
+    pub fn new(prov: &LaserProvisioning, p: &PhotonicParams) -> ReceiverCal {
+        let mu_cal = prov.received_mw(prov.worst_loss_db, 1.0);
+        let (sigma, threshold) = match prov.modulation {
+            // Q_cal at the worst reader, full power: (mu/2)/sigma = Q.
+            Modulation::Ook => (mu_cal / (2.0 * p.q_calibration), mu_cal / 2.0),
+            // PAM4 half-eye is mu/6.
+            Modulation::Pam4 => (mu_cal / (6.0 * p.q_calibration), mu_cal / 2.0),
+        };
+        ReceiverCal {
+            modulation: prov.modulation,
+            mu_cal_mw: mu_cal,
+            sigma_mw: sigma,
+            threshold_mw: threshold,
+            sensitivity_mw: p.sensitivity_mw(),
+            margin_lin: 10f64.powf(p.detection_margin_db / 10.0),
+        }
+    }
+
+    /// Error probabilities when the '1' (or PAM4 top) level arrives at
+    /// `mu1_mw` at this receiver.
+    pub fn error_probs(&self, mu1_mw: f64) -> BitErrorProbs {
+        if mu1_mw <= 0.0 {
+            return BitErrorProbs::TRUNCATED;
+        }
+        match self.modulation {
+            Modulation::Ook => BitErrorProbs {
+                p10: q_function((mu1_mw - self.threshold_mw) / self.sigma_mw),
+                p01: q_function(self.threshold_mw / self.sigma_mw),
+            },
+            Modulation::Pam4 => self.pam4_probs(mu1_mw),
+        }
+    }
+
+    /// Can LSBs driven to `mu1_mw` at this reader be meaningfully
+    /// detected?  This is the predicate the LORAX GWI evaluates (from its
+    /// loss lookup table) to pick reduced-power vs truncation.
+    pub fn detectable(&self, mu1_mw: f64) -> bool {
+        match self.modulation {
+            // '1' level must clear the decision threshold with margin.
+            Modulation::Ook => mu1_mw >= self.threshold_mw * self.margin_lin,
+            // Top level must clear the photodetector sensitivity floor.
+            Modulation::Pam4 => mu1_mw >= self.sensitivity_mw * self.margin_lin,
+        }
+    }
+
+    /// Exact Gray-coded per-bit marginals of the PAM4 symbol channel.
+    fn pam4_probs(&self, mu_top_mw: f64) -> BitErrorProbs {
+        // Below the photodetector floor nothing is seen: all-zero symbols.
+        // (1 - 1e-9 tolerance: the full-power worst-case calibration point
+        // sits *exactly* at the sensitivity by eq.-2 provisioning.)
+        if mu_top_mw < self.sensitivity_mw * (1.0 - 1e-9) {
+            return BitErrorProbs::TRUNCATED;
+        }
+        let a = mu_top_mw;
+        let s = self.sigma_mw;
+        // Levels and (AGC-scaled) slicer thresholds.
+        let level = |i: usize| a * i as f64 / 3.0;
+        let thresh = [a / 6.0, a / 2.0, 5.0 * a / 6.0];
+        // P(decide r | sent s) for the Gaussian channel.
+        let p_rs = |r: usize, sent: usize| -> f64 {
+            let l = level(sent);
+            let hi = if r == 3 { 1.0 } else { 1.0 - q_function((thresh[r] - l) / s) };
+            let lo = if r == 0 { 0.0 } else { 1.0 - q_function((thresh[r - 1] - l) / s) };
+            (hi - lo).max(0.0)
+        };
+        let gray = |sym: usize| sym ^ (sym >> 1);
+        let mut p10 = [0.0f64; 2];
+        let mut p01 = [0.0f64; 2];
+        let mut n1 = [0u32; 2];
+        let mut n0 = [0u32; 2];
+        for sent in 0..4 {
+            let gs = gray(sent);
+            for bit in 0..2 {
+                let sent_bit = (gs >> bit) & 1;
+                let mut flip = 0.0;
+                for r in 0..4 {
+                    let gr = gray(r);
+                    if (gr >> bit) & 1 != sent_bit {
+                        flip += p_rs(r, sent);
+                    }
+                }
+                if sent_bit == 1 {
+                    p10[bit] += flip;
+                    n1[bit] += 1;
+                } else {
+                    p01[bit] += flip;
+                    n0[bit] += 1;
+                }
+            }
+        }
+        BitErrorProbs {
+            p10: (p10[0] / n1[0] as f64 + p10[1] / n1[1] as f64) / 2.0,
+            p01: (p01[0] / n0[0] as f64 + p01[1] / n0[1] as f64) / 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phys::loss::PathLoss;
+
+    fn setup(m: Modulation) -> (ReceiverCal, LaserProvisioning, PhotonicParams) {
+        let p = PhotonicParams::default();
+        // A waveguide with a near and a far reader.
+        let near = PathLoss::new(0.5, 2, 1);
+        let far = PathLoss::new(5.0, 10, 6);
+        let prov = LaserProvisioning::for_reader_losses(&[near, far], &p, m);
+        (ReceiverCal::new(&prov, &p), prov, p)
+    }
+
+    #[test]
+    fn full_power_worst_reader_is_error_free_enough() {
+        let (cal, prov, _) = setup(Modulation::Ook);
+        let probs = cal.error_probs(prov.received_mw(prov.worst_loss_db, 1.0));
+        assert!(probs.p10 < 1e-10, "p10={:e}", probs.p10);
+        assert!(probs.p01 < 1e-10, "p01={:e}", probs.p01);
+    }
+
+    #[test]
+    fn ook_reduced_power_far_reader_truncates() {
+        let (cal, prov, _) = setup(Modulation::Ook);
+        // Far reader at 20% power: '1' level = 0.2*mu_cal < T = 0.5*mu_cal.
+        let probs = cal.error_probs(prov.received_mw(prov.worst_loss_db, 0.2));
+        assert!(probs.p10 > 0.99, "p10={}", probs.p10);
+        assert!(probs.p01 < 1e-10);
+        assert!(!cal.detectable(prov.received_mw(prov.worst_loss_db, 0.2)));
+    }
+
+    #[test]
+    fn ook_reduced_power_near_reader_recovers() {
+        let (cal, prov, p) = setup(Modulation::Ook);
+        let near_loss = PathLoss::new(0.5, 2, 1).total_db(&p, Modulation::Ook);
+        let mu = prov.received_mw(near_loss, 0.2);
+        assert!(cal.detectable(mu), "near reader should be detectable at 20%");
+        let probs = cal.error_probs(mu);
+        assert!(probs.p10 < 0.05, "p10={}", probs.p10);
+    }
+
+    #[test]
+    fn ook_error_monotone_in_power() {
+        let (cal, prov, _) = setup(Modulation::Ook);
+        let mut prev = 1.1;
+        for i in 1..=10 {
+            let f = i as f64 / 10.0;
+            let probs = cal.error_probs(prov.received_mw(prov.worst_loss_db - 6.0, f));
+            assert!(probs.p10 <= prev + 1e-15, "non-monotone at f={f}");
+            prev = probs.p10;
+        }
+    }
+
+    #[test]
+    fn zero_power_is_exact_truncation() {
+        let (cal, _, _) = setup(Modulation::Ook);
+        assert_eq!(cal.error_probs(0.0), BitErrorProbs::TRUNCATED);
+        let (cal4, _, _) = setup(Modulation::Pam4);
+        assert_eq!(cal4.error_probs(0.0), BitErrorProbs::TRUNCATED);
+    }
+
+    #[test]
+    fn pam4_full_power_worst_reader_calibrated() {
+        let (cal, prov, _) = setup(Modulation::Pam4);
+        let probs = cal.error_probs(prov.received_mw(prov.worst_loss_db, 1.0));
+        // Eye/2sigma = Q_cal = 7 per adjacent pair; marginals stay tiny.
+        assert!(probs.ber() < 1e-9, "ber={:e}", probs.ber());
+    }
+
+    #[test]
+    fn pam4_noisier_than_ook_at_same_reduced_level() {
+        let (ook, prov_o, p) = setup(Modulation::Ook);
+        let (pam, prov_p, _) = setup(Modulation::Pam4);
+        // Same physical reader, same fractional level, both detectable.
+        let near_o = PathLoss::new(0.5, 2, 1).total_db(&p, Modulation::Ook);
+        let near_p = PathLoss::new(0.5, 2, 1).total_db(&p, Modulation::Pam4);
+        let f = 0.35;
+        let be_o = ook.error_probs(prov_o.received_mw(near_o, f));
+        let be_p = pam.error_probs(prov_p.received_mw(near_p, f));
+        assert!(
+            be_p.ber() > be_o.ber(),
+            "pam4 {:e} should exceed ook {:e}",
+            be_p.ber(),
+            be_o.ber()
+        );
+    }
+
+    #[test]
+    fn pam4_below_sensitivity_truncates() {
+        let (cal, _, _) = setup(Modulation::Pam4);
+        let probs = cal.error_probs(cal.sensitivity_mw * 0.5);
+        assert_eq!(probs, BitErrorProbs::TRUNCATED);
+        assert!(!cal.detectable(cal.sensitivity_mw * 0.5));
+    }
+
+    #[test]
+    fn pam4_transition_matrix_rows_sum_to_one() {
+        // Exercised indirectly: marginals must be valid probabilities
+        // across a sweep of amplitudes.
+        let (cal, prov, _) = setup(Modulation::Pam4);
+        for i in 1..=20 {
+            let mu = prov.received_mw(prov.worst_loss_db, i as f64 / 20.0);
+            let probs = cal.error_probs(mu);
+            assert!((0.0..=1.0).contains(&probs.p10), "p10={}", probs.p10);
+            assert!((0.0..=1.0).contains(&probs.p01), "p01={}", probs.p01);
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Reproduction drivers: one function per table/figure of the paper.
+//!
+//! Each driver runs the full stack (workload engines → photonic channel →
+//! cycle-level simulator → energy accounting) and renders the same rows /
+//! series the paper reports.  The bench harness and `lorax reproduce`
+//! both call these.
+
+use anyhow::Result;
+
+use crate::approx::channel::{Channel, IdentityChannel};
+use crate::approx::policy::{paper_table3, AppTuning, PolicyKind};
+use crate::approx::tuning::{select_tuning, sweep_app, SensitivitySurface};
+use crate::apps::{by_name_scaled, ALL_APPS, EVALUATED_APPS};
+use crate::config::SystemConfig;
+use crate::coordinator::system::{AppRunReport, LoraxSystem};
+
+use super::table::Table;
+
+/// Fig. 2 — float/int packet characterization across applications.
+pub fn fig2_characterization(cfg: &SystemConfig) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig. 2 — ACCEPT benchmark characterization (packets by payload kind)",
+        &["app", "float pkts", "int pkts", "control", "float frac"],
+    );
+    for app in ALL_APPS {
+        let w = by_name_scaled(app, cfg.seed, cfg.scale)
+            .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+        let mut ch = IdentityChannel::new();
+        w.run(&mut ch);
+        let p = ch.stats().profile;
+        t.row(&[
+            app.to_string(),
+            p.float_packets.to_string(),
+            p.int_packets.to_string(),
+            p.control_packets.to_string(),
+            format!("{:.3}", p.float_fraction()),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig. 6 — sensitivity surfaces (one per evaluated app).
+pub fn fig6_surfaces(
+    cfg: &SystemConfig,
+    apps: &[&str],
+    bits_axis: &[u32],
+    reduction_axis: &[u32],
+) -> Vec<SensitivitySurface> {
+    let sys = LoraxSystem::new(cfg);
+    apps.iter()
+        .map(|app| {
+            sweep_app(
+                &sys.ook,
+                app,
+                PolicyKind::LoraxOok,
+                cfg.seed,
+                cfg.scale,
+                bits_axis,
+                reduction_axis,
+            )
+        })
+        .collect()
+}
+
+/// Render one Fig.-6 surface as a bits x reduction error grid.
+pub fn render_surface(s: &SensitivitySurface) -> String {
+    let mut bits: Vec<u32> = s.points.iter().map(|p| p.bits).collect();
+    bits.sort_unstable();
+    bits.dedup();
+    let mut reds: Vec<u32> = s.points.iter().map(|p| p.reduction_pct).collect();
+    reds.sort_unstable();
+    reds.dedup();
+    let header: Vec<String> = std::iter::once("bits\\red%".to_string())
+        .chain(reds.iter().map(|r| format!("{r}%")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Fig. 6 — {} output error (%) vs LSBs and laser power reduction", s.app),
+        &header_refs,
+    );
+    for &b in &bits {
+        let mut row = vec![b.to_string()];
+        for &r in &reds {
+            let e = s.error_at(b, r).unwrap_or(f64::NAN);
+            row.push(if e < 0.001 && e > 0.0 {
+                format!("{e:.1e}")
+            } else {
+                format!("{e:.3}")
+            });
+        }
+        t.row(&row);
+    }
+    t.render()
+}
+
+/// Table 3 — per-application tuning selection under the error threshold.
+pub fn table3_selection(cfg: &SystemConfig, surfaces: &[SensitivitySurface]) -> Table {
+    let mut t = Table::new(
+        "Table 3 — LSBs and laser level per app (<10% output error)",
+        &["app", "trunc bits", "[16]", "LORAX bits", "LORAX %power-reduction", "paper (bits, red%)"],
+    );
+    for s in surfaces {
+        let sel = select_tuning(s, cfg.error_threshold_pct);
+        let paper = paper_table3(&s.app);
+        t.row(&[
+            s.app.clone(),
+            sel.trunc_bits.to_string(),
+            "16 @ 20% power".to_string(),
+            sel.approx_bits.to_string(),
+            sel.power_reduction_pct.to_string(),
+            format!("({}, {})", paper.approx_bits, paper.power_reduction_pct),
+        ]);
+    }
+    t
+}
+
+/// One Fig.-8 style experiment: all five frameworks on one app, each
+/// with its measured default tuning (PAM4 uses the PAM4-swept table).
+pub fn run_frameworks(sys: &LoraxSystem, app: &str) -> Result<Vec<AppRunReport>> {
+    PolicyKind::ALL.iter().map(|&kind| sys.run_app(app, kind)).collect()
+}
+
+/// Fig. 8(a)+(b) — EPB and laser power across frameworks and apps.
+/// Returns (epb_table, laser_table, all_reports).
+pub fn fig8_comparison(
+    cfg: &SystemConfig,
+) -> Result<(Table, Table, Vec<Vec<AppRunReport>>)> {
+    let sys = LoraxSystem::new(cfg);
+    let framework_names: Vec<&str> = PolicyKind::ALL.iter().map(|k| k.name()).collect();
+    let mut epb_header = vec!["app"];
+    epb_header.extend(framework_names.iter());
+    let mut epb = Table::new("Fig. 8a — energy-per-bit (pJ/bit)", &epb_header);
+    let mut laser = Table::new("Fig. 8b — average laser power (mW)", &epb_header);
+    let mut all = Vec::new();
+    for app in EVALUATED_APPS {
+        let reports = run_frameworks(&sys, app)?;
+        let mut epb_row = vec![app.to_string()];
+        let mut laser_row = vec![app.to_string()];
+        for r in &reports {
+            epb_row.push(format!("{:.4}", r.sim.epb_pj));
+            laser_row.push(format!("{:.3}", r.sim.avg_laser_mw));
+        }
+        epb.row(&epb_row);
+        laser.row(&laser_row);
+        all.push(reports);
+    }
+    Ok((epb, laser, all))
+}
+
+/// Fig. 7 — JPEG output quality at increasingly aggressive approximation.
+///
+/// Runs the jpeg engine golden and at (24, 28, 32) LSBs @ 77% power
+/// reduction, writes PGM images under `outdir`, and reports PSNR +
+/// output error per panel.  (The paper's panels use 20% laser power; in
+/// this implementation's channel model the jpeg pipeline's fixed
+/// DCT->quantizer hop becomes undetectable below ~30% and every panel
+/// collapses to truncation — 70% reduction sits in the graded-error
+/// regime (the detectability margin bounds reduced-mode BER at ~3%, and
+/// the window to error-free spans only ~77-80%) and shows the paper's progressive artefact growth.)
+pub fn fig7_jpeg(cfg: &SystemConfig, outdir: &std::path::Path) -> Result<Table> {
+    use crate::apps::jpeg::Jpeg;
+    use crate::apps::Workload;
+    std::fs::create_dir_all(outdir)?;
+    let side = ((512.0 * cfg.scale.sqrt()) as usize / 64).max(1) * 64;
+    let jpeg = Jpeg::new(side, cfg.seed);
+    let original = Jpeg::dataset(side, cfg.seed);
+    Jpeg::write_pgm(&outdir.join("fig7_original.pgm"), &original, side)?;
+
+    let sys = LoraxSystem::new(cfg);
+    let mut golden_ch = IdentityChannel::new();
+    let golden = jpeg.run(&mut golden_ch);
+    Jpeg::write_pgm(&outdir.join("fig7_a_golden_codec.pgm"), &golden, side)?;
+
+    let mut t = Table::new(
+        "Fig. 7 — JPEG output vs approximation aggressiveness (77% power reduction)",
+        &["panel", "LSBs", "PSNR vs original (dB)", "output error vs golden (%)", "file"],
+    );
+    t.row(&[
+        "a".to_string(),
+        "0 (exact)".to_string(),
+        format!("{:.2}", Jpeg::psnr(&original, &golden)),
+        "0.000".to_string(),
+        "fig7_a_golden_codec.pgm".to_string(),
+    ]);
+    for (panel, bits) in [("b", 24u32), ("c", 28), ("d", 32)] {
+        let tuning = AppTuning { approx_bits: bits, power_reduction_pct: 77, trunc_bits: bits };
+        let policy = crate::approx::policy::Policy::with_tuning(PolicyKind::LoraxOok, tuning);
+        let engine = sys.engine_for(PolicyKind::LoraxOok);
+        let mut ch = crate::coordinator::channel::PhotonicChannel::new(
+            engine,
+            policy,
+            crate::coordinator::channel::NativeCorruptor,
+            cfg.seed as u32,
+        );
+        let recon = jpeg.run(&mut ch);
+        let file = format!("fig7_{panel}_{bits}lsb_77red.pgm");
+        Jpeg::write_pgm(&outdir.join(&file), &recon, side)?;
+        t.row(&[
+            panel.to_string(),
+            bits.to_string(),
+            format!("{:.2}", Jpeg::psnr(&original, &recon)),
+            format!("{:.3}", crate::apps::output_error_pct(&golden, &recon)),
+            file,
+        ]);
+    }
+    Ok(t)
+}
+
+/// §5.3 headline numbers from a set of Fig.-8 runs: average and best-case
+/// reductions of LORAX-OOK / LORAX-PAM4 vs baseline, [16] and truncation.
+pub fn headline_summary(all: &[Vec<AppRunReport>]) -> Table {
+    let idx = |k: PolicyKind| PolicyKind::ALL.iter().position(|&x| x == k).unwrap();
+    let b = idx(PolicyKind::Baseline);
+    let p16 = idx(PolicyKind::Prior16);
+    let tr = idx(PolicyKind::Truncation);
+    let ook = idx(PolicyKind::LoraxOok);
+    let pam = idx(PolicyKind::LoraxPam4);
+
+    let mut t = Table::new(
+        "§5.3 headline — reduction vs reference (%); paper values in brackets",
+        &["metric", "vs baseline", "vs [16]", "vs truncation"],
+    );
+    let reduction = |ours: f64, theirs: f64| 100.0 * (1.0 - ours / theirs);
+    let collect = |metric: &dyn Fn(&AppRunReport) -> f64, us: usize, them: usize| -> (f64, f64) {
+        let per_app: Vec<f64> = all
+            .iter()
+            .map(|reports| reduction(metric(&reports[us]), metric(&reports[them])))
+            .collect();
+        let avg = per_app.iter().sum::<f64>() / per_app.len() as f64;
+        let best = per_app.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (avg, best)
+    };
+    let epb = |r: &AppRunReport| r.sim.epb_pj;
+    let lp = |r: &AppRunReport| r.sim.avg_laser_mw;
+
+    for (label, us, metric, paper) in [
+        ("LORAX-OOK EPB avg", ook, &epb as &dyn Fn(&AppRunReport) -> f64, "[2.5 / 1.9 / 1.0]"),
+        ("LORAX-PAM4 EPB avg", pam, &epb, "[13.0 / 12.2 / 12.2]"),
+        ("LORAX-OOK laser avg", ook, &lp, "[12.2 / 8.1 / 7.8]"),
+        ("LORAX-PAM4 laser avg", pam, &lp, "[34.2 / 30.1 / 27.2]"),
+    ] {
+        let (avg_b, _) = collect(metric, us, b);
+        let (avg_16, _) = collect(metric, us, p16);
+        let (avg_tr, _) = collect(metric, us, tr);
+        t.row(&[
+            format!("{label} {paper}"),
+            format!("{avg_b:.1}"),
+            format!("{avg_16:.1}"),
+            format!("{avg_tr:.1}"),
+        ]);
+    }
+    // Best-case rows (paper: blackscholes & FFT).
+    let (_, best_pam_laser_b) = collect(&lp, pam, b);
+    let (_, best_pam_laser_16) = collect(&lp, pam, p16);
+    let (_, best_pam_laser_tr) = collect(&lp, pam, tr);
+    t.row(&[
+        "LORAX-PAM4 laser best [39.7 / 31.4 / 33.6]".to_string(),
+        format!("{best_pam_laser_b:.1}"),
+        format!("{best_pam_laser_16:.1}"),
+        format!("{best_pam_laser_tr:.1}"),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SystemConfig {
+        SystemConfig { scale: 0.02, seed: 5, ..Default::default() }
+    }
+
+    #[test]
+    fn fig2_has_all_apps() {
+        let t = fig2_characterization(&tiny()).unwrap();
+        assert_eq!(t.n_rows(), ALL_APPS.len());
+        let r = t.render();
+        assert!(r.contains("fluidanimate"));
+    }
+
+    #[test]
+    fn fig6_and_table3_small_grid() {
+        let cfg = tiny();
+        let surfaces = fig6_surfaces(&cfg, &["sobel"], &[8, 32], &[0, 100]);
+        assert_eq!(surfaces.len(), 1);
+        let rendered = render_surface(&surfaces[0]);
+        assert!(rendered.contains("sobel"));
+        let t3 = table3_selection(&cfg, &surfaces);
+        assert_eq!(t3.n_rows(), 1);
+    }
+
+    #[test]
+    fn fig8_and_headline_one_app_scale() {
+        let cfg = tiny();
+        let (epb, laser, all) = fig8_comparison(&cfg).unwrap();
+        assert_eq!(epb.n_rows(), EVALUATED_APPS.len());
+        assert_eq!(laser.n_rows(), EVALUATED_APPS.len());
+        let headline = headline_summary(&all);
+        assert!(headline.render().contains("LORAX-PAM4"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Reporting: text/CSV table rendering and the per-figure reproduction
+//! drivers that regenerate every table and figure of the paper
+//! (shared by the `lorax reproduce` CLI and the bench harness).
+
+pub mod figures;
+pub mod table;
+
+pub use table::Table;

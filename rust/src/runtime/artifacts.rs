@@ -1,0 +1,155 @@
+//! Artifact discovery and manifest parsing.
+//!
+//! `make artifacts` leaves `artifacts/<name>.hlo.txt` plus a
+//! `manifest.txt` whose lines look like:
+//!
+//! ```text
+//! channel u32[65536],u32[65536],u32[65536],u32[65536],u32[65536] -> 1 sha256:1eb4d794...
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Fixed batch sizes of the AOT channel artifacts
+/// (mirrors `python/compile/model.py`).
+pub const CHANNEL_N: usize = 65536;
+pub const CHANNEL_SMALL_N: usize = 4096;
+
+/// Locate the artifacts directory: `$LORAX_ARTIFACTS`, then `./artifacts`,
+/// then walking up from the current directory (so tests and examples work
+/// from any workspace subdirectory).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("LORAX_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        bail!("LORAX_ARTIFACTS={} is not a directory", p.display());
+    }
+    let mut cur = std::env::current_dir().context("no current dir")?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").is_file() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!(
+                "artifacts/ not found (run `make artifacts` or set LORAX_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+/// One artifact's declared signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Input dtype/shape strings as emitted by aot.py, e.g. `u32[65536]`.
+    pub inputs: Vec<String>,
+    pub n_outputs: usize,
+    pub sha: String,
+}
+
+/// Parsed manifest.txt.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut specs = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            // name inputs -> n sha256:xxxx
+            let mut parts = line.split_whitespace();
+            let (Some(name), Some(inputs), Some(arrow), Some(n), Some(sha)) = (
+                parts.next(),
+                parts.next(),
+                parts.next(),
+                parts.next(),
+                parts.next(),
+            ) else {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            };
+            if arrow != "->" {
+                bail!("manifest line {}: expected '->', got {arrow:?}", lineno + 1);
+            }
+            let spec = ArtifactSpec {
+                name: name.to_string(),
+                inputs: inputs.split(',').map(|s| normalize_dtype(s)).collect(),
+                n_outputs: n.parse().with_context(|| format!("line {}", lineno + 1))?,
+                sha: sha.strip_prefix("sha256:").unwrap_or(sha).to_string(),
+            };
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { specs })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+}
+
+/// Normalize numpy dtype spellings to short forms (`uint32[...]` →
+/// `u32[...]`).
+fn normalize_dtype(s: &str) -> String {
+    s.replace("uint32", "u32").replace("float32", "f32").replace(' ', "")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+channel uint32[65536],uint32[65536],uint32[65536],uint32[65536],uint32[65536] -> 1 sha256:abc123
+blackscholes float32[8192],float32[8192],float32[8192],float32[8192],float32[8192] -> 2 sha256:def456
+sobel float32[512,512] -> 1 sha256:77
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.specs.len(), 3);
+        let ch = m.get("channel").unwrap();
+        assert_eq!(ch.inputs.len(), 5);
+        assert_eq!(ch.inputs[0], "u32[65536]");
+        assert_eq!(ch.n_outputs, 1);
+        assert_eq!(ch.sha, "abc123");
+        let bs = m.get("blackscholes").unwrap();
+        assert_eq!(bs.n_outputs, 2);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(Manifest::parse("channel u32[1]").is_err());
+        assert!(Manifest::parse("channel u32[1] => 1 sha256:x").is_err());
+        assert!(Manifest::parse("channel u32[1] -> q sha256:x").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = Manifest::parse("# comment\n\nsobel f32[4,4] -> 1 sha256:9\n").unwrap();
+        assert_eq!(m.specs.len(), 1);
+    }
+}

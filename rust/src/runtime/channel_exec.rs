@@ -1,0 +1,89 @@
+//! [`XlaCorruptor`]: the AOT/PJRT-backed channel data plane.
+//!
+//! Same inputs, same outputs as the native kernel — the corruption runs
+//! through the Pallas-authored HLO artifact instead of Rust code.  Word
+//! layout and RNG keys follow the shared convention
+//! (`approx::float_bits`), so the integration tests can assert
+//! native == XLA word-for-word.
+
+use anyhow::Result;
+
+use crate::coordinator::channel::Corruptor;
+use crate::util::rng::make_word_key;
+
+use super::artifacts::{CHANNEL_N, CHANNEL_SMALL_N};
+use super::client::Runtime;
+
+/// Corruptor that executes the `channel` AOT artifacts via PJRT.
+pub struct XlaCorruptor {
+    runtime: Runtime,
+    /// Batches executed (for perf reporting).
+    pub batches: u64,
+}
+
+impl XlaCorruptor {
+    pub fn new() -> Result<XlaCorruptor> {
+        Ok(XlaCorruptor { runtime: Runtime::cpu()?, batches: 0 })
+    }
+
+    pub fn from_runtime(runtime: Runtime) -> XlaCorruptor {
+        XlaCorruptor { runtime, batches: 0 }
+    }
+
+    /// Corrupt a raw word array (the artifact's native signature), with
+    /// per-word parameters, padding to the artifact batch size.
+    pub fn corrupt_word_arrays(
+        &mut self,
+        words: &mut [u32],
+        masks: &[u32],
+        t10s: &[u32],
+        t01s: &[u32],
+        keys: &[u32],
+    ) -> Result<()> {
+        let n = words.len();
+        let mut off = 0;
+        while off < n {
+            let remaining = n - off;
+            // Use the small batch when it suffices (cheaper PJRT call).
+            let batch = if remaining <= CHANNEL_SMALL_N { CHANNEL_SMALL_N } else { CHANNEL_N };
+            let take = remaining.min(batch);
+            let pad = batch - take;
+            let mut w = words[off..off + take].to_vec();
+            let mut m = masks[off..off + take].to_vec();
+            let mut a = t10s[off..off + take].to_vec();
+            let mut b = t01s[off..off + take].to_vec();
+            let mut k = keys[off..off + take].to_vec();
+            // Zero-mask padding words pass through unchanged.
+            w.resize(take + pad, 0);
+            m.resize(take + pad, 0);
+            a.resize(take + pad, 0);
+            b.resize(take + pad, 0);
+            k.resize(take + pad, 0);
+            let name = if batch == CHANNEL_SMALL_N { "channel_small" } else { "channel" };
+            let out = self.runtime.execute_channel(name, &w, &m, &a, &b, &k)?;
+            words[off..off + take].copy_from_slice(&out[..take]);
+            self.batches += 1;
+            off += take;
+        }
+        Ok(())
+    }
+}
+
+impl Corruptor for XlaCorruptor {
+    fn corrupt_words(&mut self, words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32) {
+        if mask == 0 || (t10 == 0 && t01 == 0) {
+            return;
+        }
+        let n = words.len();
+        let masks = vec![mask; n];
+        let t10s = vec![t10; n];
+        let t01s = vec![t01; n];
+        let keys: Vec<u32> = (0..n as u32).map(|i| make_word_key(seed, i)).collect();
+        self.corrupt_word_arrays(words, &masks, &t10s, &t01s, &keys)
+            .expect("XLA channel execution failed");
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

@@ -1,0 +1,85 @@
+//! PJRT CPU runtime: compile-once, execute-many artifact host.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{artifacts_dir, Manifest};
+
+/// Owns the PJRT client and a cache of compiled executables keyed by
+/// artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at the discovered artifacts directory.
+    pub fn cpu() -> Result<Runtime> {
+        let dir = artifacts_dir()?;
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            // Validate against the manifest first for a clear error.
+            self.manifest.get(name)?;
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed
+    /// output tuple (aot.py always lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} output"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("{name} output tuple: {e:?}"))
+    }
+
+    /// Convenience: run the `channel`/`channel_small` artifact over u32
+    /// arrays (all five inputs the same length).
+    pub fn execute_channel(
+        &mut self,
+        name: &str,
+        words: &[u32],
+        masks: &[u32],
+        t10s: &[u32],
+        t01s: &[u32],
+        keys: &[u32],
+    ) -> Result<Vec<u32>> {
+        let ins = [words, masks, t10s, t01s, keys];
+        let lits: Vec<xla::Literal> = ins.iter().map(|a| xla::Literal::vec1(a)).collect();
+        let mut out = self.execute(name, &lits)?;
+        anyhow::ensure!(out.len() == 1, "channel returned {} outputs", out.len());
+        out.pop()
+            .unwrap()
+            .to_vec::<u32>()
+            .map_err(|e| anyhow::anyhow!("channel output decode: {e:?}"))
+    }
+}

@@ -1,0 +1,18 @@
+//! AOT artifact runtime: load HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the PJRT CPU client.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this
+//! module is the only bridge to the compiled compute graphs — the Rust
+//! binary is self-contained on the request path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod channel_exec;
+pub mod client;
+
+pub use artifacts::{artifacts_dir, Manifest};
+pub use channel_exec::XlaCorruptor;
+pub use client::Runtime;

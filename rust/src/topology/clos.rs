@@ -1,0 +1,226 @@
+//! The 8-ary 3-stage Clos topology: node addressing, electrical hop
+//! counts, and the photonic path composition for every (src, dst) cluster
+//! pair on the per-source SWMR waveguides.
+
+use super::layout::DieLayout;
+use crate::phys::loss::PathLoss;
+
+/// A network endpoint: one of 64 cores or one of 8 per-cluster memory
+/// controllers (co-located with the cluster GWI, paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    Core(u8),
+    MemCtrl(u8),
+}
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        match self {
+            NodeId::Core(c) => c as usize,
+            NodeId::MemCtrl(m) => 64 + m as usize,
+        }
+    }
+}
+
+/// Static description of the 64-core Clos PNoC.
+#[derive(Clone, Debug)]
+pub struct ClosTopology {
+    pub layout: DieLayout,
+    pub n_cores: usize,
+    pub n_clusters: usize,
+    pub cores_per_cluster: usize,
+    pub concentrators_per_cluster: usize,
+}
+
+impl ClosTopology {
+    pub fn default_64core() -> ClosTopology {
+        ClosTopology {
+            layout: DieLayout::default_8cluster(),
+            n_cores: 64,
+            n_clusters: 8,
+            cores_per_cluster: 8,
+            concentrators_per_cluster: 2,
+        }
+    }
+
+    /// Cluster that hosts a node.
+    pub fn cluster_of(&self, node: NodeId) -> usize {
+        match node {
+            NodeId::Core(c) => c as usize / self.cores_per_cluster,
+            NodeId::MemCtrl(m) => m as usize,
+        }
+    }
+
+    /// Concentrator (0 or 1 within the cluster) serving a core.
+    pub fn concentrator_of(&self, core: u8) -> usize {
+        (core as usize % self.cores_per_cluster)
+            / (self.cores_per_cluster / self.concentrators_per_cluster)
+    }
+
+    /// Ring distance in hops from src to dst cluster along the
+    /// (unidirectional) SWMR waveguide.
+    pub fn ring_hops(&self, src_cluster: usize, dst_cluster: usize) -> usize {
+        assert_ne!(src_cluster, dst_cluster, "no photonic path within a cluster");
+        (dst_cluster + self.n_clusters - src_cluster) % self.n_clusters
+    }
+
+    /// Photonic path composition from `src_cluster`'s GWI to
+    /// `dst_cluster`'s GWI along the source's SWMR waveguide.
+    ///
+    /// The signal passes the source's own modulator bank, then the reader
+    /// banks of every intermediate cluster, and finally drops at the
+    /// destination bank.
+    pub fn photonic_path(&self, src_cluster: usize, dst_cluster: usize) -> PathLoss {
+        let hops = self.ring_hops(src_cluster, dst_cluster);
+        let mut length_cm = 0.0;
+        for k in 0..hops {
+            length_cm += self.layout.hop_cm((src_cluster + k) % self.n_clusters);
+        }
+        PathLoss {
+            length_cm,
+            bends: self.layout.bends_per_hop * hops as u32,
+            // 1 source modulator bank + (hops-1) intermediate reader banks.
+            banks_passed: hops as u32,
+            dropped: true,
+        }
+    }
+
+    /// Paths to every reader of `src_cluster`'s waveguide, ordered by
+    /// ring position (used for provisioning and the GWI lookup table).
+    pub fn reader_paths(&self, src_cluster: usize) -> Vec<(usize, PathLoss)> {
+        (1..self.n_clusters)
+            .map(|k| {
+                let dst = (src_cluster + k) % self.n_clusters;
+                (dst, self.photonic_path(src_cluster, dst))
+            })
+            .collect()
+    }
+
+    /// Electrical hop count between two nodes (core↔concentrator↔GWI
+    /// within a cluster; inter-cluster adds the photonic link between the
+    /// GWIs).  Returns (electrical_hops, uses_photonic_link).
+    pub fn route(&self, src: NodeId, dst: NodeId) -> (u32, bool) {
+        let sc = self.cluster_of(src);
+        let dc = self.cluster_of(dst);
+        let src_el = match src {
+            // core -> concentrator -> (cluster router/GWI)
+            NodeId::Core(_) => 2,
+            // MC sits at the GWI.
+            NodeId::MemCtrl(_) => 0,
+        };
+        let dst_el = match dst {
+            NodeId::Core(_) => 2,
+            NodeId::MemCtrl(_) => 0,
+        };
+        if sc == dc {
+            // Same cluster: through the electrical router only.  Two cores
+            // on the same concentrator still hop through it.
+            let same_conc = match (src, dst) {
+                (NodeId::Core(a), NodeId::Core(b)) => {
+                    self.concentrator_of(a) == self.concentrator_of(b)
+                }
+                _ => false,
+            };
+            let hops = if same_conc { 2 } else { (src_el + dst_el).max(1) };
+            (hops, false)
+        } else {
+            (src_el + dst_el, true)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phys::params::{Modulation, PhotonicParams};
+
+    fn t() -> ClosTopology {
+        ClosTopology::default_64core()
+    }
+
+    #[test]
+    fn cluster_and_concentrator_mapping() {
+        let t = t();
+        assert_eq!(t.cluster_of(NodeId::Core(0)), 0);
+        assert_eq!(t.cluster_of(NodeId::Core(7)), 0);
+        assert_eq!(t.cluster_of(NodeId::Core(8)), 1);
+        assert_eq!(t.cluster_of(NodeId::Core(63)), 7);
+        assert_eq!(t.cluster_of(NodeId::MemCtrl(5)), 5);
+        assert_eq!(t.concentrator_of(0), 0);
+        assert_eq!(t.concentrator_of(3), 0);
+        assert_eq!(t.concentrator_of(4), 1);
+        assert_eq!(t.concentrator_of(63), 1);
+    }
+
+    #[test]
+    fn ring_hops_wrap() {
+        let t = t();
+        assert_eq!(t.ring_hops(0, 1), 1);
+        assert_eq!(t.ring_hops(0, 7), 7);
+        assert_eq!(t.ring_hops(7, 0), 1);
+        assert_eq!(t.ring_hops(5, 2), 5);
+    }
+
+    #[test]
+    fn photonic_path_accumulates_monotonically() {
+        let t = t();
+        let p = PhotonicParams::default();
+        for src in 0..8 {
+            let mut prev = -1.0;
+            for k in 1..8 {
+                let dst = (src + k) % 8;
+                let loss = t.photonic_path(src, dst).total_db(&p, Modulation::Ook);
+                assert!(loss > prev, "src={src} k={k} loss={loss} prev={prev}");
+                prev = loss;
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_path_composition() {
+        let t = t();
+        let path = t.photonic_path(0, 1);
+        assert_eq!(path.banks_passed, 1); // only the source modulator bank
+        assert_eq!(path.bends, 2);
+        assert!((path.length_cm - 0.5).abs() < 1e-12);
+        assert!(path.dropped);
+    }
+
+    #[test]
+    fn farthest_path_spans_almost_the_ring() {
+        let t = t();
+        let path = t.photonic_path(0, 7);
+        assert_eq!(path.banks_passed, 7);
+        // 7 hops of the 8-hop / 5 cm ring; the 7->0 hop (1 cm) is unused.
+        assert!((path.length_cm - 4.0).abs() < 1e-12, "{}", path.length_cm);
+    }
+
+    #[test]
+    fn reader_paths_cover_all_other_clusters() {
+        let t = t();
+        for src in 0..8 {
+            let readers = t.reader_paths(src);
+            assert_eq!(readers.len(), 7);
+            let mut dsts: Vec<usize> = readers.iter().map(|(d, _)| *d).collect();
+            dsts.sort_unstable();
+            let want: Vec<usize> = (0..8).filter(|&c| c != src).collect();
+            assert_eq!(dsts, want);
+        }
+    }
+
+    #[test]
+    fn route_intra_vs_inter_cluster() {
+        let t = t();
+        let (hops, phot) = t.route(NodeId::Core(0), NodeId::Core(1));
+        assert!(!phot);
+        assert!(hops >= 1);
+        let (hops, phot) = t.route(NodeId::Core(0), NodeId::Core(9));
+        assert!(phot);
+        assert_eq!(hops, 4);
+        let (hops, phot) = t.route(NodeId::Core(0), NodeId::MemCtrl(0));
+        assert!(!phot);
+        assert!(hops >= 1);
+        let (_, phot) = t.route(NodeId::Core(0), NodeId::MemCtrl(3));
+        assert!(phot);
+    }
+}

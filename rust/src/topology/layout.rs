@@ -1,0 +1,94 @@
+//! Physical die layout: cluster placement and waveguide routing geometry.
+//!
+//! The paper evaluates a 400 mm² chip at 22 nm; it does not publish the
+//! floorplan, so we use the canonical arrangement for an 8-cluster Clos
+//! (two rows of four clusters) and route each source cluster's SWMR
+//! waveguide around the cluster ring.  All distances derive from cluster
+//! center coordinates; bends are charged per hop (enter/exit routing).
+
+/// Die/floorplan geometry for the 8-cluster Clos.
+#[derive(Clone, Debug)]
+pub struct DieLayout {
+    /// Die edge, mm (20 x 20 = 400 mm²).
+    pub die_mm: f64,
+    /// Cluster center coordinates, mm, indexed by cluster id in ring order.
+    pub cluster_pos: Vec<(f64, f64)>,
+    /// 90° bends charged per waveguide hop between adjacent ring clusters.
+    pub bends_per_hop: u32,
+}
+
+impl DieLayout {
+    /// The default 64-core floorplan: clusters 0-3 left→right on the top
+    /// row, 4-7 right→left on the bottom row, so consecutive ids are
+    /// physically adjacent and the ring closes at both ends.
+    pub fn default_8cluster() -> DieLayout {
+        let die = 20.0;
+        let xs = [2.5, 7.5, 12.5, 17.5];
+        let mut pos = Vec::with_capacity(8);
+        for &x in &xs {
+            pos.push((x, 5.0)); // clusters 0..=3, top row
+        }
+        for &x in xs.iter().rev() {
+            pos.push((x, 15.0)); // clusters 4..=7, bottom row (right→left)
+        }
+        DieLayout { die_mm: die, cluster_pos: pos, bends_per_hop: 2 }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.cluster_pos.len()
+    }
+
+    /// Manhattan distance (mm) between cluster centers.
+    pub fn manhattan_mm(&self, a: usize, b: usize) -> f64 {
+        let (ax, ay) = self.cluster_pos[a];
+        let (bx, by) = self.cluster_pos[b];
+        (ax - bx).abs() + (ay - by).abs()
+    }
+
+    /// Length (cm) of one ring hop from cluster `i` to its ring successor.
+    pub fn hop_cm(&self, i: usize) -> f64 {
+        let n = self.n_clusters();
+        self.manhattan_mm(i, (i + 1) % n) / 10.0
+    }
+
+    /// Total ring circumference in cm.
+    pub fn ring_cm(&self) -> f64 {
+        (0..self.n_clusters()).map(|i| self.hop_cm(i)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_layout_is_400mm2() {
+        let l = DieLayout::default_8cluster();
+        assert_eq!(l.n_clusters(), 8);
+        assert!((l.die_mm * l.die_mm - 400.0).abs() < 1e-9);
+        for &(x, y) in &l.cluster_pos {
+            assert!(x > 0.0 && x < l.die_mm && y > 0.0 && y < l.die_mm);
+        }
+    }
+
+    #[test]
+    fn ring_hops_are_physically_adjacent() {
+        let l = DieLayout::default_8cluster();
+        // 6 horizontal 5 mm hops + 2 vertical 10 mm hops = 50 mm ring.
+        assert!((l.ring_cm() - 5.0).abs() < 1e-9, "ring={}", l.ring_cm());
+        for i in 0..8 {
+            let hop = l.hop_cm(i);
+            assert!(hop == 0.5 || hop == 1.0, "hop {i} = {hop}");
+        }
+    }
+
+    #[test]
+    fn manhattan_symmetry() {
+        let l = DieLayout::default_8cluster();
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(l.manhattan_mm(a, b), l.manhattan_mm(b, a));
+            }
+        }
+    }
+}

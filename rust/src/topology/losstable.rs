@@ -1,0 +1,150 @@
+//! Offline-computed loss lookup tables and per-waveguide provisioning —
+//! the data the paper stores in each GWI's 64-entry table (§4.1) plus the
+//! laser/receiver calibration derived from it.
+
+use super::clos::ClosTopology;
+use crate::phys::laser::LaserProvisioning;
+use crate::phys::params::{Modulation, PhotonicParams};
+use crate::phys::signaling::ReceiverCal;
+
+/// Loss table + provisioning + receiver calibration for one modulation.
+#[derive(Clone, Debug)]
+pub struct WaveguideSet {
+    pub modulation: Modulation,
+    /// `loss_db[src][dst]`; `f64::NAN` on the diagonal (no photonic path).
+    pub loss_db: Vec<Vec<f64>>,
+    /// Laser provisioning of each source cluster's waveguide.
+    pub provisioning: Vec<LaserProvisioning>,
+    /// Receiver calibration for each source cluster's waveguide readers.
+    pub receiver_cal: Vec<ReceiverCal>,
+}
+
+impl WaveguideSet {
+    pub fn build(topo: &ClosTopology, p: &PhotonicParams, m: Modulation) -> WaveguideSet {
+        let n = topo.n_clusters;
+        let mut loss_db = vec![vec![f64::NAN; n]; n];
+        let mut provisioning = Vec::with_capacity(n);
+        let mut receiver_cal = Vec::with_capacity(n);
+        for src in 0..n {
+            let readers = topo.reader_paths(src);
+            for (dst, path) in &readers {
+                loss_db[src][*dst] = path.total_db(p, m);
+            }
+            let paths: Vec<_> = readers.iter().map(|(_, pl)| *pl).collect();
+            let prov = LaserProvisioning::for_reader_losses(&paths, p, m);
+            receiver_cal.push(ReceiverCal::new(&prov, p));
+            provisioning.push(prov);
+        }
+        WaveguideSet { modulation: m, loss_db, provisioning, receiver_cal }
+    }
+
+    /// Accumulated loss from `src` cluster's GWI to `dst` cluster's GWI.
+    pub fn loss(&self, src: usize, dst: usize) -> f64 {
+        self.loss_db[src][dst]
+    }
+
+    /// Received '1'/top level (mW) at `dst` when `src` drives LSB
+    /// wavelengths at `level` (fraction of full launch power).
+    pub fn received_mw(&self, src: usize, dst: usize, level: f64) -> f64 {
+        self.provisioning[src].received_mw(self.loss(src, dst), level)
+    }
+}
+
+/// Both modulations' tables, built once from the topology.
+#[derive(Clone, Debug)]
+pub struct LossTable {
+    pub ook: WaveguideSet,
+    pub pam4: WaveguideSet,
+}
+
+impl LossTable {
+    pub fn build(topo: &ClosTopology, p: &PhotonicParams) -> LossTable {
+        LossTable {
+            ook: WaveguideSet::build(topo, p, Modulation::Ook),
+            pam4: WaveguideSet::build(topo, p, Modulation::Pam4),
+        }
+    }
+
+    pub fn set(&self, m: Modulation) -> &WaveguideSet {
+        match m {
+            Modulation::Ook => &self.ook,
+            Modulation::Pam4 => &self.pam4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build() -> (ClosTopology, PhotonicParams, LossTable) {
+        let topo = ClosTopology::default_64core();
+        let p = PhotonicParams::default();
+        let table = LossTable::build(&topo, &p);
+        (topo, p, table)
+    }
+
+    #[test]
+    fn diagonal_is_nan_offdiagonal_finite() {
+        let (_, _, t) = build();
+        for s in 0..8 {
+            for d in 0..8 {
+                if s == d {
+                    assert!(t.ook.loss(s, d).is_nan());
+                } else {
+                    assert!(t.ook.loss(s, d).is_finite());
+                    assert!(t.pam4.loss(s, d) > t.ook.loss(s, d) - 5.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worst_reader_receives_sensitivity_at_full_power() {
+        let (_, p, t) = build();
+        for s in 0..8 {
+            // The farthest ring reader is (s + 7) % 8.
+            let far = (s + 7) % 8;
+            let rx = t.ook.received_mw(s, far, 1.0);
+            assert!(
+                (rx - p.sensitivity_mw()).abs() / rx < 1e-9,
+                "src={s} rx={rx}"
+            );
+            // Nearer readers receive strictly more.
+            let near = (s + 1) % 8;
+            assert!(t.ook.received_mw(s, near, 1.0) > rx);
+        }
+    }
+
+    #[test]
+    fn pam4_total_laser_power_below_ook() {
+        // The structural PAM4 win: 32 lambda with halved through-loss
+        // banks beats 64 lambda despite the 5.8 dB signaling penalty.
+        let (_, _, t) = build();
+        for s in 0..8 {
+            let ook = t.ook.provisioning[s].total_optical_mw();
+            let pam = t.pam4.provisioning[s].total_optical_mw();
+            assert!(pam < ook, "cluster {s}: pam4 {pam} >= ook {ook}");
+        }
+    }
+
+    #[test]
+    fn symmetry_of_ring_by_rotation() {
+        // The ring layout has two hop lengths, so tables are rotation-
+        // invariant cluster-to-cluster only up to ring geometry; check the
+        // weaker invariant: every source has the same *sorted* loss
+        // profile when the ring is homogeneous per position.
+        let (_, _, t) = build();
+        let profile = |s: usize| {
+            let mut v: Vec<f64> = (0..8)
+                .filter(|&d| d != s)
+                .map(|d| (t.ook.loss(s, d) * 1e6).round() / 1e6)
+                .collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        // Clusters 0 and 4 occupy mirrored ring positions -> same profile.
+        assert_eq!(profile(0), profile(4));
+        assert_eq!(profile(1), profile(5));
+    }
+}

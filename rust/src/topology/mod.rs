@@ -1,0 +1,17 @@
+//! Clos PNoC topology substrate (paper §5.1, Fig. 5).
+//!
+//! An 8-ary 3-stage Clos for 64 cores: 8 clusters of 8 cores, two
+//! concentrators per cluster (4 cores each), one gateway interface (GWI)
+//! per cluster bridging the electrical cluster to the photonic layer.
+//! Inter-cluster traffic rides per-source-cluster SWMR waveguides that
+//! visit the other clusters in ring order over a concrete 400 mm² die
+//! layout, from which per-destination accumulated losses — the contents
+//! of the paper's GWI lookup tables — are computed offline.
+
+pub mod clos;
+pub mod layout;
+pub mod losstable;
+
+pub use clos::{ClosTopology, NodeId};
+pub use layout::DieLayout;
+pub use losstable::{LossTable, WaveguideSet};

@@ -1,0 +1,16 @@
+//! Traffic substrate: packets, traces, synthetic generators and the
+//! float/int characterization counters behind Fig. 2.
+//!
+//! Packetization follows the paper's platform (Table 1): 64 B cache
+//! lines, so a data packet carries 16 x 32-bit payload words plus a
+//! 2-word header.  Floating-point payloads are `f64` (the x86/gem5 data
+//! the paper approximates: its "4..32 LSBs" axis is the low half of a
+//! double), split into (lo, hi) word pairs — only the lo word of each
+//! pair is ever approximable.
+
+pub mod packet;
+pub mod synth;
+pub mod trace;
+
+pub use packet::{PayloadKind, Packet, TrafficProfile, HEADER_WORDS, LINE_WORDS};
+pub use trace::{TraceReader, TraceRecord, TraceWriter};

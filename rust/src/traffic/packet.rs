@@ -1,0 +1,149 @@
+//! Packet model and the per-application traffic characterization counters.
+
+use crate::topology::clos::NodeId;
+
+/// 32-bit words per 64 B cache-line payload.
+pub const LINE_WORDS: u32 = 16;
+/// Header words per packet (routing, flags — incl. the EnerJ-style
+/// `approximable` annotation bit the GWI reads, paper §4.1).
+pub const HEADER_WORDS: u32 = 2;
+
+/// What a packet's payload carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PayloadKind {
+    /// IEEE-754 double-precision data (approximable when flagged).
+    Float64,
+    /// Integer/pointer data (never approximated).
+    Int,
+    /// Coherence/control traffic (never approximated).
+    Control,
+}
+
+/// One network packet (metadata only; payload words travel separately
+/// through the channel implementations).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Packet {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: PayloadKind,
+    /// Payload length in 32-bit words (excluding header).
+    pub payload_words: u32,
+    /// EnerJ-style annotation: payload may be approximated in transit.
+    pub approximable: bool,
+}
+
+impl Packet {
+    pub fn total_words(&self) -> u32 {
+        self.payload_words + HEADER_WORDS
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total_words() as u64 * 32
+    }
+}
+
+/// Float/int/control packet and word counters — the data behind Fig. 2.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficProfile {
+    pub float_packets: u64,
+    pub int_packets: u64,
+    pub control_packets: u64,
+    pub float_words: u64,
+    pub int_words: u64,
+    pub control_words: u64,
+}
+
+impl TrafficProfile {
+    pub fn record(&mut self, packet: &Packet) {
+        match packet.kind {
+            PayloadKind::Float64 => {
+                self.float_packets += 1;
+                self.float_words += packet.payload_words as u64;
+            }
+            PayloadKind::Int => {
+                self.int_packets += 1;
+                self.int_words += packet.payload_words as u64;
+            }
+            PayloadKind::Control => {
+                self.control_packets += 1;
+                self.control_words += packet.payload_words as u64;
+            }
+        }
+    }
+
+    pub fn total_packets(&self) -> u64 {
+        self.float_packets + self.int_packets + self.control_packets
+    }
+
+    /// Fraction of data packets (float + int) that are float — the Fig. 2
+    /// y-axis.
+    pub fn float_fraction(&self) -> f64 {
+        let data = self.float_packets + self.int_packets;
+        if data == 0 {
+            0.0
+        } else {
+            self.float_packets as f64 / data as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &TrafficProfile) {
+        self.float_packets += other.float_packets;
+        self.int_packets += other.int_packets;
+        self.control_packets += other.control_packets;
+        self.float_words += other.float_words;
+        self.int_words += other.int_words;
+        self.control_words += other.control_words;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(kind: PayloadKind, words: u32) -> Packet {
+        Packet {
+            src: NodeId::Core(0),
+            dst: NodeId::Core(9),
+            kind,
+            payload_words: words,
+            approximable: kind == PayloadKind::Float64,
+        }
+    }
+
+    #[test]
+    fn packet_sizes() {
+        let p = pkt(PayloadKind::Float64, LINE_WORDS);
+        assert_eq!(p.total_words(), 18);
+        assert_eq!(p.total_bits(), 18 * 32);
+    }
+
+    #[test]
+    fn profile_counts_by_kind() {
+        let mut prof = TrafficProfile::default();
+        prof.record(&pkt(PayloadKind::Float64, 16));
+        prof.record(&pkt(PayloadKind::Float64, 16));
+        prof.record(&pkt(PayloadKind::Int, 16));
+        prof.record(&pkt(PayloadKind::Control, 2));
+        assert_eq!(prof.float_packets, 2);
+        assert_eq!(prof.int_packets, 1);
+        assert_eq!(prof.control_packets, 1);
+        assert_eq!(prof.total_packets(), 4);
+        assert!((prof.float_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_merge_adds() {
+        let mut a = TrafficProfile::default();
+        let mut b = TrafficProfile::default();
+        a.record(&pkt(PayloadKind::Float64, 16));
+        b.record(&pkt(PayloadKind::Int, 16));
+        a.merge(&b);
+        assert_eq!(a.total_packets(), 2);
+        assert_eq!(a.int_words, 16);
+    }
+
+    #[test]
+    fn empty_profile_float_fraction_is_zero() {
+        assert_eq!(TrafficProfile::default().float_fraction(), 0.0);
+    }
+}

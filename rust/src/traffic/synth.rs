@@ -1,0 +1,166 @@
+//! Synthetic traffic generators for NoC stress benches and property tests
+//! (uniform-random, hotspot, transpose, nearest-neighbour cluster
+//! patterns at a configurable injection rate).
+
+use super::packet::{Packet, PayloadKind, LINE_WORDS};
+use super::trace::TraceRecord;
+use crate::topology::clos::NodeId;
+use crate::util::rng::Rng;
+
+/// Synthetic spatial traffic patterns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Uniform random core-to-core.
+    Uniform,
+    /// All cores target cores of one hotspot cluster.
+    Hotspot { cluster: usize },
+    /// Core i -> core (i + n/2) mod n (maximal ring distance).
+    Transpose,
+    /// Core i -> a core in the ring-adjacent cluster.
+    Neighbor,
+}
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub pattern: Pattern,
+    /// Packets injected per core per 100 cycles (injection rate x100).
+    pub rate_per_100_cycles: u32,
+    /// Total cycles of generated traffic.
+    pub cycles: u64,
+    /// Fraction of data packets carrying floats, in [0, 1].
+    pub float_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            pattern: Pattern::Uniform,
+            rate_per_100_cycles: 10,
+            cycles: 10_000,
+            float_fraction: 0.5,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate a synthetic trace over the 64-core system.
+pub fn generate(cfg: &SynthConfig) -> Vec<TraceRecord> {
+    let n_cores = 64u8;
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    for cycle in 0..cfg.cycles {
+        for core in 0..n_cores {
+            // Bernoulli injection at the configured rate.
+            if rng.below(100) >= cfg.rate_per_100_cycles as usize {
+                continue;
+            }
+            let dst = pick_dst(cfg.pattern, core, n_cores, &mut rng);
+            if dst == NodeId::Core(core) {
+                continue;
+            }
+            let kind = if rng.next_f64() < cfg.float_fraction {
+                PayloadKind::Float64
+            } else {
+                PayloadKind::Int
+            };
+            out.push(TraceRecord {
+                inject_cycle: cycle,
+                packet: Packet {
+                    src: NodeId::Core(core),
+                    dst,
+                    kind,
+                    payload_words: LINE_WORDS,
+                    approximable: kind == PayloadKind::Float64,
+                },
+            });
+        }
+    }
+    out
+}
+
+fn pick_dst(pattern: Pattern, src: u8, n: u8, rng: &mut Rng) -> NodeId {
+    match pattern {
+        Pattern::Uniform => NodeId::Core(rng.below(n as usize) as u8),
+        Pattern::Hotspot { cluster } => {
+            NodeId::Core((cluster * 8 + rng.below(8)) as u8)
+        }
+        Pattern::Transpose => NodeId::Core((src + n / 2) % n),
+        Pattern::Neighbor => {
+            let next_cluster = (src as usize / 8 + 1) % 8;
+            NodeId::Core((next_cluster * 8 + rng.below(8)) as u8)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::clos::ClosTopology;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = SynthConfig { cycles: 500, ..Default::default() };
+        assert_eq!(generate(&cfg), generate(&cfg));
+    }
+
+    #[test]
+    fn rate_controls_volume() {
+        let lo = generate(&SynthConfig {
+            rate_per_100_cycles: 5,
+            cycles: 2000,
+            ..Default::default()
+        });
+        let hi = generate(&SynthConfig {
+            rate_per_100_cycles: 50,
+            cycles: 2000,
+            ..Default::default()
+        });
+        assert!(hi.len() > 5 * lo.len());
+    }
+
+    #[test]
+    fn float_fraction_respected() {
+        let t = generate(&SynthConfig {
+            float_fraction: 0.8,
+            cycles: 3000,
+            ..Default::default()
+        });
+        let floats = t.iter().filter(|r| r.packet.kind == PayloadKind::Float64).count();
+        let frac = floats as f64 / t.len() as f64;
+        assert!((frac - 0.8).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn hotspot_targets_one_cluster() {
+        let topo = ClosTopology::default_64core();
+        let t = generate(&SynthConfig {
+            pattern: Pattern::Hotspot { cluster: 3 },
+            cycles: 1000,
+            ..Default::default()
+        });
+        assert!(!t.is_empty());
+        assert!(t.iter().all(|r| topo.cluster_of(r.packet.dst) == 3));
+    }
+
+    #[test]
+    fn transpose_is_fixed_permutation() {
+        let t = generate(&SynthConfig {
+            pattern: Pattern::Transpose,
+            cycles: 500,
+            ..Default::default()
+        });
+        for r in &t {
+            if let (NodeId::Core(s), NodeId::Core(d)) = (r.packet.src, r.packet.dst) {
+                assert_eq!(d, (s + 32) % 64);
+            }
+        }
+    }
+
+    #[test]
+    fn no_self_traffic() {
+        let t = generate(&SynthConfig { cycles: 2000, ..Default::default() });
+        assert!(t.iter().all(|r| r.packet.src != r.packet.dst));
+    }
+}

@@ -1,0 +1,207 @@
+//! Compact binary trace format for recording and replaying PNoC traffic.
+//!
+//! The workload engines record one [`TraceRecord`] per packet as they
+//! execute; the cycle-level simulator ([`crate::noc`]) replays the records
+//! to charge cycles and energy — the same record/replay split the paper
+//! uses between gem5 and its SystemC simulator.
+//!
+//! Format (little-endian): 8-byte magic `LORAXTR1`, u32 record count,
+//! then fixed 24-byte records.
+
+use std::io::{self, Read, Write};
+
+use super::packet::{Packet, PayloadKind};
+use crate::topology::clos::NodeId;
+
+const MAGIC: &[u8; 8] = b"LORAXTR1";
+
+/// One replayable traffic event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Injection time hint in cycles (logical order from the engine).
+    pub inject_cycle: u64,
+    pub packet: Packet,
+}
+
+fn node_to_u16(n: NodeId) -> u16 {
+    n.index() as u16
+}
+
+fn node_from_u16(v: u16) -> io::Result<NodeId> {
+    match v {
+        0..=63 => Ok(NodeId::Core(v as u8)),
+        64..=71 => Ok(NodeId::MemCtrl((v - 64) as u8)),
+        _ => Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad node id {v}"))),
+    }
+}
+
+fn kind_to_u8(k: PayloadKind) -> u8 {
+    match k {
+        PayloadKind::Float64 => 0,
+        PayloadKind::Int => 1,
+        PayloadKind::Control => 2,
+    }
+}
+
+fn kind_from_u8(v: u8) -> io::Result<PayloadKind> {
+    match v {
+        0 => Ok(PayloadKind::Float64),
+        1 => Ok(PayloadKind::Int),
+        2 => Ok(PayloadKind::Control),
+        _ => Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad kind {v}"))),
+    }
+}
+
+/// Streaming trace writer.
+pub struct TraceWriter<W: Write> {
+    sink: W,
+    count: u32,
+    buf: Vec<u8>,
+}
+
+impl<W: Write> TraceWriter<W> {
+    pub fn new(sink: W) -> TraceWriter<W> {
+        TraceWriter { sink, count: 0, buf: Vec::with_capacity(24 * 1024) }
+    }
+
+    pub fn push(&mut self, rec: &TraceRecord) {
+        self.buf.extend_from_slice(&rec.inject_cycle.to_le_bytes());
+        self.buf.extend_from_slice(&node_to_u16(rec.packet.src).to_le_bytes());
+        self.buf.extend_from_slice(&node_to_u16(rec.packet.dst).to_le_bytes());
+        self.buf.push(kind_to_u8(rec.packet.kind));
+        self.buf.push(rec.packet.approximable as u8);
+        self.buf.extend_from_slice(&[0u8; 2]); // pad
+        self.buf.extend_from_slice(&rec.packet.payload_words.to_le_bytes());
+        self.buf.extend_from_slice(&[0u8; 4]); // reserved
+        self.count += 1;
+    }
+
+    /// Write header + records; consumes the writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.sink.write_all(MAGIC)?;
+        self.sink.write_all(&self.count.to_le_bytes())?;
+        self.sink.write_all(&self.buf)?;
+        self.sink.flush()?;
+        Ok(self.sink)
+    }
+
+    pub fn len(&self) -> u32 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Trace reader (loads all records; traces are report-scale data).
+pub struct TraceReader;
+
+impl TraceReader {
+    pub fn read_all<R: Read>(mut src: R) -> io::Result<Vec<TraceRecord>> {
+        let mut magic = [0u8; 8];
+        src.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad trace magic"));
+        }
+        let mut cnt = [0u8; 4];
+        src.read_exact(&mut cnt)?;
+        let count = u32::from_le_bytes(cnt) as usize;
+        let mut body = Vec::new();
+        src.read_to_end(&mut body)?;
+        if body.len() != count * 24 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("trace body {} != {} records * 24", body.len(), count),
+            ));
+        }
+        let mut out = Vec::with_capacity(count);
+        for chunk in body.chunks_exact(24) {
+            let inject_cycle = u64::from_le_bytes(chunk[0..8].try_into().unwrap());
+            let src_id = u16::from_le_bytes(chunk[8..10].try_into().unwrap());
+            let dst_id = u16::from_le_bytes(chunk[10..12].try_into().unwrap());
+            let kind = kind_from_u8(chunk[12])?;
+            let approximable = chunk[13] != 0;
+            let payload_words = u32::from_le_bytes(chunk[16..20].try_into().unwrap());
+            out.push(TraceRecord {
+                inject_cycle,
+                packet: Packet {
+                    src: node_from_u16(src_id)?,
+                    dst: node_from_u16(dst_id)?,
+                    kind,
+                    payload_words,
+                    approximable,
+                },
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cycle: u64, src: u8, dst: u8, kind: PayloadKind) -> TraceRecord {
+        TraceRecord {
+            inject_cycle: cycle,
+            packet: Packet {
+                src: NodeId::Core(src),
+                dst: NodeId::Core(dst),
+                kind,
+                payload_words: 16,
+                approximable: kind == PayloadKind::Float64,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let records = vec![
+            rec(0, 0, 9, PayloadKind::Float64),
+            rec(5, 3, 42, PayloadKind::Int),
+            rec(17, 63, 1, PayloadKind::Control),
+            TraceRecord {
+                inject_cycle: 99,
+                packet: Packet {
+                    src: NodeId::MemCtrl(7),
+                    dst: NodeId::Core(0),
+                    kind: PayloadKind::Float64,
+                    payload_words: 4,
+                    approximable: true,
+                },
+            },
+        ];
+        let mut w = TraceWriter::new(Vec::new());
+        for r in &records {
+            w.push(r);
+        }
+        assert_eq!(w.len(), 4);
+        let bytes = w.finish().unwrap();
+        let back = TraceReader::read_all(&bytes[..]).unwrap();
+        assert_eq!(back, records);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = TraceReader::read_all(&b"NOTATRACE123"[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let mut w = TraceWriter::new(Vec::new());
+        w.push(&rec(0, 0, 9, PayloadKind::Int));
+        let mut bytes = w.finish().unwrap();
+        bytes.truncate(bytes.len() - 3);
+        assert!(TraceReader::read_all(&bytes[..]).is_err());
+    }
+
+    #[test]
+    fn empty_trace_roundtrips() {
+        let w = TraceWriter::new(Vec::new());
+        assert!(w.is_empty());
+        let bytes = w.finish().unwrap();
+        assert_eq!(TraceReader::read_all(&bytes[..]).unwrap(), vec![]);
+    }
+}

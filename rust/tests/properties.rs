@@ -1,0 +1,233 @@
+//! Cross-module property tests (seeded mini-proptest harness,
+//! `util::proptest`).  Replay a failing case with
+//! `LORAX_PROPTEST_SEED=<seed> cargo test --test properties`.
+
+use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, mask_for_lsbs};
+use lorax::approx::policy::{AppTuning, Policy, PolicyKind, TransferMode};
+use lorax::coordinator::GwiDecisionEngine;
+use lorax::phys::laser::{required_laser_power_dbm, LaserProvisioning};
+use lorax::phys::loss::PathLoss;
+use lorax::phys::params::{Modulation, PhotonicParams};
+use lorax::phys::signaling::ReceiverCal;
+use lorax::topology::clos::ClosTopology;
+use lorax::util::proptest::check;
+use lorax::util::rng::{make_word_key, ALWAYS};
+
+fn engine(m: Modulation) -> GwiDecisionEngine {
+    GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), m)
+}
+
+#[test]
+fn prop_corruption_confined_to_mask() {
+    check("corruption-confined", 128, |g| {
+        let n = g.usize(1, 64);
+        let mask = g.u32();
+        let words: Vec<u32> = g.vec(n, |g| g.u32());
+        let mut out = words.clone();
+        corrupt_f32_words(&mut out, mask, g.u32(), g.u32(), g.u32());
+        for (a, b) in words.iter().zip(out.iter()) {
+            assert_eq!(a & !mask, b & !mask, "bits outside mask changed");
+        }
+    });
+}
+
+#[test]
+fn prop_truncation_idempotent() {
+    check("truncation-idempotent", 64, |g| {
+        let w = g.u32();
+        let mask = mask_for_lsbs(g.usize(0, 32) as u32);
+        let key = make_word_key(g.u32(), g.u32());
+        let once = corrupt_word(w, mask, ALWAYS, 0, key);
+        let twice = corrupt_word(once, mask, ALWAYS, 0, key);
+        assert_eq!(once, twice);
+        assert_eq!(once, w & !mask);
+    });
+}
+
+#[test]
+fn prop_laser_power_monotone() {
+    check("laser-monotone", 64, |g| {
+        let p = PhotonicParams::default();
+        let loss = g.f64(0.0, 30.0);
+        let extra = g.f64(0.01, 10.0);
+        let nl = *g.choose(&[8u32, 16, 32, 64, 128]);
+        let base = required_laser_power_dbm(loss, nl, &p);
+        assert!(required_laser_power_dbm(loss + extra, nl, &p) > base);
+        assert!(required_laser_power_dbm(loss, nl * 2, &p) > base);
+    });
+}
+
+#[test]
+fn prop_provisioning_covers_every_reader() {
+    check("provisioning-covers", 48, |g| {
+        let p = PhotonicParams::default();
+        let n = g.usize(1, 7);
+        let paths: Vec<PathLoss> = g.vec(n, |g| {
+            PathLoss::new(g.f64(0.1, 6.0), g.usize(0, 20) as u32, g.usize(1, 7) as u32)
+        });
+        let prov = LaserProvisioning::for_reader_losses(&paths, &p, Modulation::Ook);
+        for path in &paths {
+            let rx = prov.received_mw(path.total_db(&p, Modulation::Ook), 1.0);
+            assert!(
+                rx >= p.sensitivity_mw() * (1.0 - 1e-9),
+                "reader under-provisioned: {rx} < {}",
+                p.sensitivity_mw()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ber_monotone_in_received_power() {
+    check("ber-monotone", 48, |g| {
+        let p = PhotonicParams::default();
+        let paths = [PathLoss::new(0.5, 2, 1), PathLoss::new(g.f64(3.0, 6.0), 10, 6)];
+        let m = *g.choose(&[Modulation::Ook, Modulation::Pam4]);
+        let prov = LaserProvisioning::for_reader_losses(&paths, &p, m);
+        let cal = ReceiverCal::new(&prov, &p);
+        let mut prev_ber = 1.1;
+        for i in 1..=16 {
+            let mu = prov.received_mw(prov.worst_loss_db, i as f64 / 16.0);
+            let ber = cal.error_probs(mu).ber();
+            assert!(ber <= prev_ber + 1e-12, "BER not monotone at level {i}/16");
+            prev_ber = ber;
+        }
+    });
+}
+
+#[test]
+fn prop_decision_monotone_along_ring() {
+    // If LORAX truncates to a nearer reader, it must also truncate to
+    // every farther reader on the same waveguide (loss accumulates).
+    check("decision-monotone", 48, |g| {
+        let m = *g.choose(&[Modulation::Ook, Modulation::Pam4]);
+        let e = engine(m);
+        let kind = if m == Modulation::Ook { PolicyKind::LoraxOok } else { PolicyKind::LoraxPam4 };
+        let tuning = AppTuning {
+            approx_bits: g.usize(4, 32) as u32,
+            power_reduction_pct: g.usize(0, 100) as u32,
+            trunc_bits: 0,
+        };
+        let policy = Policy::with_tuning(kind, tuning);
+        let src = g.usize(0, 7);
+        let mut seen_truncate = false;
+        for k in 1..8 {
+            let dst = (src + k) % 8;
+            let d = e.decide(&policy, src, dst);
+            match d.mode {
+                TransferMode::Truncated => seen_truncate = true,
+                TransferMode::Reduced { .. } | TransferMode::FullPower => {
+                    assert!(
+                        !seen_truncate,
+                        "reader at ring distance {k} recovered after a nearer one truncated"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decision_error_rate_grows_with_distance() {
+    check("t10-grows-with-distance", 32, |g| {
+        let e = engine(Modulation::Ook);
+        let red = g.usize(40, 95) as u32;
+        let policy = Policy::with_tuning(
+            PolicyKind::LoraxOok,
+            AppTuning { approx_bits: 16, power_reduction_pct: red, trunc_bits: 0 },
+        );
+        let src = g.usize(0, 7);
+        let mut prev = 0u32;
+        for k in 1..8 {
+            let d = e.decide(&policy, src, (src + k) % 8);
+            let t10 = if d.mode == TransferMode::Truncated { u32::MAX } else { d.t10 };
+            assert!(t10 >= prev, "src={src} k={k}: t10 {t10} < {prev}");
+            prev = t10;
+        }
+    });
+}
+
+#[test]
+fn prop_packetization_conserves_words() {
+    use lorax::approx::channel::{Channel, IdentityChannel};
+    use lorax::topology::clos::NodeId;
+    check("packetization-conserves", 64, |g| {
+        let mut ch = IdentityChannel::new();
+        let mut total_f = 0u64;
+        let mut total_i = 0u64;
+        for _ in 0..g.usize(1, 10) {
+            let n = g.usize(1, 300);
+            let mut xs = vec![1.0f64; n];
+            ch.send_f64(NodeId::Core(0), NodeId::Core(9), &mut xs, g.bool());
+            total_f += n as u64;
+            let w = g.usize(1, 100);
+            ch.send_ints(NodeId::Core(1), NodeId::Core(8), w);
+            total_i += w as u64;
+        }
+        assert_eq!(ch.stats().profile.float_words, total_f);
+        assert_eq!(ch.stats().profile.int_words, total_i);
+    });
+}
+
+#[test]
+fn prop_sim_energy_additive_over_trace_split() {
+    use lorax::approx::policy::Policy;
+    use lorax::noc::sim::Simulator;
+    use lorax::traffic::synth::{generate, SynthConfig};
+    check("sim-energy-additive", 12, |g| {
+        let trace = generate(&SynthConfig {
+            cycles: 400,
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        });
+        if trace.len() < 4 {
+            return;
+        }
+        let e = engine(Modulation::Ook);
+        let sim = Simulator::new(&e);
+        let p = Policy::new(PolicyKind::Baseline, "fft");
+        let whole = sim.run(&trace, &p);
+        let cut = trace.len() / 2;
+        let a = sim.run(&trace[..cut], &p);
+        let b = sim.run(&trace[cut..], &p);
+        // Energy is per-packet, so it must be exactly additive.
+        let sum = a.energy.total_pj() + b.energy.total_pj();
+        assert!(
+            (whole.energy.total_pj() - sum).abs() < 1e-6 * whole.energy.total_pj(),
+            "{} vs {}",
+            whole.energy.total_pj(),
+            sum
+        );
+        assert_eq!(
+            whole.energy.bits_delivered,
+            a.energy.bits_delivered + b.energy.bits_delivered
+        );
+    });
+}
+
+#[test]
+fn prop_select_tuning_always_feasible() {
+    use lorax::approx::tuning::{select_tuning, SensitivitySurface, SweepPoint};
+    check("selection-feasible", 64, |g| {
+        let n_points = g.usize(1, 40);
+        let points: Vec<SweepPoint> = g.vec(n_points, |g| SweepPoint {
+            bits: (g.usize(1, 8) * 4) as u32,
+            reduction_pct: (g.usize(0, 10) * 10) as u32,
+            error_pct: g.f64(0.0, 30.0),
+        });
+        let surface = SensitivitySurface {
+            app: "prop".into(),
+            threshold_pct: 10.0,
+            points: points.clone(),
+        };
+        let t = select_tuning(&surface, 10.0);
+        if t.approx_bits > 0 {
+            // The selected point must exist and be feasible.
+            assert!(points.iter().any(|p| p.bits == t.approx_bits
+                && p.reduction_pct == t.power_reduction_pct
+                && p.error_pct < 10.0));
+        } else {
+            assert!(points.iter().all(|p| p.error_pct >= 10.0));
+        }
+    });
+}
