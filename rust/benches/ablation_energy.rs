@@ -2,25 +2,31 @@
 //! constants DESIGN.md calls out (detection margin, receiver Q, PAM4
 //! signaling penalty, thermo-optic tuning range, VCSEL efficiency).
 //!
-//! For each knob we re-run blackscholes under LORAX-OOK/PAM4 and report
-//! the laser-power saving vs baseline, showing which conclusions are
-//! robust and which hinge on a constant.
+//! For each knob we re-run blackscholes under baseline/LORAX-OOK/PAM4
+//! and report the laser-power saving vs baseline, showing which
+//! conclusions are robust and which hinge on a constant.  The knob
+//! configurations are independent scenarios, so they fan out across the
+//! parallel sweep engine (row order fixed by the knob list).
 //!
 //! Run: `cargo bench --bench ablation_energy`
+//! Env: LORAX_SWEEP_THREADS.
 
 use lorax::approx::policy::PolicyKind;
 use lorax::config::SystemConfig;
 use lorax::coordinator::LoraxSystem;
+use lorax::exec::SweepRunner;
 use lorax::report::Table;
 
-fn laser_saving(cfg: &SystemConfig, kind: PolicyKind) -> (f64, f64) {
+/// (ook_saving_pct, ook_pe, pam_saving_pct, pam_pe) for one config.
+fn ablate(cfg: &SystemConfig) -> (f64, f64, f64, f64) {
     let sys = LoraxSystem::new(cfg);
     let base = sys.run_app("blackscholes", PolicyKind::Baseline).unwrap();
-    let r = sys.run_app("blackscholes", kind).unwrap();
-    (
-        100.0 * (1.0 - r.sim.energy.laser_pj / base.sim.energy.laser_pj),
-        r.error_pct,
-    )
+    let ook = sys.run_app("blackscholes", PolicyKind::LoraxOok).unwrap();
+    let pam = sys.run_app("blackscholes", PolicyKind::LoraxPam4).unwrap();
+    let saving = |r: &lorax::coordinator::AppRunReport| {
+        100.0 * (1.0 - r.sim.energy.laser_pj / base.sim.energy.laser_pj)
+    };
+    (saving(&ook), ook.error_pct, saving(&pam), pam.error_pct)
 }
 
 fn main() {
@@ -30,42 +36,47 @@ fn main() {
         &["knob", "value", "OOK saving %", "OOK PE %", "PAM4 saving %", "PAM4 PE %"],
     );
 
-    let mut run = |knob: &str, value: &str, f: &dyn Fn(&mut SystemConfig)| {
+    // Build the knob grid as data, then fan it out.
+    let mut configs: Vec<(String, String, SystemConfig)> = Vec::new();
+    let mut push = |knob: &str, value: String, f: &dyn Fn(&mut SystemConfig)| {
         let mut cfg = SystemConfig { scale, seed: 42, ..Default::default() };
         f(&mut cfg);
-        let (ook, ook_pe) = laser_saving(&cfg, PolicyKind::LoraxOok);
-        let (pam, pam_pe) = laser_saving(&cfg, PolicyKind::LoraxPam4);
+        configs.push((knob.to_string(), value, cfg));
+    };
+    push("(defaults)", "-".into(), &|_| {});
+    for margin in [0.0, 0.5, 2.0, 4.0] {
+        push("detection_margin_db", format!("{margin}"), &move |c| {
+            c.photonic.detection_margin_db = margin;
+        });
+    }
+    for q in [5.0, 6.0, 8.0, 10.0] {
+        push("q_calibration", format!("{q}"), &move |c| c.photonic.q_calibration = q);
+    }
+    for pen in [3.0, 5.8, 8.0] {
+        push("pam4_signaling_loss_db", format!("{pen}"), &move |c| {
+            c.photonic.pam4_signaling_loss_db = pen;
+        });
+    }
+    for nm in [0.25, 0.5, 1.0] {
+        push("tuning_range_nm", format!("{nm}"), &move |c| c.photonic.tuning_range_nm = nm);
+    }
+    for wpe in [0.1, 0.15, 0.3] {
+        push("vcsel_wall_plug_efficiency", format!("{wpe}"), &move |c| {
+            c.photonic.vcsel_wall_plug_efficiency = wpe;
+        });
+    }
+
+    let runner = SweepRunner::new();
+    let results = runner.map(&configs, |_, (_, _, cfg)| ablate(cfg));
+    for ((knob, value, _), (ook, ook_pe, pam, pam_pe)) in configs.iter().zip(results) {
         t.row(&[
-            knob.to_string(),
-            value.to_string(),
+            knob.clone(),
+            value.clone(),
             format!("{ook:.1}"),
             format!("{ook_pe:.2}"),
             format!("{pam:.1}"),
             format!("{pam_pe:.2}"),
         ]);
-    };
-
-    run("(defaults)", "-", &|_| {});
-    for margin in [0.0, 0.5, 2.0, 4.0] {
-        run("detection_margin_db", &format!("{margin}"), &move |c| {
-            c.photonic.detection_margin_db = margin;
-        });
-    }
-    for q in [5.0, 6.0, 8.0, 10.0] {
-        run("q_calibration", &format!("{q}"), &move |c| c.photonic.q_calibration = q);
-    }
-    for pen in [3.0, 5.8, 8.0] {
-        run("pam4_signaling_loss_db", &format!("{pen}"), &move |c| {
-            c.photonic.pam4_signaling_loss_db = pen;
-        });
-    }
-    for nm in [0.25, 0.5, 1.0] {
-        run("tuning_range_nm", &format!("{nm}"), &move |c| c.photonic.tuning_range_nm = nm);
-    }
-    for wpe in [0.1, 0.15, 0.3] {
-        run("vcsel_wall_plug_efficiency", &format!("{wpe}"), &move |c| {
-            c.photonic.vcsel_wall_plug_efficiency = wpe;
-        });
     }
 
     println!("{}", t.render());

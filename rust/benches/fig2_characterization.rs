@@ -1,16 +1,18 @@
 //! Bench + reproduction: Fig. 2 — float/int packet characterization.
 //!
-//! Prints the paper's Fig.-2 rows (per-application float/int breakdown)
-//! and times the workload engines (the gem5 substitute's throughput).
+//! Prints the paper's Fig.-2 rows (per-application float/int breakdown,
+//! engines fanned across the sweep runner) and times the workload
+//! engines (the gem5 substitute's throughput).
 //!
 //! Run: `cargo bench --bench fig2_characterization`
-//! Env: LORAX_BENCH_SCALE (default 0.1), LORAX_BENCH_ITERS (default 3).
+//! Env: LORAX_BENCH_SCALE (default 0.1), LORAX_BENCH_ITERS (default 3),
+//!      LORAX_SWEEP_THREADS.
 
 use lorax::apps::{by_name_scaled, ALL_APPS};
 use lorax::approx::channel::{Channel, IdentityChannel};
 use lorax::config::SystemConfig;
 use lorax::report::figures::fig2_characterization;
-use lorax::util::bench::{bench, black_box};
+use lorax::util::bench::{bench, black_box, report_and_record};
 
 fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -32,6 +34,6 @@ fn main() {
             black_box(w.run(&mut ch));
             packets = ch.stats().profile.total_packets();
         });
-        println!("{}", r.report(packets as f64, "pkts"));
+        report_and_record(&r, packets as f64, "pkts");
     }
 }

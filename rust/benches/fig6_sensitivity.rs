@@ -1,19 +1,23 @@
 //! Bench + reproduction: Fig. 6 — per-application sensitivity surfaces.
 //!
 //! Regenerates the output-error grids (LSBs x laser power reduction) for
-//! every evaluated application and times one sweep cell per app.
+//! every evaluated application through the parallel sweep engine, and
+//! times one whole surface per app (grid points fanned across threads,
+//! decision tables memoized per tuning).
 //!
 //! Run: `cargo bench --bench fig6_sensitivity`
 //! Env: LORAX_BENCH_SCALE (default 0.05 — a full-grid sweep is 88 runs
-//! per app), LORAX_BENCH_GRID (tiny|small|full, default small).
+//! per app), LORAX_BENCH_GRID (tiny|small|full, default small),
+//! LORAX_SWEEP_THREADS.
 
 use lorax::approx::policy::PolicyKind;
-use lorax::approx::tuning::{sweep_app, BITS_AXIS, REDUCTION_AXIS};
+use lorax::approx::tuning::{BITS_AXIS, REDUCTION_AXIS};
 use lorax::apps::EVALUATED_APPS;
 use lorax::config::SystemConfig;
 use lorax::coordinator::LoraxSystem;
+use lorax::exec::SweepRunner;
 use lorax::report::figures::render_surface;
-use lorax::util::bench::bench;
+use lorax::util::bench::{bench, report_and_record};
 
 fn main() {
     let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
@@ -28,18 +32,42 @@ fn main() {
     };
     let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
     let sys = LoraxSystem::new(&cfg);
+    let runner = SweepRunner::new();
+    println!(
+        "-- {}x{} grid per app, {} sweep threads --",
+        bits.len(),
+        reds.len(),
+        runner.threads()
+    );
 
     for app in EVALUATED_APPS {
-        let surface = sweep_app(&sys.ook, app, PolicyKind::LoraxOok, cfg.seed, scale, &bits, &reds);
+        let surface = runner.sweep_surface(
+            &sys.ook,
+            app,
+            PolicyKind::LoraxOok,
+            cfg.seed,
+            scale,
+            &bits,
+            &reds,
+        );
         println!("{}", render_surface(&surface));
     }
 
-    println!("-- sweep-cell cost (one (bits=16, red=80) run per app) --");
+    println!("-- full-surface sweep cost per app --");
+    let cells = bits.len() * reds.len();
     for app in EVALUATED_APPS {
-        let r = bench(&format!("sweep-cell:{app}"), 1, 3, || {
-            let s = sweep_app(&sys.ook, app, PolicyKind::LoraxOok, cfg.seed, scale, &[16], &[80]);
-            assert_eq!(s.points.len(), 1);
+        let r = bench(&format!("fig6-surface:{app}"), 0, 2, || {
+            let s = runner.sweep_surface(
+                &sys.ook,
+                app,
+                PolicyKind::LoraxOok,
+                cfg.seed,
+                scale,
+                &bits,
+                &reds,
+            );
+            assert_eq!(s.points.len(), cells);
         });
-        println!("{}", r.report(1.0, "cell"));
+        report_and_record(&r, cells as f64, "cells");
     }
 }

@@ -1,8 +1,9 @@
 //! Bench + reproduction: Fig. 7 — JPEG output quality panels.
 //!
 //! Writes the four PGM panels (original codec output + 24/28/32-LSB
-//! approximation at 80% power reduction), prints the PSNR/PE table, and
-//! times the jpeg pipeline.
+//! approximation at 77% power reduction) — the three approximation
+//! panels run in parallel through the sweep engine — prints the PSNR/PE
+//! table, and times the jpeg pipeline.
 //!
 //! Run: `cargo bench --bench fig7_jpeg_quality`
 //! Env: LORAX_BENCH_SCALE (default 0.25 => 256x256 panels).
@@ -12,7 +13,7 @@ use lorax::apps::Workload;
 use lorax::approx::channel::IdentityChannel;
 use lorax::config::SystemConfig;
 use lorax::report::figures::fig7_jpeg;
-use lorax::util::bench::{bench, black_box};
+use lorax::util::bench::{bench, black_box, report_and_record};
 
 fn main() {
     let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
@@ -32,5 +33,10 @@ fn main() {
         let mut ch = IdentityChannel::new();
         black_box(jpeg.run(&mut ch));
     });
-    println!("{}", r.report(blocks as f64, "blocks"));
+    report_and_record(&r, blocks as f64, "blocks");
+
+    let r = bench("fig7:all-panels", 0, 2, || {
+        black_box(fig7_jpeg(&cfg, &outdir).unwrap());
+    });
+    report_and_record(&r, 4.0, "panels");
 }

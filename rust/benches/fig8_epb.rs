@@ -1,14 +1,16 @@
 //! Bench + reproduction: Fig. 8(a) — energy-per-bit across frameworks,
-//! plus the §5.3 headline EPB reductions.
+//! plus the §5.3 headline EPB reductions.  The app × framework grid
+//! runs through the parallel sweep engine.
 //!
 //! Run: `cargo bench --bench fig8_epb`
-//! Env: LORAX_BENCH_SCALE (default 0.1).
+//! Env: LORAX_BENCH_SCALE (default 0.1), LORAX_SWEEP_THREADS.
 
+use lorax::apps::EVALUATED_APPS;
 use lorax::approx::policy::PolicyKind;
 use lorax::config::SystemConfig;
 use lorax::coordinator::LoraxSystem;
 use lorax::report::figures::{fig8_comparison, headline_summary};
-use lorax::util::bench::{bench, black_box};
+use lorax::util::bench::{bench, black_box, report_and_record};
 
 fn main() {
     let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
@@ -21,12 +23,19 @@ fn main() {
     println!("{}", epb.render());
     println!("{}", headline_summary(&reports).render());
 
+    // The whole Fig.-8 grid (apps x frameworks) through the engine.
+    let grid_runs = (EVALUATED_APPS.len() * PolicyKind::ALL.len()) as f64;
+    let r = bench("fig8:grid(sweep-engine)", 0, 2, || {
+        black_box(fig8_comparison(&cfg).unwrap());
+    });
+    report_and_record(&r, grid_runs, "runs");
+
     // Time one full framework run (app + channel + sim + energy).
     let sys = LoraxSystem::new(&cfg);
     for kind in [PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4] {
         let r = bench(&format!("fig8:blackscholes:{}", kind.name()), 1, 3, || {
             black_box(sys.run_app("blackscholes", kind).unwrap());
         });
-        println!("{}", r.report(1.0, "run"));
+        report_and_record(&r, 1.0, "run");
     }
 }

@@ -1,19 +1,21 @@
 //! Bench + reproduction: Fig. 8(b) — average laser power across
-//! frameworks, plus laser-power headline reductions and the per-packet
-//! simulator throughput that produces them.
+//! frameworks (grid through the parallel sweep engine), plus the
+//! per-packet simulator replay throughput that produces it — AoS entry
+//! vs packed SoA + memoized decision table.
 //!
 //! Run: `cargo bench --bench fig8_laser`
-//! Env: LORAX_BENCH_SCALE (default 0.1).
+//! Env: LORAX_BENCH_SCALE (default 0.1), LORAX_SWEEP_THREADS.
 
 use lorax::approx::policy::{Policy, PolicyKind};
 use lorax::config::SystemConfig;
-use lorax::coordinator::{GwiDecisionEngine, LoraxSystem};
+use lorax::coordinator::{DecisionTable, GwiDecisionEngine};
+use lorax::exec::TraceBuffer;
 use lorax::noc::sim::Simulator;
 use lorax::phys::params::{Modulation, PhotonicParams};
 use lorax::report::figures::{fig8_comparison, headline_summary};
 use lorax::topology::clos::ClosTopology;
 use lorax::traffic::synth::{generate, SynthConfig};
-use lorax::util::bench::{bench, black_box};
+use lorax::util::bench::{bench, black_box, report_and_record};
 
 fn main() {
     let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
@@ -25,7 +27,6 @@ fn main() {
     let (_epb, laser, reports) = fig8_comparison(&cfg).unwrap();
     println!("{}", laser.render());
     println!("{}", headline_summary(&reports).render());
-    let _ = LoraxSystem::new(&cfg);
 
     // Simulator replay throughput on synthetic traffic.
     let trace = generate(&SynthConfig {
@@ -40,11 +41,17 @@ fn main() {
         Modulation::Ook,
     );
     let sim = Simulator::new(&engine);
+    let packed = TraceBuffer::from_records(&engine.topo, &trace);
     for kind in [PolicyKind::Baseline, PolicyKind::LoraxOok] {
         let policy = Policy::new(kind, "fft");
-        let r = bench(&format!("sim:replay:{}", kind.name()), 1, 5, || {
+        let r = bench(&format!("sim:replay-aos:{}", kind.name()), 1, 5, || {
             black_box(sim.run(&trace, &policy));
         });
-        println!("{}", r.report(trace.len() as f64, "pkts"));
+        report_and_record(&r, trace.len() as f64, "pkts");
+        let table = DecisionTable::build(&engine, &policy);
+        let r = bench(&format!("sim:replay-soa:{}", kind.name()), 1, 5, || {
+            black_box(sim.replay(&packed, &policy, &table));
+        });
+        report_and_record(&r, trace.len() as f64, "pkts");
     }
 }

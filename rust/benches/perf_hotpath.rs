@@ -1,59 +1,89 @@
 //! Performance benchmarks for the hot paths (the §Perf deliverable).
 //!
-//! * native corruption kernel (words/s) across regimes (fast paths,
-//!   stochastic, dense mask);
-//! * AOT/PJRT channel executable (words/s incl. PJRT transfer overhead);
-//! * GWI decision engine (decisions/s);
-//! * cycle-level simulator replay (packets/s);
+//! * native corruption kernel (words/s) across regimes, vectorized vs
+//!   the per-word scalar baseline (bit-identical outputs asserted);
+//! * AOT/PJRT channel executable (words/s incl. PJRT transfer overhead,
+//!   `xla` feature builds only);
+//! * GWI decision engine (decisions/s) and the memoized table;
+//! * cycle-level simulator replay (packets/s), packed SoA vs AoS entry;
+//! * multi-scenario sweep through [`lorax::exec::SweepRunner`], serial
+//!   (1 thread) vs parallel (all cores) — the headline speedup;
 //! * end-to-end app run (one sobel pass through the full stack).
 //!
+//! Every result is also dropped as machine-readable `BENCH_*.json`
+//! under `$LORAX_BENCH_JSON_DIR` (default `bench_out/`) so future PRs
+//! can track the perf trajectory.
+//!
 //! Run: `cargo bench --bench perf_hotpath`
-//! Env: LORAX_BENCH_XLA=0 to skip the PJRT benches.
+//! Env: LORAX_BENCH_XLA=0 to skip the PJRT benches;
+//!      LORAX_BENCH_SMOKE=1 for a fast CI-sized run.
 
-use lorax::approx::float_bits::{corrupt_f32_words, mask_for_lsbs};
+use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, mask_for_lsbs};
 use lorax::approx::policy::{Policy, PolicyKind};
 use lorax::config::SystemConfig;
-use lorax::coordinator::channel::Corruptor;
-use lorax::coordinator::{GwiDecisionEngine, LoraxSystem};
+use lorax::coordinator::{DecisionTable, GwiDecisionEngine, LoraxSystem};
+use lorax::exec::{SweepGrid, SweepRunner, TraceBuffer};
 use lorax::noc::sim::Simulator;
 use lorax::phys::params::{Modulation, PhotonicParams};
 use lorax::topology::clos::ClosTopology;
 use lorax::traffic::synth::{generate, SynthConfig};
-use lorax::util::bench::{bench, black_box};
+use lorax::util::bench::{bench, black_box, record_speedup, report_and_record};
+use lorax::util::rng::make_word_key;
 use lorax::util::Rng;
 
 fn main() {
-    let n = 1 << 20; // 1M words per iteration
+    let smoke = std::env::var("LORAX_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let n: usize = if smoke { 1 << 16 } else { 1 << 20 };
     let mut rng = Rng::new(1);
     let base: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
 
-    // --- native kernel regimes ---------------------------------------
-    let regimes: &[(&str, u32, u32, u32)] = &[
-        ("identity (t=0 fast path)", mask_for_lsbs(16), 0, 0),
-        ("truncation (fast path)", mask_for_lsbs(16), u32::MAX, 0),
-        ("stochastic 16-bit mask", mask_for_lsbs(16), 0x2000_0000, 0x0010_0000),
-        ("stochastic 32-bit mask", u32::MAX, 0x2000_0000, 0x0010_0000),
+    // --- native kernel regimes: vectorized vs scalar baseline ----------
+    let regimes: &[(&str, u32, u32, u32, bool)] = &[
+        ("identity (t=0 fast path)", mask_for_lsbs(16), 0, 0, false),
+        ("truncation (fast path)", mask_for_lsbs(16), u32::MAX, 0, false),
+        ("stochastic 16-bit mask", mask_for_lsbs(16), 0x2000_0000, 0x0010_0000, true),
+        ("stochastic 32-bit mask", u32::MAX, 0x2000_0000, 0x0010_0000, true),
+        ("stochastic t01=0 (reduced LSBs)", mask_for_lsbs(16), 0x2000_0000, 0, true),
     ];
+    let iters = if smoke { 3 } else { 7 };
     let mut buf = base.clone();
-    for (name, mask, t10, t01) in regimes {
-        let r = bench(&format!("native:{name}"), 1, 7, || {
+    for &(name, mask, t10, t01, stochastic) in regimes {
+        let r = bench(&format!("native:{name}"), 1, iters, || {
             buf.copy_from_slice(&base);
-            corrupt_f32_words(black_box(&mut buf), *mask, *t10, *t01, 7);
+            corrupt_f32_words(black_box(&mut buf), mask, t10, t01, 7);
         });
-        println!("{}", r.report(n as f64, "words"));
+        report_and_record(&r, n as f64, "words");
+        if stochastic {
+            // Per-word scalar reference: what the replay paid before the
+            // word-parallel kernel.  Outputs must agree bit-for-bit.
+            let mut scalar_buf = base.clone();
+            let rs = bench(&format!("native-scalar:{name}"), 1, iters.min(3), || {
+                scalar_buf.copy_from_slice(&base);
+                for (i, w) in scalar_buf.iter_mut().enumerate() {
+                    *w = corrupt_word(*w, mask, t10, t01, make_word_key(7, i as u32));
+                }
+                black_box(&mut scalar_buf);
+            });
+            report_and_record(&rs, n as f64, "words");
+            buf.copy_from_slice(&base);
+            corrupt_f32_words(&mut buf, mask, t10, t01, 7);
+            assert_eq!(buf, scalar_buf, "vectorized != scalar on {name}");
+            record_speedup(&format!("kernel {name}"), rs.mean_s(), r.mean_s(), 0, n);
+        }
     }
 
     // --- AOT/PJRT channel ---------------------------------------------
     if std::env::var("LORAX_BENCH_XLA").map(|v| v != "0").unwrap_or(true) {
         match lorax::runtime::XlaCorruptor::new() {
             Ok(mut xla) => {
-                let nx = 1 << 17; // 2 batches of the large artifact
+                use lorax::coordinator::channel::Corruptor;
+                let nx = (1usize << 17).min(n);
                 let mut buf = base[..nx].to_vec();
                 let r = bench("xla-pjrt:stochastic 16-bit mask", 1, 5, || {
                     buf.copy_from_slice(&base[..nx]);
                     xla.corrupt_words(black_box(&mut buf), 0xFFFF, 0x2000_0000, 0x10_0000, 7);
                 });
-                println!("{}", r.report(nx as f64, "words"));
+                report_and_record(&r, nx as f64, "words");
             }
             Err(e) => eprintln!("skipping PJRT benches: {e:#}"),
         }
@@ -75,25 +105,94 @@ fn main() {
             }
         }
     });
-    println!("{}", r.report(56.0, "decisions"));
+    report_and_record(&r, 56.0, "decisions");
+    // Build once outside the timed closure: this measures the memoized
+    // lookup path the replay pays, not the table construction.
+    let lookup_table = DecisionTable::build(&engine, &policy);
+    let r = bench("gwi:decision-table lookup (8x7 pairs)", 10, 20, || {
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    black_box(lookup_table.get(s, d));
+                }
+            }
+        }
+    });
+    report_and_record(&r, 56.0, "decisions");
 
-    // --- simulator replay ----------------------------------------------
+    // --- simulator replay: AoS entry vs packed SoA + shared table ------
     let trace = generate(&SynthConfig {
-        cycles: 50_000,
+        cycles: if smoke { 10_000 } else { 50_000 },
         rate_per_100_cycles: 20,
         seed: 3,
         ..Default::default()
     });
     let sim = Simulator::new(&engine);
-    let r = bench("sim:replay LORAX-OOK", 1, 5, || {
+    let r = bench("sim:replay LORAX-OOK (AoS pack per run)", 1, 5, || {
         black_box(sim.run(&trace, &policy));
     });
-    println!("{}", r.report(trace.len() as f64, "pkts"));
+    report_and_record(&r, trace.len() as f64, "pkts");
+    let packed = TraceBuffer::from_records(&engine.topo, &trace);
+    let table = DecisionTable::build(&engine, &policy);
+    let r = bench("sim:replay LORAX-OOK (SoA, memoized table)", 1, 5, || {
+        black_box(sim.replay(&packed, &policy, &table));
+    });
+    report_and_record(&r, trace.len() as f64, "pkts");
+
+    // --- multi-scenario sweep: serial vs parallel ----------------------
+    let cfg = SystemConfig { scale: if smoke { 0.02 } else { 0.05 }, seed: 42, ..Default::default() };
+    let apps: &[&str] = if smoke {
+        &["sobel", "fft"]
+    } else {
+        &["blackscholes", "canneal", "fft", "jpeg", "sobel", "streamcluster"]
+    };
+    let scenarios = SweepGrid::new().apps(apps).policies(&PolicyKind::ALL).scenarios();
+    println!(
+        "-- sweep: {} scenarios ({} apps x {} policies), scale {} --",
+        scenarios.len(),
+        apps.len(),
+        PolicyKind::ALL.len(),
+        cfg.scale
+    );
+    let serial = SweepRunner::with_threads(1);
+    let rs = bench("sweep:serial (1 thread)", 0, if smoke { 1 } else { 2 }, || {
+        let out = serial.run_apps(&cfg, &scenarios);
+        assert!(out.iter().all(|r| r.is_ok()));
+        black_box(out);
+    });
+    report_and_record(&rs, scenarios.len() as f64, "scenarios");
+    let parallel = SweepRunner::new();
+    let rp = bench(
+        &format!("sweep:parallel ({} threads)", parallel.threads()),
+        0,
+        if smoke { 1 } else { 2 },
+        || {
+            let out = parallel.run_apps(&cfg, &scenarios);
+            assert!(out.iter().all(|r| r.is_ok()));
+            black_box(out);
+        },
+    );
+    report_and_record(&rp, scenarios.len() as f64, "scenarios");
+    // Determinism across thread counts: the acceptance invariant.
+    let a = serial.run_apps(&cfg, &scenarios);
+    let b = parallel.run_apps(&cfg, &scenarios);
+    for (x, y) in a.iter().zip(b.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.sim.epb_pj, y.sim.epb_pj, "{}:{}", x.app, x.policy.kind.name());
+        assert_eq!(x.error_pct, y.error_pct);
+        assert_eq!(x.sim.cycles, y.sim.cycles);
+    }
+    println!("  (serial vs parallel results bit-identical)");
+    record_speedup("sweep", rs.mean_s(), rp.mean_s(), parallel.threads(), scenarios.len());
 
     // --- end-to-end app ------------------------------------------------
-    let sys = LoraxSystem::new(&SystemConfig { scale: 0.1, seed: 42, ..Default::default() });
-    let r = bench("e2e:sobel LORAX-OOK (scale 0.1)", 1, 3, || {
+    let sys = LoraxSystem::new(&SystemConfig {
+        scale: if smoke { 0.02 } else { 0.1 },
+        seed: 42,
+        ..Default::default()
+    });
+    let r = bench("e2e:sobel LORAX-OOK", 1, 3, || {
         black_box(sys.run_app("sobel", PolicyKind::LoraxOok).unwrap());
     });
-    println!("{}", r.report(1.0, "run"));
+    report_and_record(&r, 1.0, "run");
 }

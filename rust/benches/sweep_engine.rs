@@ -1,0 +1,83 @@
+//! Bench: the parallel sweep engine itself.
+//!
+//! Two workloads:
+//! * an **app sweep** — (app × policy) scenarios through the full stack
+//!   (workload engine → channel → SoA replay), serial vs parallel;
+//! * a **synthetic sweep** — (pattern × rate × policy) traces through
+//!   the cycle-level simulator, the pure-replay scaling case.
+//!
+//! Prints per-variant throughput, asserts serial/parallel results are
+//! identical (determinism under parallelism), and emits `BENCH_*.json`
+//! records including the measured speedups.
+//!
+//! Run: `cargo bench --bench sweep_engine`
+//! Env: LORAX_BENCH_SCALE (default 0.05), LORAX_BENCH_SMOKE=1,
+//!      LORAX_SWEEP_THREADS.
+
+use lorax::approx::policy::PolicyKind;
+use lorax::config::SystemConfig;
+use lorax::exec::{synth_stress_grid, SweepGrid, SweepRunner};
+use lorax::util::bench::{bench, black_box, record_speedup, report_and_record};
+
+fn main() {
+    let smoke = std::env::var("LORAX_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 0.02 } else { 0.05 });
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+    let serial = SweepRunner::with_threads(1);
+    let parallel = SweepRunner::new();
+    let iters = if smoke { 1 } else { 2 };
+
+    // --- app sweep -----------------------------------------------------
+    let apps: &[&str] = if smoke {
+        &["sobel", "fft"]
+    } else {
+        &["blackscholes", "canneal", "fft", "jpeg", "sobel", "streamcluster"]
+    };
+    let scenarios = SweepGrid::new().apps(apps).policies(&PolicyKind::ALL).scenarios();
+    println!("-- app sweep: {} scenarios at scale {scale} --", scenarios.len());
+    let rs = bench("sweep-apps:serial", 0, iters, || {
+        black_box(serial.run_apps(&cfg, &scenarios));
+    });
+    report_and_record(&rs, scenarios.len() as f64, "scenarios");
+    let rp = bench(&format!("sweep-apps:parallel x{}", parallel.threads()), 0, iters, || {
+        black_box(parallel.run_apps(&cfg, &scenarios));
+    });
+    report_and_record(&rp, scenarios.len() as f64, "scenarios");
+    let a = serial.run_apps(&cfg, &scenarios);
+    let b = parallel.run_apps(&cfg, &scenarios);
+    for (x, y) in a.iter().zip(b.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.sim.epb_pj, y.sim.epb_pj, "{}", x.app);
+        assert_eq!(x.error_pct, y.error_pct, "{}", x.app);
+    }
+    record_speedup("sweep-apps", rs.mean_s(), rp.mean_s(), parallel.threads(), scenarios.len());
+
+    // --- synthetic replay sweep ---------------------------------------
+    let cycles = if smoke { 3_000 } else { 20_000 };
+    let synth = synth_stress_grid(
+        cycles,
+        &[5, 20, 40],
+        &[PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4],
+        42,
+    );
+    println!("-- synthetic sweep: {} scenarios x {cycles} cycles --", synth.len());
+    let rs = bench("sweep-synth:serial", 0, iters, || {
+        black_box(serial.run_synth(&cfg, &synth));
+    });
+    report_and_record(&rs, synth.len() as f64, "scenarios");
+    let rp = bench(&format!("sweep-synth:parallel x{}", parallel.threads()), 0, iters, || {
+        black_box(parallel.run_synth(&cfg, &synth));
+    });
+    report_and_record(&rp, synth.len() as f64, "scenarios");
+    let a = serial.run_synth(&cfg, &synth);
+    let b = parallel.run_synth(&cfg, &synth);
+    for ((x, y), sc) in a.iter().zip(b.iter()).zip(synth.iter()) {
+        assert_eq!(x.cycles, y.cycles, "{}", sc.label);
+        assert_eq!(x.energy.total_pj(), y.energy.total_pj(), "{}", sc.label);
+        assert_eq!(x.latency_p95, y.latency_p95, "{}", sc.label);
+    }
+    record_speedup("sweep-synth", rs.mean_s(), rp.mean_s(), parallel.threads(), synth.len());
+}

@@ -1,12 +1,15 @@
 //! Bench + reproduction: Table 3 — application-specific (LSBs, laser
-//! level) selection under the 10% output-error ceiling.
+//! level) selection under the 10% output-error ceiling, with the Fig.-6
+//! surfaces it selects from regenerated on the parallel sweep engine.
 //!
 //! Run: `cargo bench --bench table3_selection`
-//! Env: LORAX_BENCH_SCALE (default 0.05), LORAX_BENCH_GRID.
+//! Env: LORAX_BENCH_SCALE (default 0.05), LORAX_BENCH_GRID,
+//!      LORAX_SWEEP_THREADS.
 
 use lorax::config::SystemConfig;
-use lorax::report::figures::{fig6_surfaces, table3_selection};
-use lorax::util::bench::bench;
+use lorax::exec::SweepRunner;
+use lorax::report::figures::{fig6_surfaces_with, table3_selection};
+use lorax::util::bench::{bench, report_and_record};
 
 fn main() {
     let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
@@ -23,8 +26,10 @@ fn main() {
         _ => (vec![8, 16, 24, 32], vec![0, 20, 50, 80, 100]),
     };
     let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+    let runner = SweepRunner::new();
 
-    let surfaces = fig6_surfaces(&cfg, &lorax::apps::EVALUATED_APPS, &bits, &reds);
+    let surfaces =
+        fig6_surfaces_with(&runner, &cfg, &lorax::apps::EVALUATED_APPS, &bits, &reds);
     println!("{}", table3_selection(&cfg, &surfaces).render());
 
     // Selection itself is cheap; what matters is that it is stable.
@@ -34,5 +39,5 @@ fn main() {
             std::hint::black_box(t);
         }
     });
-    println!("{}", r.report(surfaces.len() as f64, "selections"));
+    report_and_record(&r, surfaces.len() as f64, "selections");
 }

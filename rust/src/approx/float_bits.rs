@@ -59,8 +59,37 @@ pub fn corrupt_word(word: u32, mask: u32, t10: u32, t01: u32, key: u32) -> u32 {
     out
 }
 
+/// Branch-free variant of [`corrupt_word`]: draws the uniform for every
+/// masked bit in one pass, accumulates the `1→0` and `0→1` flip masks,
+/// and composes the received word with mask arithmetic instead of
+/// per-bit conditionals.  Bit-identical to [`corrupt_word`] for every
+/// input (property-tested in `tests/properties.rs`); callers processing
+/// a whole transfer should dispatch the identity/truncation fast paths
+/// once per transfer (as [`corrupt_f32_words`] does) and use this only
+/// in the stochastic regime.
+#[inline]
+pub fn corrupt_word_fast(word: u32, mask: u32, t10: u32, t01: u32, key: u32) -> u32 {
+    let t10_always = (t10 == ALWAYS) as u32;
+    let t01_always = (t01 == ALWAYS) as u32;
+    let mut flip10 = 0u32; // masked bits where a sent '1' arrives as '0'
+    let mut set01 = 0u32; // masked bits where a sent '0' arrives as '1'
+    let mut m = mask;
+    while m != 0 {
+        let b = m.trailing_zeros();
+        m &= m - 1;
+        let r = bit_rand(key, b);
+        flip10 |= (((r < t10) as u32) | t10_always) << b;
+        set01 |= (((r < t01) as u32) | t01_always) << b;
+    }
+    let recv = (word & !flip10) | (!word & set01);
+    (word & !mask) | (recv & mask)
+}
+
 /// Corrupt a full word array with per-word parameters (the exact
 /// signature of the AOT `channel` artifact, for cross-validation).
+/// Per-word parameters defeat transfer-level dispatch, so each word
+/// goes through the branch-free [`corrupt_word_fast`] (identity words
+/// short-circuit on their own).
 pub fn corrupt_words(
     words: &mut [u32],
     masks: &[u32],
@@ -75,7 +104,10 @@ pub fn corrupt_words(
             && words.len() == keys.len()
     );
     for i in 0..words.len() {
-        words[i] = corrupt_word(words[i], masks[i], t10s[i], t01s[i], keys[i]);
+        if masks[i] == 0 || (t10s[i] == 0 && t01s[i] == 0) {
+            continue;
+        }
+        words[i] = corrupt_word_fast(words[i], masks[i], t10s[i], t01s[i], keys[i]);
     }
 }
 
@@ -83,7 +115,9 @@ pub fn corrupt_words(
 ///
 /// `mask`/`t10`/`t01` apply to every value's low word (high words ride
 /// full-power wavelengths and are untouched); `seed` identifies the
-/// transfer; word indices follow the shared layout convention.
+/// transfer; word indices follow the shared layout convention.  The
+/// identity fast path dispatches once per transfer; remaining regimes
+/// run the branch-free [`corrupt_word_fast`] per low word.
 pub fn corrupt_f64_slice(data: &mut [f64], mask: u32, t10: u32, t01: u32, seed: u32) {
     if mask == 0 || (t10 == 0 && t01 == 0) {
         return;
@@ -92,7 +126,7 @@ pub fn corrupt_f64_slice(data: &mut [f64], mask: u32, t10: u32, t01: u32, seed: 
         let bits = v.to_bits();
         let lo = bits as u32;
         let key = make_word_key(seed, (2 * i) as u32);
-        let lo2 = corrupt_word(lo, mask, t10, t01, key);
+        let lo2 = corrupt_word_fast(lo, mask, t10, t01, key);
         if lo2 != lo {
             *v = f64::from_bits((bits & 0xFFFF_FFFF_0000_0000) | lo2 as u64);
         }
@@ -116,27 +150,37 @@ pub fn f32_words_to_f64s(words: &[u32]) -> Vec<f64> {
 /// same (mask, thresholds); keys come from the word index within the
 /// transfer.
 ///
-/// Hot path of the whole stack (§Perf): processed bit-major over chunks
-/// of words with a fully branchless inner loop so LLVM auto-vectorizes
-/// the `fmix32` + compare + select across words.  Bit-for-bit identical
-/// to the scalar [`corrupt_word`] (property-tested) and to the Pallas
-/// kernel.
+/// Hot path of the whole stack (§Perf).  Regime dispatch happens **once
+/// per transfer**, not per word: identity, truncation and full-inversion
+/// transfers never touch the RNG, and the stochastic regimes run
+/// bit-major over chunks of words with fully branchless inner loops so
+/// LLVM auto-vectorizes the `fmix32` + compare + select across words
+/// (the `t01 == 0` regime — reduced-power LSBs with no `0→1` noise —
+/// gets its own tighter loop).  Bit-for-bit identical to the scalar
+/// [`corrupt_word`] / [`corrupt_word_fast`] (property-tested) and to the
+/// Pallas kernel.
 pub fn corrupt_f32_words(words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32) {
+    // --- per-transfer fast paths --------------------------------------
     if mask == 0 || (t10 == 0 && t01 == 0) {
-        return;
+        return; // error-free
     }
     if t10 == ALWAYS && t01 == 0 {
         for w in words.iter_mut() {
-            *w &= !mask;
+            *w &= !mask; // exact truncation
         }
         return;
     }
+    if t10 == ALWAYS && t01 == ALWAYS {
+        for w in words.iter_mut() {
+            *w = (*w & !mask) | (!*w & mask); // every masked bit inverts
+        }
+        return;
+    }
+    // --- stochastic regimes -------------------------------------------
     const CHUNK: usize = 512;
     let t10_always = (t10 == ALWAYS) as u32;
     let t01_always = (t01 == ALWAYS) as u32;
-    // When t01 == 0, transmitted '0' bits can never flip to '1', so the
-    // result only depends on r where the sent bit is 1 — but computing r
-    // unconditionally is what vectorizes, so we always compute it.
+    let t01_zero = t01 == 0;
     let mut keys = [0u32; CHUNK];
     let mut acc = [0u32; CHUNK];
     let n = words.len();
@@ -155,13 +199,24 @@ pub fn corrupt_f32_words(words: &mut [u32], mask: u32, t10: u32, t01: u32, seed:
             mbits &= mbits - 1;
             let cb = (b + 1).wrapping_mul(crate::util::rng::GOLDEN);
             let chunk = &words[start..start + m];
-            for j in 0..m {
-                let r = fmix32_inline(keys[j] ^ cb);
-                let sent = (chunk[j] >> b) & 1;
-                let flip10 = ((r < t10) as u32) | t10_always;
-                let set01 = ((r < t01) as u32) | t01_always;
-                let recv1 = (sent & (flip10 ^ 1)) | ((sent ^ 1) & set01);
-                acc[j] |= recv1 << b;
+            if t01_zero {
+                // Sent '0' bits can never flip to '1': the received bit
+                // is simply `sent & (r >= t10)` — fewer ops per lane.
+                for j in 0..m {
+                    let r = fmix32_inline(keys[j] ^ cb);
+                    let sent = (chunk[j] >> b) & 1;
+                    let keep = ((r >= t10) as u32) & (t10_always ^ 1);
+                    acc[j] |= (sent & keep) << b;
+                }
+            } else {
+                for j in 0..m {
+                    let r = fmix32_inline(keys[j] ^ cb);
+                    let sent = (chunk[j] >> b) & 1;
+                    let flip10 = ((r < t10) as u32) | t10_always;
+                    let set01 = ((r < t01) as u32) | t01_always;
+                    let recv1 = (sent & (flip10 ^ 1)) | ((sent ^ 1) & set01);
+                    acc[j] |= recv1 << b;
+                }
             }
         }
         for j in 0..m {
@@ -324,6 +379,11 @@ mod tests {
             assert_eq!(words, expect);
         });
     }
+
+    // corrupt_word_fast == corrupt_word equivalence lives in
+    // tests/properties.rs (prop_corrupt_word_fast_matches_reference),
+    // which covers a strictly wider input domain than a copy here
+    // would.
 
     #[test]
     fn vectorized_extreme_thresholds() {

@@ -10,5 +10,5 @@ pub mod policy;
 pub mod tuning;
 
 pub use channel::{Channel, ChannelStats, IdentityChannel};
-pub use float_bits::{corrupt_f64_slice, corrupt_word, mask_for_lsbs};
+pub use float_bits::{corrupt_f64_slice, corrupt_word, corrupt_word_fast, mask_for_lsbs};
 pub use policy::{AppTuning, Policy, PolicyKind, TransferMode};

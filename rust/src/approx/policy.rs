@@ -64,7 +64,9 @@ pub enum TransferMode {
 }
 
 /// Per-application approximation parameters (the knobs of Table 3).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// `Eq + Hash` so (policy, tuning, modulation) can key the sweep
+/// engine's memoized decision tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct AppTuning {
     /// LSBs approximated under LORAX (of the low word of each double).
     pub approx_bits: u32,

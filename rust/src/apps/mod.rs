@@ -27,7 +27,12 @@ pub mod streamcluster;
 use crate::approx::channel::Channel;
 
 /// A distributed workload engine.
-pub trait Workload {
+///
+/// `Send + Sync` so the sweep engine can share one instance (and its
+/// golden output) across worker threads; engines are plain data and
+/// `run(&self, ..)` is deterministic, so this costs implementors
+/// nothing.
+pub trait Workload: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Execute the full workload, moving all distributed data through

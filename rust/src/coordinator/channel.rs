@@ -81,6 +81,32 @@ impl<'a, C: Corruptor> PhotonicChannel<'a, C> {
         }
     }
 
+    /// Like [`PhotonicChannel::new`], but with the decision cache
+    /// prefilled from a prebuilt [`super::gwi::DecisionTable`] (decisions
+    /// are pure, so sharing one table across a sweep's channels changes
+    /// nothing except the work saved).
+    pub fn with_decisions(
+        engine: &'a GwiDecisionEngine,
+        policy: Policy,
+        corruptor: C,
+        seed: u32,
+        table: &super::gwi::DecisionTable,
+    ) -> PhotonicChannel<'a, C> {
+        let mut ch = PhotonicChannel::new(engine, policy, corruptor, seed);
+        // Bound by the cache's own dimension so a future resize of
+        // decision_cache keeps the prefill in sync automatically.
+        let cache_dim = ch.decision_cache.len();
+        let n = engine.topo.n_clusters.min(cache_dim).min(table.n_clusters());
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    ch.decision_cache[s][d] = Some(*table.get(s, d));
+                }
+            }
+        }
+        ch
+    }
+
     pub fn policy(&self) -> &Policy {
         &self.policy
     }

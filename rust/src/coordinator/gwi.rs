@@ -132,6 +132,42 @@ impl GwiDecisionEngine {
     }
 }
 
+/// Dense per-(src, dst)-cluster decision table for one (policy, engine)
+/// pair.  Decisions are pure in static data, so a table built once can
+/// be shared read-only across every `Simulator` replay and live channel
+/// of a sweep — the sweep engine memoizes these keyed by
+/// (policy kind, tuning, modulation) instead of re-deriving the link
+/// budgets once per run.
+#[derive(Clone, Debug)]
+pub struct DecisionTable {
+    n_clusters: usize,
+    cells: Vec<Decision>,
+}
+
+impl DecisionTable {
+    pub fn build(engine: &GwiDecisionEngine, policy: &Policy) -> DecisionTable {
+        let n = engine.topo.n_clusters;
+        let mut cells = vec![Decision::FULL; n * n];
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    cells[s * n + d] = engine.decide(policy, s, d);
+                }
+            }
+        }
+        DecisionTable { n_clusters: n, cells }
+    }
+
+    #[inline]
+    pub fn get(&self, src_cluster: usize, dst_cluster: usize) -> &Decision {
+        &self.cells[src_cluster * self.n_clusters + dst_cluster]
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.n_clusters
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +268,20 @@ mod tests {
             let dec = e.decide(&p, 0, d);
             if let TransferMode::Reduced { level } = dec.mode {
                 assert!((level - 0.3).abs() < 1e-12, "level={level}");
+            }
+        }
+    }
+
+    #[test]
+    fn decision_table_matches_engine() {
+        let e = engine(Modulation::Ook);
+        let p = lorax_ook(24, 70);
+        let t = DecisionTable::build(&e, &p);
+        assert_eq!(t.n_clusters(), 8);
+        for s in 0..8 {
+            for d in 0..8 {
+                let want = if s == d { Decision::FULL } else { e.decide(&p, s, d) };
+                assert_eq!(*t.get(s, d), want, "({s},{d})");
             }
         }
     }

@@ -16,6 +16,6 @@ pub mod gwi;
 pub mod system;
 
 pub use channel::{Corruptor, NativeCorruptor, PhotonicChannel};
-pub use gwi::{Decision, GwiDecisionEngine};
+pub use gwi::{Decision, DecisionTable, GwiDecisionEngine};
 pub use system::{AppRunReport, LoraxSystem};
 

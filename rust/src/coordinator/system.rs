@@ -8,12 +8,13 @@ use crate::approx::channel::{Channel, ChannelStats, IdentityChannel};
 use crate::approx::policy::{AppTuning, Policy, PolicyKind};
 use crate::apps::{by_name_scaled, output_error_pct};
 use crate::config::SystemConfig;
+use crate::exec::trace_buf::TraceBuffer;
 use crate::noc::sim::{SimReport, Simulator};
 use crate::phys::params::Modulation;
 use crate::topology::clos::ClosTopology;
 
 use super::channel::{Corruptor, NativeCorruptor, PhotonicChannel};
-use super::gwi::GwiDecisionEngine;
+use super::gwi::{DecisionTable, GwiDecisionEngine};
 
 /// Results of one (application, policy) experiment.
 #[derive(Clone, Debug)]
@@ -95,6 +96,21 @@ impl LoraxSystem {
         tuning: AppTuning,
         corruptor: C,
     ) -> Result<AppRunReport> {
+        self.run_app_full(app, kind, tuning, corruptor, None)
+    }
+
+    /// Full-control entry point: explicit tuning, corruption backend and
+    /// (optionally) a prebuilt [`DecisionTable`] shared across a sweep —
+    /// the [`crate::exec::SweepRunner`] path.  Passing `None` builds the
+    /// table for this run (identical results, more work).
+    pub fn run_app_full<C: Corruptor>(
+        &self,
+        app: &str,
+        kind: PolicyKind,
+        tuning: AppTuning,
+        corruptor: C,
+        decisions: Option<&DecisionTable>,
+    ) -> Result<AppRunReport> {
         let workload = by_name_scaled(app, self.cfg.seed, self.cfg.scale)
             .with_context(|| format!("unknown application {app:?}"))?;
         // Golden pass.
@@ -103,14 +119,28 @@ impl LoraxSystem {
         // Policy pass.
         let policy = Policy::with_tuning(kind, tuning);
         let engine = self.engine_for(kind);
-        let mut ch = PhotonicChannel::new(engine, policy, corruptor, self.cfg.seed as u32);
+        let mut ch = match decisions {
+            Some(table) => PhotonicChannel::with_decisions(
+                engine,
+                policy,
+                corruptor,
+                self.cfg.seed as u32,
+                table,
+            ),
+            None => PhotonicChannel::new(engine, policy, corruptor, self.cfg.seed as u32),
+        };
         let out = workload.run(&mut ch);
         let error_pct = output_error_pct(&golden, &out);
-        // Cycle-level replay for energy/latency.
+        // Cycle-level replay for energy/latency (packed SoA, shared
+        // decision table when provided).
         let trace = ch.take_trace();
+        let buf = TraceBuffer::from_records(&self.topo, &trace);
         let mut sim = Simulator::new(engine);
         sim.energy_params = self.cfg.energy.clone();
-        let sim_report = sim.run(&trace, &policy);
+        let sim_report = match decisions {
+            Some(table) => sim.replay(&buf, &policy, table),
+            None => sim.replay(&buf, &policy, &DecisionTable::build(engine, &policy)),
+        };
         Ok(AppRunReport {
             app: app.to_string(),
             policy,

@@ -1,0 +1,201 @@
+//! Declarative sweep grids: the (app × policy × tuning) and synthetic
+//! (pattern × rate × policy) scenario lists the [`super::SweepRunner`]
+//! fans out.  A grid is data, not control flow — the scenario order is
+//! the result order, which is what makes sweeps reproducible regardless
+//! of parallelism.
+
+use crate::approx::policy::{AppTuning, PolicyKind};
+use crate::traffic::synth::{Pattern, SynthConfig};
+
+/// One workload-engine run: an application under a policy, with either
+/// an explicit tuning or (`None`) the measured Table-3 default for that
+/// (policy, app) pair.
+#[derive(Clone, Debug)]
+pub struct AppScenario {
+    pub app: String,
+    pub policy: PolicyKind,
+    pub tuning: Option<AppTuning>,
+}
+
+impl AppScenario {
+    pub fn new(app: &str, policy: PolicyKind) -> AppScenario {
+        AppScenario { app: app.to_string(), policy, tuning: None }
+    }
+
+    /// Human-readable scenario label (for bench/CLI output).
+    pub fn label(&self) -> String {
+        match self.tuning {
+            Some(t) => format!(
+                "{}:{}:b{}r{}",
+                self.app,
+                self.policy.name(),
+                t.approx_bits,
+                t.power_reduction_pct
+            ),
+            None => format!("{}:{}", self.app, self.policy.name()),
+        }
+    }
+}
+
+/// One synthetic-traffic replay: a generated trace under a policy.
+#[derive(Clone, Debug)]
+pub struct SynthScenario {
+    pub label: String,
+    pub synth: SynthConfig,
+    pub policy: PolicyKind,
+    pub tuning: AppTuning,
+}
+
+impl SynthScenario {
+    pub fn new(label: &str, synth: SynthConfig, policy: PolicyKind, tuning: AppTuning) -> Self {
+        SynthScenario { label: label.to_string(), synth, policy, tuning }
+    }
+}
+
+/// Builder for app-scenario cross products, app-major then policy then
+/// tuning (matching the serial loops the figure drivers used to run).
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    apps: Vec<String>,
+    policies: Vec<PolicyKind>,
+    tunings: Vec<Option<AppTuning>>,
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepGrid {
+    pub fn new() -> SweepGrid {
+        SweepGrid { apps: Vec::new(), policies: Vec::new(), tunings: vec![None] }
+    }
+
+    pub fn apps<S: AsRef<str>>(mut self, apps: &[S]) -> SweepGrid {
+        self.apps = apps.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
+    pub fn policies(mut self, policies: &[PolicyKind]) -> SweepGrid {
+        self.policies = policies.to_vec();
+        self
+    }
+
+    /// Explicit tuning cross product over (bits, reduction) axes, the
+    /// Fig.-6 grid shape (`trunc_bits` rides along as `bits`).
+    pub fn tuning_grid(mut self, bits_axis: &[u32], reduction_axis: &[u32]) -> SweepGrid {
+        self.tunings = bits_axis
+            .iter()
+            .flat_map(|&b| {
+                reduction_axis.iter().map(move |&r| {
+                    Some(AppTuning { approx_bits: b, power_reduction_pct: r, trunc_bits: b })
+                })
+            })
+            .collect();
+        self
+    }
+
+    /// Expand to the ordered scenario list.
+    pub fn scenarios(&self) -> Vec<AppScenario> {
+        let mut out =
+            Vec::with_capacity(self.apps.len() * self.policies.len() * self.tunings.len());
+        for app in &self.apps {
+            for &policy in &self.policies {
+                for &tuning in &self.tunings {
+                    out.push(AppScenario { app: app.clone(), policy, tuning });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The synthetic stress grid the `sweep_engine` bench and `lorax sweep
+/// --synth` use: every spatial pattern at several injection rates.
+pub fn synth_stress_grid(
+    cycles: u64,
+    rates: &[u32],
+    policies: &[PolicyKind],
+    seed: u64,
+) -> Vec<SynthScenario> {
+    let patterns: [(&str, Pattern); 4] = [
+        ("uniform", Pattern::Uniform),
+        ("hotspot", Pattern::Hotspot { cluster: 2 }),
+        ("transpose", Pattern::Transpose),
+        ("neighbor", Pattern::Neighbor),
+    ];
+    let mut out = Vec::new();
+    for (pname, pattern) in patterns {
+        for &rate in rates {
+            for &policy in policies {
+                let tuning = crate::approx::policy::default_tuning(policy, "fft");
+                out.push(SynthScenario::new(
+                    &format!("{pname}:r{rate}:{}", policy.name()),
+                    SynthConfig {
+                        pattern,
+                        rate_per_100_cycles: rate,
+                        cycles,
+                        float_fraction: 0.6,
+                        seed,
+                    },
+                    policy,
+                    tuning,
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_cross_product_order() {
+        let g = SweepGrid::new()
+            .apps(&["fft", "sobel"])
+            .policies(&[PolicyKind::Baseline, PolicyKind::LoraxOok]);
+        let s = g.scenarios();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].app, "fft");
+        assert_eq!(s[0].policy, PolicyKind::Baseline);
+        assert_eq!(s[1].policy, PolicyKind::LoraxOok);
+        assert_eq!(s[2].app, "sobel");
+        assert!(s.iter().all(|sc| sc.tuning.is_none()));
+    }
+
+    #[test]
+    fn tuning_grid_expands() {
+        let g = SweepGrid::new()
+            .apps(&["sobel"])
+            .policies(&[PolicyKind::LoraxOok])
+            .tuning_grid(&[8, 16], &[0, 50, 100]);
+        let s = g.scenarios();
+        assert_eq!(s.len(), 6);
+        let t0 = s[0].tuning.unwrap();
+        assert_eq!((t0.approx_bits, t0.power_reduction_pct, t0.trunc_bits), (8, 0, 8));
+        let t5 = s[5].tuning.unwrap();
+        assert_eq!((t5.approx_bits, t5.power_reduction_pct), (16, 100));
+    }
+
+    #[test]
+    fn synth_grid_covers_patterns_and_rates() {
+        let g = synth_stress_grid(1000, &[10, 40], &[PolicyKind::Baseline], 1);
+        assert_eq!(g.len(), 4 * 2);
+        assert!(g[0].label.contains("uniform"));
+        assert!(g.iter().all(|s| s.synth.cycles == 1000));
+    }
+
+    #[test]
+    fn scenario_labels() {
+        let sc = AppScenario::new("fft", PolicyKind::LoraxOok);
+        assert_eq!(sc.label(), "fft:LORAX-OOK");
+        let sc = AppScenario {
+            tuning: Some(AppTuning { approx_bits: 16, power_reduction_pct: 80, trunc_bits: 16 }),
+            ..sc
+        };
+        assert_eq!(sc.label(), "fft:LORAX-OOK:b16r80");
+    }
+}

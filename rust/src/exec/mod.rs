@@ -1,0 +1,29 @@
+//! The parallel sweep engine.
+//!
+//! Every figure and table of the paper is a sweep — (app × policy ×
+//! tuning × traffic) combinations pushed through the workload engines
+//! and the cycle-level simulator.  This subsystem makes those sweeps a
+//! declarative grid executed in parallel:
+//!
+//! * [`grid`] — scenario lists: [`grid::AppScenario`] /
+//!   [`grid::SynthScenario`] and the [`grid::SweepGrid`] builder;
+//! * [`runner`] — [`SweepRunner`], an order-preserving scoped-thread
+//!   executor (results are independent of thread count), plus the
+//!   [`runner::DecisionTableCache`] that memoizes GWI decision tables
+//!   keyed by (policy kind, tuning, modulation) so each is computed once
+//!   per sweep rather than once per simulator run;
+//! * [`trace_buf`] — [`TraceBuffer`], the structure-of-arrays replay
+//!   format with routing resolved at record time, which lets
+//!   `Simulator::replay` run allocation-free.
+//!
+//! `lorax sweep` and all the `benches/` reproduction targets run on
+//! this engine; `SweepRunner::with_threads(1)` is the serial reference
+//! executor the perf benches compare against.
+
+pub mod grid;
+pub mod runner;
+pub mod trace_buf;
+
+pub use grid::{synth_stress_grid, AppScenario, SweepGrid, SynthScenario};
+pub use runner::{DecisionTableCache, SweepRunner};
+pub use trace_buf::{TraceBuffer, FLAG_APPROX, FLAG_PHOTONIC};

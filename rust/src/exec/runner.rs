@@ -1,0 +1,306 @@
+//! The parallel sweep runner.
+//!
+//! [`SweepRunner::map`] is the primitive: an order-preserving parallel
+//! map over a work list, fanned across OS threads with
+//! `std::thread::scope` and an atomic work index.  Results land in
+//! per-item slots, so the output is **independent of thread count and
+//! scheduling** — every higher-level sweep (Fig. 6 surfaces, Fig. 8
+//! framework grids, Table 3 selection, synthetic-traffic sweeps) is a
+//! deterministic function of its scenario list.
+//!
+//! [`DecisionTableCache`] memoizes GWI decision tables keyed by
+//! (policy kind, tuning, modulation): a sweep computes each table once
+//! and shares it read-only across all of its runs, instead of once per
+//! `Simulator::run`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::approx::channel::IdentityChannel;
+use crate::approx::policy::{default_tuning, AppTuning, Policy, PolicyKind};
+use crate::approx::tuning::{SensitivitySurface, SweepPoint};
+use crate::apps::{by_name_scaled, output_error_pct};
+use crate::config::SystemConfig;
+use crate::coordinator::channel::{NativeCorruptor, PhotonicChannel};
+use crate::coordinator::gwi::{DecisionTable, GwiDecisionEngine};
+use crate::coordinator::system::{AppRunReport, LoraxSystem};
+use crate::noc::sim::{SimReport, Simulator};
+use crate::phys::params::Modulation;
+use crate::topology::clos::ClosTopology;
+use crate::traffic::synth::generate;
+
+use super::grid::{AppScenario, SynthScenario};
+use super::trace_buf::TraceBuffer;
+
+/// Memoized decision tables shared across a sweep.
+///
+/// Keyed by (engine identity, policy kind, tuning, modulation).  The
+/// engine enters the key by address: two engines with the same
+/// modulation but different photonic parameters or topology must never
+/// share a table, and engine configs are not hashable — so distinct
+/// engine instances simply never share cache entries (at worst a table
+/// is built once per engine, never wrongly reused).  The `'e` lifetime
+/// pins every cached engine as outliving the cache, so an address can
+/// never be recycled by a new engine while its entry is still live.
+#[derive(Default)]
+pub struct DecisionTableCache<'e> {
+    #[allow(clippy::type_complexity)]
+    map: Mutex<HashMap<(usize, PolicyKind, AppTuning, Modulation), Arc<DecisionTable>>>,
+    _engines: std::marker::PhantomData<&'e GwiDecisionEngine>,
+}
+
+impl<'e> DecisionTableCache<'e> {
+    pub fn new() -> DecisionTableCache<'e> {
+        DecisionTableCache::default()
+    }
+
+    /// Fetch the table for `policy` on `engine`, building it at most
+    /// once per distinct (engine, kind, tuning, modulation).
+    pub fn get_or_build(
+        &self,
+        engine: &'e GwiDecisionEngine,
+        policy: &Policy,
+    ) -> Arc<DecisionTable> {
+        let engine_id = engine as *const GwiDecisionEngine as usize;
+        let key = (engine_id, policy.kind, policy.tuning, engine.waveguides.modulation);
+        if let Some(t) = self.map.lock().unwrap().get(&key) {
+            return Arc::clone(t);
+        }
+        // Built outside the lock: duplicate work on a race is benign
+        // (tables are pure) and the first insert wins.
+        let built = Arc::new(DecisionTable::build(engine, policy));
+        Arc::clone(self.map.lock().unwrap().entry(key).or_insert(built))
+    }
+
+    /// Distinct tables built so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Fans a sweep's scenarios across OS threads.
+#[derive(Clone, Debug)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepRunner {
+    /// Auto-sized runner: `$LORAX_SWEEP_THREADS` if set, else the
+    /// machine's available parallelism.
+    pub fn new() -> SweepRunner {
+        let threads = std::env::var("LORAX_SWEEP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        SweepRunner { threads }
+    }
+
+    /// Fixed worker count (1 = the serial reference executor).
+    pub fn with_threads(threads: usize) -> SweepRunner {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Order-preserving parallel map: `out[i] == f(i, &items[i])`
+    /// regardless of thread count or scheduling.
+    pub fn map<I, O, F>(&self, items: &[I], f: F) -> Vec<O>
+    where
+        I: Sync,
+        O: Send,
+        F: Fn(usize, &I) -> O + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.threads.min(n);
+        if threads == 1 {
+            return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("sweep worker left a slot empty"))
+            .collect()
+    }
+
+    /// Run (app × policy × tuning) scenarios through one shared
+    /// [`LoraxSystem`] with memoized decision tables.  Results are in
+    /// scenario order and identical to running each scenario serially.
+    pub fn run_apps(
+        &self,
+        cfg: &SystemConfig,
+        scenarios: &[AppScenario],
+    ) -> Vec<Result<AppRunReport>> {
+        let sys = LoraxSystem::new(cfg);
+        self.run_apps_on(&sys, scenarios)
+    }
+
+    /// [`Self::run_apps`] against a caller-owned system (so several
+    /// sweeps can share the engines).
+    pub fn run_apps_on(
+        &self,
+        sys: &LoraxSystem,
+        scenarios: &[AppScenario],
+    ) -> Vec<Result<AppRunReport>> {
+        let cache = DecisionTableCache::new();
+        self.map(scenarios, |_, sc| {
+            let tuning = sc.tuning.unwrap_or_else(|| default_tuning(sc.policy, &sc.app));
+            let policy = Policy::with_tuning(sc.policy, tuning);
+            let table = cache.get_or_build(sys.engine_for(sc.policy), &policy);
+            sys.run_app_full(&sc.app, sc.policy, tuning, NativeCorruptor, Some(&table))
+        })
+    }
+
+    /// One Fig.-6 sensitivity surface, grid points fanned in parallel.
+    /// The workload and its golden output are computed once and shared;
+    /// every point reuses the memoized decision table for its tuning.
+    /// Output is identical to the serial [`crate::approx::tuning::sweep_app`].
+    pub fn sweep_surface(
+        &self,
+        engine: &GwiDecisionEngine,
+        app: &str,
+        kind: PolicyKind,
+        seed: u64,
+        scale: f64,
+        bits_axis: &[u32],
+        reduction_axis: &[u32],
+    ) -> SensitivitySurface {
+        let workload = by_name_scaled(app, seed, scale)
+            .unwrap_or_else(|| panic!("unknown app {app:?}"));
+        let mut golden_ch = IdentityChannel::new();
+        let golden = workload.run(&mut golden_ch);
+        let grid: Vec<(u32, u32)> = bits_axis
+            .iter()
+            .flat_map(|&b| reduction_axis.iter().map(move |&r| (b, r)))
+            .collect();
+        let cache = DecisionTableCache::new();
+        let points = self.map(&grid, |_, &(bits, red)| {
+            let tuning =
+                AppTuning { approx_bits: bits, power_reduction_pct: red, trunc_bits: bits };
+            let policy = Policy::with_tuning(kind, tuning);
+            let table = cache.get_or_build(engine, &policy);
+            let mut ch = PhotonicChannel::with_decisions(
+                engine,
+                policy,
+                NativeCorruptor,
+                seed as u32,
+                &table,
+            );
+            let out = workload.run(&mut ch);
+            SweepPoint { bits, reduction_pct: red, error_pct: output_error_pct(&golden, &out) }
+        });
+        SensitivitySurface { app: app.to_string(), threshold_pct: 10.0, points }
+    }
+
+    /// Replay synthetic-traffic scenarios through the cycle-level
+    /// simulator.  Traces are generated per scenario (deterministic in
+    /// the scenario seed), packed into [`TraceBuffer`]s, and replayed
+    /// against memoized decision tables.
+    pub fn run_synth(&self, cfg: &SystemConfig, scenarios: &[SynthScenario]) -> Vec<SimReport> {
+        let topo = ClosTopology::default_64core();
+        let ook = GwiDecisionEngine::new(topo.clone(), cfg.photonic.clone(), Modulation::Ook);
+        let pam4 = GwiDecisionEngine::new(topo.clone(), cfg.photonic.clone(), Modulation::Pam4);
+        let cache = DecisionTableCache::new();
+        self.map(scenarios, |_, sc| {
+            let engine = match sc.policy.modulation() {
+                Modulation::Ook => &ook,
+                Modulation::Pam4 => &pam4,
+            };
+            let policy = Policy::with_tuning(sc.policy, sc.tuning);
+            let table = cache.get_or_build(engine, &policy);
+            let trace = generate(&sc.synth);
+            let buf = TraceBuffer::from_records(&topo, &trace);
+            let mut sim = Simulator::new(engine);
+            sim.energy_params = cfg.energy.clone();
+            sim.replay(&buf, &policy, &table)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phys::params::PhotonicParams;
+
+    #[test]
+    fn map_preserves_order_across_thread_counts() {
+        let items: Vec<usize> = (0..97).collect();
+        let serial = SweepRunner::with_threads(1).map(&items, |i, &x| i * 1000 + x * x);
+        for threads in [2, 3, 8, 200] {
+            let par = SweepRunner::with_threads(threads).map(&items, |i, &x| i * 1000 + x * x);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_empty_and_singleton() {
+        let r = SweepRunner::with_threads(4);
+        let empty: Vec<u32> = Vec::new();
+        assert!(r.map(&empty, |_, &x| x).is_empty());
+        assert_eq!(r.map(&[7u32], |i, &x| (i, x)), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn decision_cache_builds_once_per_key() {
+        let engine = GwiDecisionEngine::new(
+            ClosTopology::default_64core(),
+            PhotonicParams::default(),
+            Modulation::Ook,
+        );
+        let cache = DecisionTableCache::new();
+        let p1 = Policy::new(PolicyKind::LoraxOok, "fft");
+        let a = cache.get_or_build(&engine, &p1);
+        let b = cache.get_or_build(&engine, &p1);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        let p2 = Policy::new(PolicyKind::Baseline, "fft");
+        let _ = cache.get_or_build(&engine, &p2);
+        assert_eq!(cache.len(), 2);
+        // Table contents match the engine.
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    assert_eq!(*a.get(s, d), engine.decide(&p1, s, d));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn runner_thread_floor_is_one() {
+        assert_eq!(SweepRunner::with_threads(0).threads(), 1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Structure-of-arrays trace buffer for allocation-free replay.
+//!
+//! The AoS [`TraceRecord`] format is what the workload engines record
+//! and what the binary trace files carry; replaying it forced the
+//! simulator to re-derive routing (`topo.route`, `cluster_of`) for every
+//! packet of every run.  [`TraceBuffer`] packs the replay-relevant
+//! columns — source/destination cluster, electrical hop count,
+//! photonic/approximable flags, payload size — once at record-ingest
+//! time, so `Simulator::replay` streams flat arrays and performs no
+//! per-packet routing work and no allocations.
+
+use crate::topology::clos::ClosTopology;
+use crate::traffic::packet::PayloadKind;
+use crate::traffic::trace::TraceRecord;
+
+/// Flag bit: the packet crosses a photonic (inter-cluster) link.
+pub const FLAG_PHOTONIC: u8 = 1;
+/// Flag bit: the payload is flagged approximable by the application.
+pub const FLAG_APPROX: u8 = 2;
+
+/// Packed, replay-ready trace columns (one index per packet, in
+/// injection order).
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuffer {
+    pub inject_cycle: Vec<u64>,
+    pub src_cluster: Vec<u8>,
+    pub dst_cluster: Vec<u8>,
+    /// Electrical hops on the route (from `topo.route`, computed once).
+    pub el_hops: Vec<u8>,
+    /// [`FLAG_PHOTONIC`] | [`FLAG_APPROX`].
+    pub flags: Vec<u8>,
+    pub kind: Vec<PayloadKind>,
+    pub payload_words: Vec<u32>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> TraceBuffer {
+        TraceBuffer::default()
+    }
+
+    pub fn with_capacity(n: usize) -> TraceBuffer {
+        TraceBuffer {
+            inject_cycle: Vec::with_capacity(n),
+            src_cluster: Vec::with_capacity(n),
+            dst_cluster: Vec::with_capacity(n),
+            el_hops: Vec::with_capacity(n),
+            flags: Vec::with_capacity(n),
+            kind: Vec::with_capacity(n),
+            payload_words: Vec::with_capacity(n),
+        }
+    }
+
+    /// Pack one record, resolving routing against `topo` now so the
+    /// replay never has to.
+    pub fn push(&mut self, topo: &ClosTopology, rec: &TraceRecord) {
+        let pkt = &rec.packet;
+        let sc = topo.cluster_of(pkt.src);
+        let dc = topo.cluster_of(pkt.dst);
+        let (el_hops, uses_photonic) = topo.route(pkt.src, pkt.dst);
+        // Hard assert: the pack step runs once per record (not the hot
+        // loop), and silent u8 wrap-around would corrupt every replay.
+        assert!(
+            el_hops <= u8::MAX as u32 && sc <= u8::MAX as usize && dc <= u8::MAX as usize,
+            "route does not fit packed columns: el_hops={el_hops} sc={sc} dc={dc}"
+        );
+        let mut flags = 0u8;
+        if uses_photonic {
+            flags |= FLAG_PHOTONIC;
+        }
+        if pkt.approximable {
+            flags |= FLAG_APPROX;
+        }
+        self.inject_cycle.push(rec.inject_cycle);
+        self.src_cluster.push(sc as u8);
+        self.dst_cluster.push(dc as u8);
+        self.el_hops.push(el_hops as u8);
+        self.flags.push(flags);
+        self.kind.push(pkt.kind);
+        self.payload_words.push(pkt.payload_words);
+    }
+
+    /// Pack a whole AoS trace.
+    pub fn from_records(topo: &ClosTopology, trace: &[TraceRecord]) -> TraceBuffer {
+        let mut buf = TraceBuffer::with_capacity(trace.len());
+        for rec in trace {
+            buf.push(topo, rec);
+        }
+        buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.inject_cycle.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inject_cycle.is_empty()
+    }
+
+    /// Drop all records, keeping the column allocations for reuse.
+    pub fn clear(&mut self) {
+        self.inject_cycle.clear();
+        self.src_cluster.clear();
+        self.dst_cluster.clear();
+        self.el_hops.clear();
+        self.flags.clear();
+        self.kind.clear();
+        self.payload_words.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::clos::NodeId;
+    use crate::traffic::packet::Packet;
+    use crate::traffic::synth::{generate, SynthConfig};
+
+    #[test]
+    fn columns_match_route_per_record() {
+        let topo = ClosTopology::default_64core();
+        let trace = generate(&SynthConfig { cycles: 500, seed: 7, ..Default::default() });
+        let buf = TraceBuffer::from_records(&topo, &trace);
+        assert_eq!(buf.len(), trace.len());
+        for (i, rec) in trace.iter().enumerate() {
+            let (el, phot) = topo.route(rec.packet.src, rec.packet.dst);
+            assert_eq!(buf.inject_cycle[i], rec.inject_cycle);
+            assert_eq!(buf.el_hops[i] as u32, el);
+            assert_eq!(buf.flags[i] & FLAG_PHOTONIC != 0, phot);
+            assert_eq!(buf.flags[i] & FLAG_APPROX != 0, rec.packet.approximable);
+            assert_eq!(buf.src_cluster[i] as usize, topo.cluster_of(rec.packet.src));
+            assert_eq!(buf.dst_cluster[i] as usize, topo.cluster_of(rec.packet.dst));
+            assert_eq!(buf.kind[i], rec.packet.kind);
+            assert_eq!(buf.payload_words[i], rec.packet.payload_words);
+        }
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let topo = ClosTopology::default_64core();
+        let rec = TraceRecord {
+            inject_cycle: 3,
+            packet: Packet {
+                src: NodeId::Core(0),
+                dst: NodeId::Core(63),
+                kind: PayloadKind::Float64,
+                payload_words: 16,
+                approximable: true,
+            },
+        };
+        let mut buf = TraceBuffer::new();
+        buf.push(&topo, &rec);
+        assert_eq!(buf.len(), 1);
+        let cap = buf.inject_cycle.capacity();
+        buf.clear();
+        assert!(buf.is_empty());
+        assert_eq!(buf.inject_cycle.capacity(), cap);
+    }
+}

@@ -15,7 +15,17 @@
 //!   kernel, bit-identical to the native channel in [`approx`].
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
-//! client (`xla` crate); Python never runs on the request path.
+//! client (`xla` crate, behind the optional `xla` cargo feature); Python
+//! never runs on the request path.
+//!
+//! The [`exec`] module is the **parallel sweep engine**: every figure
+//! and table reproduction is a declarative (app × policy × tuning ×
+//! traffic) grid fanned across OS threads by `exec::SweepRunner`, with
+//! GWI decision tables memoized per (policy, tuning, modulation) and
+//! traces replayed from a packed structure-of-arrays
+//! `exec::TraceBuffer` — results are bit-identical to the serial path
+//! and independent of thread count.  `lorax sweep` and the
+//! `benches/` targets all run on it.
 //!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
@@ -35,6 +45,7 @@ pub mod apps;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod exec;
 pub mod noc;
 pub mod phys;
 pub mod report;

@@ -3,7 +3,8 @@
 //! ```text
 //! lorax config                               # Table 1/2 constants
 //! lorax characterize                         # Fig. 2
-//! lorax sweep --app fft [--grid small]       # Fig. 6 (one app)
+//! lorax sweep --app fft [--grid small]       # Fig. 6, parallel sweep engine
+//! lorax sweep --apps all --jobs 8            # every evaluated app
 //! lorax tune                                 # Table 3 (sweep + select, all apps)
 //! lorax simulate --app fft --policy LORAX-OOK [--xla]
 //! lorax jpeg --outdir out/                   # Fig. 7 (writes PGMs)
@@ -11,7 +12,7 @@
 //! lorax verify-bridge                        # native channel == AOT/PJRT channel
 //!
 //! Common options: --config <file>  --set section.key=value[,..]
-//!                 --scale <f>  --seed <n>  --csv
+//!                 --scale <f>  --seed <n>  --csv  --jobs <n>
 //! ```
 
 use std::path::PathBuf;
@@ -19,18 +20,28 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use lorax::approx::policy::{default_tuning, PolicyKind};
-use lorax::approx::tuning::{BITS_AXIS, REDUCTION_AXIS};
+use lorax::approx::tuning::{select_tuning, BITS_AXIS, REDUCTION_AXIS};
 use lorax::config::{Args, SystemConfig};
 use lorax::coordinator::LoraxSystem;
+use lorax::exec::SweepRunner;
 use lorax::report::figures;
 
-fn main() {
-    // Die quietly on SIGPIPE (e.g. `lorax reproduce | head`) instead of
-    // panicking in println!.
-    #[cfg(unix)]
-    unsafe {
-        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+/// Die quietly on SIGPIPE (e.g. `lorax reproduce | head`) instead of
+/// panicking in println! — raw syscall so the offline build needs no
+/// libc crate (SIGPIPE = 13, SIG_DFL = 0 on every supported Unix).
+#[cfg(unix)]
+fn restore_default_sigpipe() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
     }
+    unsafe {
+        signal(13, 0);
+    }
+}
+
+fn main() {
+    #[cfg(unix)]
+    restore_default_sigpipe();
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -83,14 +94,72 @@ fn run() -> Result<()> {
     let args = Args::from_env();
     let cfg = load_config(&args)?;
     let csv = args.flag("csv");
+    // --jobs is applied exactly once, here, by exporting the runner's
+    // env override: every SweepRunner::new() in every subcommand —
+    // including the ones report::figures builds internally for
+    // characterize/jpeg/reproduce — then picks it up (0 = auto).
+    if let Some(jobs) = args.get("jobs") {
+        let n: u64 = jobs
+            .parse()
+            .with_context(|| format!("--jobs {jobs:?} is not an integer"))?;
+        if n > 0 {
+            std::env::set_var("LORAX_SWEEP_THREADS", jobs);
+        }
+    }
     match args.subcommand().unwrap_or("help") {
         "config" => println!("{}", cfg.describe()),
         "characterize" => emit(&figures::fig2_characterization(&cfg)?, csv),
         "sweep" => {
-            let app = args.get("app").context("--app required for sweep")?;
             let (bits, reds) = grid(&args);
-            let surfaces = figures::fig6_surfaces(&cfg, &[app], &bits, &reds);
-            println!("{}", figures::render_surface(&surfaces[0]));
+            let kind = parse_policy(&args.get_or("policy", "LORAX-OOK"))?;
+            let apps: Vec<String> = match (args.get("apps"), args.get("app")) {
+                (Some("all"), _) => {
+                    lorax::apps::EVALUATED_APPS.iter().map(|s| s.to_string()).collect()
+                }
+                (Some(list), _) => list.split(',').map(|s| s.trim().to_string()).collect(),
+                (None, Some(app)) => vec![app.to_string()],
+                (None, None) => bail!("--app <name> or --apps <a,b|all> required for sweep"),
+            };
+            // Validate before sweeping: the runner panics on unknown
+            // apps, the CLI should error cleanly instead.
+            for app in &apps {
+                if !lorax::apps::ALL_APPS.contains(&app.as_str()) {
+                    bail!(
+                        "unknown app {app:?} (known: {})",
+                        lorax::apps::ALL_APPS.join(", ")
+                    );
+                }
+            }
+            let runner = SweepRunner::new();
+            let sys = LoraxSystem::new(&cfg);
+            eprintln!(
+                "sweeping {} app(s) x {}x{} grid on {} thread(s)",
+                apps.len(),
+                bits.len(),
+                reds.len(),
+                runner.threads()
+            );
+            for app in &apps {
+                let surface = runner.sweep_surface(
+                    sys.engine_for(kind),
+                    app,
+                    kind,
+                    cfg.seed,
+                    cfg.scale,
+                    &bits,
+                    &reds,
+                );
+                println!("{}", figures::render_surface(&surface));
+                let sel = select_tuning(&surface, cfg.error_threshold_pct);
+                println!(
+                    "selected under {}% error: {} LSBs @ {}% power reduction \
+                     (truncation framework: {} bits)\n",
+                    cfg.error_threshold_pct,
+                    sel.approx_bits,
+                    sel.power_reduction_pct,
+                    sel.trunc_bits
+                );
+            }
         }
         "tune" => {
             let (bits, reds) = grid(&args);
@@ -204,17 +273,22 @@ USAGE: lorax <command> [options]
 COMMANDS
   config         print the Table-1/Table-2 system configuration
   characterize   Fig. 2  — float/int traffic per application
-  sweep          Fig. 6  — sensitivity surface (--app <name> [--grid small|tiny])
-  tune           Table 3 — application-specific parameter selection
+  sweep          Fig. 6  — sensitivity surfaces on the parallel sweep engine
+                 (--app <name> | --apps <a,b|all>, [--policy <name>]
+                  [--grid small|tiny] [--jobs <n>])
+  tune           Table 3 — application-specific parameter selection ([--jobs <n>])
   simulate       one (app, policy) run (--app <name> --policy <name> [--xla])
   jpeg           Fig. 7  — JPEG quality panels (--outdir <dir>)
   reproduce      regenerate [fig2|fig6|table3|fig7|fig8|headline|all]
   verify-bridge  assert native channel == AOT/PJRT channel bit-for-bit
+                 (needs a build with `--features xla`)
 
 OPTIONS
   --config <file>    TOML-subset config file
   --set k=v[,k=v]    override config keys (section.key=value)
   --scale <f>        workload scale (1.0 = paper-size inputs)
   --seed <n>         master seed
+  --jobs <n>         sweep worker threads for every sweep-running command
+                     (0 = auto; env LORAX_SWEEP_THREADS)
   --csv              emit tables as CSV"
 }

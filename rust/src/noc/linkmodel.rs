@@ -14,7 +14,35 @@ use crate::energy::breakdown::EnergyBreakdown;
 use crate::energy::params::EnergyParams;
 use crate::phys::laser::LaserProvisioning;
 use crate::phys::params::{Modulation, PhotonicParams};
-use crate::traffic::packet::{Packet, PayloadKind};
+use crate::traffic::packet::{Packet, PayloadKind, HEADER_WORDS};
+
+/// Size-and-kind view of a packet — everything the occupancy and energy
+/// models need, without the addressing fields.  Lets the SoA trace
+/// replay ([`crate::exec::TraceBuffer`]) drive the link model from
+/// packed columns instead of reconstructing [`Packet`]s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlitView {
+    pub kind: PayloadKind,
+    /// Payload length in 32-bit words (excluding header).
+    pub payload_words: u32,
+}
+
+impl FlitView {
+    #[inline]
+    pub fn of(pkt: &Packet) -> FlitView {
+        FlitView { kind: pkt.kind, payload_words: pkt.payload_words }
+    }
+
+    #[inline]
+    pub fn total_words(&self) -> u32 {
+        self.payload_words + HEADER_WORDS
+    }
+
+    #[inline]
+    pub fn total_bits(&self) -> u64 {
+        self.total_words() as u64 * 32
+    }
+}
 
 /// Static per-waveguide context for energy computation.
 pub struct LinkContext<'a> {
@@ -34,7 +62,13 @@ fn bits_per_cycle(p: &PhotonicParams, m: Modulation) -> u32 {
 /// Waveguide occupancy in cycles: 1 receiver-selection cycle plus
 /// serialization of header + payload.
 pub fn packet_occupancy_cycles(pkt: &Packet, p: &PhotonicParams, m: Modulation) -> u64 {
-    let bits = pkt.total_bits();
+    flit_occupancy_cycles(FlitView::of(pkt), p, m)
+}
+
+/// [`packet_occupancy_cycles`] over a [`FlitView`] (the replay hot path).
+#[inline]
+pub fn flit_occupancy_cycles(v: FlitView, p: &PhotonicParams, m: Modulation) -> u64 {
+    let bits = v.total_bits();
     let bpc = bits_per_cycle(p, m) as u64;
     1 + bits.div_ceil(bpc)
 }
@@ -57,6 +91,16 @@ fn masked_lambdas(mask: u32, p: &PhotonicParams, m: Modulation) -> u32 {
 pub fn packet_energy(
     ctx: &LinkContext,
     pkt: &Packet,
+    decision: &Decision,
+    electrical_hops: u32,
+) -> EnergyBreakdown {
+    flit_energy(ctx, FlitView::of(pkt), decision, electrical_hops)
+}
+
+/// [`packet_energy`] over a [`FlitView`] (the replay hot path).
+pub fn flit_energy(
+    ctx: &LinkContext,
+    pkt: FlitView,
     decision: &Decision,
     electrical_hops: u32,
 ) -> EnergyBreakdown {
@@ -125,6 +169,16 @@ pub fn packet_energy(
 pub fn electrical_packet_energy(
     energy: &EnergyParams,
     pkt: &Packet,
+    electrical_hops: u32,
+) -> EnergyBreakdown {
+    electrical_flit_energy(energy, FlitView::of(pkt), electrical_hops)
+}
+
+/// [`electrical_packet_energy`] over a [`FlitView`].
+#[inline]
+pub fn electrical_flit_energy(
+    energy: &EnergyParams,
+    pkt: FlitView,
     electrical_hops: u32,
 ) -> EnergyBreakdown {
     let words = pkt.total_words() as f64;

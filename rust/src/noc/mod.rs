@@ -9,5 +9,8 @@
 pub mod linkmodel;
 pub mod sim;
 
-pub use linkmodel::{packet_energy, packet_occupancy_cycles, LinkContext};
+pub use linkmodel::{
+    flit_energy, flit_occupancy_cycles, packet_energy, packet_occupancy_cycles, FlitView,
+    LinkContext,
+};
 pub use sim::{SimReport, Simulator};

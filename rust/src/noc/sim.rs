@@ -6,17 +6,30 @@
 //! latencies at both ends, and charge the full energy model.  Decisions
 //! are recomputed through the same [`GwiDecisionEngine`] the live channel
 //! used, so the replay is exact.
+//!
+//! §Perf: the hot path is [`Simulator::replay`], which streams a packed
+//! structure-of-arrays [`TraceBuffer`] (routing resolved once at record
+//! time) against a shared [`DecisionTable`] — no per-packet `route()`
+//! recomputation, no per-run table rebuild when the caller memoizes
+//! tables (see [`crate::exec`]), and no allocations inside the loop.
+//! [`Simulator::run`] keeps the historical AoS entry point by packing
+//! and delegating.
 
 use crate::approx::policy::{Policy, TransferMode};
-use crate::coordinator::gwi::{Decision, GwiDecisionEngine};
+use crate::coordinator::gwi::{Decision, DecisionTable, GwiDecisionEngine};
 use crate::energy::breakdown::EnergyBreakdown;
 use crate::energy::params::EnergyParams;
+use crate::exec::trace_buf::{TraceBuffer, FLAG_APPROX, FLAG_PHOTONIC};
 use crate::traffic::trace::TraceRecord;
-use crate::util::stats::Welford;
+use crate::util::stats::{CycleHistogram, Welford};
 
 use super::linkmodel::{
-    electrical_packet_energy, packet_energy, packet_occupancy_cycles, LinkContext,
+    electrical_flit_energy, flit_energy, flit_occupancy_cycles, FlitView, LinkContext,
 };
+
+/// Most clusters any supported topology has (the replay keeps waveguide
+/// state in a fixed stack array to stay allocation-free).
+const MAX_CLUSTERS: usize = 64;
 
 /// Simulation results for one (trace, policy) run.
 #[derive(Clone, Debug)]
@@ -27,11 +40,16 @@ pub struct SimReport {
     pub cycles: u64,
     pub energy: EnergyBreakdown,
     pub latency: Welford,
+    /// Real 95th-percentile latency in cycles (nearest-rank from an
+    /// exact low-range histogram; 0 for an empty trace).
+    pub latency_p95: f64,
     pub reduced_packets: u64,
     pub truncated_packets: u64,
-    /// Time-averaged electrical laser power, mW (Fig. 8b).
+    /// Time-averaged electrical laser power, mW (Fig. 8b); 0 (not NaN)
+    /// for an empty trace.
     pub avg_laser_mw: f64,
-    /// Energy per delivered bit, pJ/bit (Fig. 8a).
+    /// Energy per delivered bit, pJ/bit (Fig. 8a); 0 (not NaN) for an
+    /// empty trace.
     pub epb_pj: f64,
 }
 
@@ -46,7 +64,7 @@ impl SimReport {
             self.epb_pj,
             self.avg_laser_mw,
             self.latency.mean(),
-            self.latency.mean() + 2.0 * self.latency.std_dev(),
+            self.latency_p95,
             self.reduced_packets,
             self.truncated_packets,
         )
@@ -64,45 +82,54 @@ impl<'a> Simulator<'a> {
         Simulator { engine, energy_params: EnergyParams::default() }
     }
 
-    /// Replay `trace` under `policy`.
+    /// Replay an AoS `trace` under `policy` (packs a [`TraceBuffer`] and
+    /// builds the decision table; sweeps should pack/memoize once and
+    /// call [`Simulator::replay`] directly).
     pub fn run(&self, trace: &[TraceRecord], policy: &Policy) -> SimReport {
-        let topo = &self.engine.topo;
+        let buf = TraceBuffer::from_records(&self.engine.topo, trace);
+        let table = DecisionTable::build(self.engine, policy);
+        self.replay(&buf, policy, &table)
+    }
+
+    /// Replay a packed trace against a prebuilt decision table.  The hot
+    /// loop performs no allocation and no routing work.
+    pub fn replay(
+        &self,
+        buf: &TraceBuffer,
+        policy: &Policy,
+        decisions: &DecisionTable,
+    ) -> SimReport {
         let p = &self.engine.params;
         let m = self.engine.waveguides.modulation;
-        let n_clusters = topo.n_clusters;
+        let n_clusters = self.engine.topo.n_clusters;
+        assert!(n_clusters <= MAX_CLUSTERS, "topology too large for replay state");
+        assert!(decisions.n_clusters() >= n_clusters, "decision table too small");
         // Per-source-cluster waveguide next-free time.
-        let mut wg_free = vec![0u64; n_clusters];
-        // Decisions are pure in (policy, src, dst): precompute the 8x8
-        // table once instead of re-deriving link budgets per packet
-        // (§Perf: ~1.4x on replay throughput).
-        let mut decisions = vec![vec![Decision::FULL; n_clusters]; n_clusters];
-        for (s, row) in decisions.iter_mut().enumerate() {
-            for (d, slot) in row.iter_mut().enumerate() {
-                if s != d {
-                    *slot = self.engine.decide(policy, s, d);
-                }
-            }
-        }
+        let mut wg_free = [0u64; MAX_CLUSTERS];
         let mut energy = EnergyBreakdown::default();
         let mut latency = Welford::new();
+        let mut hist = CycleHistogram::new();
         let mut last_finish = 0u64;
         let mut photonic = 0u64;
         let mut reduced = 0u64;
         let mut truncated = 0u64;
+        let loss_aware = policy.loss_aware();
+        let lut_access_pj = self.energy_params.lut_access_pj;
+        let lut_latency = self.energy_params.lut_latency_cycles;
 
-        for rec in trace {
-            let pkt = &rec.packet;
-            let sc = topo.cluster_of(pkt.src);
-            let dc = topo.cluster_of(pkt.dst);
-            let (el_hops, uses_photonic) = topo.route(pkt.src, pkt.dst);
-            // Electrical hops split across source and destination side.
-            let src_el = (el_hops / 2) as u64;
-            let dst_el = (el_hops - el_hops / 2) as u64;
+        for i in 0..buf.len() {
+            let inject = buf.inject_cycle[i];
+            let flags = buf.flags[i];
+            let el_hops = buf.el_hops[i] as u32;
+            let view = FlitView { kind: buf.kind[i], payload_words: buf.payload_words[i] };
 
-            let finish = if uses_photonic {
+            let finish = if flags & FLAG_PHOTONIC != 0 {
                 photonic += 1;
+                let sc = buf.src_cluster[i] as usize;
+                let dc = buf.dst_cluster[i] as usize;
+                let approximable = flags & FLAG_APPROX != 0;
                 let decision =
-                    if pkt.approximable { decisions[sc][dc] } else { Decision::FULL };
+                    if approximable { *decisions.get(sc, dc) } else { Decision::FULL };
                 match decision.mode {
                     TransferMode::Reduced { .. } => reduced += 1,
                     TransferMode::Truncated => truncated += 1,
@@ -114,46 +141,61 @@ impl<'a> Simulator<'a> {
                     provisioning: &self.engine.waveguides.provisioning[sc],
                     n_reader_banks: (n_clusters - 1) as u32,
                 };
-                let mut pe = packet_energy(&ctx, pkt, &decision, el_hops);
-                if policy.loss_aware() && pkt.approximable {
-                    pe.lut_pj += self.energy_params.lut_access_pj;
+                let mut pe = flit_energy(&ctx, view, &decision, el_hops);
+                if loss_aware && approximable {
+                    pe.lut_pj += lut_access_pj;
                 }
                 energy.add(&pe);
+                // Electrical hops split across source and destination side.
+                let src_el = (el_hops / 2) as u64;
+                let dst_el = (el_hops - el_hops / 2) as u64;
                 // Queue on the source waveguide.
-                let ready = rec.inject_cycle + src_el;
+                let ready = inject + src_el;
                 let start = ready.max(wg_free[sc]);
-                let occupancy = packet_occupancy_cycles(pkt, p, m);
+                let occupancy = flit_occupancy_cycles(view, p, m);
                 wg_free[sc] = start + occupancy;
                 let mut f = start + occupancy + dst_el;
-                if policy.loss_aware() && pkt.approximable {
-                    f += self.energy_params.lut_latency_cycles;
+                if loss_aware && approximable {
+                    f += lut_latency;
                 }
                 f
             } else {
-                energy.add(&electrical_packet_energy(&self.energy_params, pkt, el_hops));
-                rec.inject_cycle + (el_hops as u64).max(1)
+                energy.add(&electrical_flit_energy(&self.energy_params, view, el_hops));
+                inject + (el_hops as u64).max(1)
             };
-            latency.push((finish - rec.inject_cycle) as f64);
+            let lat = finish - inject;
+            latency.push(lat as f64);
+            hist.push(lat);
             last_finish = last_finish.max(finish);
         }
 
         // Static lookup-table power over the whole run (loss-aware only).
-        if policy.loss_aware() {
+        if loss_aware {
             energy.lut_pj += self
                 .energy_params
                 .mw_cycles_to_pj(self.energy_params.lut_static_mw_total, last_finish);
         }
 
         let cycle_ns = self.energy_params.cycle_ns();
+        // Empty traces deliver no bits and span no cycles: report zeros
+        // so every SimReport field is finite.
+        let avg_laser_mw = if last_finish == 0 {
+            0.0
+        } else {
+            energy.avg_laser_power_mw(last_finish, cycle_ns)
+        };
+        let epb_pj = if energy.bits_delivered == 0 { 0.0 } else { energy.epb_pj() };
+        let latency_p95 = if hist.total() == 0 { 0.0 } else { hist.quantile(0.95) };
         SimReport {
             policy_name: policy.kind.name(),
-            packets: trace.len() as u64,
+            packets: buf.len() as u64,
             photonic_packets: photonic,
             cycles: last_finish,
-            avg_laser_mw: energy.avg_laser_power_mw(last_finish.max(1), cycle_ns),
-            epb_pj: energy.epb_pj(),
+            avg_laser_mw,
+            epb_pj,
             energy,
             latency,
+            latency_p95,
             reduced_packets: reduced,
             truncated_packets: truncated,
         }
@@ -238,6 +280,7 @@ mod tests {
         let rl = sim.run(&light, &p);
         let rh = sim.run(&heavy, &p);
         assert!(rh.latency.mean() > rl.latency.mean());
+        assert!(rh.latency_p95 > rl.latency_p95);
     }
 
     #[test]
@@ -250,15 +293,53 @@ mod tests {
         let b = sim.run(&t, &p);
         assert_eq!(a.cycles, b.cycles);
         assert!((a.energy.total_pj() - b.energy.total_pj()).abs() < 1e-9);
+        assert_eq!(a.latency_p95, b.latency_p95);
     }
 
     #[test]
-    fn empty_trace_yields_empty_report() {
+    fn p95_is_a_real_quantile() {
+        let e = engine(Modulation::Ook);
+        let sim = Simulator::new(&e);
+        let t = trace();
+        let r = sim.run(&t, &Policy::new(PolicyKind::Baseline, "fft"));
+        // A genuine order statistic sits inside the observed range and at
+        // or above the median — unlike the old mean + 2σ proxy, which
+        // could exceed the maximum.
+        assert!(r.latency_p95 >= r.latency.min(), "{} < min", r.latency_p95);
+        assert!(r.latency_p95 <= r.latency.max(), "{} > max", r.latency_p95);
+        assert!(r.latency_p95 >= 1.0);
+        assert!(r.summary().contains("p95"));
+    }
+
+    #[test]
+    fn prebuilt_table_replay_matches_run() {
+        let e = engine(Modulation::Ook);
+        let sim = Simulator::new(&e);
+        let t = trace();
+        let p = Policy::new(PolicyKind::LoraxOok, "blackscholes");
+        let via_run = sim.run(&t, &p);
+        let buf = TraceBuffer::from_records(&e.topo, &t);
+        let table = DecisionTable::build(&e, &p);
+        let via_replay = sim.replay(&buf, &p, &table);
+        assert_eq!(via_run.cycles, via_replay.cycles);
+        assert_eq!(via_run.packets, via_replay.packets);
+        assert_eq!(via_run.reduced_packets, via_replay.reduced_packets);
+        assert_eq!(via_run.truncated_packets, via_replay.truncated_packets);
+        assert_eq!(via_run.energy.total_pj(), via_replay.energy.total_pj());
+        assert_eq!(via_run.latency_p95, via_replay.latency_p95);
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_finite_report() {
         let e = engine(Modulation::Ook);
         let sim = Simulator::new(&e);
         let r = sim.run(&[], &Policy::new(PolicyKind::Baseline, "fft"));
         assert_eq!(r.packets, 0);
         assert_eq!(r.cycles, 0);
-        assert!(r.epb_pj.is_nan());
+        assert_eq!(r.epb_pj, 0.0);
+        assert_eq!(r.avg_laser_mw, 0.0);
+        assert_eq!(r.latency_p95, 0.0);
+        assert!(r.epb_pj.is_finite() && r.avg_laser_mw.is_finite());
+        assert!(r.summary().contains("pkts=0"));
     }
 }

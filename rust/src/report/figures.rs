@@ -9,25 +9,30 @@ use anyhow::Result;
 
 use crate::approx::channel::{Channel, IdentityChannel};
 use crate::approx::policy::{paper_table3, AppTuning, PolicyKind};
-use crate::approx::tuning::{select_tuning, sweep_app, SensitivitySurface};
+use crate::approx::tuning::{select_tuning, SensitivitySurface};
 use crate::apps::{by_name_scaled, ALL_APPS, EVALUATED_APPS};
 use crate::config::SystemConfig;
 use crate::coordinator::system::{AppRunReport, LoraxSystem};
+use crate::exec::{AppScenario, SweepGrid, SweepRunner};
 
 use super::table::Table;
 
-/// Fig. 2 — float/int packet characterization across applications.
+/// Fig. 2 — float/int packet characterization across applications
+/// (engines run in parallel; rows stay in `ALL_APPS` order).
 pub fn fig2_characterization(cfg: &SystemConfig) -> Result<Table> {
     let mut t = Table::new(
         "Fig. 2 — ACCEPT benchmark characterization (packets by payload kind)",
         &["app", "float pkts", "int pkts", "control", "float frac"],
     );
-    for app in ALL_APPS {
-        let w = by_name_scaled(app, cfg.seed, cfg.scale)
-            .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    let runner = SweepRunner::new();
+    let profiles = runner.map(&ALL_APPS, |_, app| {
+        let w = by_name_scaled(app, cfg.seed, cfg.scale)?;
         let mut ch = IdentityChannel::new();
         w.run(&mut ch);
-        let p = ch.stats().profile;
+        Some(ch.stats().profile)
+    });
+    for (app, prof) in ALL_APPS.iter().zip(profiles) {
+        let p = prof.ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
         t.row(&[
             app.to_string(),
             p.float_packets.to_string(),
@@ -39,8 +44,20 @@ pub fn fig2_characterization(cfg: &SystemConfig) -> Result<Table> {
     Ok(t)
 }
 
-/// Fig. 6 — sensitivity surfaces (one per evaluated app).
+/// Fig. 6 — sensitivity surfaces (one per evaluated app), grid points
+/// fanned across threads by the sweep engine.
 pub fn fig6_surfaces(
+    cfg: &SystemConfig,
+    apps: &[&str],
+    bits_axis: &[u32],
+    reduction_axis: &[u32],
+) -> Vec<SensitivitySurface> {
+    fig6_surfaces_with(&SweepRunner::new(), cfg, apps, bits_axis, reduction_axis)
+}
+
+/// [`fig6_surfaces`] on a caller-configured runner (`--jobs`).
+pub fn fig6_surfaces_with(
+    runner: &SweepRunner,
     cfg: &SystemConfig,
     apps: &[&str],
     bits_axis: &[u32],
@@ -49,7 +66,7 @@ pub fn fig6_surfaces(
     let sys = LoraxSystem::new(cfg);
     apps.iter()
         .map(|app| {
-            sweep_app(
+            runner.sweep_surface(
                 &sys.ook,
                 app,
                 PolicyKind::LoraxOok,
@@ -122,18 +139,29 @@ pub fn run_frameworks(sys: &LoraxSystem, app: &str) -> Result<Vec<AppRunReport>>
 
 /// Fig. 8(a)+(b) — EPB and laser power across frameworks and apps.
 /// Returns (epb_table, laser_table, all_reports).
+///
+/// The full app × framework grid runs through the sweep engine (results
+/// identical to the serial nested loops it replaced, row order
+/// preserved).
 pub fn fig8_comparison(
     cfg: &SystemConfig,
 ) -> Result<(Table, Table, Vec<Vec<AppRunReport>>)> {
-    let sys = LoraxSystem::new(cfg);
     let framework_names: Vec<&str> = PolicyKind::ALL.iter().map(|k| k.name()).collect();
     let mut epb_header = vec!["app"];
     epb_header.extend(framework_names.iter());
     let mut epb = Table::new("Fig. 8a — energy-per-bit (pJ/bit)", &epb_header);
     let mut laser = Table::new("Fig. 8b — average laser power (mW)", &epb_header);
+
+    let scenarios: Vec<AppScenario> =
+        SweepGrid::new().apps(&EVALUATED_APPS).policies(&PolicyKind::ALL).scenarios();
+    let runner = SweepRunner::new();
+    let mut results = runner.run_apps(cfg, &scenarios).into_iter();
     let mut all = Vec::new();
     for app in EVALUATED_APPS {
-        let reports = run_frameworks(&sys, app)?;
+        let mut reports = Vec::with_capacity(PolicyKind::ALL.len());
+        for _ in PolicyKind::ALL {
+            reports.push(results.next().expect("scenario/result arity")?);
+        }
         let mut epb_row = vec![app.to_string()];
         let mut laser_row = vec![app.to_string()];
         for r in &reports {
@@ -182,7 +210,11 @@ pub fn fig7_jpeg(cfg: &SystemConfig, outdir: &std::path::Path) -> Result<Table> 
         "0.000".to_string(),
         "fig7_a_golden_codec.pgm".to_string(),
     ]);
-    for (panel, bits) in [("b", 24u32), ("c", 28), ("d", 32)] {
+    // The three approximation panels are independent runs of the jpeg
+    // engine — fan them out, then write files and rows in panel order.
+    let panels = [("b", 24u32), ("c", 28), ("d", 32)];
+    let runner = SweepRunner::new();
+    let recons = runner.map(&panels, |_, &(_, bits)| {
         let tuning = AppTuning { approx_bits: bits, power_reduction_pct: 77, trunc_bits: bits };
         let policy = crate::approx::policy::Policy::with_tuning(PolicyKind::LoraxOok, tuning);
         let engine = sys.engine_for(PolicyKind::LoraxOok);
@@ -192,7 +224,9 @@ pub fn fig7_jpeg(cfg: &SystemConfig, outdir: &std::path::Path) -> Result<Table> 
             crate::coordinator::channel::NativeCorruptor,
             cfg.seed as u32,
         );
-        let recon = jpeg.run(&mut ch);
+        jpeg.run(&mut ch)
+    });
+    for ((panel, bits), recon) in panels.iter().zip(recons) {
         let file = format!("fig7_{panel}_{bits}lsb_77red.pgm");
         Jpeg::write_pgm(&outdir.join(&file), &recon, side)?;
         t.row(&[

@@ -8,11 +8,25 @@
 //! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT pieces ([`client`], [`channel_exec`]) sit behind the `xla`
+//! cargo feature; without it, [`XlaCorruptor`] is a stub whose
+//! constructor errors, so `cargo build && cargo test` pass with no
+//! xla_extension install.  Artifact discovery ([`artifacts`]) is
+//! dependency-free and always available.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod channel_exec;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
 
 pub use artifacts::{artifacts_dir, Manifest};
+#[cfg(feature = "xla")]
 pub use channel_exec::XlaCorruptor;
+#[cfg(feature = "xla")]
 pub use client::Runtime;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaCorruptor;

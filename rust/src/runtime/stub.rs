@@ -1,0 +1,49 @@
+//! Stub [`XlaCorruptor`] for builds without the `xla` cargo feature.
+//!
+//! Keeps every call site (CLI `--xla` / `verify-bridge`, benches,
+//! examples) compiling without PJRT: construction reports a clear error
+//! instead of linking against xla_extension.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::channel::Corruptor;
+
+/// Placeholder for the AOT/PJRT-backed corruptor.  [`XlaCorruptor::new`]
+/// always errors; the `batches` field stays `pub` to mirror the real
+/// type's surface, so a hand-constructed literal is possible — using
+/// one panics with the same rebuild hint instead of corrupting data.
+pub struct XlaCorruptor {
+    /// Batches executed (mirrors the real corruptor's perf counter).
+    pub batches: u64,
+}
+
+const REBUILD_HINT: &str = "built without the `xla` feature: rebuild with \
+     `cargo build --features xla` (requires xla_extension) to run the \
+     AOT/PJRT channel";
+
+impl XlaCorruptor {
+    pub fn new() -> Result<XlaCorruptor> {
+        bail!("{REBUILD_HINT}")
+    }
+}
+
+impl Corruptor for XlaCorruptor {
+    fn corrupt_words(&mut self, _: &mut [u32], _: u32, _: u32, _: u32, _: u32) {
+        panic!("XlaCorruptor stub cannot corrupt: {REBUILD_HINT}")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_errors_helpfully() {
+        let e = XlaCorruptor::new().err().expect("stub must not construct");
+        assert!(format!("{e}").contains("xla"));
+    }
+}

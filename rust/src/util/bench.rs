@@ -53,6 +53,103 @@ impl BenchResult {
     }
 }
 
+impl BenchResult {
+    /// Machine-readable record of this result (one JSON object).
+    pub fn to_json(&self, items_per_iter: f64, unit: &str) -> String {
+        let mean = self.mean_s();
+        let rate =
+            if mean > 0.0 && items_per_iter > 0.0 { items_per_iter / mean } else { 0.0 };
+        format!(
+            "{{\"name\":{:?},\"iters\":{},\"mean_s\":{},\"min_s\":{},\"max_s\":{},\
+             \"items_per_iter\":{},\"unit\":{:?},\"rate_per_s\":{}}}\n",
+            self.name,
+            self.iters,
+            json_f64(mean),
+            json_f64(self.min_s()),
+            json_f64(self.max_s()),
+            json_f64(items_per_iter),
+            unit,
+            json_f64(rate),
+        )
+    }
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Directory for `BENCH_*.json` records: `$LORAX_BENCH_JSON_DIR`,
+/// default `bench_out/`.
+pub fn bench_json_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("LORAX_BENCH_JSON_DIR").unwrap_or_else(|_| "bench_out".to_string()),
+    )
+}
+
+/// Write `BENCH_<slug>.json` for one result so future PRs can track the
+/// perf trajectory; returns the path written.
+pub fn write_json(
+    r: &BenchResult,
+    items_per_iter: f64,
+    unit: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    write_json_payload(&r.name, &r.to_json(items_per_iter, unit))
+}
+
+/// Write an arbitrary pre-rendered JSON payload as `BENCH_<slug>.json`.
+pub fn write_json_payload(name: &str, payload: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = bench_json_dir();
+    std::fs::create_dir_all(&dir)?;
+    let mut slug: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    slug.truncate(80);
+    let path = dir.join(format!("BENCH_{slug}.json"));
+    std::fs::write(&path, payload)?;
+    Ok(path)
+}
+
+/// Print the human report line and drop the JSON record (best-effort:
+/// an unwritable directory only warns).
+pub fn report_and_record(r: &BenchResult, items_per_iter: f64, unit: &str) {
+    println!("{}", r.report(items_per_iter, unit));
+    if let Err(e) = write_json(r, items_per_iter, unit) {
+        eprintln!("warning: could not write bench json for {:?}: {e}", r.name);
+    }
+}
+
+/// Print and record a baseline-vs-improved comparison as
+/// `BENCH_<name>_speedup.json` (single shared schema so the perf
+/// trajectory consumers never special-case a bench).  `threads` is 0
+/// for single-threaded (e.g. kernel) comparisons.
+pub fn record_speedup(
+    name: &str,
+    baseline_s: f64,
+    improved_s: f64,
+    threads: usize,
+    items: usize,
+) -> f64 {
+    let speedup = if improved_s > 0.0 { baseline_s / improved_s } else { 0.0 };
+    println!("  -> {name} speedup: {speedup:.2}x");
+    let payload = format!(
+        "{{\"name\":{:?},\"baseline_s\":{},\"improved_s\":{},\"speedup\":{},\
+         \"threads\":{threads},\"items\":{items}}}\n",
+        format!("{name}-speedup"),
+        json_f64(baseline_s),
+        json_f64(improved_s),
+        json_f64(speedup),
+    );
+    if let Err(e) = write_json_payload(&format!("{name} speedup"), &payload) {
+        eprintln!("warning: could not write speedup json for {name:?}: {e}");
+    }
+    speedup
+}
+
 fn human_rate(rate: f64) -> String {
     if rate >= 1e9 {
         format!("{:.2}G", rate / 1e9)
@@ -105,6 +202,17 @@ mod tests {
         let line = r.report(10_000.0, "ops");
         assert!(line.contains("spin"));
         assert!(line.contains("ops/s"));
+    }
+
+    #[test]
+    fn json_record_shape() {
+        let r = BenchResult { name: "native:x".into(), iters: 2, secs: vec![0.5, 0.5] };
+        let j = r.to_json(100.0, "words");
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"name\":\"native:x\""));
+        assert!(j.contains("\"unit\":\"words\""));
+        assert!(j.contains("\"rate_per_s\":200"));
+        assert!(j.contains("\"items_per_iter\":100"));
     }
 
     #[test]

@@ -106,6 +106,121 @@ pub fn trimmed_mean(xs: &[f64], trim: f64) -> f64 {
     kept.iter().sum::<f64>() / kept.len() as f64
 }
 
+/// Exact low-range counts for [`CycleHistogram`]; latencies below this
+/// resolve quantiles exactly.
+const EXACT_CYCLES: usize = 1024;
+/// log2 of [`EXACT_CYCLES`] (first octave of the coarse range).
+const EXACT_LOG2: u32 = 10;
+/// Sub-buckets per octave in the coarse range (HDR-histogram style):
+/// tail quantiles resolve to within `2^-SUB_BITS` (~3%) of the value.
+const SUB_BITS: u32 = 5;
+const COARSE_BUCKETS: usize = ((64 - EXACT_LOG2) as usize) << SUB_BITS;
+
+/// Streaming histogram over non-negative integer cycle counts, built for
+/// the simulator's latency quantiles: values below [`EXACT_CYCLES`] are
+/// counted exactly (one slot per cycle), larger values land in
+/// log-linear buckets (32 per octave, ≤3.2% relative error), and every
+/// quantile is clamped into the observed `[min, max]` range so order
+/// statistics never fall outside the data.  Fixed-size inline storage —
+/// pushing never allocates, so the replay hot loop stays
+/// allocation-free.
+#[derive(Clone)]
+pub struct CycleHistogram {
+    exact: [u64; EXACT_CYCLES],
+    coarse: [u64; COARSE_BUCKETS],
+    total: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for CycleHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Coarse-bucket index for `v >= EXACT_CYCLES`.
+#[inline]
+fn coarse_index(v: u64) -> usize {
+    let exp = 63 - v.leading_zeros(); // >= EXACT_LOG2
+    let sub = ((v >> (exp - SUB_BITS)) & ((1 << SUB_BITS) - 1)) as usize;
+    (((exp - EXACT_LOG2) as usize) << SUB_BITS) + sub
+}
+
+/// Lower bound of coarse bucket `idx` (inverse of [`coarse_index`]).
+#[inline]
+fn coarse_lower_bound(idx: usize) -> u64 {
+    let exp = EXACT_LOG2 + (idx >> SUB_BITS) as u32;
+    let sub = (idx & ((1 << SUB_BITS) - 1)) as u64;
+    (1u64 << exp) + (sub << (exp - SUB_BITS))
+}
+
+impl CycleHistogram {
+    pub fn new() -> Self {
+        CycleHistogram {
+            exact: [0; EXACT_CYCLES],
+            coarse: [0; COARSE_BUCKETS],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, v: u64) {
+        // Range check in u64 before any narrowing cast (a `v as usize`
+        // first would truncate on 32-bit targets).
+        if v < EXACT_CYCLES as u64 {
+            self.exact[v as usize] += 1;
+        } else {
+            self.coarse[coarse_index(v)] += 1;
+        }
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Nearest-rank quantile (`⌈q·n⌉`-th smallest value), `q` in
+    /// `[0, 1]`.  Exact for values below [`EXACT_CYCLES`]; above,
+    /// resolves to the log-linear bucket's lower bound (≤3.2% low),
+    /// clamped into the observed `[min, max]`.  `NaN` when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        // Standard nearest-rank: 1-indexed rank ⌈q·n⌉, so 0-indexed
+        // rank ⌈q·n⌉-1 (q=0 maps to the minimum).  The product is
+        // nudged down by a relative epsilon so binary rounding (e.g.
+        // 0.95·100 = 95.00000000000001) cannot push an exact product
+        // past its ceiling.
+        let product = q.clamp(0.0, 1.0) * self.total as f64 * (1.0 - 1e-12);
+        let rank = (product.ceil() as u64).saturating_sub(1).min(self.total - 1);
+        let mut seen = 0u64;
+        let mut value = self.max;
+        'scan: {
+            for (v, &c) in self.exact.iter().enumerate() {
+                seen += c;
+                if seen > rank {
+                    value = v as u64;
+                    break 'scan;
+                }
+            }
+            for (b, &c) in self.coarse.iter().enumerate() {
+                seen += c;
+                if seen > rank {
+                    value = coarse_lower_bound(b);
+                    break 'scan;
+                }
+            }
+        }
+        value.clamp(self.min, self.max) as f64
+    }
+}
+
 /// Fixed-width histogram over `[lo, hi)` with out-of-range clamping.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -201,6 +316,54 @@ mod tests {
         let xs = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 100.0, -50.0];
         let tm = trimmed_mean(&xs, 0.1);
         assert!((tm - 1.0).abs() < 1e-9, "tm={tm}");
+    }
+
+    #[test]
+    fn cycle_histogram_exact_quantiles() {
+        let mut h = CycleHistogram::new();
+        for v in 1..=100u64 {
+            h.push(v);
+        }
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert_eq!(h.quantile(0.95), 95.0);
+        assert_eq!(h.quantile(0.5), 50.0); // ceil(0.5 * 100) = 50th smallest
+    }
+
+    #[test]
+    fn cycle_histogram_tail_resolves_within_bucket_error() {
+        let mut h = CycleHistogram::new();
+        h.push(5000); // clamped to the observed singleton
+        assert_eq!(h.quantile(0.5), 5000.0);
+        h.push(10);
+        assert_eq!(h.quantile(0.0), 10.0);
+        // Tail bucket lower bound: 4096 + 7*128 = 4992 (within 3.2%).
+        assert_eq!(h.quantile(1.0), 4992.0);
+    }
+
+    #[test]
+    fn cycle_histogram_quantiles_stay_inside_observed_range() {
+        // All-tail distribution: quantiles must never fall below the
+        // observed minimum (the old power-of-two lower bound did).
+        let mut h = CycleHistogram::new();
+        for _ in 0..100 {
+            h.push(1500);
+        }
+        assert_eq!(h.quantile(0.95), 1500.0);
+        let mut h = CycleHistogram::new();
+        for v in [1500u64, 1600, 1700, 2_000_000] {
+            h.push(v);
+        }
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            let x = h.quantile(q);
+            assert!((1500.0..=2_000_000.0).contains(&x), "q={q} x={x}");
+        }
+    }
+
+    #[test]
+    fn cycle_histogram_empty_is_nan() {
+        assert!(CycleHistogram::new().quantile(0.95).is_nan());
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Integration: the parallel sweep engine against the serial reference
+//! paths — the determinism acceptance criteria of the exec subsystem.
+//!
+//! * parallel Fig.-6 surfaces == serial `sweep_app`, point for point;
+//! * app sweeps are independent of thread count;
+//! * SoA replay with a memoized decision table == `Simulator::run`;
+//! * synthetic sweeps are independent of thread count.
+
+use lorax::approx::policy::{Policy, PolicyKind};
+use lorax::approx::tuning::sweep_app;
+use lorax::config::SystemConfig;
+use lorax::coordinator::{DecisionTable, GwiDecisionEngine, LoraxSystem};
+use lorax::exec::{synth_stress_grid, SweepGrid, SweepRunner, TraceBuffer};
+use lorax::noc::sim::Simulator;
+use lorax::phys::params::{Modulation, PhotonicParams};
+use lorax::topology::clos::ClosTopology;
+use lorax::traffic::synth::{generate, SynthConfig};
+
+fn engine() -> GwiDecisionEngine {
+    GwiDecisionEngine::new(
+        ClosTopology::default_64core(),
+        PhotonicParams::default(),
+        Modulation::Ook,
+    )
+}
+
+#[test]
+fn parallel_surface_matches_serial_sweep_app() {
+    let e = engine();
+    let (seed, scale) = (3u64, 0.02);
+    let bits = [8u32, 32];
+    let reds = [0u32, 80, 100];
+    let serial = sweep_app(&e, "sobel", PolicyKind::LoraxOok, seed, scale, &bits, &reds);
+    for threads in [1usize, 4] {
+        let par = SweepRunner::with_threads(threads).sweep_surface(
+            &e,
+            "sobel",
+            PolicyKind::LoraxOok,
+            seed,
+            scale,
+            &bits,
+            &reds,
+        );
+        assert_eq!(par.points.len(), serial.points.len());
+        for (a, b) in par.points.iter().zip(serial.points.iter()) {
+            assert_eq!(a.bits, b.bits, "threads={threads}");
+            assert_eq!(a.reduction_pct, b.reduction_pct, "threads={threads}");
+            assert_eq!(
+                a.error_pct, b.error_pct,
+                "threads={threads} point=({}, {})",
+                a.bits, a.reduction_pct
+            );
+        }
+    }
+}
+
+#[test]
+fn app_sweep_independent_of_thread_count() {
+    let cfg = SystemConfig { scale: 0.02, seed: 7, ..Default::default() };
+    let scenarios = SweepGrid::new()
+        .apps(&["sobel", "fft"])
+        .policies(&[PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4])
+        .scenarios();
+    let serial: Vec<_> = SweepRunner::with_threads(1)
+        .run_apps(&cfg, &scenarios)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    let parallel: Vec<_> = SweepRunner::with_threads(3)
+        .run_apps(&cfg, &scenarios)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(parallel.iter()) {
+        assert_eq!(a.app, b.app);
+        assert_eq!(a.policy.kind, b.policy.kind);
+        assert_eq!(a.error_pct, b.error_pct, "{}", a.app);
+        assert_eq!(a.sim.cycles, b.sim.cycles, "{}", a.app);
+        assert_eq!(a.sim.epb_pj, b.sim.epb_pj, "{}", a.app);
+        assert_eq!(a.sim.energy.total_pj(), b.sim.energy.total_pj(), "{}", a.app);
+        assert_eq!(a.sim.latency_p95, b.sim.latency_p95, "{}", a.app);
+    }
+}
+
+#[test]
+fn sweep_matches_standalone_run_app() {
+    // The memoized-table path must reproduce run_app exactly.
+    let cfg = SystemConfig { scale: 0.02, seed: 11, ..Default::default() };
+    let sys = LoraxSystem::new(&cfg);
+    let scenarios =
+        SweepGrid::new().apps(&["sobel"]).policies(&[PolicyKind::LoraxOok]).scenarios();
+    let swept = SweepRunner::with_threads(2)
+        .run_apps_on(&sys, &scenarios)
+        .pop()
+        .unwrap()
+        .unwrap();
+    let direct = sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+    assert_eq!(swept.error_pct, direct.error_pct);
+    assert_eq!(swept.sim.cycles, direct.sim.cycles);
+    assert_eq!(swept.sim.epb_pj, direct.sim.epb_pj);
+    assert_eq!(swept.lut_accesses, direct.lut_accesses);
+}
+
+#[test]
+fn soa_replay_matches_aos_run() {
+    let e = engine();
+    let sim = Simulator::new(&e);
+    let trace = generate(&SynthConfig { cycles: 2500, rate_per_100_cycles: 25, seed: 5, ..Default::default() });
+    for kind in [PolicyKind::Baseline, PolicyKind::Prior16, PolicyKind::LoraxOok] {
+        let p = Policy::new(kind, "blackscholes");
+        let via_run = sim.run(&trace, &p);
+        let buf = TraceBuffer::from_records(&e.topo, &trace);
+        let table = DecisionTable::build(&e, &p);
+        let via_replay = sim.replay(&buf, &p, &table);
+        assert_eq!(via_run.cycles, via_replay.cycles, "{kind:?}");
+        assert_eq!(via_run.energy.total_pj(), via_replay.energy.total_pj(), "{kind:?}");
+        assert_eq!(via_run.reduced_packets, via_replay.reduced_packets, "{kind:?}");
+        assert_eq!(via_run.truncated_packets, via_replay.truncated_packets, "{kind:?}");
+        assert_eq!(via_run.latency_p95, via_replay.latency_p95, "{kind:?}");
+    }
+}
+
+#[test]
+fn synth_sweep_independent_of_thread_count() {
+    let cfg = SystemConfig { scale: 0.02, seed: 9, ..Default::default() };
+    let grid = synth_stress_grid(1500, &[10, 30], &[PolicyKind::Baseline, PolicyKind::LoraxOok], 9);
+    let a = SweepRunner::with_threads(1).run_synth(&cfg, &grid);
+    let b = SweepRunner::with_threads(4).run_synth(&cfg, &grid);
+    assert_eq!(a.len(), b.len());
+    for ((x, y), sc) in a.iter().zip(b.iter()).zip(grid.iter()) {
+        assert_eq!(x.cycles, y.cycles, "{}", sc.label);
+        assert_eq!(x.packets, y.packets, "{}", sc.label);
+        assert_eq!(x.energy.total_pj(), y.energy.total_pj(), "{}", sc.label);
+    }
+}

@@ -1,10 +1,14 @@
 //! Integration: the AOT/PJRT runtime against the native implementations.
+//! Requires the `xla` cargo feature (PJRT + xla_extension); without it
+//! the whole file compiles away.
 //!
 //! These tests require `artifacts/` (run `make artifacts` first); they
 //! prove the three layers compose: Pallas kernel (L1) → JAX graph (L2) →
 //! HLO text → PJRT executable driven from the Rust coordinator (L3),
 //! with bit-exact agreement on the channel and numerical agreement on
 //! the compute graphs.
+
+#![cfg(feature = "xla")]
 
 use lorax::approx::float_bits::{corrupt_f32_words, f64s_to_f32_words, mask_for_lsbs};
 use lorax::coordinator::channel::Corruptor;

@@ -2,7 +2,7 @@
 //! `util::proptest`).  Replay a failing case with
 //! `LORAX_PROPTEST_SEED=<seed> cargo test --test properties`.
 
-use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, mask_for_lsbs};
+use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, corrupt_word_fast, mask_for_lsbs};
 use lorax::approx::policy::{AppTuning, Policy, PolicyKind, TransferMode};
 use lorax::coordinator::GwiDecisionEngine;
 use lorax::phys::laser::{required_laser_power_dbm, LaserProvisioning};
@@ -28,6 +28,31 @@ fn prop_corruption_confined_to_mask() {
         for (a, b) in words.iter().zip(out.iter()) {
             assert_eq!(a & !mask, b & !mask, "bits outside mask changed");
         }
+    });
+}
+
+#[test]
+fn prop_corrupt_word_fast_matches_reference() {
+    // The branch-free word-parallel kernel must be bit-identical to the
+    // reference scalar over randomized masks/thresholds, including the
+    // fast-path corners (0 and ALWAYS thresholds, empty/full masks).
+    check("word-fast-vs-reference", 256, |g| {
+        let w = g.u32();
+        let mask = match g.usize(0, 2) {
+            0 => mask_for_lsbs(g.usize(0, 32) as u32),
+            1 => g.u32(),
+            _ => *g.choose(&[0u32, u32::MAX]),
+        };
+        let random_t = g.u32();
+        let cands = [0u32, 1, 0x0010_0000, 0x2000_0000, ALWAYS - 1, ALWAYS, random_t];
+        let t10 = *g.choose(&cands);
+        let t01 = *g.choose(&cands);
+        let key = make_word_key(g.u32(), g.u32());
+        assert_eq!(
+            corrupt_word_fast(w, mask, t10, t01, key),
+            corrupt_word(w, mask, t10, t01, key),
+            "w={w:#x} mask={mask:#x} t10={t10:#x} t01={t01:#x}"
+        );
     });
 }
 

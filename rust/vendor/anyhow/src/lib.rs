@@ -1,0 +1,184 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! The offline vendor set this repository builds against carries no
+//! error-handling crates, so this shim provides the exact subset of the
+//! real `anyhow` surface the LORAX crate uses:
+//!
+//! * [`Error`] — an opaque, context-stacking error value;
+//! * [`Result`] — `std::result::Result` defaulted to [`Error`];
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Formatting matches the real crate closely enough for CLI use:
+//! `{e}` prints the outermost context, `{e:#}` prints the whole chain
+//! joined by `": "`, `{e:?}` prints the chain with a `Caused by` list.
+
+use std::fmt;
+
+/// Opaque error: a stack of context messages, outermost first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Push an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.msgs[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs[0])?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_stacks_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err()
+            .context("loading system");
+        assert_eq!(format!("{e}"), "loading system");
+        assert_eq!(format!("{e:#}"), "loading system: reading config: gone");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with {}", 42);
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with 42");
+        let e = anyhow!("code {}", 9);
+        assert_eq!(format!("{e}"), "code 9");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "gone");
+    }
+}

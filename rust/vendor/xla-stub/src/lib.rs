@@ -1,0 +1,115 @@
+//! API-compatible **stub** for the `xla` crate (xla-rs).
+//!
+//! The offline vendor set has no PJRT/xla_extension install, so this
+//! crate provides exactly the type/method surface `lorax::runtime` uses,
+//! with every entry point returning a clear runtime error.  It exists so
+//! `cargo build --features xla` type-checks everywhere; to actually
+//! execute the AOT artifacts, point the `xla` dependency in
+//! `rust/Cargo.toml` at the real crate (LaurentMazare's xla-rs) with an
+//! `XLA_EXTENSION_DIR` install — no source changes needed.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (Debug + Display + StdError).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla stub crate (no PJRT); use the real xla crate + xla_extension"
+    ))
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (stub: carries nothing).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer handle returned by executions (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: construction fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surface_errors() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::vec1(&[1u32]).to_tuple().is_err());
+        let e = PjRtBuffer.to_literal_sync().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
