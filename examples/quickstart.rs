@@ -1,5 +1,6 @@
-//! Quickstart: run one application under every framework and print the
-//! paper's headline metrics.
+//! Quickstart: run one application under every framework through the
+//! typed `ExperimentSpec` / `LoraxSession` API and print the paper's
+//! headline metrics.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,12 +9,14 @@
 
 use anyhow::Result;
 use lorax::approx::policy::PolicyKind;
+use lorax::apps::AppId;
 use lorax::config::{Args, SystemConfig};
-use lorax::coordinator::LoraxSystem;
+use lorax::coordinator::LoraxSession;
+use lorax::exec::ExperimentSpec;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let app = args.get_or("app", "blackscholes");
+    let app: AppId = args.get_or("app", "blackscholes").parse()?;
     let cfg = SystemConfig {
         scale: args.get_f64("scale", 0.1)?,
         seed: args.get_u64("seed", 42)?,
@@ -21,11 +24,14 @@ fn main() -> Result<()> {
     };
 
     println!("LORAX quickstart — {app} at scale {}\n", cfg.scale);
-    let sys = LoraxSystem::new(&cfg);
+    // One session owns the shared state: the dataset is synthesized
+    // once, engines are built lazily per modulation, decision tables
+    // are memoized per (policy, tuning).
+    let session = LoraxSession::new(&cfg);
     let mut base_epb = 0.0;
     let mut base_laser = 0.0;
     for kind in PolicyKind::ALL {
-        let r = sys.run_app(&app, kind)?;
+        let r = session.run(&ExperimentSpec::new(app, kind))?;
         if kind == PolicyKind::Baseline {
             base_epb = r.sim.epb_pj;
             base_laser = r.sim.avg_laser_mw;
@@ -37,6 +43,7 @@ fn main() -> Result<()> {
             100.0 * (r.sim.avg_laser_mw / base_laser - 1.0),
         );
     }
-    println!("\nSee `lorax reproduce all` for every table/figure of the paper.");
+    println!("\nSee `lorax run --spec {app}:LORAX-OOK --json` for machine-readable records");
+    println!("and `lorax reproduce all` for every table/figure of the paper.");
     Ok(())
 }

@@ -25,8 +25,8 @@ fn main() -> Result<()> {
 
     let sys = LoraxSystem::new(&cfg);
     println!("sweeping {app} over {}x{} grid...", bits.len(), reds.len());
-    let surface =
-        sweep_app(&sys.ook, &app, PolicyKind::LoraxOok, cfg.seed, cfg.scale, &bits, &reds);
+    let engine = sys.engine_for(PolicyKind::LoraxOok);
+    let surface = sweep_app(engine, &app, PolicyKind::LoraxOok, cfg.seed, cfg.scale, &bits, &reds);
     println!("{}", render_surface(&surface));
 
     let sel = select_tuning(&surface, cfg.error_threshold_pct);

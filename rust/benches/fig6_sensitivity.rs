@@ -12,9 +12,9 @@
 
 use lorax::approx::policy::PolicyKind;
 use lorax::approx::tuning::{BITS_AXIS, REDUCTION_AXIS};
-use lorax::apps::EVALUATED_APPS;
+use lorax::apps::AppId;
 use lorax::config::SystemConfig;
-use lorax::coordinator::LoraxSystem;
+use lorax::coordinator::LoraxSession;
 use lorax::exec::SweepRunner;
 use lorax::report::figures::render_surface;
 use lorax::util::bench::{bench, report_and_record};
@@ -31,7 +31,7 @@ fn main() {
         _ => (vec![8, 16, 24, 32], vec![0, 20, 50, 80, 100]),
     };
     let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
-    let sys = LoraxSystem::new(&cfg);
+    let session = LoraxSession::new(&cfg);
     let runner = SweepRunner::new();
     println!(
         "-- {}x{} grid per app, {} sweep threads --",
@@ -40,32 +40,16 @@ fn main() {
         runner.threads()
     );
 
-    for app in EVALUATED_APPS {
-        let surface = runner.sweep_surface(
-            &sys.ook,
-            app,
-            PolicyKind::LoraxOok,
-            cfg.seed,
-            scale,
-            &bits,
-            &reds,
-        );
+    for app in AppId::EVALUATED {
+        let surface = runner.sweep_surface(&session, app, PolicyKind::LoraxOok, &bits, &reds);
         println!("{}", render_surface(&surface));
     }
 
     println!("-- full-surface sweep cost per app --");
     let cells = bits.len() * reds.len();
-    for app in EVALUATED_APPS {
+    for app in AppId::EVALUATED {
         let r = bench(&format!("fig6-surface:{app}"), 0, 2, || {
-            let s = runner.sweep_surface(
-                &sys.ook,
-                app,
-                PolicyKind::LoraxOok,
-                cfg.seed,
-                scale,
-                &bits,
-                &reds,
-            );
+            let s = runner.sweep_surface(&session, app, PolicyKind::LoraxOok, &bits, &reds);
             assert_eq!(s.points.len(), cells);
         });
         report_and_record(&r, cells as f64, "cells");

@@ -16,8 +16,11 @@
 
 use lorax::approx::policy::PolicyKind;
 use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSession;
 use lorax::exec::{synth_stress_grid, SweepGrid, SweepRunner};
-use lorax::util::bench::{bench, black_box, record_speedup, report_and_record};
+use lorax::util::bench::{
+    bench, black_box, json_f64, record_speedup, report_and_record, write_json_payload,
+};
 
 fn main() {
     let smoke = std::env::var("LORAX_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
@@ -54,6 +57,39 @@ fn main() {
         assert_eq!(x.error_pct, y.error_pct, "{}", x.app);
     }
     record_speedup("sweep-apps", rs.mean_s(), rp.mean_s(), parallel.threads(), scenarios.len());
+
+    // --- workload cache: synthesis must not scale with threads ---------
+    let session = LoraxSession::new(&cfg);
+    let c = parallel.run_apps_on(&session, &scenarios);
+    assert!(c.iter().all(|r| r.is_ok()));
+    let wc = session.workload_cache();
+    assert_eq!(
+        wc.misses() as usize,
+        apps.len(),
+        "dataset synthesis must happen once per app, independent of {} threads",
+        parallel.threads()
+    );
+    println!(
+        "workload cache: {} synthesized / {} hits over {} scenarios ({:.1}% hit rate)",
+        wc.misses(),
+        wc.hits(),
+        scenarios.len(),
+        100.0 * wc.hit_rate()
+    );
+    let payload = format!(
+        "{{\"name\":\"sweep_engine\",\"scenarios\":{},\"threads\":{},\
+         \"workload_synths\":{},\"workload_hits\":{},\"workload_hit_rate\":{},\
+         \"decision_tables\":{}}}\n",
+        scenarios.len(),
+        parallel.threads(),
+        wc.misses(),
+        wc.hits(),
+        json_f64(wc.hit_rate()),
+        session.decision_tables().len(),
+    );
+    if let Err(e) = write_json_payload("sweep_engine", &payload) {
+        eprintln!("warning: could not write sweep_engine json: {e}");
+    }
 
     // --- synthetic replay sweep ---------------------------------------
     let cycles = if smoke { 3_000 } else { 20_000 };

@@ -52,6 +52,31 @@ impl PolicyKind {
     }
 }
 
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = anyhow::Error;
+
+    /// Parse a framework by its canonical [`PolicyKind::name`]
+    /// (case-insensitive); the error lists the valid names.
+    fn from_str(s: &str) -> Result<PolicyKind, anyhow::Error> {
+        PolicyKind::ALL
+            .iter()
+            .copied()
+            .find(|k| k.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown policy {s:?} (one of: {})",
+                    PolicyKind::ALL.map(|k| k.name()).join(", ")
+                )
+            })
+    }
+}
+
 /// How one transfer's LSB wavelengths are driven.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum TransferMode {
@@ -249,6 +274,17 @@ mod tests {
             AppTuning { approx_bits: 32, power_reduction_pct: 10, trunc_bits: 0 },
         );
         assert_eq!(p.commanded_level(1.5), 1.0);
+    }
+
+    #[test]
+    fn policy_kind_name_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(k.name().parse::<PolicyKind>().unwrap(), k);
+            assert_eq!(k.to_string(), k.name());
+        }
+        assert_eq!("lorax-ook".parse::<PolicyKind>().unwrap(), PolicyKind::LoraxOok);
+        let err = "nope".parse::<PolicyKind>().unwrap_err().to_string();
+        assert!(err.contains("baseline"), "{err}");
     }
 
     #[test]

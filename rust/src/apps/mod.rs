@@ -24,6 +24,9 @@ pub mod proxies;
 pub mod sobel;
 pub mod streamcluster;
 
+use std::fmt;
+use std::str::FromStr;
+
 use crate::approx::channel::Channel;
 
 /// A distributed workload engine.
@@ -74,6 +77,106 @@ pub fn output_error_pct(exact: &[f64], approx: &[f64]) -> f64 {
     }
 }
 
+/// The typed application registry: every characterized app as an enum
+/// variant, so experiment specifications ([`crate::exec::ExperimentSpec`])
+/// are validated at construction instead of failing deep inside a sweep.
+///
+/// `FromStr` accepts the canonical lowercase names (case-insensitive) and
+/// its error lists the known apps; `Display` prints the canonical name,
+/// so specs round-trip through their text form.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AppId {
+    Blackscholes,
+    Canneal,
+    Fft,
+    Jpeg,
+    Sobel,
+    Streamcluster,
+    Fluidanimate,
+    X264,
+}
+
+impl AppId {
+    /// All characterized applications (Fig. 2), including the two
+    /// float-negligible proxies.
+    pub const ALL: [AppId; 8] = [
+        AppId::Blackscholes,
+        AppId::Canneal,
+        AppId::Fft,
+        AppId::Jpeg,
+        AppId::Sobel,
+        AppId::Streamcluster,
+        AppId::Fluidanimate,
+        AppId::X264,
+    ];
+
+    /// The six evaluated applications (Fig. 6/8, Table 3).
+    pub const EVALUATED: [AppId; 6] = [
+        AppId::Blackscholes,
+        AppId::Canneal,
+        AppId::Fft,
+        AppId::Jpeg,
+        AppId::Sobel,
+        AppId::Streamcluster,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppId::Blackscholes => "blackscholes",
+            AppId::Canneal => "canneal",
+            AppId::Fft => "fft",
+            AppId::Jpeg => "jpeg",
+            AppId::Sobel => "sobel",
+            AppId::Streamcluster => "streamcluster",
+            AppId::Fluidanimate => "fluidanimate",
+            AppId::X264 => "x264",
+        }
+    }
+
+    /// Synthesize this application's workload engine and dataset
+    /// (`scale` in (0, 1]; 1.0 = the paper's "large input" size).
+    pub fn instantiate(self, seed: u64, scale: f64) -> Box<dyn Workload> {
+        let s = |n: usize| ((n as f64 * scale) as usize).max(64);
+        match self {
+            AppId::Blackscholes => Box::new(blackscholes::BlackScholes::new(s(16384), seed)),
+            AppId::Canneal => Box::new(canneal::Canneal::new(s(4096), s(2048), seed)),
+            AppId::Fft => {
+                Box::new(fft::DistributedFft::new(s(65536).next_power_of_two(), seed))
+            }
+            AppId::Jpeg => Box::new(jpeg::Jpeg::new(image_side(scale), seed)),
+            AppId::Sobel => Box::new(sobel::Sobel::new(image_side(scale), seed)),
+            AppId::Streamcluster => {
+                Box::new(streamcluster::StreamCluster::new(s(8192), 16, 24, seed))
+            }
+            AppId::Fluidanimate => Box::new(proxies::FluidAnimateProxy::new(s(8192), seed)),
+            AppId::X264 => Box::new(proxies::X264Proxy::new(image_side(scale / 2.0), seed)),
+        }
+    }
+}
+
+impl fmt::Display for AppId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for AppId {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<AppId, anyhow::Error> {
+        AppId::ALL
+            .iter()
+            .copied()
+            .find(|a| a.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown app {s:?} (known: {})",
+                    AppId::ALL.map(|a| a.name()).join(", ")
+                )
+            })
+    }
+}
+
 /// The six evaluated applications at their "large input" default sizes.
 pub const EVALUATED_APPS: [&str; 6] =
     ["blackscholes", "canneal", "fft", "jpeg", "sobel", "streamcluster"];
@@ -98,20 +201,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Workload>> {
 
 /// Instantiate a workload scaled down for fast tests (`scale` in (0, 1]).
 pub fn by_name_scaled(name: &str, seed: u64, scale: f64) -> Option<Box<dyn Workload>> {
-    let s = |n: usize| ((n as f64 * scale) as usize).max(64);
-    Some(match name {
-        "blackscholes" => Box::new(blackscholes::BlackScholes::new(s(16384), seed)),
-        "canneal" => Box::new(canneal::Canneal::new(s(4096), s(2048), seed)),
-        "fft" => Box::new(fft::DistributedFft::new(s(65536).next_power_of_two(), seed)),
-        "jpeg" => Box::new(jpeg::Jpeg::new(image_side(scale), seed)),
-        "sobel" => Box::new(sobel::Sobel::new(image_side(scale), seed)),
-        "streamcluster" => {
-            Box::new(streamcluster::StreamCluster::new(s(8192), 16, 24, seed))
-        }
-        "fluidanimate" => Box::new(proxies::FluidAnimateProxy::new(s(8192), seed)),
-        "x264" => Box::new(proxies::X264Proxy::new(image_side(scale / 2.0), seed)),
-        _ => return None,
-    })
+    name.parse::<AppId>().ok().map(|id| id.instantiate(seed, scale))
 }
 
 fn image_side(scale: f64) -> usize {
@@ -160,6 +250,20 @@ mod tests {
             assert!(by_name_scaled(app, 1, 0.02).is_some(), "{app} missing");
         }
         assert!(by_name("unknown", 1).is_none());
+    }
+
+    #[test]
+    fn app_id_name_roundtrip() {
+        for id in AppId::ALL {
+            assert_eq!(id.name().parse::<AppId>().unwrap(), id);
+            assert_eq!(id.to_string(), id.name());
+        }
+        // Case-insensitive, and consistent with the string registries.
+        assert_eq!("FFT".parse::<AppId>().unwrap(), AppId::Fft);
+        assert_eq!(AppId::ALL.map(|a| a.name()), ALL_APPS);
+        assert_eq!(AppId::EVALUATED.map(|a| a.name()), EVALUATED_APPS);
+        let err = "nope".parse::<AppId>().unwrap_err().to_string();
+        assert!(err.contains("sobel"), "{err}");
     }
 
     #[test]

@@ -36,6 +36,37 @@ impl Default for SystemConfig {
     }
 }
 
+/// Valid keys per section, kept in sync with [`SystemConfig::set`] by
+/// `tests::every_known_key_is_settable`.  Unknown-key errors list these
+/// so a typo'd config line tells the user what would have worked.
+const RUN_KEYS: &[&str] = &["seed", "scale", "error_threshold_pct"];
+const PHOTONIC_KEYS: &[&str] = &[
+    "detector_sensitivity_dbm",
+    "mr_through_loss_db",
+    "mr_drop_loss_db",
+    "wg_prop_loss_db_per_cm",
+    "wg_bend_loss_db_per_90",
+    "thermo_tuning_uw_per_nm",
+    "tuning_range_nm",
+    "pam4_signaling_loss_db",
+    "pam4_power_factor",
+    "n_lambda_ook",
+    "n_lambda_pam4",
+    "q_calibration",
+    "detection_margin_db",
+    "vcsel_wall_plug_efficiency",
+];
+const ENERGY_KEYS: &[&str] = &[
+    "clock_ghz",
+    "router_pj_per_word",
+    "gwi_pj_per_word",
+    "mod_fj_per_bit",
+    "pam4_mod_fj_per_symbol",
+    "rx_fj_per_bit",
+    "lut_static_mw_total",
+    "lut_access_pj",
+];
+
 impl SystemConfig {
     /// Load from a config file (all keys optional; defaults fill in).
     pub fn from_file(path: &Path) -> Result<SystemConfig> {
@@ -66,7 +97,9 @@ impl SystemConfig {
         match (section, key) {
             ("run", "seed") | ("", "seed") => self.seed = u()?,
             ("run", "scale") | ("", "scale") => self.scale = f()?,
-            ("run", "error_threshold_pct") => self.error_threshold_pct = f()?,
+            ("run", "error_threshold_pct") | ("", "error_threshold_pct") => {
+                self.error_threshold_pct = f()?
+            }
             ("photonic", "detector_sensitivity_dbm") => {
                 self.photonic.detector_sensitivity_dbm = f()?
             }
@@ -105,7 +138,20 @@ impl SystemConfig {
             ("energy", "rx_fj_per_bit") => self.energy.rx_fj_per_bit = f()?,
             ("energy", "lut_static_mw_total") => self.energy.lut_static_mw_total = f()?,
             ("energy", "lut_access_pj") => self.energy.lut_access_pj = f()?,
-            _ => bail!("unknown config key [{section}] {key}"),
+            _ => {
+                let known = match section {
+                    "run" | "" => RUN_KEYS,
+                    "photonic" => PHOTONIC_KEYS,
+                    "energy" => ENERGY_KEYS,
+                    _ => bail!(
+                        "unknown config section [{section}] (sections: run, photonic, energy)"
+                    ),
+                };
+                bail!(
+                    "unknown config key [{section}] {key} (valid keys: {})",
+                    known.join(", ")
+                );
+            }
         }
         Ok(())
     }
@@ -197,6 +243,52 @@ mod tests {
         let mut c = SystemConfig::default();
         assert!(c.set("photonic", "nonsense", "1").is_err());
         assert!(c.apply_overrides(["bad"]).is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_valid_keys() {
+        let mut c = SystemConfig::default();
+        let e = c.set("photonic", "nonsense", "1").unwrap_err().to_string();
+        assert!(e.contains("q_calibration"), "{e}");
+        assert!(e.contains("detector_sensitivity_dbm"), "{e}");
+        let e = c.set("energy", "nonsense", "1").unwrap_err().to_string();
+        assert!(e.contains("router_pj_per_word"), "{e}");
+        let e = c.set("run", "nonsense", "1").unwrap_err().to_string();
+        assert!(e.contains("error_threshold_pct"), "{e}");
+        let e = c.set("nosection", "x", "1").unwrap_err().to_string();
+        assert!(e.contains("run, photonic, energy"), "{e}");
+    }
+
+    #[test]
+    fn every_known_key_is_settable() {
+        // The advertised key lists must stay in sync with `set`.
+        let mut c = SystemConfig::default();
+        for (section, keys) in
+            [("run", RUN_KEYS), ("photonic", PHOTONIC_KEYS), ("energy", ENERGY_KEYS)]
+        {
+            for key in keys {
+                c.set(section, key, "1").unwrap_or_else(|e| panic!("[{section}] {key}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn cli_overrides_take_precedence_over_file() {
+        let dir = std::env::temp_dir().join("lorax_cfg_precedence_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.toml");
+        std::fs::write(
+            &path,
+            "[run]\nseed = 123\n[photonic]\nq_calibration = 5.0\ndetection_margin_db = 2.5\n",
+        )
+        .unwrap();
+        let mut c = SystemConfig::from_file(&path).unwrap();
+        // CLI --set lands after the file load, so it wins per key...
+        c.apply_overrides(["run.seed=7", "photonic.q_calibration=9.0"]).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.photonic.q_calibration, 9.0);
+        // ...while untouched file keys keep their file values.
+        assert_eq!(c.photonic.detection_margin_db, 2.5);
     }
 
     #[test]

@@ -61,6 +61,30 @@ impl TomlLite {
             })?)),
         }
     }
+
+    /// Render back to TOML-subset text that [`TomlLite::parse`] reads to
+    /// an identical value.  Sections come out in sorted order (the entry
+    /// map is keyed `(section, key)`, and the section-less `""` sorts
+    /// first), values as written — bare, unquoted.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut current: Option<&str> = None;
+        for ((section, key), value) in &self.entries {
+            if current != Some(section.as_str()) {
+                if !section.is_empty() {
+                    out.push('[');
+                    out.push_str(section);
+                    out.push_str("]\n");
+                }
+                current = Some(section);
+            }
+            out.push_str(key);
+            out.push_str(" = ");
+            out.push_str(value);
+            out.push('\n');
+        }
+        out
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -99,5 +123,21 @@ mod tests {
     fn inline_comments_and_whitespace() {
         let t = TomlLite::parse("  k   =   5.5   # trailing\n").unwrap();
         assert_eq!(t.get_f64("", "k").unwrap(), Some(5.5));
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let t = TomlLite::parse(
+            "top = 1\n[photonic]\nq_calibration = 6.5 # comment\nname = \"x\"\n[run]\nseed = 42\n",
+        )
+        .unwrap();
+        let rendered = t.render();
+        // Section-less keys come first, so the render is parseable and
+        // value-identical.
+        assert_eq!(TomlLite::parse(&rendered).unwrap(), t);
+        assert!(rendered.starts_with("top = 1\n"), "{rendered}");
+        assert!(rendered.contains("[photonic]\n"), "{rendered}");
+        // A second render is a fixed point.
+        assert_eq!(TomlLite::parse(&rendered).unwrap().render(), rendered);
     }
 }

@@ -7,15 +7,19 @@
 //! * [`channel`] — the [`crate::approx::Channel`] implementation that
 //!   applies those decisions to live workload data, through either the
 //!   native corruption kernel or the AOT/PJRT executable.
-//! * [`system`] — the [`LoraxSystem`] facade gluing config, topology,
-//!   policies, workloads, the NoC simulator and energy accounting into
-//!   one entry point (what `lorax simulate` drives).
+//! * [`session`] — [`LoraxSession`], the owner of every shared
+//!   experiment resource (lazy per-modulation engines, memoized decision
+//!   tables, memoized workloads) and the single
+//!   `run(&ExperimentSpec) -> AppRunReport` entry point.
+//! * [`system`] — [`LoraxSystem`], the stringly-typed convenience facade
+//!   over the session (what `lorax simulate` drives).
 
 pub mod channel;
 pub mod gwi;
+pub mod session;
 pub mod system;
 
 pub use channel::{Corruptor, NativeCorruptor, PhotonicChannel};
 pub use gwi::{Decision, DecisionTable, GwiDecisionEngine};
-pub use system::{AppRunReport, LoraxSystem};
-
+pub use session::{AppRunReport, LoraxSession};
+pub use system::LoraxSystem;

@@ -1,0 +1,367 @@
+//! [`LoraxSession`] — the owner of every shared experiment resource.
+//!
+//! A session binds one [`SystemConfig`] to one topology and owns all the
+//! caches an experiment campaign shares:
+//!
+//! * **GWI decision engines**, built lazily per modulation — a session
+//!   that only ever runs OOK policies never pays for the PAM4 waveguide
+//!   calibration (and vice versa);
+//! * the [`DecisionTableCache`], memoizing GWI decision tables per
+//!   (modulation, policy kind, tuning);
+//! * the [`WorkloadCache`], memoizing synthesized datasets and their
+//!   golden outputs per (app, seed, scale) so parallel sweeps stop
+//!   re-synthesizing inputs per scenario.
+//!
+//! [`LoraxSession::run`] executes one [`ExperimentSpec`] and is the
+//! single experiment entry point: [`super::system::LoraxSystem`],
+//! [`crate::exec::SweepRunner`], the `lorax` CLI, the benches and the
+//! examples are all thin clients of it.  Results are bit-identical to
+//! the pre-session eager facade and independent of sharing: caches only
+//! skip redundant work, never change what is computed.
+
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{ensure, Result};
+
+use crate::approx::channel::ChannelStats;
+use crate::approx::policy::{Policy, PolicyKind};
+use crate::apps::{output_error_pct, AppId};
+use crate::config::SystemConfig;
+use crate::exec::runner::DecisionTableCache;
+use crate::exec::spec::{ExperimentSpec, TopologySpec, TrafficSpec};
+use crate::exec::trace_buf::TraceBuffer;
+use crate::exec::workload::{CachedWorkload, WorkloadCache};
+use crate::noc::sim::{SimReport, Simulator};
+use crate::phys::params::Modulation;
+use crate::topology::clos::ClosTopology;
+use crate::traffic::synth::{generate, SynthConfig};
+use crate::util::bench::json_f64;
+
+use super::channel::{Corruptor, NativeCorruptor, PhotonicChannel};
+use super::gwi::{DecisionTable, GwiDecisionEngine};
+
+/// Results of one experiment run.
+#[derive(Clone, Debug)]
+pub struct AppRunReport {
+    pub app: String,
+    pub policy: Policy,
+    /// Measured output error vs the golden run (paper eq. 3), percent;
+    /// 0 for synthetic-traffic runs (no workload output to compare).
+    pub error_pct: f64,
+    pub sim: SimReport,
+    pub stats: ChannelStats,
+    pub lut_accesses: u64,
+}
+
+impl AppRunReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} {:<11} PE={:>7.3}%  EPB={:.4} pJ/b  laser={:.3} mW  pkts={} (reduced {} / truncated {})",
+            self.app,
+            self.policy.kind.name(),
+            self.error_pct,
+            self.sim.epb_pj,
+            self.sim.avg_laser_mw,
+            self.sim.packets,
+            self.sim.reduced_packets,
+            self.sim.truncated_packets,
+        )
+    }
+
+    /// Machine-readable record of this run: one newline-terminated JSON
+    /// object, the same record shape [`crate::util::bench`] writes for
+    /// `BENCH_*.json` (flat snake_case keys, finite numbers).
+    pub fn to_json(&self) -> String {
+        let name = format!("{}:{}", self.app, self.policy.kind.name());
+        format!(
+            "{{\"name\":{:?},\"app\":{:?},\"policy\":{:?},\"error_pct\":{},\"epb_pj\":{},\
+             \"avg_laser_mw\":{},\"packets\":{},\"photonic_packets\":{},\
+             \"reduced_packets\":{},\"truncated_packets\":{},\"cycles\":{},\
+             \"latency_p95\":{},\"energy_total_pj\":{},\"lut_accesses\":{}}}\n",
+            name,
+            self.app,
+            self.policy.kind.name(),
+            json_f64(self.error_pct),
+            json_f64(self.sim.epb_pj),
+            json_f64(self.sim.avg_laser_mw),
+            self.sim.packets,
+            self.sim.photonic_packets,
+            self.sim.reduced_packets,
+            self.sim.truncated_packets,
+            self.sim.cycles,
+            json_f64(self.sim.latency_p95),
+            json_f64(self.sim.energy.total_pj()),
+            self.lut_accesses,
+        )
+    }
+}
+
+/// A configured experiment campaign: one config + topology, lazily
+/// built engines, and every shared cache (see module docs).
+pub struct LoraxSession {
+    cfg: SystemConfig,
+    topology_spec: TopologySpec,
+    topo: ClosTopology,
+    /// Lazily-built engines, one slot per modulation (boxed: an engine
+    /// is a large calibrated value, not something to move around inline).
+    ook: OnceLock<Box<GwiDecisionEngine>>,
+    pam4: OnceLock<Box<GwiDecisionEngine>>,
+    tables: DecisionTableCache,
+    workloads: WorkloadCache,
+}
+
+impl LoraxSession {
+    pub fn new(cfg: &SystemConfig) -> LoraxSession {
+        LoraxSession::with_topology(cfg, TopologySpec::Clos64)
+    }
+
+    pub fn with_topology(cfg: &SystemConfig, spec: TopologySpec) -> LoraxSession {
+        LoraxSession {
+            cfg: cfg.clone(),
+            topology_spec: spec,
+            topo: spec.build(),
+            ook: OnceLock::new(),
+            pam4: OnceLock::new(),
+            tables: DecisionTableCache::new(),
+            workloads: WorkloadCache::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn topology(&self) -> &ClosTopology {
+        &self.topo
+    }
+
+    pub fn topology_spec(&self) -> TopologySpec {
+        self.topology_spec
+    }
+
+    /// The decision engine for `m`, built on first use.
+    pub fn engine(&self, m: Modulation) -> &GwiDecisionEngine {
+        let slot = match m {
+            Modulation::Ook => &self.ook,
+            Modulation::Pam4 => &self.pam4,
+        };
+        &**slot.get_or_init(|| {
+            Box::new(GwiDecisionEngine::new(self.topo.clone(), self.cfg.photonic.clone(), m))
+        })
+    }
+
+    /// The engine a policy runs on (its native modulation).
+    pub fn engine_for(&self, kind: PolicyKind) -> &GwiDecisionEngine {
+        self.engine(kind.modulation())
+    }
+
+    /// How many engines have actually been built (0..=2) — laziness is
+    /// observable, and tested.
+    pub fn engines_built(&self) -> usize {
+        usize::from(self.ook.get().is_some()) + usize::from(self.pam4.get().is_some())
+    }
+
+    /// The memoized decision table for `policy` on the `m` engine.
+    pub fn decision_table(&self, m: Modulation, policy: &Policy) -> Arc<DecisionTable> {
+        self.tables.get_or_build(self.engine(m), policy)
+    }
+
+    /// The memoized workload for `app` at this session's (seed, scale).
+    pub fn workload(&self, app: AppId) -> Arc<CachedWorkload> {
+        self.workloads.get_or_synth(app, self.cfg.seed, self.cfg.scale)
+    }
+
+    pub fn workload_cache(&self) -> &WorkloadCache {
+        &self.workloads
+    }
+
+    pub fn decision_tables(&self) -> &DecisionTableCache {
+        &self.tables
+    }
+
+    /// Run one experiment with the native corruption backend.
+    pub fn run(&self, spec: &ExperimentSpec) -> Result<AppRunReport> {
+        self.run_with_corruptor(spec, NativeCorruptor)
+    }
+
+    /// Run one experiment with an arbitrary corruption backend (e.g. the
+    /// AOT/PJRT executor from [`crate::runtime`]).
+    pub fn run_with_corruptor<C: Corruptor>(
+        &self,
+        spec: &ExperimentSpec,
+        corruptor: C,
+    ) -> Result<AppRunReport> {
+        spec.validate()?;
+        // A spec names its fabric; this session was built for one.  Refuse
+        // a mismatch rather than silently running on the wrong topology
+        // (matters the day TopologySpec grows a second variant).
+        ensure!(
+            spec.topology == self.topology_spec,
+            "spec topology {} != session topology {}",
+            spec.topology,
+            self.topology_spec
+        );
+        let policy = spec.resolved_policy();
+        let m = spec.resolved_modulation();
+        let table = self.decision_table(m, &policy);
+        match &spec.traffic {
+            TrafficSpec::AppDriven => self.run_app_traffic(spec, policy, m, &table, corruptor),
+            TrafficSpec::Synthetic(synth) => {
+                Ok(self.run_synth_traffic(spec, policy, m, &table, synth))
+            }
+        }
+    }
+
+    /// App-driven run: golden pass (cached), policy pass through the
+    /// photonic channel, then the cycle-level SoA replay.
+    fn run_app_traffic<C: Corruptor>(
+        &self,
+        spec: &ExperimentSpec,
+        policy: Policy,
+        m: Modulation,
+        table: &DecisionTable,
+        corruptor: C,
+    ) -> Result<AppRunReport> {
+        let engine = self.engine(m);
+        let cached = self.workload(spec.app);
+        let golden = cached.golden();
+        let mut ch = PhotonicChannel::with_decisions(
+            engine,
+            policy,
+            corruptor,
+            self.cfg.seed as u32,
+            table,
+        );
+        let out = cached.workload.run(&mut ch);
+        let error_pct = output_error_pct(golden, &out);
+        let trace = ch.take_trace();
+        let buf = TraceBuffer::from_records(&self.topo, &trace);
+        let mut sim = Simulator::new(engine);
+        sim.energy_params = self.cfg.energy.clone();
+        let sim_report = sim.replay(&buf, &policy, table);
+        Ok(AppRunReport {
+            app: spec.app.name().to_string(),
+            policy,
+            error_pct,
+            sim: sim_report,
+            stats: *ch.stats(),
+            lut_accesses: ch.lut_accesses,
+        })
+    }
+
+    /// Synthetic-traffic run: generate the trace, pack it, replay it.
+    fn run_synth_traffic(
+        &self,
+        spec: &ExperimentSpec,
+        policy: Policy,
+        m: Modulation,
+        table: &DecisionTable,
+        synth: &SynthConfig,
+    ) -> AppRunReport {
+        let engine = self.engine(m);
+        let trace = generate(synth);
+        let buf = TraceBuffer::from_records(&self.topo, &trace);
+        let mut sim = Simulator::new(engine);
+        sim.energy_params = self.cfg.energy.clone();
+        let sim_report = sim.replay(&buf, &policy, table);
+        AppRunReport {
+            // The app names the run (and donated its default tuning);
+            // the full spec, traffic included, is `spec.to_string()`.
+            app: spec.app.name().to_string(),
+            policy,
+            error_pct: 0.0,
+            sim: sim_report,
+            stats: ChannelStats::default(),
+            lut_accesses: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::synth::Pattern;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn engines_build_lazily_per_modulation() {
+        let session = LoraxSession::new(&small_cfg());
+        assert_eq!(session.engines_built(), 0);
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::Baseline)).unwrap();
+        assert_eq!(session.engines_built(), 1);
+        assert_eq!(session.engine_for(PolicyKind::LoraxOok).waveguides.modulation, Modulation::Ook);
+        assert_eq!(session.engines_built(), 1);
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxPam4)).unwrap();
+        assert_eq!(session.engines_built(), 2);
+        assert_eq!(
+            session.engine_for(PolicyKind::LoraxPam4).waveguides.modulation,
+            Modulation::Pam4
+        );
+    }
+
+    #[test]
+    fn workloads_and_tables_are_shared_across_runs() {
+        let session = LoraxSession::new(&small_cfg());
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::Baseline)).unwrap();
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok)).unwrap();
+        // One synthesis, one cache hit; one table per (kind, tuning).
+        assert_eq!(session.workload_cache().misses(), 1);
+        assert_eq!(session.workload_cache().hits(), 1);
+        assert_eq!(session.decision_tables().len(), 2);
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok)).unwrap();
+        assert_eq!(session.decision_tables().len(), 2);
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_before_any_work() {
+        let session = LoraxSession::new(&small_cfg());
+        let bad = ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok).with_tuning(
+            crate::approx::policy::AppTuning {
+                approx_bits: 33,
+                power_reduction_pct: 0,
+                trunc_bits: 0,
+            },
+        );
+        assert!(session.run(&bad).is_err());
+        assert_eq!(session.engines_built(), 0);
+        assert!(session.workload_cache().is_empty());
+    }
+
+    #[test]
+    fn synthetic_traffic_replays_through_the_simulator() {
+        let session = LoraxSession::new(&small_cfg());
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxOok).with_traffic(
+            TrafficSpec::Synthetic(SynthConfig {
+                pattern: Pattern::Uniform,
+                rate_per_100_cycles: 20,
+                cycles: 2_000,
+                float_fraction: 0.6,
+                seed: 5,
+            }),
+        );
+        let r = session.run(&spec).unwrap();
+        assert!(r.sim.packets > 0);
+        assert!(r.sim.epb_pj > 0.0);
+        assert_eq!(r.error_pct, 0.0);
+        assert_eq!(r.lut_accesses, 0);
+        // No workload synthesized for pure replay.
+        assert!(session.workload_cache().is_empty());
+    }
+
+    #[test]
+    fn report_json_record_shape() {
+        let session = LoraxSession::new(&small_cfg());
+        let r = session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok)).unwrap();
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'), "{j}");
+        assert!(j.contains("\"name\":\"sobel:LORAX-OOK\""), "{j}");
+        assert!(j.contains("\"policy\":\"LORAX-OOK\""), "{j}");
+        assert!(j.contains("\"error_pct\":"), "{j}");
+        assert!(j.contains("\"epb_pj\":"), "{j}");
+        assert!(j.contains("\"lut_accesses\":"), "{j}");
+        assert!(j.ends_with('\n'), "{j}");
+    }
+}

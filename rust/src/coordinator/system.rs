@@ -1,79 +1,56 @@
-//! [`LoraxSystem`] — the top-level facade gluing configuration, topology,
-//! decision engines, workload engines, the cycle-level simulator and
-//! energy accounting into single-call experiment runs.
+//! [`LoraxSystem`] — the stringly-typed convenience facade over
+//! [`LoraxSession`].
+//!
+//! Kept for callers that think in `("sobel", PolicyKind::LoraxOok)`
+//! pairs; every run is delegated to the session, so the facade shares
+//! the same lazy engines, decision tables and workload cache — and
+//! produces bit-identical reports to driving the session directly with
+//! an [`ExperimentSpec`] (asserted by `tests/integration_session.rs`).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::approx::channel::{Channel, ChannelStats, IdentityChannel};
-use crate::approx::policy::{AppTuning, Policy, PolicyKind};
-use crate::apps::{by_name_scaled, output_error_pct};
+use crate::approx::policy::{AppTuning, PolicyKind};
+use crate::apps::AppId;
 use crate::config::SystemConfig;
-use crate::exec::trace_buf::TraceBuffer;
-use crate::noc::sim::{SimReport, Simulator};
-use crate::phys::params::Modulation;
-use crate::topology::clos::ClosTopology;
+use crate::exec::spec::ExperimentSpec;
 
-use super::channel::{Corruptor, NativeCorruptor, PhotonicChannel};
-use super::gwi::{DecisionTable, GwiDecisionEngine};
+use super::channel::Corruptor;
+use super::gwi::GwiDecisionEngine;
+pub use super::session::AppRunReport;
+use super::session::LoraxSession;
 
-/// Results of one (application, policy) experiment.
-#[derive(Clone, Debug)]
-pub struct AppRunReport {
-    pub app: String,
-    pub policy: Policy,
-    /// Measured output error vs the golden run (paper eq. 3), percent.
-    pub error_pct: f64,
-    pub sim: SimReport,
-    pub stats: ChannelStats,
-    pub lut_accesses: u64,
-}
-
-impl AppRunReport {
-    pub fn summary(&self) -> String {
-        format!(
-            "{:<14} {:<11} PE={:>7.3}%  EPB={:.4} pJ/b  laser={:.3} mW  pkts={} (reduced {} / truncated {})",
-            self.app,
-            self.policy.kind.name(),
-            self.error_pct,
-            self.sim.epb_pj,
-            self.sim.avg_laser_mw,
-            self.sim.packets,
-            self.sim.reduced_packets,
-            self.sim.truncated_packets,
-        )
-    }
-}
-
-/// The assembled LORAX system.
+/// The assembled LORAX system: a [`LoraxSession`] plus name-based entry
+/// points.
 pub struct LoraxSystem {
-    pub cfg: SystemConfig,
-    pub topo: ClosTopology,
-    pub ook: GwiDecisionEngine,
-    pub pam4: GwiDecisionEngine,
+    session: LoraxSession,
 }
 
 impl LoraxSystem {
     pub fn new(cfg: &SystemConfig) -> LoraxSystem {
-        let topo = ClosTopology::default_64core();
-        LoraxSystem {
-            cfg: cfg.clone(),
-            topo: topo.clone(),
-            ook: GwiDecisionEngine::new(topo.clone(), cfg.photonic.clone(), Modulation::Ook),
-            pam4: GwiDecisionEngine::new(topo, cfg.photonic.clone(), Modulation::Pam4),
-        }
+        LoraxSystem { session: LoraxSession::new(cfg) }
     }
 
+    /// The configuration every run uses (owned by the session — there is
+    /// no separate copy to drift out of sync).
+    pub fn cfg(&self) -> &SystemConfig {
+        self.session.cfg()
+    }
+
+    /// The underlying session (shared caches, lazy engines).
+    pub fn session(&self) -> &LoraxSession {
+        &self.session
+    }
+
+    /// The decision engine a policy runs on, built on first use.
     pub fn engine_for(&self, kind: PolicyKind) -> &GwiDecisionEngine {
-        match kind.modulation() {
-            Modulation::Ook => &self.ook,
-            Modulation::Pam4 => &self.pam4,
-        }
+        self.session.engine_for(kind)
     }
 
     /// Run `app` under `kind` with the measured Table-3 default tuning
     /// (PAM4 policies use the PAM4-swept table).
     pub fn run_app(&self, app: &str, kind: PolicyKind) -> Result<AppRunReport> {
-        self.run_app_with_tuning(app, kind, crate::approx::policy::default_tuning(kind, app))
+        let app: AppId = app.parse()?;
+        self.session.run(&ExperimentSpec::new(app, kind))
     }
 
     /// Run `app` under `kind` with explicit tuning, using the native
@@ -84,7 +61,8 @@ impl LoraxSystem {
         kind: PolicyKind,
         tuning: AppTuning,
     ) -> Result<AppRunReport> {
-        self.run_app_with_corruptor(app, kind, tuning, NativeCorruptor)
+        let app: AppId = app.parse()?;
+        self.session.run(&ExperimentSpec::new(app, kind).with_tuning(tuning))
     }
 
     /// Run with an arbitrary corruption backend (e.g. the AOT/PJRT
@@ -96,65 +74,16 @@ impl LoraxSystem {
         tuning: AppTuning,
         corruptor: C,
     ) -> Result<AppRunReport> {
-        self.run_app_full(app, kind, tuning, corruptor, None)
-    }
-
-    /// Full-control entry point: explicit tuning, corruption backend and
-    /// (optionally) a prebuilt [`DecisionTable`] shared across a sweep —
-    /// the [`crate::exec::SweepRunner`] path.  Passing `None` builds the
-    /// table for this run (identical results, more work).
-    pub fn run_app_full<C: Corruptor>(
-        &self,
-        app: &str,
-        kind: PolicyKind,
-        tuning: AppTuning,
-        corruptor: C,
-        decisions: Option<&DecisionTable>,
-    ) -> Result<AppRunReport> {
-        let workload = by_name_scaled(app, self.cfg.seed, self.cfg.scale)
-            .with_context(|| format!("unknown application {app:?}"))?;
-        // Golden pass.
-        let mut golden_ch = IdentityChannel::new();
-        let golden = workload.run(&mut golden_ch);
-        // Policy pass.
-        let policy = Policy::with_tuning(kind, tuning);
-        let engine = self.engine_for(kind);
-        let mut ch = match decisions {
-            Some(table) => PhotonicChannel::with_decisions(
-                engine,
-                policy,
-                corruptor,
-                self.cfg.seed as u32,
-                table,
-            ),
-            None => PhotonicChannel::new(engine, policy, corruptor, self.cfg.seed as u32),
-        };
-        let out = workload.run(&mut ch);
-        let error_pct = output_error_pct(&golden, &out);
-        // Cycle-level replay for energy/latency (packed SoA, shared
-        // decision table when provided).
-        let trace = ch.take_trace();
-        let buf = TraceBuffer::from_records(&self.topo, &trace);
-        let mut sim = Simulator::new(engine);
-        sim.energy_params = self.cfg.energy.clone();
-        let sim_report = match decisions {
-            Some(table) => sim.replay(&buf, &policy, table),
-            None => sim.replay(&buf, &policy, &DecisionTable::build(engine, &policy)),
-        };
-        Ok(AppRunReport {
-            app: app.to_string(),
-            policy,
-            error_pct,
-            sim: sim_report,
-            stats: *ch.stats(),
-            lut_accesses: ch.lut_accesses,
-        })
+        let app: AppId = app.parse()?;
+        self.session
+            .run_with_corruptor(&ExperimentSpec::new(app, kind).with_tuning(tuning), corruptor)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::phys::params::Modulation;
 
     fn small_cfg() -> SystemConfig {
         SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
@@ -195,5 +124,15 @@ mod tests {
             Modulation::Pam4
         );
         assert!(r.sim.epb_pj > 0.0);
+    }
+
+    #[test]
+    fn facade_engines_are_lazy() {
+        let sys = LoraxSystem::new(&small_cfg());
+        assert_eq!(sys.session().engines_built(), 0);
+        sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+        assert_eq!(sys.session().engines_built(), 1);
+        sys.run_app("sobel", PolicyKind::LoraxPam4).unwrap();
+        assert_eq!(sys.session().engines_built(), 2);
     }
 }

@@ -1,29 +1,39 @@
-//! The parallel sweep engine.
+//! The parallel experiment-execution subsystem.
 //!
 //! Every figure and table of the paper is a sweep — (app × policy ×
 //! tuning × traffic) combinations pushed through the workload engines
 //! and the cycle-level simulator.  This subsystem makes those sweeps a
-//! declarative grid executed in parallel:
+//! declarative grid of typed specs executed in parallel:
 //!
+//! * [`spec`] — [`spec::ExperimentSpec`], the typed, validated
+//!   description of one experiment (app, policy, tuning, traffic,
+//!   topology, modulation), round-trippable through its text form and
+//!   executed by [`crate::coordinator::LoraxSession`];
 //! * [`grid`] — scenario lists: [`grid::AppScenario`] /
 //!   [`grid::SynthScenario`] and the [`grid::SweepGrid`] builder;
 //! * [`runner`] — [`SweepRunner`], an order-preserving scoped-thread
 //!   executor (results are independent of thread count), plus the
 //!   [`runner::DecisionTableCache`] that memoizes GWI decision tables
-//!   keyed by (policy kind, tuning, modulation) so each is computed once
-//!   per sweep rather than once per simulator run;
+//!   per (modulation, policy kind, tuning);
+//! * [`workload`] — [`workload::WorkloadCache`], memoizing synthesized
+//!   datasets and their golden outputs per (app, seed, scale) so sweeps
+//!   pay dataset synthesis once per app instead of once per scenario;
 //! * [`trace_buf`] — [`TraceBuffer`], the structure-of-arrays replay
 //!   format with routing resolved at record time, which lets
 //!   `Simulator::replay` run allocation-free.
 //!
-//! `lorax sweep` and all the `benches/` reproduction targets run on
-//! this engine; `SweepRunner::with_threads(1)` is the serial reference
-//! executor the perf benches compare against.
+//! `lorax run`/`lorax sweep` and all the `benches/` reproduction targets
+//! run on this engine; `SweepRunner::with_threads(1)` is the serial
+//! reference executor the perf benches compare against.
 
 pub mod grid;
 pub mod runner;
+pub mod spec;
 pub mod trace_buf;
+pub mod workload;
 
 pub use grid::{synth_stress_grid, AppScenario, SweepGrid, SynthScenario};
 pub use runner::{DecisionTableCache, SweepRunner};
+pub use spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 pub use trace_buf::{TraceBuffer, FLAG_APPROX, FLAG_PHOTONIC};
+pub use workload::{CachedWorkload, WorkloadCache};

@@ -8,10 +8,12 @@
 //! framework grids, Table 3 selection, synthetic-traffic sweeps) is a
 //! deterministic function of its scenario list.
 //!
-//! [`DecisionTableCache`] memoizes GWI decision tables keyed by
-//! (policy kind, tuning, modulation): a sweep computes each table once
-//! and shares it read-only across all of its runs, instead of once per
-//! `Simulator::run`.
+//! The higher-level entry points are thin clients of
+//! [`crate::coordinator::LoraxSession`]: each scenario becomes an
+//! [`ExperimentSpec`] and the session supplies every shared resource —
+//! lazily-built GWI engines, [`DecisionTableCache`] decision tables, and
+//! [`super::workload::WorkloadCache`] workloads — so no worker thread
+//! re-synthesizes datasets or rebuilds tables.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -19,53 +21,65 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::approx::channel::IdentityChannel;
-use crate::approx::policy::{default_tuning, AppTuning, Policy, PolicyKind};
+use crate::approx::policy::{AppTuning, Policy, PolicyKind};
 use crate::approx::tuning::{SensitivitySurface, SweepPoint};
-use crate::apps::{by_name_scaled, output_error_pct};
+use crate::apps::{output_error_pct, AppId};
 use crate::config::SystemConfig;
 use crate::coordinator::channel::{NativeCorruptor, PhotonicChannel};
 use crate::coordinator::gwi::{DecisionTable, GwiDecisionEngine};
-use crate::coordinator::system::{AppRunReport, LoraxSystem};
-use crate::noc::sim::{SimReport, Simulator};
-use crate::phys::params::Modulation;
+use crate::coordinator::session::{AppRunReport, LoraxSession};
+use crate::noc::sim::SimReport;
+use crate::phys::params::{Modulation, PhotonicParams};
 use crate::topology::clos::ClosTopology;
-use crate::traffic::synth::generate;
 
 use super::grid::{AppScenario, SynthScenario};
-use super::trace_buf::TraceBuffer;
+use super::spec::{ExperimentSpec, TrafficSpec};
 
-/// Memoized decision tables shared across a sweep.
+/// Memoized decision tables shared across a session's sweeps.
 ///
-/// Keyed by (engine identity, policy kind, tuning, modulation).  The
-/// engine enters the key by address: two engines with the same
-/// modulation but different photonic parameters or topology must never
-/// share a table, and engine configs are not hashable — so distinct
-/// engine instances simply never share cache entries (at worst a table
-/// is built once per engine, never wrongly reused).  The `'e` lifetime
-/// pins every cached engine as outliving the cache, so an address can
-/// never be recycled by a new engine while its entry is still live.
+/// Keyed by (modulation, policy kind, tuning).  A decision table is a
+/// pure function of (topology, photonic parameters, modulation, policy),
+/// so entries may be shared across engine *instances* — but never across
+/// engines with different topology or photonic parameters.  The cache
+/// enforces that by remembering the (topology, params) identity of the
+/// first engine it serves per modulation and panicking on a by-value
+/// mismatch, which turns silent cross-configuration table reuse into a
+/// loud bug.
 #[derive(Default)]
-pub struct DecisionTableCache<'e> {
-    #[allow(clippy::type_complexity)]
-    map: Mutex<HashMap<(usize, PolicyKind, AppTuning, Modulation), Arc<DecisionTable>>>,
-    _engines: std::marker::PhantomData<&'e GwiDecisionEngine>,
+pub struct DecisionTableCache {
+    map: Mutex<HashMap<(Modulation, PolicyKind, AppTuning), Arc<DecisionTable>>>,
+    owners: Mutex<HashMap<Modulation, (ClosTopology, PhotonicParams)>>,
 }
 
-impl<'e> DecisionTableCache<'e> {
-    pub fn new() -> DecisionTableCache<'e> {
+impl DecisionTableCache {
+    pub fn new() -> DecisionTableCache {
         DecisionTableCache::default()
     }
 
     /// Fetch the table for `policy` on `engine`, building it at most
-    /// once per distinct (engine, kind, tuning, modulation).
-    pub fn get_or_build(
-        &self,
-        engine: &'e GwiDecisionEngine,
-        policy: &Policy,
-    ) -> Arc<DecisionTable> {
-        let engine_id = engine as *const GwiDecisionEngine as usize;
-        let key = (engine_id, policy.kind, policy.tuning, engine.waveguides.modulation);
+    /// once per distinct (modulation, kind, tuning).
+    ///
+    /// # Panics
+    /// If called with an engine whose topology or photonic parameters
+    /// differ from previous calls for the same modulation (see
+    /// type-level docs).
+    pub fn get_or_build(&self, engine: &GwiDecisionEngine, policy: &Policy) -> Arc<DecisionTable> {
+        let m = engine.waveguides.modulation;
+        {
+            let mut owners = self.owners.lock().unwrap();
+            match owners.get(&m) {
+                Some((topo, params)) => assert!(
+                    *topo == engine.topo && *params == engine.params,
+                    "DecisionTableCache: engines with different topology or photonic \
+                     parameters must not share a cache; use one cache (or session) per \
+                     configuration"
+                ),
+                None => {
+                    owners.insert(m, (engine.topo.clone(), engine.params.clone()));
+                }
+            }
+        }
+        let key = (m, policy.kind, policy.tuning);
         if let Some(t) = self.map.lock().unwrap().get(&key) {
             return Arc::clone(t);
         }
@@ -156,96 +170,83 @@ impl SweepRunner {
             .collect()
     }
 
-    /// Run (app × policy × tuning) scenarios through one shared
-    /// [`LoraxSystem`] with memoized decision tables.  Results are in
-    /// scenario order and identical to running each scenario serially.
+    /// Run (app × policy × tuning) scenarios through a fresh
+    /// [`LoraxSession`].  Results are in scenario order and identical to
+    /// running each scenario serially.
     pub fn run_apps(
         &self,
         cfg: &SystemConfig,
         scenarios: &[AppScenario],
     ) -> Vec<Result<AppRunReport>> {
-        let sys = LoraxSystem::new(cfg);
-        self.run_apps_on(&sys, scenarios)
+        let session = LoraxSession::new(cfg);
+        self.run_apps_on(&session, scenarios)
     }
 
-    /// [`Self::run_apps`] against a caller-owned system (so several
-    /// sweeps can share the engines).
+    /// [`Self::run_apps`] against a caller-owned session (so several
+    /// sweeps can share engines, decision tables and workloads).
     pub fn run_apps_on(
         &self,
-        sys: &LoraxSystem,
+        session: &LoraxSession,
         scenarios: &[AppScenario],
     ) -> Vec<Result<AppRunReport>> {
-        let cache = DecisionTableCache::new();
         self.map(scenarios, |_, sc| {
-            let tuning = sc.tuning.unwrap_or_else(|| default_tuning(sc.policy, &sc.app));
-            let policy = Policy::with_tuning(sc.policy, tuning);
-            let table = cache.get_or_build(sys.engine_for(sc.policy), &policy);
-            sys.run_app_full(&sc.app, sc.policy, tuning, NativeCorruptor, Some(&table))
+            let spec = ExperimentSpec::from_scenario(sc)?;
+            session.run(&spec)
         })
     }
 
     /// One Fig.-6 sensitivity surface, grid points fanned in parallel.
-    /// The workload and its golden output are computed once and shared;
-    /// every point reuses the memoized decision table for its tuning.
-    /// Output is identical to the serial [`crate::approx::tuning::sweep_app`].
+    /// The workload, its golden output and every decision table come
+    /// from the session's caches.  Output is identical to the serial
+    /// [`crate::approx::tuning::sweep_app`].
     pub fn sweep_surface(
         &self,
-        engine: &GwiDecisionEngine,
-        app: &str,
+        session: &LoraxSession,
+        app: AppId,
         kind: PolicyKind,
-        seed: u64,
-        scale: f64,
         bits_axis: &[u32],
         reduction_axis: &[u32],
     ) -> SensitivitySurface {
-        let workload = by_name_scaled(app, seed, scale)
-            .unwrap_or_else(|| panic!("unknown app {app:?}"));
-        let mut golden_ch = IdentityChannel::new();
-        let golden = workload.run(&mut golden_ch);
+        let cached = session.workload(app);
+        let golden = cached.golden();
+        let engine = session.engine_for(kind);
+        let seed = session.cfg().seed as u32;
         let grid: Vec<(u32, u32)> = bits_axis
             .iter()
             .flat_map(|&b| reduction_axis.iter().map(move |&r| (b, r)))
             .collect();
-        let cache = DecisionTableCache::new();
         let points = self.map(&grid, |_, &(bits, red)| {
             let tuning =
                 AppTuning { approx_bits: bits, power_reduction_pct: red, trunc_bits: bits };
             let policy = Policy::with_tuning(kind, tuning);
-            let table = cache.get_or_build(engine, &policy);
-            let mut ch = PhotonicChannel::with_decisions(
-                engine,
-                policy,
-                NativeCorruptor,
-                seed as u32,
-                &table,
-            );
-            let out = workload.run(&mut ch);
-            SweepPoint { bits, reduction_pct: red, error_pct: output_error_pct(&golden, &out) }
+            let table = session.decision_table(kind.modulation(), &policy);
+            let mut ch =
+                PhotonicChannel::with_decisions(engine, policy, NativeCorruptor, seed, &table);
+            let out = cached.workload.run(&mut ch);
+            SweepPoint { bits, reduction_pct: red, error_pct: output_error_pct(golden, &out) }
         });
-        SensitivitySurface { app: app.to_string(), threshold_pct: 10.0, points }
+        SensitivitySurface { app: app.name().to_string(), threshold_pct: 10.0, points }
     }
 
     /// Replay synthetic-traffic scenarios through the cycle-level
-    /// simulator.  Traces are generated per scenario (deterministic in
-    /// the scenario seed), packed into [`TraceBuffer`]s, and replayed
-    /// against memoized decision tables.
+    /// simulator via a fresh session (deterministic in the scenario
+    /// seeds, independent of thread count).
     pub fn run_synth(&self, cfg: &SystemConfig, scenarios: &[SynthScenario]) -> Vec<SimReport> {
-        let topo = ClosTopology::default_64core();
-        let ook = GwiDecisionEngine::new(topo.clone(), cfg.photonic.clone(), Modulation::Ook);
-        let pam4 = GwiDecisionEngine::new(topo.clone(), cfg.photonic.clone(), Modulation::Pam4);
-        let cache = DecisionTableCache::new();
+        let session = LoraxSession::new(cfg);
+        self.run_synth_on(&session, scenarios)
+    }
+
+    /// [`Self::run_synth`] against a caller-owned session.
+    pub fn run_synth_on(
+        &self,
+        session: &LoraxSession,
+        scenarios: &[SynthScenario],
+    ) -> Vec<SimReport> {
         self.map(scenarios, |_, sc| {
-            let engine = match sc.policy.modulation() {
-                Modulation::Ook => &ook,
-                Modulation::Pam4 => &pam4,
-            };
-            let policy = Policy::with_tuning(sc.policy, sc.tuning);
-            let table = cache.get_or_build(engine, &policy);
-            let trace = generate(&sc.synth);
-            let buf = TraceBuffer::from_records(&topo, &trace);
-            let mut sim = Simulator::new(engine);
-            sim.energy_params = cfg.energy.clone();
-            sim.replay(&buf, &policy, &table)
+            let spec = ExperimentSpec::new(AppId::Fft, sc.policy)
+                .with_tuning(sc.tuning)
+                .with_traffic(TrafficSpec::Synthetic(sc.synth.clone()));
+            session.run(&spec).expect("synthetic scenario failed validation").sim
         })
     }
 }
@@ -253,7 +254,6 @@ impl SweepRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::phys::params::PhotonicParams;
 
     #[test]
     fn map_preserves_order_across_thread_counts() {
@@ -297,6 +297,46 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn decision_cache_shares_across_identical_engines() {
+        // Tables are pure functions of (topology, params, modulation,
+        // policy): a second engine instance with identical configuration
+        // shares the cache.
+        let mk = || {
+            GwiDecisionEngine::new(
+                ClosTopology::default_64core(),
+                PhotonicParams::default(),
+                Modulation::Ook,
+            )
+        };
+        let (e1, e2) = (mk(), mk());
+        let cache = DecisionTableCache::new();
+        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        let a = cache.get_or_build(&e1, &p);
+        let b = cache.get_or_build(&e2, &p);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different topology or photonic parameters")]
+    fn decision_cache_rejects_mismatched_engine_config() {
+        let e1 = GwiDecisionEngine::new(
+            ClosTopology::default_64core(),
+            PhotonicParams::default(),
+            Modulation::Ook,
+        );
+        let e2 = GwiDecisionEngine::new(
+            ClosTopology::default_64core(),
+            PhotonicParams { q_calibration: 9.0, ..PhotonicParams::default() },
+            Modulation::Ook,
+        );
+        let cache = DecisionTableCache::new();
+        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        let _ = cache.get_or_build(&e1, &p);
+        let _ = cache.get_or_build(&e2, &p);
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! [`ExperimentSpec`] — the typed, validated description of one
+//! experiment: *what* to run (app or synthetic traffic), under *which*
+//! framework (policy + tuning), on *which* fabric (topology +
+//! modulation).
+//!
+//! Every execution surface builds the same spec — config files, the
+//! `lorax run`/`lorax sweep` CLI, and [`super::grid`] sweep cells — and
+//! hands it to [`crate::coordinator::LoraxSession::run`].  A spec
+//! round-trips through its text form (`Display` ⇄ `FromStr`):
+//!
+//! ```text
+//! sobel:LORAX-OOK                          # Table-3 default tuning
+//! fft:LORAX-PAM4:b16r100t16                # explicit tuning
+//! fft:baseline:synth=hotspot2,r40,c20000,f0.6,s42   # synthetic traffic
+//! sobel:LORAX-OOK:@clos64:%PAM4            # explicit topology/modulation
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::approx::policy::{default_tuning, AppTuning, Policy, PolicyKind};
+use crate::apps::AppId;
+use crate::phys::params::Modulation;
+use crate::topology::clos::ClosTopology;
+use crate::traffic::synth::{Pattern, SynthConfig};
+
+use super::grid::AppScenario;
+
+/// Which photonic fabric an experiment runs on.  Today the crate models
+/// the paper's 8-ary 3-stage Clos; the enum is the hook for the
+/// topology-parametric studies the multilevel-signaling literature
+/// motivates — adding a variant extends every spec-driven surface at
+/// once.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TopologySpec {
+    /// 64 cores, 8 clusters, per-source SWMR waveguides (paper Table 1).
+    #[default]
+    Clos64,
+}
+
+impl TopologySpec {
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologySpec::Clos64 => "clos64",
+        }
+    }
+
+    /// Materialize the static topology description.
+    pub fn build(self) -> ClosTopology {
+        match self {
+            TopologySpec::Clos64 => ClosTopology::default_64core(),
+        }
+    }
+}
+
+impl fmt::Display for TopologySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for TopologySpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<TopologySpec, anyhow::Error> {
+        if s.eq_ignore_ascii_case("clos64") {
+            Ok(TopologySpec::Clos64)
+        } else {
+            bail!("unknown topology {s:?} (known: clos64)")
+        }
+    }
+}
+
+/// What drives the traffic of an experiment.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum TrafficSpec {
+    /// The application's own data movement (golden + policy passes; the
+    /// report carries the measured eq.-3 output error).
+    #[default]
+    AppDriven,
+    /// A generated trace replayed through the cycle-level simulator (no
+    /// workload output, so the report's `error_pct` is 0).
+    Synthetic(SynthConfig),
+}
+
+/// A complete, validated experiment description.
+///
+/// `tuning: None` resolves to the measured Table-3 default for the
+/// (policy, app) pair; `modulation: None` resolves to the policy's
+/// native modulation.  For [`TrafficSpec::Synthetic`] runs the app names
+/// the run and donates its default tuning; no workload is synthesized.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    pub app: AppId,
+    pub policy: PolicyKind,
+    pub tuning: Option<AppTuning>,
+    pub traffic: TrafficSpec,
+    pub topology: TopologySpec,
+    pub modulation: Option<Modulation>,
+}
+
+impl ExperimentSpec {
+    /// Spec for `app` under `policy` with all defaults (Table-3 tuning,
+    /// app-driven traffic, Clos-64, policy-native modulation).
+    pub fn new(app: AppId, policy: PolicyKind) -> ExperimentSpec {
+        ExperimentSpec {
+            app,
+            policy,
+            tuning: None,
+            traffic: TrafficSpec::AppDriven,
+            topology: TopologySpec::Clos64,
+            modulation: None,
+        }
+    }
+
+    pub fn with_tuning(mut self, tuning: AppTuning) -> ExperimentSpec {
+        self.tuning = Some(tuning);
+        self
+    }
+
+    pub fn with_traffic(mut self, traffic: TrafficSpec) -> ExperimentSpec {
+        self.traffic = traffic;
+        self
+    }
+
+    pub fn with_modulation(mut self, modulation: Modulation) -> ExperimentSpec {
+        self.modulation = Some(modulation);
+        self
+    }
+
+    /// Typed spec for one sweep-grid cell (the app name is validated
+    /// here, so a bad grid fails before any work is fanned out).
+    pub fn from_scenario(sc: &AppScenario) -> Result<ExperimentSpec> {
+        Ok(ExperimentSpec { tuning: sc.tuning, ..ExperimentSpec::new(sc.app.parse()?, sc.policy) })
+    }
+
+    /// The tuning this spec runs with (explicit, or the Table-3 default).
+    pub fn resolved_tuning(&self) -> AppTuning {
+        self.tuning.unwrap_or_else(|| default_tuning(self.policy, self.app.name()))
+    }
+
+    /// The fully-resolved policy for this run.
+    pub fn resolved_policy(&self) -> Policy {
+        Policy::with_tuning(self.policy, self.resolved_tuning())
+    }
+
+    /// The modulation this spec runs on (explicit, or policy-native).
+    pub fn resolved_modulation(&self) -> Modulation {
+        self.modulation.unwrap_or_else(|| self.policy.modulation())
+    }
+
+    /// Reject physically meaningless parameter combinations before any
+    /// dataset is synthesized or engine built.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(t) = self.tuning {
+            ensure!(t.approx_bits <= 32, "tuning: approx_bits {} > 32", t.approx_bits);
+            ensure!(t.trunc_bits <= 32, "tuning: trunc_bits {} > 32", t.trunc_bits);
+            ensure!(
+                t.power_reduction_pct <= 100,
+                "tuning: power_reduction_pct {} > 100",
+                t.power_reduction_pct
+            );
+        }
+        if let TrafficSpec::Synthetic(s) = &self.traffic {
+            ensure!(s.cycles > 0, "synthetic traffic: cycles must be > 0");
+            ensure!(
+                (0.0..=1.0).contains(&s.float_fraction),
+                "synthetic traffic: float_fraction {} outside [0, 1]",
+                s.float_fraction
+            );
+            if let Pattern::Hotspot { cluster } = s.pattern {
+                let n = self.topology.build().n_clusters;
+                ensure!(cluster < n, "synthetic traffic: hotspot cluster {cluster} >= {n}");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ExperimentSpec {
+    /// Canonical text form; [`FromStr`] parses it back exactly
+    /// (default-valued fields are omitted).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.app, self.policy)?;
+        if let Some(t) = self.tuning {
+            write!(f, ":b{}r{}t{}", t.approx_bits, t.power_reduction_pct, t.trunc_bits)?;
+        }
+        if let TrafficSpec::Synthetic(s) = &self.traffic {
+            write!(
+                f,
+                ":synth={},r{},c{},f{},s{}",
+                pattern_name(s.pattern),
+                s.rate_per_100_cycles,
+                s.cycles,
+                s.float_fraction,
+                s.seed
+            )?;
+        }
+        if self.topology != TopologySpec::default() {
+            write!(f, ":@{}", self.topology)?;
+        }
+        if let Some(m) = self.modulation {
+            write!(f, ":%{}", m.name())?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for ExperimentSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ExperimentSpec, anyhow::Error> {
+        let mut parts = s.split(':');
+        let app: AppId = match parts.next() {
+            Some(a) if !a.is_empty() => a.parse()?,
+            _ => bail!("spec {s:?}: expected <app>:<policy>[:...]"),
+        };
+        let policy: PolicyKind = parts
+            .next()
+            .with_context(|| format!("spec {s:?}: expected <app>:<policy>[:...]"))?
+            .parse()?;
+        let mut spec = ExperimentSpec::new(app, policy);
+        for part in parts {
+            if let Some(topo) = part.strip_prefix('@') {
+                spec.topology = topo.parse()?;
+            } else if let Some(m) = part.strip_prefix('%') {
+                spec.modulation = Some(parse_modulation(m)?);
+            } else if let Some(synth) = part.strip_prefix("synth=") {
+                spec.traffic = TrafficSpec::Synthetic(parse_synth(synth)?);
+            } else if part.starts_with('b') {
+                spec.tuning = Some(parse_tuning(part)?);
+            } else {
+                bail!("spec {s:?}: unrecognized segment {part:?}");
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+fn pattern_name(p: Pattern) -> String {
+    match p {
+        Pattern::Uniform => "uniform".to_string(),
+        Pattern::Hotspot { cluster } => format!("hotspot{cluster}"),
+        Pattern::Transpose => "transpose".to_string(),
+        Pattern::Neighbor => "neighbor".to_string(),
+    }
+}
+
+fn parse_pattern(s: &str) -> Result<Pattern> {
+    match s {
+        "uniform" => Ok(Pattern::Uniform),
+        "transpose" => Ok(Pattern::Transpose),
+        "neighbor" => Ok(Pattern::Neighbor),
+        _ => {
+            let cluster = s
+                .strip_prefix("hotspot")
+                .and_then(|c| c.parse::<usize>().ok())
+                .with_context(|| {
+                    format!(
+                        "unknown pattern {s:?} (known: uniform, hotspot<n>, transpose, neighbor)"
+                    )
+                })?;
+            Ok(Pattern::Hotspot { cluster })
+        }
+    }
+}
+
+fn parse_modulation(s: &str) -> Result<Modulation> {
+    if s.eq_ignore_ascii_case("ook") {
+        Ok(Modulation::Ook)
+    } else if s.eq_ignore_ascii_case("pam4") {
+        Ok(Modulation::Pam4)
+    } else {
+        bail!("unknown modulation {s:?} (known: OOK, PAM4)")
+    }
+}
+
+/// `b<approx>r<reduction>t<trunc>`, the tuning segment of a spec.
+fn parse_tuning(s: &str) -> Result<AppTuning> {
+    let malformed = || format!("tuning {s:?}: expected b<bits>r<reduction%>t<trunc_bits>");
+    let body = s.strip_prefix('b').unwrap_or(s);
+    let (bits, rest) = body.split_once('r').with_context(malformed)?;
+    let (red, trunc) = rest.split_once('t').with_context(malformed)?;
+    Ok(AppTuning {
+        approx_bits: bits.parse().with_context(malformed)?,
+        power_reduction_pct: red.parse().with_context(malformed)?,
+        trunc_bits: trunc.parse().with_context(malformed)?,
+    })
+}
+
+/// `<pattern>,r<rate>,c<cycles>,f<float_fraction>,s<seed>`.
+fn parse_synth(s: &str) -> Result<SynthConfig> {
+    let mut parts = s.split(',');
+    let pattern = parse_pattern(
+        parts.next().with_context(|| format!("synth {s:?}: missing pattern"))?,
+    )?;
+    let mut cfg = SynthConfig { pattern, ..SynthConfig::default() };
+    for p in parts {
+        if let Some(v) = p.strip_prefix('r') {
+            cfg.rate_per_100_cycles =
+                v.parse().with_context(|| format!("synth {s:?}: bad rate {p:?}"))?;
+        } else if let Some(v) = p.strip_prefix('c') {
+            cfg.cycles = v.parse().with_context(|| format!("synth {s:?}: bad cycles {p:?}"))?;
+        } else if let Some(v) = p.strip_prefix('f') {
+            cfg.float_fraction =
+                v.parse().with_context(|| format!("synth {s:?}: bad float fraction {p:?}"))?;
+        } else if let Some(v) = p.strip_prefix('s') {
+            cfg.seed = v.parse().with_context(|| format!("synth {s:?}: bad seed {p:?}"))?;
+        } else {
+            bail!("synth {s:?}: unrecognized field {p:?}");
+        }
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_display_is_minimal() {
+        let spec = ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok);
+        assert_eq!(spec.to_string(), "sobel:LORAX-OOK");
+        assert_eq!("sobel:LORAX-OOK".parse::<ExperimentSpec>().unwrap(), spec);
+    }
+
+    #[test]
+    fn full_spec_roundtrips() {
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxPam4)
+            .with_tuning(AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 })
+            .with_traffic(TrafficSpec::Synthetic(SynthConfig {
+                pattern: Pattern::Hotspot { cluster: 2 },
+                rate_per_100_cycles: 40,
+                cycles: 20_000,
+                float_fraction: 0.6,
+                seed: 42,
+            }))
+            .with_modulation(Modulation::Pam4);
+        let shown = spec.to_string();
+        assert_eq!(shown, "fft:LORAX-PAM4:b16r100t16:synth=hotspot2,r40,c20000,f0.6,s42:%PAM4");
+        assert_eq!(shown.parse::<ExperimentSpec>().unwrap(), spec);
+    }
+
+    #[test]
+    fn resolution_defaults() {
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxOok);
+        assert_eq!(spec.resolved_tuning(), default_tuning(PolicyKind::LoraxOok, "fft"));
+        assert_eq!(spec.resolved_modulation(), Modulation::Ook);
+        let spec = spec.with_modulation(Modulation::Pam4);
+        assert_eq!(spec.resolved_modulation(), Modulation::Pam4);
+        let pam = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxPam4);
+        assert_eq!(pam.resolved_modulation(), Modulation::Pam4);
+    }
+
+    #[test]
+    fn from_scenario_validates_app() {
+        let good = AppScenario::new("sobel", PolicyKind::Baseline);
+        let spec = ExperimentSpec::from_scenario(&good).unwrap();
+        assert_eq!(spec.app, AppId::Sobel);
+        assert_eq!(spec.tuning, None);
+        let bad = AppScenario::new("nope", PolicyKind::Baseline);
+        assert!(ExperimentSpec::from_scenario(&bad).is_err());
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!("sobel".parse::<ExperimentSpec>().is_err());
+        assert!("nope:baseline".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:nope".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:b33r0t0".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:b8r101t0".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:wat".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:@torus".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:%qam".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:synth=hotspot9,r1,c100,f0.5,s1"
+            .parse::<ExperimentSpec>()
+            .is_err());
+    }
+
+    #[test]
+    fn topology_spec_builds_clos() {
+        let topo = TopologySpec::Clos64.build();
+        assert_eq!(topo.n_cores, 64);
+        assert_eq!("clos64".parse::<TopologySpec>().unwrap(), TopologySpec::Clos64);
+    }
+}

@@ -1,0 +1,149 @@
+//! [`WorkloadCache`] — memoized workload synthesis.
+//!
+//! Synthesizing an application's dataset is the one serial cost the
+//! sweep engine could not amortize: every `run_app` call re-generated
+//! the same inputs, so an (app × policy × tuning) sweep paid the
+//! synthesis once per scenario (and, under the old per-thread wiring,
+//! once per worker).  The cache keys workloads by `(app, seed, scale)`
+//! — exactly the inputs dataset generation is deterministic in — and
+//! shares one immutable [`Workload`] plus its lazily-computed golden
+//! output across every run and worker thread of a
+//! [`crate::coordinator::LoraxSession`].
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::approx::channel::IdentityChannel;
+use crate::apps::{AppId, Workload};
+
+/// One synthesized workload and its golden (error-free) output.
+pub struct CachedWorkload {
+    pub workload: Box<dyn Workload>,
+    golden: OnceLock<Vec<f64>>,
+}
+
+impl CachedWorkload {
+    fn new(workload: Box<dyn Workload>) -> CachedWorkload {
+        CachedWorkload { workload, golden: OnceLock::new() }
+    }
+
+    /// The golden pass output (paper eq.-3 reference), computed on first
+    /// use and shared by every subsequent policy run of this workload.
+    pub fn golden(&self) -> &[f64] {
+        self.golden.get_or_init(|| {
+            let mut ch = IdentityChannel::new();
+            self.workload.run(&mut ch)
+        })
+    }
+}
+
+/// Thread-safe memoization of synthesized workloads per (app, seed,
+/// scale).  Scale enters the key by bit pattern: two scales compare
+/// equal exactly when they synthesize identical datasets.
+#[derive(Default)]
+pub struct WorkloadCache {
+    map: Mutex<HashMap<(AppId, u64, u64), Arc<CachedWorkload>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl WorkloadCache {
+    pub fn new() -> WorkloadCache {
+        WorkloadCache::default()
+    }
+
+    /// Fetch the workload for `(app, seed, scale)`, synthesizing it at
+    /// most once per distinct key.
+    pub fn get_or_synth(&self, app: AppId, seed: u64, scale: f64) -> Arc<CachedWorkload> {
+        let key = (app, seed, scale.to_bits());
+        if let Some(w) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(w);
+        }
+        // Synthesized outside the lock: duplicate synthesis on a race is
+        // benign (datasets are deterministic) and the first insert wins.
+        // Counters reflect the map outcome decided under the lock, so
+        // `misses()` is exactly the number of distinct keys regardless
+        // of racing workers.
+        let built = Arc::new(CachedWorkload::new(app.instantiate(seed, scale)));
+        match self.map.lock().unwrap().entry(key) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v.insert(built))
+            }
+        }
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that synthesized a new workload.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups served from the cache (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = (self.hits() as f64, self.misses() as f64);
+        if h + m > 0.0 {
+            h / (h + m)
+        } else {
+            0.0
+        }
+    }
+
+    /// Distinct workloads synthesized so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_synthesizes_once_per_key() {
+        let cache = WorkloadCache::new();
+        let a = cache.get_or_synth(AppId::Sobel, 7, 0.02);
+        let b = cache.get_or_synth(AppId::Sobel, 7, 0.02);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // Distinct seed, scale or app are distinct datasets.
+        let _ = cache.get_or_synth(AppId::Sobel, 8, 0.02);
+        let _ = cache.get_or_synth(AppId::Sobel, 7, 0.03);
+        let _ = cache.get_or_synth(AppId::Fft, 7, 0.02);
+        assert_eq!(cache.len(), 4);
+        assert!(cache.hit_rate() > 0.0 && cache.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn golden_matches_fresh_run() {
+        let cache = WorkloadCache::new();
+        let w = cache.get_or_synth(AppId::Sobel, 3, 0.02);
+        let fresh = AppId::Sobel.instantiate(3, 0.02);
+        let mut ch = IdentityChannel::new();
+        assert_eq!(w.golden(), fresh.run(&mut ch).as_slice());
+        // Second call reuses the memoized vector.
+        assert_eq!(w.golden().as_ptr(), w.golden().as_ptr());
+    }
+
+    #[test]
+    fn empty_cache_reports_zero() {
+        let cache = WorkloadCache::new();
+        assert!(cache.is_empty());
+        assert_eq!(cache.hit_rate(), 0.0);
+    }
+}

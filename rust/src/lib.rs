@@ -18,26 +18,33 @@
 //! client (`xla` crate, behind the optional `xla` cargo feature); Python
 //! never runs on the request path.
 //!
-//! The [`exec`] module is the **parallel sweep engine**: every figure
-//! and table reproduction is a declarative (app × policy × tuning ×
-//! traffic) grid fanned across OS threads by `exec::SweepRunner`, with
-//! GWI decision tables memoized per (policy, tuning, modulation) and
-//! traces replayed from a packed structure-of-arrays
-//! `exec::TraceBuffer` — results are bit-identical to the serial path
-//! and independent of thread count.  `lorax sweep` and the
-//! `benches/` targets all run on it.
+//! Every experiment is a typed [`exec::ExperimentSpec`] — app, policy,
+//! tuning, traffic, topology, modulation — executed by a
+//! [`coordinator::LoraxSession`], which owns the shared state one
+//! campaign needs: GWI decision engines built lazily per modulation,
+//! decision tables memoized per (modulation, policy, tuning), and
+//! workloads memoized per (app, seed, scale) so sweeps synthesize each
+//! dataset once.  The [`exec`] module is the **parallel sweep engine**
+//! on top: every figure and table reproduction is a declarative grid of
+//! specs fanned across OS threads by `exec::SweepRunner`, with traces
+//! replayed from a packed structure-of-arrays `exec::TraceBuffer` —
+//! results are bit-identical to the serial path and independent of
+//! thread count.  `lorax run`/`lorax sweep` and the `benches/` targets
+//! all run on it.
 //!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
 //! ```no_run
-//! use lorax::approx::policy::PolicyKind;
 //! use lorax::config::SystemConfig;
-//! use lorax::coordinator::LoraxSystem;
+//! use lorax::coordinator::LoraxSession;
+//! use lorax::exec::ExperimentSpec;
 //!
 //! let cfg = SystemConfig { scale: 0.1, ..Default::default() };
-//! let sys = LoraxSystem::new(&cfg);
-//! let report = sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
-//! println!("{}", report.summary());
+//! let session = LoraxSession::new(&cfg);
+//! // Specs round-trip through text: "app:policy[:b<bits>r<red>t<trunc>]".
+//! let spec: ExperimentSpec = "sobel:LORAX-OOK".parse().unwrap();
+//! let report = session.run(&spec).unwrap();
+//! println!("{}", report.summary());   // or report.to_json()
 //! ```
 
 pub mod approx;

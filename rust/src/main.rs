@@ -3,6 +3,8 @@
 //! ```text
 //! lorax config                               # Table 1/2 constants
 //! lorax characterize                         # Fig. 2
+//! lorax run --spec sobel:LORAX-OOK [--json]  # one typed ExperimentSpec
+//! lorax run --app fft --policy baseline      # same, from app/policy flags
 //! lorax sweep --app fft [--grid small]       # Fig. 6, parallel sweep engine
 //! lorax sweep --apps all --jobs 8            # every evaluated app
 //! lorax tune                                 # Table 3 (sweep + select, all apps)
@@ -21,9 +23,10 @@ use anyhow::{bail, Context, Result};
 
 use lorax::approx::policy::{default_tuning, PolicyKind};
 use lorax::approx::tuning::{select_tuning, BITS_AXIS, REDUCTION_AXIS};
+use lorax::apps::AppId;
 use lorax::config::{Args, SystemConfig};
-use lorax::coordinator::LoraxSystem;
-use lorax::exec::SweepRunner;
+use lorax::coordinator::{LoraxSession, LoraxSystem};
+use lorax::exec::{ExperimentSpec, SweepRunner};
 use lorax::report::figures;
 
 /// Die quietly on SIGPIPE (e.g. `lorax reproduce | head`) instead of
@@ -61,19 +64,6 @@ fn load_config(args: &Args) -> Result<SystemConfig> {
     Ok(cfg)
 }
 
-fn parse_policy(name: &str) -> Result<PolicyKind> {
-    PolicyKind::ALL
-        .iter()
-        .copied()
-        .find(|k| k.name().eq_ignore_ascii_case(name))
-        .with_context(|| {
-            format!(
-                "unknown policy {name:?} (one of: {})",
-                PolicyKind::ALL.map(|k| k.name()).join(", ")
-            )
-        })
-}
-
 fn grid(args: &Args) -> (Vec<u32>, Vec<u32>) {
     match args.get("grid").unwrap_or("full") {
         "small" => (vec![8, 16, 24, 32], vec![0, 20, 50, 80, 100]),
@@ -109,9 +99,27 @@ fn run() -> Result<()> {
     match args.subcommand().unwrap_or("help") {
         "config" => println!("{}", cfg.describe()),
         "characterize" => emit(&figures::fig2_characterization(&cfg)?, csv),
+        "run" => {
+            let spec: ExperimentSpec = match (args.get("spec"), args.get("app")) {
+                (Some(s), _) => s.parse()?,
+                (None, Some(app)) => {
+                    let kind: PolicyKind = args.get_or("policy", "LORAX-OOK").parse()?;
+                    ExperimentSpec::new(app.parse()?, kind)
+                }
+                (None, None) => bail!("--spec <spec> or --app <name> required for run"),
+            };
+            let session = LoraxSession::new(&cfg);
+            let report = session.run(&spec)?;
+            if args.flag("json") {
+                print!("{}", report.to_json());
+            } else {
+                println!("{}", report.summary());
+                println!("{}", report.sim.summary());
+            }
+        }
         "sweep" => {
             let (bits, reds) = grid(&args);
-            let kind = parse_policy(&args.get_or("policy", "LORAX-OOK"))?;
+            let kind: PolicyKind = args.get_or("policy", "LORAX-OOK").parse()?;
             let apps: Vec<String> = match (args.get("apps"), args.get("app")) {
                 (Some("all"), _) => {
                     lorax::apps::EVALUATED_APPS.iter().map(|s| s.to_string()).collect()
@@ -120,35 +128,23 @@ fn run() -> Result<()> {
                 (None, Some(app)) => vec![app.to_string()],
                 (None, None) => bail!("--app <name> or --apps <a,b|all> required for sweep"),
             };
-            // Validate before sweeping: the runner panics on unknown
-            // apps, the CLI should error cleanly instead.
-            for app in &apps {
-                if !lorax::apps::ALL_APPS.contains(&app.as_str()) {
-                    bail!(
-                        "unknown app {app:?} (known: {})",
-                        lorax::apps::ALL_APPS.join(", ")
-                    );
-                }
-            }
+            // Validate up front: a bad name should fail before any work
+            // is fanned out (the AppId parse error lists the known apps).
+            let ids = apps
+                .iter()
+                .map(|app| app.parse::<AppId>())
+                .collect::<Result<Vec<AppId>>>()?;
             let runner = SweepRunner::new();
-            let sys = LoraxSystem::new(&cfg);
+            let session = LoraxSession::new(&cfg);
             eprintln!(
                 "sweeping {} app(s) x {}x{} grid on {} thread(s)",
-                apps.len(),
+                ids.len(),
                 bits.len(),
                 reds.len(),
                 runner.threads()
             );
-            for app in &apps {
-                let surface = runner.sweep_surface(
-                    sys.engine_for(kind),
-                    app,
-                    kind,
-                    cfg.seed,
-                    cfg.scale,
-                    &bits,
-                    &reds,
-                );
+            for &app in &ids {
+                let surface = runner.sweep_surface(&session, app, kind, &bits, &reds);
                 println!("{}", figures::render_surface(&surface));
                 let sel = select_tuning(&surface, cfg.error_threshold_pct);
                 println!(
@@ -169,7 +165,7 @@ fn run() -> Result<()> {
         }
         "simulate" => {
             let app = args.get("app").context("--app required for simulate")?;
-            let kind = parse_policy(&args.get_or("policy", "LORAX-OOK"))?;
+            let kind: PolicyKind = args.get_or("policy", "LORAX-OOK").parse()?;
             let sys = LoraxSystem::new(&cfg);
             let report = if args.flag("xla") {
                 let corruptor = lorax::runtime::XlaCorruptor::new()?;
@@ -273,6 +269,8 @@ USAGE: lorax <command> [options]
 COMMANDS
   config         print the Table-1/Table-2 system configuration
   characterize   Fig. 2  — float/int traffic per application
+  run            one typed experiment (--spec <app>:<policy>[:b<b>r<r>t<t>]
+                 | --app <name> [--policy <name>]) [--json]
   sweep          Fig. 6  — sensitivity surfaces on the parallel sweep engine
                  (--app <name> | --apps <a,b|all>, [--policy <name>]
                   [--grid small|tiny] [--jobs <n>])
@@ -290,5 +288,6 @@ OPTIONS
   --seed <n>         master seed
   --jobs <n>         sweep worker threads for every sweep-running command
                      (0 = auto; env LORAX_SWEEP_THREADS)
-  --csv              emit tables as CSV"
+  --csv              emit tables as CSV
+  --json             (run) emit the report as one JSON record"
 }

@@ -31,7 +31,7 @@ impl Modulation {
 }
 
 /// Photonic device / link parameters (paper Table 2 + §5.1).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PhotonicParams {
     /// MR detector sensitivity, dBm [30].
     pub detector_sensitivity_dbm: f64,

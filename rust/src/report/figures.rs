@@ -10,9 +10,9 @@ use anyhow::Result;
 use crate::approx::channel::{Channel, IdentityChannel};
 use crate::approx::policy::{paper_table3, AppTuning, PolicyKind};
 use crate::approx::tuning::{select_tuning, SensitivitySurface};
-use crate::apps::{by_name_scaled, ALL_APPS, EVALUATED_APPS};
+use crate::apps::{by_name_scaled, AppId, ALL_APPS, EVALUATED_APPS};
 use crate::config::SystemConfig;
-use crate::coordinator::system::{AppRunReport, LoraxSystem};
+use crate::coordinator::{AppRunReport, LoraxSession, LoraxSystem};
 use crate::exec::{AppScenario, SweepGrid, SweepRunner};
 
 use super::table::Table;
@@ -63,18 +63,11 @@ pub fn fig6_surfaces_with(
     bits_axis: &[u32],
     reduction_axis: &[u32],
 ) -> Vec<SensitivitySurface> {
-    let sys = LoraxSystem::new(cfg);
+    let session = LoraxSession::new(cfg);
     apps.iter()
         .map(|app| {
-            runner.sweep_surface(
-                &sys.ook,
-                app,
-                PolicyKind::LoraxOok,
-                cfg.seed,
-                cfg.scale,
-                bits_axis,
-                reduction_axis,
-            )
+            let id: AppId = app.parse().unwrap_or_else(|e| panic!("{e:#}"));
+            runner.sweep_surface(&session, id, PolicyKind::LoraxOok, bits_axis, reduction_axis)
         })
         .collect()
 }

@@ -23,7 +23,7 @@ impl NodeId {
 }
 
 /// Static description of the 64-core Clos PNoC.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClosTopology {
     pub layout: DieLayout,
     pub n_cores: usize,

@@ -7,7 +7,7 @@
 //! center coordinates; bends are charged per hop (enter/exit routing).
 
 /// Die/floorplan geometry for the 8-cluster Clos.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DieLayout {
     /// Die edge, mm (20 x 20 = 400 mm²).
     pub die_mm: f64,

@@ -21,7 +21,7 @@ pub enum Pattern {
 }
 
 /// Generator configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SynthConfig {
     pub pattern: Pattern,
     /// Packets injected per core per 100 cycles (injection rate x100).

@@ -74,7 +74,10 @@ impl BenchResult {
     }
 }
 
-fn json_f64(v: f64) -> String {
+/// Render an f64 for a JSON record (non-finite values become 0 so the
+/// records stay machine-readable).  Shared by the bench harness and
+/// [`crate::coordinator::AppRunReport::to_json`].
+pub fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -136,10 +139,11 @@ pub fn record_speedup(
 ) -> f64 {
     let speedup = if improved_s > 0.0 { baseline_s / improved_s } else { 0.0 };
     println!("  -> {name} speedup: {speedup:.2}x");
+    let record_name = format!("{name}-speedup");
     let payload = format!(
         "{{\"name\":{:?},\"baseline_s\":{},\"improved_s\":{},\"speedup\":{},\
          \"threads\":{threads},\"items\":{items}}}\n",
-        format!("{name}-speedup"),
+        record_name,
         json_f64(baseline_s),
         json_f64(improved_s),
         json_f64(speedup),

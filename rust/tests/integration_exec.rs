@@ -8,8 +8,9 @@
 
 use lorax::approx::policy::{Policy, PolicyKind};
 use lorax::approx::tuning::sweep_app;
+use lorax::apps::AppId;
 use lorax::config::SystemConfig;
-use lorax::coordinator::{DecisionTable, GwiDecisionEngine, LoraxSystem};
+use lorax::coordinator::{DecisionTable, GwiDecisionEngine, LoraxSession, LoraxSystem};
 use lorax::exec::{synth_stress_grid, SweepGrid, SweepRunner, TraceBuffer};
 use lorax::noc::sim::Simulator;
 use lorax::phys::params::{Modulation, PhotonicParams};
@@ -28,16 +29,16 @@ fn engine() -> GwiDecisionEngine {
 fn parallel_surface_matches_serial_sweep_app() {
     let e = engine();
     let (seed, scale) = (3u64, 0.02);
+    let cfg = SystemConfig { scale, seed, ..Default::default() };
+    let session = LoraxSession::new(&cfg);
     let bits = [8u32, 32];
     let reds = [0u32, 80, 100];
     let serial = sweep_app(&e, "sobel", PolicyKind::LoraxOok, seed, scale, &bits, &reds);
     for threads in [1usize, 4] {
         let par = SweepRunner::with_threads(threads).sweep_surface(
-            &e,
-            "sobel",
+            &session,
+            AppId::Sobel,
             PolicyKind::LoraxOok,
-            seed,
-            scale,
             &bits,
             &reds,
         );
@@ -91,7 +92,7 @@ fn sweep_matches_standalone_run_app() {
     let scenarios =
         SweepGrid::new().apps(&["sobel"]).policies(&[PolicyKind::LoraxOok]).scenarios();
     let swept = SweepRunner::with_threads(2)
-        .run_apps_on(&sys, &scenarios)
+        .run_apps_on(sys.session(), &scenarios)
         .pop()
         .unwrap()
         .unwrap();

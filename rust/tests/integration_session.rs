@@ -1,0 +1,103 @@
+//! Integration: the typed `ExperimentSpec` / `LoraxSession` API against
+//! the `LoraxSystem` facade — the bit-identity acceptance criteria of
+//! the experiment-API redesign.
+//!
+//! * `LoraxSession::run == LoraxSystem::run_app` for every
+//!   (app, policy) pair at scale 0.05, across *independent* session
+//!   instances — shared caches must only skip work, never change it;
+//! * repeated runs inside one session equal the first (cache reuse is
+//!   invisible in the results);
+//! * session-driven sweeps are independent of thread count.
+
+use lorax::approx::policy::PolicyKind;
+use lorax::apps::AppId;
+use lorax::config::SystemConfig;
+use lorax::coordinator::{AppRunReport, LoraxSession, LoraxSystem};
+use lorax::exec::{ExperimentSpec, SweepGrid, SweepRunner};
+
+fn assert_reports_identical(a: &AppRunReport, b: &AppRunReport, what: &str) {
+    assert_eq!(a.app, b.app, "{what}");
+    assert_eq!(a.policy.kind, b.policy.kind, "{what}");
+    assert_eq!(a.policy.tuning, b.policy.tuning, "{what}");
+    assert_eq!(a.error_pct, b.error_pct, "{what}");
+    assert_eq!(a.lut_accesses, b.lut_accesses, "{what}");
+    assert_eq!(a.sim.packets, b.sim.packets, "{what}");
+    assert_eq!(a.sim.photonic_packets, b.sim.photonic_packets, "{what}");
+    assert_eq!(a.sim.cycles, b.sim.cycles, "{what}");
+    assert_eq!(a.sim.epb_pj, b.sim.epb_pj, "{what}");
+    assert_eq!(a.sim.avg_laser_mw, b.sim.avg_laser_mw, "{what}");
+    assert_eq!(a.sim.latency_p95, b.sim.latency_p95, "{what}");
+    assert_eq!(a.sim.energy.total_pj(), b.sim.energy.total_pj(), "{what}");
+    assert_eq!(a.sim.reduced_packets, b.sim.reduced_packets, "{what}");
+    assert_eq!(a.sim.truncated_packets, b.sim.truncated_packets, "{what}");
+}
+
+#[test]
+fn session_matches_facade_for_every_app_policy_pair() {
+    let cfg = SystemConfig { scale: 0.05, seed: 42, ..Default::default() };
+    let sys = LoraxSystem::new(&cfg);
+    let session = LoraxSession::new(&cfg);
+    for app in AppId::EVALUATED {
+        for kind in PolicyKind::ALL {
+            let facade = sys.run_app(app.name(), kind).unwrap();
+            let direct = session.run(&ExperimentSpec::new(app, kind)).unwrap();
+            assert_reports_identical(&facade, &direct, &format!("{app}:{kind:?}"));
+        }
+    }
+    // Both sides amortized synthesis: one dataset per app, not per pair.
+    assert_eq!(session.workload_cache().misses() as usize, AppId::EVALUATED.len());
+    assert_eq!(sys.session().workload_cache().misses() as usize, AppId::EVALUATED.len());
+}
+
+#[test]
+fn repeated_session_runs_are_identical() {
+    let cfg = SystemConfig { scale: 0.03, seed: 11, ..Default::default() };
+    let session = LoraxSession::new(&cfg);
+    let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxOok);
+    let first = session.run(&spec).unwrap();
+    // Second run hits every cache (workload, golden, decision table).
+    let second = session.run(&spec).unwrap();
+    assert_reports_identical(&first, &second, "fft repeat");
+    assert!(session.workload_cache().hits() > 0);
+}
+
+#[test]
+fn session_sweep_independent_of_thread_count() {
+    let cfg = SystemConfig { scale: 0.02, seed: 7, ..Default::default() };
+    let scenarios = SweepGrid::new()
+        .apps(&["sobel", "fft"])
+        .policies(&[PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4])
+        .scenarios();
+    let session = LoraxSession::new(&cfg);
+    let serial: Vec<AppRunReport> = SweepRunner::with_threads(1)
+        .run_apps_on(&session, &scenarios)
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    for threads in [2usize, 5] {
+        // A fresh session per thread count: cold caches, same results.
+        let fresh = LoraxSession::new(&cfg);
+        let parallel: Vec<AppRunReport> = SweepRunner::with_threads(threads)
+            .run_apps_on(&fresh, &scenarios)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_reports_identical(a, b, &format!("threads={threads} {}", a.app));
+        }
+        // Thread count must not change how many datasets were built.
+        assert_eq!(fresh.workload_cache().misses(), session.workload_cache().misses());
+    }
+}
+
+#[test]
+fn spec_text_form_runs_like_the_typed_form() {
+    let cfg = SystemConfig { scale: 0.02, seed: 5, ..Default::default() };
+    let session = LoraxSession::new(&cfg);
+    let typed = ExperimentSpec::new(AppId::Sobel, PolicyKind::Truncation);
+    let parsed: ExperimentSpec = typed.to_string().parse().unwrap();
+    let a = session.run(&typed).unwrap();
+    let b = session.run(&parsed).unwrap();
+    assert_reports_identical(&a, &b, "sobel text form");
+}

@@ -4,7 +4,9 @@
 
 use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, corrupt_word_fast, mask_for_lsbs};
 use lorax::approx::policy::{AppTuning, Policy, PolicyKind, TransferMode};
+use lorax::apps::AppId;
 use lorax::coordinator::GwiDecisionEngine;
+use lorax::exec::{ExperimentSpec, TrafficSpec};
 use lorax::phys::laser::{required_laser_power_dbm, LaserProvisioning};
 use lorax::phys::loss::PathLoss;
 use lorax::phys::params::{Modulation, PhotonicParams};
@@ -254,5 +256,48 @@ fn prop_select_tuning_always_feasible() {
         } else {
             assert!(points.iter().all(|p| p.error_pct >= 10.0));
         }
+    });
+}
+
+#[test]
+fn prop_experiment_spec_display_roundtrips() {
+    // Every spec expressible from the CLI grid surfaces — any (app,
+    // policy), the Fig.-6 tuning lattice, synthetic-traffic stress
+    // cells, and explicit modulation overrides — must parse back from
+    // its Display form to an identical spec.
+    use lorax::traffic::synth::{Pattern, SynthConfig};
+    check("spec-display-roundtrip", 256, |g| {
+        let app = *g.choose(&AppId::ALL);
+        let policy = *g.choose(&PolicyKind::ALL);
+        let mut spec = ExperimentSpec::new(app, policy);
+        if g.bool() {
+            spec = spec.with_tuning(AppTuning {
+                approx_bits: *g.choose(&[0u32, 4, 8, 12, 16, 20, 24, 28, 32]),
+                power_reduction_pct: *g.choose(&[0u32, 10, 20, 50, 80, 90, 100]),
+                trunc_bits: *g.choose(&[0u32, 8, 16, 24, 32]),
+            });
+        }
+        if g.bool() {
+            let pattern = match g.usize(0, 3) {
+                0 => Pattern::Uniform,
+                1 => Pattern::Hotspot { cluster: g.usize(0, 7) },
+                2 => Pattern::Transpose,
+                _ => Pattern::Neighbor,
+            };
+            spec = spec.with_traffic(TrafficSpec::Synthetic(SynthConfig {
+                pattern,
+                rate_per_100_cycles: g.usize(1, 100) as u32,
+                cycles: g.usize(100, 100_000) as u64,
+                float_fraction: g.usize(0, 10) as f64 / 10.0,
+                seed: g.usize(0, 1 << 20) as u64,
+            }));
+        }
+        if g.bool() {
+            spec = spec.with_modulation(*g.choose(&[Modulation::Ook, Modulation::Pam4]));
+        }
+        let shown = spec.to_string();
+        let parsed: ExperimentSpec =
+            shown.parse().unwrap_or_else(|e| panic!("{shown:?} failed to parse: {e:#}"));
+        assert_eq!(parsed, spec, "{shown}");
     });
 }
