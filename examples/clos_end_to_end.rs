@@ -38,10 +38,10 @@ fn main() -> Result<()> {
     let tuning = table3_defaults("sobel");
     println!("[1/3] verifying the AOT/PJRT data plane on live sobel traffic...");
     let native =
-        bridge_sys.run_app_with_corruptor("sobel", PolicyKind::LoraxOok, tuning, NativeCorruptor)?;
+        bridge_sys.run_app_with_corruptor("sobel", PolicyKind::LORAX_OOK, tuning, NativeCorruptor)?;
     let xla = bridge_sys.run_app_with_corruptor(
         "sobel",
-        PolicyKind::LoraxOok,
+        PolicyKind::LORAX_OOK,
         tuning,
         XlaCorruptor::new()?,
     )?;

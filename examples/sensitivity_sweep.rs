@@ -25,8 +25,8 @@ fn main() -> Result<()> {
 
     let sys = LoraxSystem::new(&cfg);
     println!("sweeping {app} over {}x{} grid...", bits.len(), reds.len());
-    let engine = sys.engine_for(PolicyKind::LoraxOok);
-    let surface = sweep_app(engine, &app, PolicyKind::LoraxOok, cfg.seed, cfg.scale, &bits, &reds);
+    let engine = sys.engine_for(PolicyKind::LORAX_OOK);
+    let surface = sweep_app(engine, &app, PolicyKind::LORAX_OOK, cfg.seed, cfg.scale, &bits, &reds);
     println!("{}", render_surface(&surface));
 
     let sel = select_tuning(&surface, cfg.error_threshold_pct);

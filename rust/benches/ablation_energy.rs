@@ -21,8 +21,8 @@ use lorax::report::Table;
 fn ablate(cfg: &SystemConfig) -> (f64, f64, f64, f64) {
     let sys = LoraxSystem::new(cfg);
     let base = sys.run_app("blackscholes", PolicyKind::Baseline).unwrap();
-    let ook = sys.run_app("blackscholes", PolicyKind::LoraxOok).unwrap();
-    let pam = sys.run_app("blackscholes", PolicyKind::LoraxPam4).unwrap();
+    let ook = sys.run_app("blackscholes", PolicyKind::LORAX_OOK).unwrap();
+    let pam = sys.run_app("blackscholes", PolicyKind::LORAX_PAM4).unwrap();
     let saving = |r: &lorax::coordinator::AppRunReport| {
         100.0 * (1.0 - r.sim.energy.laser_pj / base.sim.energy.laser_pj)
     };

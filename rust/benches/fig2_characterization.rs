@@ -1,18 +1,27 @@
-//! Bench + reproduction: Fig. 2 — float/int packet characterization.
+//! Bench + reproduction: Fig. 2 — float/int packet characterization,
+//! plus the signaling-order dimension.
 //!
 //! Prints the paper's Fig.-2 rows (per-application float/int breakdown,
 //! engines fanned across the sweep runner) and times the workload
-//! engines (the gem5 substitute's throughput).
+//! engines (the gem5 substitute's throughput).  A second section sweeps
+//! PAM levels {2, 4, 8} through one full LORAX run each and drops the
+//! per-scheme laser-power / output-quality record as
+//! `BENCH_signaling_orders.json` so the perf/quality trajectory picks
+//! up the signaling axis.
 //!
 //! Run: `cargo bench --bench fig2_characterization`
 //! Env: LORAX_BENCH_SCALE (default 0.1), LORAX_BENCH_ITERS (default 3),
 //!      LORAX_SWEEP_THREADS.
 
-use lorax::apps::{by_name_scaled, ALL_APPS};
+use lorax::apps::{by_name_scaled, AppId, ALL_APPS};
 use lorax::approx::channel::{Channel, IdentityChannel};
+use lorax::approx::policy::PolicyKind;
 use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSession;
+use lorax::exec::ExperimentSpec;
+use lorax::phys::params::Modulation;
 use lorax::report::figures::fig2_characterization;
-use lorax::util::bench::{bench, black_box, report_and_record};
+use lorax::util::bench::{bench, black_box, json_f64, report_and_record, write_json_payload};
 
 fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -35,5 +44,36 @@ fn main() {
             packets = ch.stats().profile.total_packets();
         });
         report_and_record(&r, packets as f64, "pkts");
+    }
+
+    // -- signaling orders: PAM level sweep (laser power vs quality) -----
+    println!("-- signaling orders (LORAX per PAM level, sobel, scale {scale}) --");
+    let session = LoraxSession::new(&cfg);
+    let mut records = String::new();
+    for m in [Modulation::OOK, Modulation::PAM4, Modulation::PAM8] {
+        let spec = ExperimentSpec::new(AppId::Sobel, PolicyKind::Lorax(m));
+        let mut last = None;
+        let r = bench(&format!("signaling:{m}"), 1, iters, || {
+            last = Some(session.run(black_box(&spec)).unwrap());
+        });
+        let report = last.expect("bench ran at least once");
+        report_and_record(&r, report.sim.packets as f64, "pkts");
+        println!(
+            "  {m:<6} laser={:.3} mW  EPB={:.4} pJ/b  PE={:.3}%",
+            report.sim.avg_laser_mw, report.sim.epb_pj, report.error_pct
+        );
+        records.push_str(&format!(
+            "{{\"name\":\"signaling_orders:{m}\",\"levels\":{},\"n_lambda\":{},\
+             \"avg_laser_mw\":{},\"epb_pj\":{},\"error_pct\":{},\"mean_s\":{}}}\n",
+            m.levels(),
+            cfg.photonic.n_lambda(m),
+            json_f64(report.sim.avg_laser_mw),
+            json_f64(report.sim.epb_pj),
+            json_f64(report.error_pct),
+            json_f64(r.mean_s()),
+        ));
+    }
+    if let Err(e) = write_json_payload("signaling_orders", &records) {
+        eprintln!("warning: could not write BENCH_signaling_orders.json: {e}");
     }
 }

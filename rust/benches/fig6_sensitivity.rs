@@ -41,7 +41,7 @@ fn main() {
     );
 
     for app in AppId::EVALUATED {
-        let surface = runner.sweep_surface(&session, app, PolicyKind::LoraxOok, &bits, &reds);
+        let surface = runner.sweep_surface(&session, app, PolicyKind::LORAX_OOK, &bits, &reds);
         println!("{}", render_surface(&surface));
     }
 
@@ -49,7 +49,7 @@ fn main() {
     let cells = bits.len() * reds.len();
     for app in AppId::EVALUATED {
         let r = bench(&format!("fig6-surface:{app}"), 0, 2, || {
-            let s = runner.sweep_surface(&session, app, PolicyKind::LoraxOok, &bits, &reds);
+            let s = runner.sweep_surface(&session, app, PolicyKind::LORAX_OOK, &bits, &reds);
             assert_eq!(s.points.len(), cells);
         });
         report_and_record(&r, cells as f64, "cells");

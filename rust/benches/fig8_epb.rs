@@ -32,7 +32,7 @@ fn main() {
 
     // Time one full framework run (app + channel + sim + energy).
     let sys = LoraxSystem::new(&cfg);
-    for kind in [PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4] {
+    for kind in [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4] {
         let r = bench(&format!("fig8:blackscholes:{}", kind.name()), 1, 3, || {
             black_box(sys.run_app("blackscholes", kind).unwrap());
         });

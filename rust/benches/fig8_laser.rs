@@ -38,11 +38,11 @@ fn main() {
     let engine = GwiDecisionEngine::new(
         ClosTopology::default_64core(),
         PhotonicParams::default(),
-        Modulation::Ook,
+        Modulation::OOK,
     );
     let sim = Simulator::new(&engine);
     let packed = TraceBuffer::from_records(&engine.topo, &trace);
-    for kind in [PolicyKind::Baseline, PolicyKind::LoraxOok] {
+    for kind in [PolicyKind::Baseline, PolicyKind::LORAX_OOK] {
         let policy = Policy::new(kind, "fft");
         let r = bench(&format!("sim:replay-aos:{}", kind.name()), 1, 5, || {
             black_box(sim.run(&trace, &policy));

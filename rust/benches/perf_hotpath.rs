@@ -93,9 +93,9 @@ fn main() {
     let engine = GwiDecisionEngine::new(
         ClosTopology::default_64core(),
         PhotonicParams::default(),
-        Modulation::Ook,
+        Modulation::OOK,
     );
-    let policy = Policy::new(PolicyKind::LoraxOok, "blackscholes");
+    let policy = Policy::new(PolicyKind::LORAX_OOK, "blackscholes");
     let r = bench("gwi:decide (8x7 pairs)", 10, 20, || {
         for s in 0..8 {
             for d in 0..8 {
@@ -192,7 +192,7 @@ fn main() {
         ..Default::default()
     });
     let r = bench("e2e:sobel LORAX-OOK", 1, 3, || {
-        black_box(sys.run_app("sobel", PolicyKind::LoraxOok).unwrap());
+        black_box(sys.run_app("sobel", PolicyKind::LORAX_OOK).unwrap());
     });
     report_and_record(&r, 1.0, "run");
 }

@@ -96,7 +96,7 @@ fn main() {
     let synth = synth_stress_grid(
         cycles,
         &[5, 20, 40],
-        &[PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4],
+        &[PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4],
         42,
     );
     println!("-- synthetic sweep: {} scenarios x {cycles} cycles --", synth.len());

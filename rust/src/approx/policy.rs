@@ -1,4 +1,4 @@
-//! The five transmission frameworks the paper compares (§5.3), plus the
+//! The transmission frameworks the paper compares (§5.3), plus the
 //! per-application tuning knobs (Table 3).
 //!
 //! * `Baseline`   — plain Clos PNoC, every wavelength at full power.
@@ -7,13 +7,18 @@
 //! * `Prior16`    — the framework of [16]: 16 LSBs always transmitted at
 //!                  20% laser power, loss-oblivious (LSBs that cannot be
 //!                  recovered are still paid for).
-//! * `LoraxOok`   — this paper: app-specific (bits, power) from Table 3,
+//! * `Lorax(m)`   — this paper, over any supported signaling order `m`:
+//!                  app-specific (bits, power) from Table 3,
 //!                  per-destination choice between reduced power and
-//!                  truncation from the GWI loss table.
-//! * `LoraxPam4`  — LORAX over PAM4 signaling: 32 wavelengths, 1.5x LSB
-//!                  power floor, 5.8 dB signaling loss.
+//!                  truncation from the GWI loss table.  `LORAX-OOK` and
+//!                  `LORAX-PAM4` are the paper's two instances; the
+//!                  family is open in the signaling order (`LORAX-PAM8`,
+//!                  `LORAX-PAM16`), with the LSB power floor and
+//!                  signaling loss coming from the scheme
+//!                  ([`crate::phys::SignalingScheme`]).
 
-use crate::phys::params::Modulation;
+use crate::phys::params::{Modulation, PhotonicParams};
+use crate::phys::signaling::SignalingScheme;
 
 /// Which framework a simulation runs under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -21,17 +26,37 @@ pub enum PolicyKind {
     Baseline,
     Truncation,
     Prior16,
-    LoraxOok,
-    LoraxPam4,
+    /// LORAX over the given signaling order (its *native* modulation;
+    /// an [`crate::exec::ExperimentSpec`] `%mod` override can still run
+    /// it on a different fabric).
+    Lorax(Modulation),
 }
 
 impl PolicyKind {
+    pub const LORAX_OOK: PolicyKind = PolicyKind::Lorax(Modulation::OOK);
+    pub const LORAX_PAM4: PolicyKind = PolicyKind::Lorax(Modulation::PAM4);
+    pub const LORAX_PAM8: PolicyKind = PolicyKind::Lorax(Modulation::PAM8);
+    pub const LORAX_PAM16: PolicyKind = PolicyKind::Lorax(Modulation::PAM16);
+
+    /// The five frameworks of the paper's §5.3 comparison (Fig. 8).
     pub const ALL: [PolicyKind; 5] = [
         PolicyKind::Baseline,
         PolicyKind::Truncation,
         PolicyKind::Prior16,
-        PolicyKind::LoraxOok,
-        PolicyKind::LoraxPam4,
+        PolicyKind::LORAX_OOK,
+        PolicyKind::LORAX_PAM4,
+    ];
+
+    /// Every framework the spec/CLI surfaces accept: the paper's five
+    /// plus the higher LORAX signaling orders.
+    pub const PARSEABLE: [PolicyKind; 7] = [
+        PolicyKind::Baseline,
+        PolicyKind::Truncation,
+        PolicyKind::Prior16,
+        PolicyKind::LORAX_OOK,
+        PolicyKind::LORAX_PAM4,
+        PolicyKind::LORAX_PAM8,
+        PolicyKind::LORAX_PAM16,
     ];
 
     pub fn name(self) -> &'static str {
@@ -39,15 +64,15 @@ impl PolicyKind {
             PolicyKind::Baseline => "baseline",
             PolicyKind::Truncation => "truncation",
             PolicyKind::Prior16 => "prior[16]",
-            PolicyKind::LoraxOok => "LORAX-OOK",
-            PolicyKind::LoraxPam4 => "LORAX-PAM4",
+            PolicyKind::Lorax(m) => m.lorax_name(),
         }
     }
 
+    /// The signaling order this framework natively runs on.
     pub fn modulation(self) -> Modulation {
         match self {
-            PolicyKind::LoraxPam4 => Modulation::Pam4,
-            _ => Modulation::Ook,
+            PolicyKind::Lorax(m) => m,
+            _ => Modulation::OOK,
         }
     }
 }
@@ -64,14 +89,14 @@ impl std::str::FromStr for PolicyKind {
     /// Parse a framework by its canonical [`PolicyKind::name`]
     /// (case-insensitive); the error lists the valid names.
     fn from_str(s: &str) -> Result<PolicyKind, anyhow::Error> {
-        PolicyKind::ALL
+        PolicyKind::PARSEABLE
             .iter()
             .copied()
             .find(|k| k.name().eq_ignore_ascii_case(s))
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown policy {s:?} (one of: {})",
-                    PolicyKind::ALL.map(|k| k.name()).join(", ")
+                    PolicyKind::PARSEABLE.map(|k| k.name()).join(", ")
                 )
             })
     }
@@ -144,7 +169,7 @@ pub fn table3_defaults(app: &str) -> AppTuning {
     }
 }
 
-/// PAM4-specific per-app tuning, measured with a `LoraxPam4` sweep
+/// PAM4-specific per-app tuning, measured with a `LORAX-PAM4` sweep
 /// (`scale 0.1`, full grid): the 1.5x LSB power floor and the PAM4
 /// detectability threshold push the energy-optimal choice to deep
 /// mantissa-only truncation for every app.
@@ -160,10 +185,13 @@ pub fn table3_defaults_pam4(app: &str) -> AppTuning {
     }
 }
 
-/// Tuning for a (kind, app) pair: PAM4 policies use the PAM4-swept table.
+/// Tuning for a (kind, app) pair: multilevel LORAX policies use the
+/// PAM4-swept table (its deep mantissa-only truncations transfer to the
+/// higher orders, whose power floor and detectability threshold are at
+/// least as strict — see [`crate::phys::signaling`]).
 pub fn default_tuning(kind: PolicyKind, app: &str) -> AppTuning {
     match kind {
-        PolicyKind::LoraxPam4 => table3_defaults_pam4(app),
+        PolicyKind::Lorax(m) if m != Modulation::OOK => table3_defaults_pam4(app),
         _ => table3_defaults(app),
     }
 }
@@ -190,26 +218,31 @@ impl Policy {
             PolicyKind::Baseline => 0,
             PolicyKind::Truncation => self.tuning.trunc_bits,
             PolicyKind::Prior16 => 16,
-            PolicyKind::LoraxOok | PolicyKind::LoraxPam4 => self.tuning.approx_bits,
+            PolicyKind::Lorax(_) => self.tuning.approx_bits,
         }
     }
 
     /// Commanded LSB laser level *before* the loss-aware decision
     /// (the decision may turn it into 0 for far destinations).
-    pub fn commanded_level(&self, pam4_power_factor: f64) -> f64 {
+    ///
+    /// `fabric` is the signaling order of the waveguide the transfer
+    /// rides on: §4.2's LSB power floor is a property of the multilevel
+    /// eye, so it applies per fabric (1.0 for OOK, compounding 1.5x per
+    /// extra bit-per-symbol above it).
+    pub fn commanded_level(&self, p: &PhotonicParams, fabric: Modulation) -> f64 {
         match self.kind {
             PolicyKind::Baseline => 1.0,
             PolicyKind::Truncation => 0.0,
             PolicyKind::Prior16 => 0.2,
-            PolicyKind::LoraxOok => self.tuning.level(),
-            // §4.2: PAM4 cannot drop LSB power as low as OOK.
-            PolicyKind::LoraxPam4 => (self.tuning.level() * pam4_power_factor).min(1.0),
+            PolicyKind::Lorax(_) => {
+                (self.tuning.level() * fabric.scheme().power_floor(p)).min(1.0)
+            }
         }
     }
 
     /// Does this policy consult the loss table per destination?
     pub fn loss_aware(&self) -> bool {
-        matches!(self.kind, PolicyKind::LoraxOok | PolicyKind::LoraxPam4)
+        matches!(self.kind, PolicyKind::Lorax(_))
     }
 }
 
@@ -255,43 +288,69 @@ mod tests {
         assert_eq!(p.approx_bits(), table3_defaults("fft").trunc_bits);
         let p = Policy::new(PolicyKind::Prior16, "fft");
         assert_eq!(p.approx_bits(), 16);
-        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        let p = Policy::new(PolicyKind::LORAX_OOK, "fft");
         assert_eq!(p.approx_bits(), table3_defaults("fft").approx_bits);
     }
 
     #[test]
     fn commanded_levels() {
+        let phot = PhotonicParams::default(); // pam4_power_factor = 1.5
         let p = Policy::new(PolicyKind::Prior16, "fft");
-        assert!((p.commanded_level(1.5) - 0.2).abs() < 1e-12);
+        assert!((p.commanded_level(&phot, Modulation::OOK) - 0.2).abs() < 1e-12);
         let t = AppTuning { approx_bits: 16, power_reduction_pct: 50, trunc_bits: 8 };
-        let p = Policy::with_tuning(PolicyKind::LoraxOok, t);
-        assert!((p.commanded_level(1.5) - 0.5).abs() < 1e-12);
-        let p = Policy::with_tuning(PolicyKind::LoraxPam4, t); // 1.5x floor
-        assert!((p.commanded_level(1.5) - 0.75).abs() < 1e-12);
-        // PAM4 level saturates at full power.
+        let p = Policy::with_tuning(PolicyKind::LORAX_OOK, t);
+        assert!((p.commanded_level(&phot, Modulation::OOK) - 0.5).abs() < 1e-12);
+        let p = Policy::with_tuning(PolicyKind::LORAX_PAM4, t); // 1.5x floor
+        assert!((p.commanded_level(&phot, Modulation::PAM4) - 0.75).abs() < 1e-12);
+        // The floor compounds per extra bit-per-symbol: PAM8 = 2.25x,
+        // so 0.5 * 2.25 saturates at full power.
+        let p = Policy::with_tuning(PolicyKind::LORAX_PAM8, t);
+        assert_eq!(p.commanded_level(&phot, Modulation::PAM8), 1.0);
+        let t30 = AppTuning { approx_bits: 16, power_reduction_pct: 70, trunc_bits: 8 };
+        let p = Policy::with_tuning(PolicyKind::LORAX_PAM8, t30);
+        assert!((p.commanded_level(&phot, Modulation::PAM8) - 0.675).abs() < 1e-12);
+        // Multilevel levels saturate at full power.
         let p = Policy::with_tuning(
-            PolicyKind::LoraxPam4,
+            PolicyKind::LORAX_PAM4,
             AppTuning { approx_bits: 32, power_reduction_pct: 10, trunc_bits: 0 },
         );
-        assert_eq!(p.commanded_level(1.5), 1.0);
+        assert_eq!(p.commanded_level(&phot, Modulation::PAM4), 1.0);
     }
 
     #[test]
     fn policy_kind_name_roundtrip() {
-        for k in PolicyKind::ALL {
+        for k in PolicyKind::PARSEABLE {
             assert_eq!(k.name().parse::<PolicyKind>().unwrap(), k);
             assert_eq!(k.to_string(), k.name());
         }
-        assert_eq!("lorax-ook".parse::<PolicyKind>().unwrap(), PolicyKind::LoraxOok);
+        assert_eq!("lorax-ook".parse::<PolicyKind>().unwrap(), PolicyKind::LORAX_OOK);
+        assert_eq!("lorax-pam8".parse::<PolicyKind>().unwrap(), PolicyKind::LORAX_PAM8);
         let err = "nope".parse::<PolicyKind>().unwrap_err().to_string();
         assert!(err.contains("baseline"), "{err}");
+        assert!(err.contains("LORAX-PAM8"), "{err}");
     }
 
     #[test]
-    fn modulation_only_pam4_differs() {
-        assert_eq!(PolicyKind::LoraxPam4.modulation(), Modulation::Pam4);
-        for k in [PolicyKind::Baseline, PolicyKind::Truncation, PolicyKind::Prior16, PolicyKind::LoraxOok] {
-            assert_eq!(k.modulation(), Modulation::Ook);
+    fn native_modulation_per_kind() {
+        assert_eq!(PolicyKind::LORAX_PAM4.modulation(), Modulation::PAM4);
+        assert_eq!(PolicyKind::LORAX_PAM8.modulation(), Modulation::PAM8);
+        assert_eq!(PolicyKind::LORAX_PAM16.modulation(), Modulation::PAM16);
+        let ook_native = [
+            PolicyKind::Baseline,
+            PolicyKind::Truncation,
+            PolicyKind::Prior16,
+            PolicyKind::LORAX_OOK,
+        ];
+        for k in ook_native {
+            assert_eq!(k.modulation(), Modulation::OOK);
         }
+    }
+
+    #[test]
+    fn multilevel_lorax_uses_pam4_swept_defaults() {
+        for kind in [PolicyKind::LORAX_PAM4, PolicyKind::LORAX_PAM8, PolicyKind::LORAX_PAM16] {
+            assert_eq!(default_tuning(kind, "fft"), table3_defaults_pam4("fft"), "{kind}");
+        }
+        assert_eq!(default_tuning(PolicyKind::LORAX_OOK, "fft"), table3_defaults("fft"));
     }
 }

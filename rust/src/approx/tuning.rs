@@ -130,7 +130,7 @@ mod tests {
         GwiDecisionEngine::new(
             ClosTopology::default_64core(),
             PhotonicParams::default(),
-            Modulation::Ook,
+            Modulation::OOK,
         )
     }
 
@@ -138,7 +138,7 @@ mod tests {
     fn sweep_corner_cases() {
         let e = engine();
         // Tiny grid on a tolerant app to keep the test fast.
-        let s = sweep_app(&e, "sobel", PolicyKind::LoraxOok, 3, 0.02, &[4, 32], &[0, 100]);
+        let s = sweep_app(&e, "sobel", PolicyKind::LORAX_OOK, 3, 0.02, &[4, 32], &[0, 100]);
         assert_eq!(s.points.len(), 4);
         // Zero reduction at full detectability = error-free channel.
         let e_0 = s.error_at(4, 0).unwrap();

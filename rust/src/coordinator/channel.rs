@@ -199,12 +199,12 @@ mod tests {
     use crate::topology::clos::ClosTopology;
 
     fn engine() -> GwiDecisionEngine {
-        GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), Modulation::Ook)
+        GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), Modulation::OOK)
     }
 
     fn lorax(bits: u32, reduction: u32) -> Policy {
         Policy::with_tuning(
-            PolicyKind::LoraxOok,
+            PolicyKind::LORAX_OOK,
             AppTuning { approx_bits: bits, power_reduction_pct: reduction, trunc_bits: 0 },
         )
     }

@@ -77,7 +77,11 @@ impl GwiDecisionEngine {
             return Decision::FULL;
         }
         let mask = mask_for_lsbs(bits);
-        let level = policy.commanded_level(self.params.pam4_power_factor);
+        // The commanded level's floor comes from the *fabric* this
+        // engine's waveguides run (§4.2: a multilevel eye cannot drop
+        // LSB power as low as OOK), not from the policy's native order —
+        // they agree unless a spec `%mod` override crossed them.
+        let level = policy.commanded_level(&self.params, self.waveguides.modulation);
         match policy.kind {
             PolicyKind::Baseline => Decision::FULL,
             PolicyKind::Truncation => Decision::from_probs(
@@ -92,7 +96,7 @@ impl GwiDecisionEngine {
                 let probs = self.physical_probs(src_cluster, dst_cluster, level);
                 Decision::from_probs(TransferMode::Reduced { level }, mask, probs, level)
             }
-            PolicyKind::LoraxOok | PolicyKind::LoraxPam4 => {
+            PolicyKind::Lorax(_) => {
                 if level <= 0.0 {
                     return Decision::from_probs(
                         TransferMode::Truncated,
@@ -180,14 +184,14 @@ mod tests {
 
     fn lorax_ook(bits: u32, reduction: u32) -> Policy {
         Policy::with_tuning(
-            PolicyKind::LoraxOok,
+            PolicyKind::LORAX_OOK,
             AppTuning { approx_bits: bits, power_reduction_pct: reduction, trunc_bits: 0 },
         )
     }
 
     #[test]
     fn baseline_never_approximates() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = Policy::new(PolicyKind::Baseline, "fft");
         for d in 1..8 {
             assert_eq!(e.decide(&p, 0, d), Decision::FULL);
@@ -196,7 +200,7 @@ mod tests {
 
     #[test]
     fn intra_cluster_always_exact() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         for kind in PolicyKind::ALL {
             let p = Policy::new(kind, "fft");
             assert_eq!(e.decide(&p, 3, 3), Decision::FULL);
@@ -205,7 +209,7 @@ mod tests {
 
     #[test]
     fn truncation_policy_truncates_everywhere() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = Policy::new(PolicyKind::Truncation, "fft"); // 8 bits
         for d in 1..8 {
             let dec = e.decide(&p, 0, d);
@@ -220,7 +224,7 @@ mod tests {
     fn lorax_switches_by_distance() {
         // At 80% reduction (level 0.2), near readers recover, far readers
         // get truncated — the paper's Fig. 3 scenario.
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = lorax_ook(32, 80);
         let near = e.decide(&p, 0, 1);
         let far = e.decide(&p, 0, 7);
@@ -237,7 +241,7 @@ mod tests {
 
     #[test]
     fn lorax_100pct_reduction_is_truncation() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = lorax_ook(32, 100);
         for d in 1..8 {
             assert_eq!(e.decide(&p, 0, d).mode, TransferMode::Truncated);
@@ -248,7 +252,7 @@ mod tests {
     fn prior16_pays_for_undetectable_lsbs() {
         // Loss-oblivious: level stays 0.2 even where the signal cannot be
         // recovered (t10 saturates to ~1 there).
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = Policy::new(PolicyKind::Prior16, "fft");
         let far = e.decide(&p, 0, 7);
         assert!(matches!(far.mode, TransferMode::Reduced { .. }));
@@ -259,9 +263,9 @@ mod tests {
 
     #[test]
     fn pam4_level_floor_applies() {
-        let e = engine(Modulation::Pam4);
+        let e = engine(Modulation::PAM4);
         let p = Policy::with_tuning(
-            PolicyKind::LoraxPam4,
+            PolicyKind::LORAX_PAM4,
             AppTuning { approx_bits: 32, power_reduction_pct: 80, trunc_bits: 0 },
         );
         for d in 1..8 {
@@ -273,8 +277,32 @@ mod tests {
     }
 
     #[test]
+    fn pam8_floor_compounds() {
+        // 80% reduction commands level 0.2; the PAM8 floor is 2.25x.
+        let e = engine(Modulation::PAM8);
+        let p = Policy::with_tuning(
+            PolicyKind::LORAX_PAM8,
+            AppTuning { approx_bits: 16, power_reduction_pct: 80, trunc_bits: 0 },
+        );
+        for d in 1..8 {
+            let dec = e.decide(&p, 0, d);
+            if let TransferMode::Reduced { level } = dec.mode {
+                assert!((level - 0.45).abs() < 1e-12, "level={level}");
+            }
+        }
+        // 100% reduction is truncation on every fabric.
+        let p = Policy::with_tuning(
+            PolicyKind::LORAX_PAM8,
+            AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 0 },
+        );
+        for d in 1..8 {
+            assert_eq!(e.decide(&p, 0, d).mode, TransferMode::Truncated);
+        }
+    }
+
+    #[test]
     fn decision_table_matches_engine() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = lorax_ook(24, 70);
         let t = DecisionTable::build(&e, &p);
         assert_eq!(t.n_clusters(), 8);
@@ -288,7 +316,7 @@ mod tests {
 
     #[test]
     fn decisions_are_deterministic() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let p = lorax_ook(24, 70);
         for s in 0..8 {
             for d in 0..8 {

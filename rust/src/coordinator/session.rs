@@ -102,10 +102,11 @@ pub struct LoraxSession {
     cfg: SystemConfig,
     topology_spec: TopologySpec,
     topo: ClosTopology,
-    /// Lazily-built engines, one slot per modulation (boxed: an engine
-    /// is a large calibrated value, not something to move around inline).
-    ook: OnceLock<Box<GwiDecisionEngine>>,
-    pam4: OnceLock<Box<GwiDecisionEngine>>,
+    /// Lazily-built engines, one slot per supported signaling order
+    /// ([`Modulation::KNOWN`], indexed by [`Modulation::index`]; boxed:
+    /// an engine is a large calibrated value, not something to move
+    /// around inline).
+    engines: [OnceLock<Box<GwiDecisionEngine>>; Modulation::N_KNOWN],
     tables: DecisionTableCache,
     workloads: WorkloadCache,
 }
@@ -120,8 +121,7 @@ impl LoraxSession {
             cfg: cfg.clone(),
             topology_spec: spec,
             topo: spec.build(),
-            ook: OnceLock::new(),
-            pam4: OnceLock::new(),
+            engines: Default::default(),
             tables: DecisionTableCache::new(),
             workloads: WorkloadCache::new(),
         }
@@ -141,11 +141,7 @@ impl LoraxSession {
 
     /// The decision engine for `m`, built on first use.
     pub fn engine(&self, m: Modulation) -> &GwiDecisionEngine {
-        let slot = match m {
-            Modulation::Ook => &self.ook,
-            Modulation::Pam4 => &self.pam4,
-        };
-        &**slot.get_or_init(|| {
+        &**self.engines[m.index()].get_or_init(|| {
             Box::new(GwiDecisionEngine::new(self.topo.clone(), self.cfg.photonic.clone(), m))
         })
     }
@@ -155,10 +151,11 @@ impl LoraxSession {
         self.engine(kind.modulation())
     }
 
-    /// How many engines have actually been built (0..=2) — laziness is
-    /// observable, and tested.
+    /// How many engines have actually been built
+    /// (0..=[`Modulation::N_KNOWN`]) — laziness is observable, and
+    /// tested.
     pub fn engines_built(&self) -> usize {
-        usize::from(self.ook.get().is_some()) + usize::from(self.pam4.get().is_some())
+        self.engines.iter().filter(|slot| slot.get().is_some()).count()
     }
 
     /// The memoized decision table for `policy` on the `m` engine.
@@ -292,33 +289,49 @@ mod tests {
         assert_eq!(session.engines_built(), 0);
         session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::Baseline)).unwrap();
         assert_eq!(session.engines_built(), 1);
-        assert_eq!(session.engine_for(PolicyKind::LoraxOok).waveguides.modulation, Modulation::Ook);
+        assert_eq!(session.engine_for(PolicyKind::LORAX_OOK).waveguides.modulation, Modulation::OOK);
         assert_eq!(session.engines_built(), 1);
-        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxPam4)).unwrap();
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_PAM4)).unwrap();
         assert_eq!(session.engines_built(), 2);
         assert_eq!(
-            session.engine_for(PolicyKind::LoraxPam4).waveguides.modulation,
-            Modulation::Pam4
+            session.engine_for(PolicyKind::LORAX_PAM4).waveguides.modulation,
+            Modulation::PAM4
         );
+    }
+
+    #[test]
+    fn pam8_runs_end_to_end() {
+        let session = LoraxSession::new(&small_cfg());
+        let spec: ExperimentSpec = "sobel:LORAX-PAM8".parse().unwrap();
+        let r = session.run(&spec).unwrap();
+        assert!(r.sim.epb_pj > 0.0);
+        assert!(r.sim.avg_laser_mw > 0.0);
+        assert_eq!(session.engines_built(), 1);
+        assert_eq!(
+            session.engine_for(PolicyKind::LORAX_PAM8).waveguides.modulation,
+            Modulation::PAM8
+        );
+        // JSON record for the new axis keeps the shared shape.
+        assert!(r.to_json().contains("\"name\":\"sobel:LORAX-PAM8\""));
     }
 
     #[test]
     fn workloads_and_tables_are_shared_across_runs() {
         let session = LoraxSession::new(&small_cfg());
         session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::Baseline)).unwrap();
-        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok)).unwrap();
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_OOK)).unwrap();
         // One synthesis, one cache hit; one table per (kind, tuning).
         assert_eq!(session.workload_cache().misses(), 1);
         assert_eq!(session.workload_cache().hits(), 1);
         assert_eq!(session.decision_tables().len(), 2);
-        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok)).unwrap();
+        session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_OOK)).unwrap();
         assert_eq!(session.decision_tables().len(), 2);
     }
 
     #[test]
     fn invalid_spec_is_rejected_before_any_work() {
         let session = LoraxSession::new(&small_cfg());
-        let bad = ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok).with_tuning(
+        let bad = ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_OOK).with_tuning(
             crate::approx::policy::AppTuning {
                 approx_bits: 33,
                 power_reduction_pct: 0,
@@ -333,7 +346,7 @@ mod tests {
     #[test]
     fn synthetic_traffic_replays_through_the_simulator() {
         let session = LoraxSession::new(&small_cfg());
-        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxOok).with_traffic(
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_OOK).with_traffic(
             TrafficSpec::Synthetic(SynthConfig {
                 pattern: Pattern::Uniform,
                 rate_per_100_cycles: 20,
@@ -354,7 +367,7 @@ mod tests {
     #[test]
     fn report_json_record_shape() {
         let session = LoraxSession::new(&small_cfg());
-        let r = session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok)).unwrap();
+        let r = session.run(&ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_OOK)).unwrap();
         let j = r.to_json();
         assert!(j.starts_with('{') && j.trim_end().ends_with('}'), "{j}");
         assert!(j.contains("\"name\":\"sobel:LORAX-OOK\""), "{j}");

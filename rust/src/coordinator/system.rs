@@ -1,7 +1,7 @@
 //! [`LoraxSystem`] — the stringly-typed convenience facade over
 //! [`LoraxSession`].
 //!
-//! Kept for callers that think in `("sobel", PolicyKind::LoraxOok)`
+//! Kept for callers that think in `("sobel", PolicyKind::LORAX_OOK)`
 //! pairs; every run is delegated to the session, so the facade shares
 //! the same lazy engines, decision tables and workload cache — and
 //! produces bit-identical reports to driving the session directly with
@@ -102,7 +102,7 @@ mod tests {
     fn lorax_run_reduces_laser_with_bounded_error() {
         let sys = LoraxSystem::new(&small_cfg());
         let base = sys.run_app("sobel", PolicyKind::Baseline).unwrap();
-        let lorax = sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+        let lorax = sys.run_app("sobel", PolicyKind::LORAX_OOK).unwrap();
         assert!(lorax.sim.energy.laser_pj < base.sim.energy.laser_pj);
         // Sobel tolerates its Table-3 tuning well under the threshold.
         assert!(lorax.error_pct < 10.0, "PE={}", lorax.error_pct);
@@ -118,10 +118,10 @@ mod tests {
     #[test]
     fn pam4_uses_pam4_engine() {
         let sys = LoraxSystem::new(&small_cfg());
-        let r = sys.run_app("canneal", PolicyKind::LoraxPam4).unwrap();
+        let r = sys.run_app("canneal", PolicyKind::LORAX_PAM4).unwrap();
         assert_eq!(
-            sys.engine_for(PolicyKind::LoraxPam4).waveguides.modulation,
-            Modulation::Pam4
+            sys.engine_for(PolicyKind::LORAX_PAM4).waveguides.modulation,
+            Modulation::PAM4
         );
         assert!(r.sim.epb_pj > 0.0);
     }
@@ -130,9 +130,9 @@ mod tests {
     fn facade_engines_are_lazy() {
         let sys = LoraxSystem::new(&small_cfg());
         assert_eq!(sys.session().engines_built(), 0);
-        sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+        sys.run_app("sobel", PolicyKind::LORAX_OOK).unwrap();
         assert_eq!(sys.session().engines_built(), 1);
-        sys.run_app("sobel", PolicyKind::LoraxPam4).unwrap();
+        sys.run_app("sobel", PolicyKind::LORAX_PAM4).unwrap();
         assert_eq!(sys.session().engines_built(), 2);
     }
 }

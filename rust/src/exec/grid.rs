@@ -156,12 +156,12 @@ mod tests {
     fn grid_cross_product_order() {
         let g = SweepGrid::new()
             .apps(&["fft", "sobel"])
-            .policies(&[PolicyKind::Baseline, PolicyKind::LoraxOok]);
+            .policies(&[PolicyKind::Baseline, PolicyKind::LORAX_OOK]);
         let s = g.scenarios();
         assert_eq!(s.len(), 4);
         assert_eq!(s[0].app, "fft");
         assert_eq!(s[0].policy, PolicyKind::Baseline);
-        assert_eq!(s[1].policy, PolicyKind::LoraxOok);
+        assert_eq!(s[1].policy, PolicyKind::LORAX_OOK);
         assert_eq!(s[2].app, "sobel");
         assert!(s.iter().all(|sc| sc.tuning.is_none()));
     }
@@ -170,7 +170,7 @@ mod tests {
     fn tuning_grid_expands() {
         let g = SweepGrid::new()
             .apps(&["sobel"])
-            .policies(&[PolicyKind::LoraxOok])
+            .policies(&[PolicyKind::LORAX_OOK])
             .tuning_grid(&[8, 16], &[0, 50, 100]);
         let s = g.scenarios();
         assert_eq!(s.len(), 6);
@@ -190,7 +190,7 @@ mod tests {
 
     #[test]
     fn scenario_labels() {
-        let sc = AppScenario::new("fft", PolicyKind::LoraxOok);
+        let sc = AppScenario::new("fft", PolicyKind::LORAX_OOK);
         assert_eq!(sc.label(), "fft:LORAX-OOK");
         let sc = AppScenario {
             tuning: Some(AppTuning { approx_bits: 16, power_reduction_pct: 80, trunc_bits: 16 }),

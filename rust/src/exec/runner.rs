@@ -278,10 +278,10 @@ mod tests {
         let engine = GwiDecisionEngine::new(
             ClosTopology::default_64core(),
             PhotonicParams::default(),
-            Modulation::Ook,
+            Modulation::OOK,
         );
         let cache = DecisionTableCache::new();
-        let p1 = Policy::new(PolicyKind::LoraxOok, "fft");
+        let p1 = Policy::new(PolicyKind::LORAX_OOK, "fft");
         let a = cache.get_or_build(&engine, &p1);
         let b = cache.get_or_build(&engine, &p1);
         assert!(Arc::ptr_eq(&a, &b));
@@ -308,12 +308,12 @@ mod tests {
             GwiDecisionEngine::new(
                 ClosTopology::default_64core(),
                 PhotonicParams::default(),
-                Modulation::Ook,
+                Modulation::OOK,
             )
         };
         let (e1, e2) = (mk(), mk());
         let cache = DecisionTableCache::new();
-        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        let p = Policy::new(PolicyKind::LORAX_OOK, "fft");
         let a = cache.get_or_build(&e1, &p);
         let b = cache.get_or_build(&e2, &p);
         assert!(Arc::ptr_eq(&a, &b));
@@ -326,15 +326,15 @@ mod tests {
         let e1 = GwiDecisionEngine::new(
             ClosTopology::default_64core(),
             PhotonicParams::default(),
-            Modulation::Ook,
+            Modulation::OOK,
         );
         let e2 = GwiDecisionEngine::new(
             ClosTopology::default_64core(),
             PhotonicParams { q_calibration: 9.0, ..PhotonicParams::default() },
-            Modulation::Ook,
+            Modulation::OOK,
         );
         let cache = DecisionTableCache::new();
-        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        let p = Policy::new(PolicyKind::LORAX_OOK, "fft");
         let _ = cache.get_or_build(&e1, &p);
         let _ = cache.get_or_build(&e2, &p);
     }

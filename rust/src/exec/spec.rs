@@ -11,8 +11,9 @@
 //! ```text
 //! sobel:LORAX-OOK                          # Table-3 default tuning
 //! fft:LORAX-PAM4:b16r100t16                # explicit tuning
+//! sobel:LORAX-PAM8                         # higher signaling orders
 //! fft:baseline:synth=hotspot2,r40,c20000,f0.6,s42   # synthetic traffic
-//! sobel:LORAX-OOK:@clos64:%PAM4            # explicit topology/modulation
+//! sobel:LORAX-OOK:@clos64:%pam8            # explicit topology/modulation
 //! ```
 
 use std::fmt;
@@ -226,7 +227,9 @@ impl FromStr for ExperimentSpec {
             if let Some(topo) = part.strip_prefix('@') {
                 spec.topology = topo.parse()?;
             } else if let Some(m) = part.strip_prefix('%') {
-                spec.modulation = Some(parse_modulation(m)?);
+                // Modulation::FromStr is case-insensitive and lists the
+                // valid scheme names on error.
+                spec.modulation = Some(m.parse()?);
             } else if let Some(synth) = part.strip_prefix("synth=") {
                 spec.traffic = TrafficSpec::Synthetic(parse_synth(synth)?);
             } else if part.starts_with('b') {
@@ -265,16 +268,6 @@ fn parse_pattern(s: &str) -> Result<Pattern> {
                 })?;
             Ok(Pattern::Hotspot { cluster })
         }
-    }
-}
-
-fn parse_modulation(s: &str) -> Result<Modulation> {
-    if s.eq_ignore_ascii_case("ook") {
-        Ok(Modulation::Ook)
-    } else if s.eq_ignore_ascii_case("pam4") {
-        Ok(Modulation::Pam4)
-    } else {
-        bail!("unknown modulation {s:?} (known: OOK, PAM4)")
     }
 }
 
@@ -322,14 +315,14 @@ mod tests {
 
     #[test]
     fn default_spec_display_is_minimal() {
-        let spec = ExperimentSpec::new(AppId::Sobel, PolicyKind::LoraxOok);
+        let spec = ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_OOK);
         assert_eq!(spec.to_string(), "sobel:LORAX-OOK");
         assert_eq!("sobel:LORAX-OOK".parse::<ExperimentSpec>().unwrap(), spec);
     }
 
     #[test]
     fn full_spec_roundtrips() {
-        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxPam4)
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_PAM4)
             .with_tuning(AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 })
             .with_traffic(TrafficSpec::Synthetic(SynthConfig {
                 pattern: Pattern::Hotspot { cluster: 2 },
@@ -338,7 +331,7 @@ mod tests {
                 float_fraction: 0.6,
                 seed: 42,
             }))
-            .with_modulation(Modulation::Pam4);
+            .with_modulation(Modulation::PAM4);
         let shown = spec.to_string();
         assert_eq!(shown, "fft:LORAX-PAM4:b16r100t16:synth=hotspot2,r40,c20000,f0.6,s42:%PAM4");
         assert_eq!(shown.parse::<ExperimentSpec>().unwrap(), spec);
@@ -346,13 +339,30 @@ mod tests {
 
     #[test]
     fn resolution_defaults() {
-        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxOok);
-        assert_eq!(spec.resolved_tuning(), default_tuning(PolicyKind::LoraxOok, "fft"));
-        assert_eq!(spec.resolved_modulation(), Modulation::Ook);
-        let spec = spec.with_modulation(Modulation::Pam4);
-        assert_eq!(spec.resolved_modulation(), Modulation::Pam4);
-        let pam = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxPam4);
-        assert_eq!(pam.resolved_modulation(), Modulation::Pam4);
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_OOK);
+        assert_eq!(spec.resolved_tuning(), default_tuning(PolicyKind::LORAX_OOK, "fft"));
+        assert_eq!(spec.resolved_modulation(), Modulation::OOK);
+        let spec = spec.with_modulation(Modulation::PAM4);
+        assert_eq!(spec.resolved_modulation(), Modulation::PAM4);
+        let pam = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_PAM4);
+        assert_eq!(pam.resolved_modulation(), Modulation::PAM4);
+        let pam8 = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_PAM8);
+        assert_eq!(pam8.resolved_modulation(), Modulation::PAM8);
+    }
+
+    #[test]
+    fn higher_order_specs_roundtrip_case_insensitively() {
+        let spec: ExperimentSpec = "sobel:LORAX-PAM8".parse().unwrap();
+        assert_eq!(spec.policy, PolicyKind::LORAX_PAM8);
+        assert_eq!(spec.to_string(), "sobel:LORAX-PAM8");
+        // %mod accepts any casing of the scheme name.
+        for text in ["fft:baseline:%PAM8", "fft:baseline:%pam8", "fft:baseline:%Pam8"] {
+            let spec: ExperimentSpec = text.parse().unwrap();
+            assert_eq!(spec.modulation, Some(Modulation::PAM8), "{text}");
+            assert_eq!(spec.to_string(), "fft:baseline:%PAM8");
+        }
+        let err = "fft:baseline:%qam".parse::<ExperimentSpec>().unwrap_err().to_string();
+        assert!(err.contains("OOK, PAM4, PAM8, PAM16"), "{err}");
     }
 
     #[test]

@@ -24,7 +24,16 @@
 //! campaign needs: GWI decision engines built lazily per modulation,
 //! decision tables memoized per (modulation, policy, tuning), and
 //! workloads memoized per (app, seed, scale) so sweeps synthesize each
-//! dataset once.  The [`exec`] module is the **parallel sweep engine**
+//! dataset once.
+//!
+//! Signaling is an **open API**: the physical layer is built on the
+//! [`phys::SignalingScheme`] trait, whose generalized [`phys::PamL`]
+//! implementation covers OOK (= PAM-2) and PAM4 as the paper-calibrated
+//! instances and PAM8/PAM16 as device-model extrapolations — modulation
+//! is the third first-class experiment axis (`sobel:LORAX-PAM8`,
+//! `lorax sweep --mods ook,pam4,pam8`, `examples/signaling_orders.rs`)
+//! for the laser-power-vs-quality studies the multilevel-signaling
+//! literature motivates.  The [`exec`] module is the **parallel sweep engine**
 //! on top: every figure and table reproduction is a declarative grid of
 //! specs fanned across OS threads by `exec::SweepRunner`, with traces
 //! replayed from a packed structure-of-arrays `exec::TraceBuffer` —

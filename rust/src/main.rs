@@ -7,6 +7,7 @@
 //! lorax run --app fft --policy baseline      # same, from app/policy flags
 //! lorax sweep --app fft [--grid small]       # Fig. 6, parallel sweep engine
 //! lorax sweep --apps all --jobs 8            # every evaluated app
+//! lorax sweep --mods ook,pam4,pam8           # signaling-order study
 //! lorax tune                                 # Table 3 (sweep + select, all apps)
 //! lorax simulate --app fft --policy LORAX-OOK [--xla]
 //! lorax jpeg --outdir out/                   # Fig. 7 (writes PGMs)
@@ -118,6 +119,31 @@ fn run() -> Result<()> {
             }
         }
         "sweep" => {
+            // --mods turns the sweep into the signaling-order study:
+            // LORAX at each PAM level, laser power and output quality
+            // per scheme (modulation is the third experiment axis).
+            if let Some(mods) = args.get("mods") {
+                if args.get("policy").is_some() || args.get("grid").is_some() {
+                    bail!(
+                        "--policy/--grid conflict with --mods: the signaling-order \
+                         study runs LORAX natively per scheme at Table-3 tuning"
+                    );
+                }
+                let mods = mods
+                    .split(',')
+                    .map(|s| s.trim().parse::<lorax::phys::params::Modulation>())
+                    .collect::<Result<Vec<_>>>()?;
+                let apps: Vec<String> = match (args.get("apps"), args.get("app")) {
+                    (Some("all"), _) | (None, None) => {
+                        lorax::apps::EVALUATED_APPS.iter().map(|s| s.to_string()).collect()
+                    }
+                    (Some(list), _) => list.split(',').map(|s| s.trim().to_string()).collect(),
+                    (None, Some(app)) => vec![app.to_string()],
+                };
+                let app_refs: Vec<&str> = apps.iter().map(|s| s.as_str()).collect();
+                emit(&figures::signaling_comparison(&cfg, &app_refs, &mods)?, csv);
+                return Ok(());
+            }
             let (bits, reds) = grid(&args);
             let kind: PolicyKind = args.get_or("policy", "LORAX-OOK").parse()?;
             let apps: Vec<String> = match (args.get("apps"), args.get("app")) {
@@ -273,7 +299,10 @@ COMMANDS
                  | --app <name> [--policy <name>]) [--json]
   sweep          Fig. 6  — sensitivity surfaces on the parallel sweep engine
                  (--app <name> | --apps <a,b|all>, [--policy <name>]
-                  [--grid small|tiny] [--jobs <n>])
+                  [--grid small|tiny] [--jobs <n>]); with --mods
+                 <ook,pam4,pam8,pam16> runs the signaling-order study
+                 instead (LORAX per PAM level: laser power + output
+                 quality; apps default to all evaluated; no --policy)
   tune           Table 3 — application-specific parameter selection ([--jobs <n>])
   simulate       one (app, policy) run (--app <name> --policy <name> [--xla])
   jpeg           Fig. 7  — JPEG quality panels (--outdir <dir>)

@@ -1,13 +1,18 @@
 //! Per-packet link occupancy and energy model.
 //!
 //! Bit-to-wavelength mapping: a 64-bit flit crosses the waveguide per
-//! cycle — under OOK on 64 wavelengths (bit *i* on λ_i), under PAM4 on 32
-//! wavelengths (bits (2i, 2i+1) Gray-coded on λ_i).  A float payload
-//! cycle carries one double (lo word on λ_0..31, hi word on λ_32..63
-//! under OOK); the decision's masked LSB wavelengths are driven at the
-//! reduced level, everything else at full.  Lasers are VCSELs gated at
-//! cycle granularity (paper §4.1's dynamic laser control), so idle links
-//! burn no laser power under *all* frameworks.
+//! cycle — under OOK on 64 wavelengths (bit *i* on λ_i), under PAM-L on
+//! `ceil(64/log2 L)` wavelengths (B = log2 L consecutive bits Gray-coded
+//! per λ; 32 λ for PAM4, 22 for PAM8).  A float payload cycle carries
+//! one double (lo word on λ_0..31, hi word on λ_32..63 under OOK); the
+//! decision's masked LSB wavelengths are driven at the reduced level,
+//! everything else at full.  Lasers are VCSELs gated at cycle
+//! granularity (paper §4.1's dynamic laser control), so idle links burn
+//! no laser power under *all* frameworks.
+//!
+//! Modulator energy per symbol: the OOK driver pays `mod_fj_per_bit`;
+//! multilevel ODACs pay `pam4_mod_fj_per_symbol` scaled linearly in DAC
+//! bits beyond the calibrated 2-bit PAM4 figure.
 
 use crate::coordinator::gwi::Decision;
 use crate::energy::breakdown::EnergyBreakdown;
@@ -77,14 +82,12 @@ pub fn flit_occupancy_cycles(v: FlitView, p: &PhotonicParams, m: Modulation) -> 
 ///
 /// A 64-bit flit carries two single-precision words, each masked `mask`:
 /// 2x `popcount(mask)` of the 64 bits ride reduced/zero-power
-/// wavelengths (OOK: one bit per lambda; PAM4: two bits per lambda).
+/// wavelengths (one bit per lambda under OOK, B bits per lambda under
+/// PAM-2^B).
 fn masked_lambdas(mask: u32, p: &PhotonicParams, m: Modulation) -> u32 {
     let words_per_flit = p.n_lambda(m) * m.bits_per_symbol() / 32;
     let masked_bits = mask.count_ones() * words_per_flit;
-    match m {
-        Modulation::Ook => masked_bits,
-        Modulation::Pam4 => masked_bits.div_ceil(2),
-    }
+    masked_bits.div_ceil(m.bits_per_symbol())
 }
 
 /// Full energy breakdown for one photonic packet transmission.
@@ -149,10 +152,15 @@ pub fn flit_energy(
     let gwi_pj = 2.0 * words * e.gwi_pj_per_word;
 
     // --- Modulation + receive ------------------------------------------
-    let modulation_pj = match m {
-        Modulation::Ook => bits as f64 * e.mod_fj_per_bit / 1000.0,
-        Modulation::Pam4 => (bits as f64 / 2.0) * e.pam4_mod_fj_per_symbol / 1000.0,
-    } + bits as f64 * e.rx_fj_per_bit / 1000.0;
+    let b = m.bits_per_symbol();
+    let symbol_pj = if b == 1 {
+        bits as f64 * e.mod_fj_per_bit / 1000.0
+    } else {
+        // Symbols carry B bits; the ODAC figure is per 2-bit PAM4 symbol
+        // and scales linearly in DAC bits for higher orders.
+        (bits as f64 / b as f64) * (e.pam4_mod_fj_per_symbol * (b as f64 / 2.0)) / 1000.0
+    };
+    let modulation_pj = symbol_pj + bits as f64 * e.rx_fj_per_bit / 1000.0;
 
     EnergyBreakdown {
         laser_pj,
@@ -221,15 +229,15 @@ mod tests {
     fn occupancy_counts() {
         let p = PhotonicParams::default();
         // 18 words * 32 = 576 bits over 64 bits/cycle = 9 (+1 selection).
-        assert_eq!(packet_occupancy_cycles(&float_pkt(), &p, Modulation::Ook), 10);
-        assert_eq!(packet_occupancy_cycles(&float_pkt(), &p, Modulation::Pam4), 10);
+        assert_eq!(packet_occupancy_cycles(&float_pkt(), &p, Modulation::OOK), 10);
+        assert_eq!(packet_occupancy_cycles(&float_pkt(), &p, Modulation::PAM4), 10);
         let small = Packet { payload_words: 1, ..float_pkt() };
-        assert_eq!(packet_occupancy_cycles(&small, &p, Modulation::Ook), 3);
+        assert_eq!(packet_occupancy_cycles(&small, &p, Modulation::OOK), 3);
     }
 
     #[test]
     fn truncation_saves_laser_vs_baseline() {
-        let (p, e, ws) = ctx(Modulation::Ook);
+        let (p, e, ws) = ctx(Modulation::OOK);
         let lc = LinkContext { params: &p, energy: &e, provisioning: &ws.provisioning[0], n_reader_banks: 7 };
         let full = packet_energy(&lc, &float_pkt(), &Decision::FULL, 4);
         let trunc = packet_energy(
@@ -246,7 +254,7 @@ mod tests {
 
     #[test]
     fn laser_energy_monotone_in_level() {
-        let (p, e, ws) = ctx(Modulation::Ook);
+        let (p, e, ws) = ctx(Modulation::OOK);
         let lc = LinkContext { params: &p, energy: &e, provisioning: &ws.provisioning[0], n_reader_banks: 7 };
         let mut prev = 0.0;
         for i in 0..=10 {
@@ -261,20 +269,50 @@ mod tests {
     fn masked_lambda_counting() {
         let p = PhotonicParams::default();
         // Two SP words per 64-bit flit: 16 masked bits/word -> 32 lambdas.
-        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::Ook), 32);
-        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::Pam4), 16);
-        assert_eq!(masked_lambdas(0x7, &p, Modulation::Pam4), 3); // 6 bits -> 3 lambdas
-        assert_eq!(masked_lambdas(0, &p, Modulation::Ook), 0);
+        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::OOK), 32);
+        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::PAM4), 16);
+        assert_eq!(masked_lambdas(0x7, &p, Modulation::PAM4), 3); // 6 bits -> 3 lambdas
+        assert_eq!(masked_lambdas(0, &p, Modulation::OOK), 0);
         // Full 32-bit mask turns every wavelength off during payload.
-        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::Ook), 64);
-        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::Pam4), 32);
+        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::OOK), 64);
+        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::PAM4), 32);
+        // PAM8: 22 lambdas x 3 bits -> 2 words/flit; 16 masked bits/word
+        // = 32 bits over 3-bit symbols -> 11 lambdas.
+        assert_eq!(masked_lambdas(0xFFFF, &p, Modulation::PAM8), 11);
+        assert_eq!(masked_lambdas(u32::MAX, &p, Modulation::PAM8), 22);
+    }
+
+    #[test]
+    fn higher_order_mod_energy_scales_with_dac_bits() {
+        // Per delivered bit, the ODAC term is flat in the order (B-bit
+        // symbol costs B/2 x the 2-bit figure but carries B/2 x the
+        // bits); the receive term is per-bit, so totals stay close while
+        // the laser/tuning terms shrink with the lambda count.
+        let (p, e, ws8) = ctx(Modulation::PAM8);
+        let lc8 = LinkContext {
+            params: &p,
+            energy: &e,
+            provisioning: &ws8.provisioning[0],
+            n_reader_banks: 7,
+        };
+        let (_, _, ws4) = ctx(Modulation::PAM4);
+        let lc4 = LinkContext {
+            params: &p,
+            energy: &e,
+            provisioning: &ws4.provisioning[0],
+            n_reader_banks: 7,
+        };
+        let e8 = packet_energy(&lc8, &float_pkt(), &Decision::FULL, 4);
+        let e4 = packet_energy(&lc4, &float_pkt(), &Decision::FULL, 4);
+        assert!((e8.modulation_pj / e4.modulation_pj - 1.0).abs() < 1e-9);
+        assert!(e8.tuning_pj < e4.tuning_pj);
     }
 
     #[test]
     fn pam4_baseline_laser_below_ook_baseline() {
         // Structural PAM4 advantage at iso-bandwidth (see DESIGN.md §5).
-        let (p, e, ws_o) = ctx(Modulation::Ook);
-        let (_, _, ws_p) = ctx(Modulation::Pam4);
+        let (p, e, ws_o) = ctx(Modulation::OOK);
+        let (_, _, ws_p) = ctx(Modulation::PAM4);
         let lc_o = LinkContext { params: &p, energy: &e, provisioning: &ws_o.provisioning[0], n_reader_banks: 7 };
         let lc_p = LinkContext { params: &p, energy: &e, provisioning: &ws_p.provisioning[0], n_reader_banks: 7 };
         let eo = packet_energy(&lc_o, &float_pkt(), &Decision::FULL, 4);
@@ -286,7 +324,7 @@ mod tests {
 
     #[test]
     fn int_packets_ignore_decision_mask() {
-        let (p, e, ws) = ctx(Modulation::Ook);
+        let (p, e, ws) = ctx(Modulation::OOK);
         let lc = LinkContext { params: &p, energy: &e, provisioning: &ws.provisioning[0], n_reader_banks: 7 };
         let int_pkt = Packet { kind: PayloadKind::Int, approximable: false, ..float_pkt() };
         let a = packet_energy(&lc, &int_pkt, &Decision::FULL, 4);

@@ -226,7 +226,7 @@ mod tests {
 
     #[test]
     fn baseline_run_is_sane() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let t = trace();
         let r = sim.run(&t, &Policy::new(PolicyKind::Baseline, "fft"));
@@ -240,11 +240,11 @@ mod tests {
 
     #[test]
     fn lorax_saves_laser_power_vs_baseline() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let t = trace();
         let base = sim.run(&t, &Policy::new(PolicyKind::Baseline, "blackscholes"));
-        let lorax = sim.run(&t, &Policy::new(PolicyKind::LoraxOok, "blackscholes"));
+        let lorax = sim.run(&t, &Policy::new(PolicyKind::LORAX_OOK, "blackscholes"));
         assert!(
             lorax.energy.laser_pj < base.energy.laser_pj,
             "lorax {} !< base {}",
@@ -257,11 +257,11 @@ mod tests {
 
     #[test]
     fn lorax_beats_prior16_on_laser() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let t = trace();
         let prior = sim.run(&t, &Policy::new(PolicyKind::Prior16, "blackscholes"));
-        let lorax = sim.run(&t, &Policy::new(PolicyKind::LoraxOok, "blackscholes"));
+        let lorax = sim.run(&t, &Policy::new(PolicyKind::LORAX_OOK, "blackscholes"));
         assert!(
             lorax.energy.laser_pj < prior.energy.laser_pj,
             "lorax {} !< prior {}",
@@ -272,7 +272,7 @@ mod tests {
 
     #[test]
     fn latency_increases_with_congestion() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let light = generate(&SynthConfig { rate_per_100_cycles: 2, cycles: 3000, ..Default::default() });
         let heavy = generate(&SynthConfig { rate_per_100_cycles: 60, cycles: 3000, ..Default::default() });
@@ -285,10 +285,10 @@ mod tests {
 
     #[test]
     fn replay_is_deterministic() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let t = trace();
-        let p = Policy::new(PolicyKind::LoraxOok, "fft");
+        let p = Policy::new(PolicyKind::LORAX_OOK, "fft");
         let a = sim.run(&t, &p);
         let b = sim.run(&t, &p);
         assert_eq!(a.cycles, b.cycles);
@@ -298,7 +298,7 @@ mod tests {
 
     #[test]
     fn p95_is_a_real_quantile() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let t = trace();
         let r = sim.run(&t, &Policy::new(PolicyKind::Baseline, "fft"));
@@ -313,10 +313,10 @@ mod tests {
 
     #[test]
     fn prebuilt_table_replay_matches_run() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let t = trace();
-        let p = Policy::new(PolicyKind::LoraxOok, "blackscholes");
+        let p = Policy::new(PolicyKind::LORAX_OOK, "blackscholes");
         let via_run = sim.run(&t, &p);
         let buf = TraceBuffer::from_records(&e.topo, &t);
         let table = DecisionTable::build(&e, &p);
@@ -331,7 +331,7 @@ mod tests {
 
     #[test]
     fn empty_trace_yields_empty_finite_report() {
-        let e = engine(Modulation::Ook);
+        let e = engine(Modulation::OOK);
         let sim = Simulator::new(&e);
         let r = sim.run(&[], &Policy::new(PolicyKind::Baseline, "fft"));
         assert_eq!(r.packets, 0);

@@ -103,14 +103,14 @@ mod tests {
         let near = PathLoss::new(1.0, 2, 1);
         let far = PathLoss::new(5.0, 8, 6);
         let prov =
-            LaserProvisioning::for_reader_losses(&[near, far], &p(), Modulation::Ook);
-        let worst = far.total_db(&p(), Modulation::Ook);
+            LaserProvisioning::for_reader_losses(&[near, far], &p(), Modulation::OOK);
+        let worst = far.total_db(&p(), Modulation::OOK);
         assert!((prov.worst_loss_db - worst).abs() < 1e-12);
         // The worst reader receives exactly the sensitivity at full level.
         let rx = prov.received_mw(worst, 1.0);
         assert!((rx - p().sensitivity_mw()).abs() / rx < 1e-9);
         // A nearer reader receives strictly more.
-        let rx_near = prov.received_mw(near.total_db(&p(), Modulation::Ook), 1.0);
+        let rx_near = prov.received_mw(near.total_db(&p(), Modulation::OOK), 1.0);
         assert!(rx_near > rx * 2.0);
     }
 
@@ -119,7 +119,7 @@ mod tests {
         let prov = LaserProvisioning::for_reader_losses(
             &[PathLoss::new(2.0, 4, 3)],
             &p(),
-            Modulation::Ook,
+            Modulation::OOK,
         );
         let ratio = prov.total_electrical_mw(&p()) / prov.total_optical_mw();
         assert!((ratio - 1.0 / 0.15).abs() < 1e-9);
@@ -130,7 +130,7 @@ mod tests {
         let prov = LaserProvisioning::for_reader_losses(
             &[PathLoss::new(2.0, 4, 3)],
             &p(),
-            Modulation::Ook,
+            Modulation::OOK,
         );
         let full = prov.received_mw(3.0, 1.0);
         let fifth = prov.received_mw(3.0, 0.2);

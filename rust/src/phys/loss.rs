@@ -3,11 +3,12 @@
 //! A [`PathLoss`] records the physical composition of one source→reader
 //! path on a waveguide — propagation length, bend count, MR banks passed
 //! by, and the final drop — and evaluates eq. 2's `P_phot_loss` term for a
-//! given modulation.  Through-loss scales with the wavelength count per
-//! bank (a PAM4 bank has half as many MRs), which is one of the two
+//! given signaling scheme.  Through-loss scales with the wavelength count
+//! per bank (a PAM4 bank has half as many MRs), which is one of the two
 //! structural reasons PAM4 wins despite its 5.8 dB signaling penalty.
 
 use super::params::{Modulation, PhotonicParams};
+use super::signaling::SignalingScheme;
 
 /// Composition of the photonic loss along one source→destination path.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -32,17 +33,20 @@ impl PathLoss {
 
     /// Total loss in dB for `m`-modulated signals (eq. 2's `P_phot_loss`).
     pub fn total_db(&self, p: &PhotonicParams, m: Modulation) -> f64 {
-        let n_mr_per_bank = p.n_lambda(m) as f64;
+        self.total_db_for(p, &m.scheme())
+    }
+
+    /// [`PathLoss::total_db`] against an arbitrary (possibly custom)
+    /// signaling scheme — the open entry point.
+    pub fn total_db_for(&self, p: &PhotonicParams, scheme: &dyn SignalingScheme) -> f64 {
+        let n_mr_per_bank = scheme.n_lambda(p) as f64;
         let mut db = self.length_cm * p.wg_prop_loss_db_per_cm
             + self.bends as f64 * p.wg_bend_loss_db_per_90
             + self.banks_passed as f64 * n_mr_per_bank * p.mr_through_loss_db;
         if self.dropped {
             db += p.mr_drop_loss_db;
         }
-        if m == Modulation::Pam4 {
-            db += p.pam4_signaling_loss_db;
-        }
-        db
+        db + scheme.signaling_loss_db(p)
     }
 
     /// Extend this path by another segment (e.g. provisioning walks).
@@ -69,7 +73,7 @@ mod tests {
         // 2 cm, 4 bends, 3 banks passed, dropped, OOK:
         // 2*0.25 + 4*0.01 + 3*64*0.02 + 0.7 = 0.5+0.04+3.84+0.7 = 5.08 dB
         let path = PathLoss::new(2.0, 4, 3);
-        let db = path.total_db(&p(), Modulation::Ook);
+        let db = path.total_db(&p(), Modulation::OOK);
         assert!((db - 5.08).abs() < 1e-9, "db={db}");
     }
 
@@ -78,7 +82,7 @@ mod tests {
         // Same path under PAM4: through loss halves (32 MRs/bank), +5.8 dB:
         // 0.5 + 0.04 + 3*32*0.02 + 0.7 + 5.8 = 8.96 dB
         let path = PathLoss::new(2.0, 4, 3);
-        let db = path.total_db(&p(), Modulation::Pam4);
+        let db = path.total_db(&p(), Modulation::PAM4);
         assert!((db - 8.96).abs() < 1e-9, "db={db}");
     }
 
@@ -87,18 +91,30 @@ mod tests {
         let base = PathLoss::new(1.0, 0, 1);
         let longer = base.extended(1.0, 0, 0);
         let more_banks = base.extended(0.0, 0, 2);
-        for m in [Modulation::Ook, Modulation::Pam4] {
+        for m in Modulation::KNOWN {
             assert!(longer.total_db(&p(), m) > base.total_db(&p(), m));
             assert!(more_banks.total_db(&p(), m) > base.total_db(&p(), m));
         }
     }
 
     #[test]
+    fn hand_computed_pam8_loss() {
+        // Same path under PAM8: 22 MRs/bank (ceil(64/3)), +2x5.8 dB:
+        // 0.5 + 0.04 + 3*22*0.02 + 0.7 + 11.6 = 14.16 dB
+        let path = PathLoss::new(2.0, 4, 3);
+        let db = path.total_db(&p(), Modulation::PAM8);
+        assert!((db - 14.16).abs() < 1e-9, "db={db}");
+        // The Modulation handle and a raw PamL scheme agree.
+        use crate::phys::signaling::PamL;
+        assert_eq!(db, path.total_db_for(&p(), &PamL::new(8)));
+    }
+
+    #[test]
     fn undropped_path_excludes_drop_loss() {
         let mut path = PathLoss::new(1.0, 2, 2);
-        let with_drop = path.total_db(&p(), Modulation::Ook);
+        let with_drop = path.total_db(&p(), Modulation::OOK);
         path.dropped = false;
-        let without = path.total_db(&p(), Modulation::Ook);
+        let without = path.total_db(&p(), Modulation::OOK);
         assert!((with_drop - without - 0.7).abs() < 1e-12);
     }
 }

@@ -2,9 +2,13 @@
 //!
 //! Everything the paper takes from its device literature (Table 2) and its
 //! link-budget equation (eq. 2) lives here: device parameters, path-loss
-//! accounting, laser-power provisioning, and the OOK/PAM4 receiver models
-//! that turn "mantissa LSBs sent at 20% laser power over a 7.3 dB path"
-//! into concrete per-bit error probabilities for the channel kernel.
+//! accounting, laser-power provisioning, and the **open signaling layer**
+//! — a [`SignalingScheme`] trait with a generalized PAM-L implementation
+//! ([`PamL`]) whose OOK (= PAM-2) and PAM4 instances are calibrated to
+//! the paper, and whose PAM8/PAM16 instances extrapolate the device
+//! model.  The receiver models turn "mantissa LSBs sent at 20% laser
+//! power over a 7.3 dB path" into concrete per-bit error probabilities
+//! for the channel kernel, for any signaling order.
 
 pub mod laser;
 pub mod loss;
@@ -14,4 +18,4 @@ pub mod signaling;
 pub use laser::{per_lambda_launch_dbm, required_laser_power_dbm, LaserProvisioning};
 pub use loss::PathLoss;
 pub use params::{Modulation, PhotonicParams};
-pub use signaling::{BitErrorProbs, ReceiverCal};
+pub use signaling::{gray_eye_marginals, BitErrorProbs, PamL, ReceiverCal, SignalingScheme};

@@ -4,29 +4,131 @@
 //! constants; every value is overridable through the config system so the
 //! `ablation_energy` bench can sweep them.
 
-/// Signal modulation scheme on a photonic link.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Modulation {
-    /// On-off keying: 1 bit per wavelength per cycle.
-    Ook,
-    /// 4-level pulse-amplitude modulation: 2 bits per wavelength per cycle.
-    Pam4,
+use anyhow::{bail, Result};
+
+use super::signaling::PamL;
+
+/// Compact identifier of a PAM-L signaling order on a photonic link.
+///
+/// This is the *value-level handle* the experiment surfaces key on —
+/// [`crate::exec::ExperimentSpec`] fields, decision-table cache keys,
+/// CLI axes (`lorax sweep --mods ook,pam4,pam8`).  The physics behind
+/// each order lives in the open [`super::signaling::SignalingScheme`]
+/// trait; `Modulation::scheme()` resolves the handle to its
+/// [`PamL`] instance.  OOK is PAM-2: one bit per wavelength per cycle.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Modulation {
+    /// PAM order (2, 4, 8 or 16); power of two by construction.
+    levels: u8,
 }
 
 impl Modulation {
-    /// Bits carried per wavelength per modulation cycle.
-    pub fn bits_per_symbol(self) -> u32 {
-        match self {
-            Modulation::Ook => 1,
-            Modulation::Pam4 => 2,
+    /// On-off keying (PAM-2): 1 bit per wavelength per cycle.
+    pub const OOK: Modulation = Modulation { levels: 2 };
+    /// 4-level pulse-amplitude modulation: 2 bits per wavelength per cycle.
+    pub const PAM4: Modulation = Modulation { levels: 4 };
+    /// 8-level PAM: 3 bits per wavelength per cycle (extrapolated device
+    /// model, see [`super::signaling`]).
+    pub const PAM8: Modulation = Modulation { levels: 8 };
+    /// 16-level PAM: 4 bits per wavelength per cycle (extrapolated).
+    pub const PAM16: Modulation = Modulation { levels: 16 };
+
+    /// Number of supported signaling orders.
+    pub const N_KNOWN: usize = 4;
+    /// Every signaling order the spec/CLI surfaces accept, in increasing
+    /// PAM order.  The trait API itself is open — a custom
+    /// [`super::signaling::SignalingScheme`] can drive the phys layer
+    /// directly — but these are the orders with calibrated or
+    /// extrapolated Table-2 device models.
+    pub const KNOWN: [Modulation; Self::N_KNOWN] =
+        [Modulation::OOK, Modulation::PAM4, Modulation::PAM8, Modulation::PAM16];
+
+    /// The PAM-L order with `levels` amplitude levels.
+    pub fn pam(levels: u32) -> Result<Modulation> {
+        match Modulation::KNOWN.iter().find(|m| m.levels() == levels) {
+            Some(m) => Ok(*m),
+            None => {
+                bail!("unsupported PAM order {levels} (known: {})", Modulation::known_names())
+            }
         }
     }
 
+    /// Amplitude levels per symbol (2 for OOK).
+    pub fn levels(self) -> u32 {
+        self.levels as u32
+    }
+
+    /// Bits carried per wavelength per modulation cycle (log2 of levels).
+    pub fn bits_per_symbol(self) -> u32 {
+        self.levels().ilog2()
+    }
+
+    /// The signaling-scheme instance implementing this order's physics.
+    pub fn scheme(self) -> PamL {
+        PamL::new(self.levels())
+    }
+
+    /// Dense index into [`Modulation::KNOWN`] (for per-scheme slot
+    /// arrays, e.g. the session's lazy engine cache).
+    pub fn index(self) -> usize {
+        self.bits_per_symbol() as usize - 1
+    }
+
     pub fn name(self) -> &'static str {
-        match self {
-            Modulation::Ook => "OOK",
-            Modulation::Pam4 => "PAM4",
+        match self.levels {
+            2 => "OOK",
+            4 => "PAM4",
+            8 => "PAM8",
+            16 => "PAM16",
+            _ => unreachable!("Modulation only constructible for known orders"),
         }
+    }
+
+    /// The LORAX policy-family name running natively on this order.
+    pub fn lorax_name(self) -> &'static str {
+        match self.levels {
+            2 => "LORAX-OOK",
+            4 => "LORAX-PAM4",
+            8 => "LORAX-PAM8",
+            16 => "LORAX-PAM16",
+            _ => unreachable!("Modulation only constructible for known orders"),
+        }
+    }
+
+    /// Comma-separated list of valid scheme names (for error messages).
+    pub fn known_names() -> String {
+        Modulation::KNOWN.map(|m| m.name()).join(", ")
+    }
+}
+
+impl std::fmt::Display for Modulation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `pad` (not `write_str`) so width/alignment specifiers work in
+        // table-style output.
+        f.pad(self.name())
+    }
+}
+
+impl std::fmt::Debug for Modulation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Modulation {
+    type Err = anyhow::Error;
+
+    /// Parse a scheme by its canonical name, case-insensitively
+    /// (`%OOK`, `%pam4`, `%Pam8` all work); the error lists the valid
+    /// scheme names.
+    fn from_str(s: &str) -> Result<Modulation, anyhow::Error> {
+        Modulation::KNOWN
+            .iter()
+            .copied()
+            .find(|m| m.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown modulation {s:?} (known: {})", Modulation::known_names())
+            })
     }
 }
 
@@ -49,10 +151,12 @@ pub struct PhotonicParams {
     /// the paper reports only the per-nm figure; 0.5 nm mean detuning is
     /// the common assumption in the DSENT-based literature).
     pub tuning_range_nm: f64,
-    /// Extra signaling loss when using PAM4, dB (§5.1).
+    /// Extra signaling loss per additional bit-per-symbol, dB (§5.1
+    /// gives the PAM4 value; higher orders extrapolate linearly in
+    /// bits-per-symbol — see `SignalingScheme::signaling_loss_db`).
     pub pam4_signaling_loss_db: f64,
-    /// LSB laser level floor for PAM4 relative to the OOK reduced level
-    /// (§4.2: "1.5x that of OOK").
+    /// LSB laser level floor per additional bit-per-symbol relative to
+    /// OOK (§4.2: "1.5x that of OOK" for PAM4; higher orders compound).
     pub pam4_power_factor: f64,
     /// Wavelengths per waveguide under OOK (§5.1: 64).
     pub n_lambda_ook: u32,
@@ -98,12 +202,10 @@ impl Default for PhotonicParams {
 }
 
 impl PhotonicParams {
-    /// Wavelength count for a modulation at iso-bandwidth (64 bits/cycle).
+    /// Wavelength count for a modulation at iso-bandwidth (≥64 bits/cycle).
     pub fn n_lambda(&self, m: Modulation) -> u32 {
-        match m {
-            Modulation::Ook => self.n_lambda_ook,
-            Modulation::Pam4 => self.n_lambda_pam4,
-        }
+        use super::signaling::SignalingScheme;
+        m.scheme().n_lambda(self)
     }
 
     /// Static thermo-optic tuning power for one MR, in mW.
@@ -138,9 +240,42 @@ mod tests {
     fn iso_bandwidth_lambda_counts() {
         let p = PhotonicParams::default();
         assert_eq!(
-            p.n_lambda(Modulation::Ook) * Modulation::Ook.bits_per_symbol(),
-            p.n_lambda(Modulation::Pam4) * Modulation::Pam4.bits_per_symbol()
+            p.n_lambda(Modulation::OOK) * Modulation::OOK.bits_per_symbol(),
+            p.n_lambda(Modulation::PAM4) * Modulation::PAM4.bits_per_symbol()
         );
+        // Higher orders provision at least the OOK bandwidth.
+        for m in Modulation::KNOWN {
+            assert!(p.n_lambda(m) * m.bits_per_symbol() >= p.n_lambda_ook, "{m}");
+        }
+        assert_eq!(p.n_lambda(Modulation::PAM8), 22); // ceil(64/3)
+        assert_eq!(p.n_lambda(Modulation::PAM16), 16);
+    }
+
+    #[test]
+    fn modulation_handle_derivations() {
+        assert_eq!(Modulation::OOK.levels(), 2);
+        assert_eq!(Modulation::OOK.bits_per_symbol(), 1);
+        assert_eq!(Modulation::PAM8.bits_per_symbol(), 3);
+        assert_eq!(Modulation::PAM16.bits_per_symbol(), 4);
+        for (i, m) in Modulation::KNOWN.iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(Modulation::pam(m.levels()).unwrap(), *m);
+        }
+        assert!(Modulation::pam(3).is_err());
+        let e = Modulation::pam(32).unwrap_err().to_string();
+        assert!(e.contains("PAM16"), "{e}");
+    }
+
+    #[test]
+    fn modulation_name_roundtrip_case_insensitive() {
+        for m in Modulation::KNOWN {
+            assert_eq!(m.name().parse::<Modulation>().unwrap(), m);
+            assert_eq!(m.name().to_lowercase().parse::<Modulation>().unwrap(), m);
+            assert_eq!(m.to_string(), m.name());
+        }
+        assert_eq!("Pam8".parse::<Modulation>().unwrap(), Modulation::PAM8);
+        let e = "qam".parse::<Modulation>().unwrap_err().to_string();
+        assert!(e.contains("OOK, PAM4, PAM8, PAM16"), "{e}");
     }
 
     #[test]

@@ -67,7 +67,7 @@ pub fn fig6_surfaces_with(
     apps.iter()
         .map(|app| {
             let id: AppId = app.parse().unwrap_or_else(|e| panic!("{e:#}"));
-            runner.sweep_surface(&session, id, PolicyKind::LoraxOok, bits_axis, reduction_axis)
+            runner.sweep_surface(&session, id, PolicyKind::LORAX_OOK, bits_axis, reduction_axis)
         })
         .collect()
 }
@@ -209,8 +209,8 @@ pub fn fig7_jpeg(cfg: &SystemConfig, outdir: &std::path::Path) -> Result<Table> 
     let runner = SweepRunner::new();
     let recons = runner.map(&panels, |_, &(_, bits)| {
         let tuning = AppTuning { approx_bits: bits, power_reduction_pct: 77, trunc_bits: bits };
-        let policy = crate::approx::policy::Policy::with_tuning(PolicyKind::LoraxOok, tuning);
-        let engine = sys.engine_for(PolicyKind::LoraxOok);
+        let policy = crate::approx::policy::Policy::with_tuning(PolicyKind::LORAX_OOK, tuning);
+        let engine = sys.engine_for(PolicyKind::LORAX_OOK);
         let mut ch = crate::coordinator::channel::PhotonicChannel::new(
             engine,
             policy,
@@ -233,6 +233,51 @@ pub fn fig7_jpeg(cfg: &SystemConfig, outdir: &std::path::Path) -> Result<Table> 
     Ok(t)
 }
 
+/// Signaling-order study: LORAX at every requested PAM level, per app —
+/// the laser-power-vs-output-quality trade-off the multilevel-signaling
+/// literature motivates (`lorax sweep --mods ook,pam4,pam8`).
+///
+/// One row per (app, scheme), columns for laser power, energy-per-bit
+/// and output quality; the grid runs through the sweep engine against a
+/// shared session (one engine + table build per scheme).
+pub fn signaling_comparison(
+    cfg: &SystemConfig,
+    apps: &[&str],
+    mods: &[crate::phys::params::Modulation],
+) -> Result<Table> {
+    let mut t = Table::new(
+        "Signaling orders — LORAX laser power vs output quality per PAM level",
+        &["app", "scheme", "n_lambda", "laser mW", "EPB pJ/b", "error %", "reduced", "truncated"],
+    );
+    let ids = apps
+        .iter()
+        .map(|app| app.parse::<AppId>())
+        .collect::<Result<Vec<AppId>>>()?;
+    let cells: Vec<(AppId, crate::phys::params::Modulation)> = ids
+        .iter()
+        .flat_map(|&app| mods.iter().map(move |&m| (app, m)))
+        .collect();
+    let session = LoraxSession::new(cfg);
+    let runner = SweepRunner::new();
+    let reports = runner.map(&cells, |_, &(app, m)| {
+        session.run(&crate::exec::ExperimentSpec::new(app, PolicyKind::Lorax(m)))
+    });
+    for ((app, m), report) in cells.iter().zip(reports) {
+        let r = report?;
+        t.row(&[
+            app.name().to_string(),
+            m.to_string(),
+            cfg.photonic.n_lambda(*m).to_string(),
+            format!("{:.3}", r.sim.avg_laser_mw),
+            format!("{:.4}", r.sim.epb_pj),
+            format!("{:.3}", r.error_pct),
+            r.sim.reduced_packets.to_string(),
+            r.sim.truncated_packets.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
 /// §5.3 headline numbers from a set of Fig.-8 runs: average and best-case
 /// reductions of LORAX-OOK / LORAX-PAM4 vs baseline, [16] and truncation.
 pub fn headline_summary(all: &[Vec<AppRunReport>]) -> Table {
@@ -240,8 +285,8 @@ pub fn headline_summary(all: &[Vec<AppRunReport>]) -> Table {
     let b = idx(PolicyKind::Baseline);
     let p16 = idx(PolicyKind::Prior16);
     let tr = idx(PolicyKind::Truncation);
-    let ook = idx(PolicyKind::LoraxOok);
-    let pam = idx(PolicyKind::LoraxPam4);
+    let ook = idx(PolicyKind::LORAX_OOK);
+    let pam = idx(PolicyKind::LORAX_PAM4);
 
     let mut t = Table::new(
         "§5.3 headline — reduction vs reference (%); paper values in brackets",
@@ -314,6 +359,19 @@ mod tests {
         assert!(rendered.contains("sobel"));
         let t3 = table3_selection(&cfg, &surfaces);
         assert_eq!(t3.n_rows(), 1);
+    }
+
+    #[test]
+    fn signaling_comparison_rows_per_scheme() {
+        use crate::phys::params::Modulation;
+        let cfg = tiny();
+        let mods = [Modulation::OOK, Modulation::PAM4, Modulation::PAM8];
+        let t = signaling_comparison(&cfg, &["sobel"], &mods).unwrap();
+        assert_eq!(t.n_rows(), 3);
+        let r = t.render();
+        assert!(r.contains("PAM8"), "{r}");
+        assert!(r.contains("laser mW"), "{r}");
+        assert!(signaling_comparison(&cfg, &["nope"], &mods).is_err());
     }
 
     #[test]

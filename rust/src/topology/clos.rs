@@ -169,7 +169,7 @@ mod tests {
             let mut prev = -1.0;
             for k in 1..8 {
                 let dst = (src + k) % 8;
-                let loss = t.photonic_path(src, dst).total_db(&p, Modulation::Ook);
+                let loss = t.photonic_path(src, dst).total_db(&p, Modulation::OOK);
                 assert!(loss > prev, "src={src} k={k} loss={loss} prev={prev}");
                 prev = loss;
             }

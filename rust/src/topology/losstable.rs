@@ -4,10 +4,12 @@
 
 use super::clos::ClosTopology;
 use crate::phys::laser::LaserProvisioning;
+use crate::phys::loss::PathLoss;
 use crate::phys::params::{Modulation, PhotonicParams};
 use crate::phys::signaling::ReceiverCal;
 
-/// Loss table + provisioning + receiver calibration for one modulation.
+/// Loss table + provisioning + receiver calibration for one signaling
+/// scheme.
 #[derive(Clone, Debug)]
 pub struct WaveguideSet {
     pub modulation: Modulation,
@@ -21,17 +23,28 @@ pub struct WaveguideSet {
 
 impl WaveguideSet {
     pub fn build(topo: &ClosTopology, p: &PhotonicParams, m: Modulation) -> WaveguideSet {
-        let n = topo.n_clusters;
+        WaveguideSet::build_from_paths(&reader_path_profile(topo), p, m)
+    }
+
+    /// Build one scheme's set from a precomputed reader-path profile
+    /// (the paths are pure geometry — modulation-independent — so a
+    /// multi-scheme [`LossTable`] walks the topology once and shares
+    /// them across every scheme).
+    pub fn build_from_paths(
+        paths: &[Vec<(usize, PathLoss)>],
+        p: &PhotonicParams,
+        m: Modulation,
+    ) -> WaveguideSet {
+        let n = paths.len();
         let mut loss_db = vec![vec![f64::NAN; n]; n];
         let mut provisioning = Vec::with_capacity(n);
         let mut receiver_cal = Vec::with_capacity(n);
-        for src in 0..n {
-            let readers = topo.reader_paths(src);
-            for (dst, path) in &readers {
+        for (src, readers) in paths.iter().enumerate() {
+            for (dst, path) in readers {
                 loss_db[src][*dst] = path.total_db(p, m);
             }
-            let paths: Vec<_> = readers.iter().map(|(_, pl)| *pl).collect();
-            let prov = LaserProvisioning::for_reader_losses(&paths, p, m);
+            let reader_losses: Vec<_> = readers.iter().map(|(_, pl)| *pl).collect();
+            let prov = LaserProvisioning::for_reader_losses(&reader_losses, p, m);
             receiver_cal.push(ReceiverCal::new(&prov, p));
             provisioning.push(prov);
         }
@@ -50,26 +63,48 @@ impl WaveguideSet {
     }
 }
 
-/// Both modulations' tables, built once from the topology.
+/// The modulation-independent geometry of every source waveguide's
+/// reader paths, computed once per topology walk.
+fn reader_path_profile(topo: &ClosTopology) -> Vec<Vec<(usize, PathLoss)>> {
+    (0..topo.n_clusters).map(|src| topo.reader_paths(src)).collect()
+}
+
+/// Loss/provisioning tables for every supported signaling scheme, built
+/// once from a single topology walk and keyed by [`Modulation`].
 #[derive(Clone, Debug)]
 pub struct LossTable {
-    pub ook: WaveguideSet,
-    pub pam4: WaveguideSet,
+    sets: Vec<WaveguideSet>,
 }
 
 impl LossTable {
+    /// Tables for every [`Modulation::KNOWN`] scheme.
     pub fn build(topo: &ClosTopology, p: &PhotonicParams) -> LossTable {
+        LossTable::build_for(topo, p, &Modulation::KNOWN)
+    }
+
+    /// Tables for a chosen set of schemes; the reader-path geometry is
+    /// computed once and shared across all of them.
+    pub fn build_for(topo: &ClosTopology, p: &PhotonicParams, mods: &[Modulation]) -> LossTable {
+        let paths = reader_path_profile(topo);
         LossTable {
-            ook: WaveguideSet::build(topo, p, Modulation::Ook),
-            pam4: WaveguideSet::build(topo, p, Modulation::Pam4),
+            sets: mods.iter().map(|&m| WaveguideSet::build_from_paths(&paths, p, m)).collect(),
         }
     }
 
+    /// The waveguide set for scheme `m`.
+    ///
+    /// # Panics
+    /// If the table was not built for `m`.
     pub fn set(&self, m: Modulation) -> &WaveguideSet {
-        match m {
-            Modulation::Ook => &self.ook,
-            Modulation::Pam4 => &self.pam4,
-        }
+        self.sets
+            .iter()
+            .find(|s| s.modulation == m)
+            .unwrap_or_else(|| panic!("LossTable not built for {m}"))
+    }
+
+    /// Every scheme this table was built for.
+    pub fn modulations(&self) -> impl Iterator<Item = Modulation> + '_ {
+        self.sets.iter().map(|s| s.modulation)
     }
 }
 
@@ -87,14 +122,63 @@ mod tests {
     #[test]
     fn diagonal_is_nan_offdiagonal_finite() {
         let (_, _, t) = build();
+        let ook = t.set(Modulation::OOK);
+        let pam4 = t.set(Modulation::PAM4);
         for s in 0..8 {
             for d in 0..8 {
                 if s == d {
-                    assert!(t.ook.loss(s, d).is_nan());
+                    assert!(ook.loss(s, d).is_nan());
                 } else {
-                    assert!(t.ook.loss(s, d).is_finite());
-                    assert!(t.pam4.loss(s, d) > t.ook.loss(s, d) - 5.0);
+                    assert!(ook.loss(s, d).is_finite());
+                    assert!(pam4.loss(s, d) > ook.loss(s, d) - 5.0);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn covers_every_known_scheme() {
+        let (_, _, t) = build();
+        let mods: Vec<Modulation> = t.modulations().collect();
+        assert_eq!(mods, Modulation::KNOWN.to_vec());
+        for m in Modulation::KNOWN {
+            assert_eq!(t.set(m).modulation, m);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not built for")]
+    fn missing_scheme_panics() {
+        let topo = ClosTopology::default_64core();
+        let p = PhotonicParams::default();
+        let t = LossTable::build_for(&topo, &p, &[Modulation::OOK]);
+        let _ = t.set(Modulation::PAM8);
+    }
+
+    #[test]
+    fn shared_path_profile_matches_per_scheme_walks() {
+        // The dedup (one topology walk shared across schemes) must be
+        // invisible in the numbers: build_from_paths == build, per cell.
+        let topo = ClosTopology::default_64core();
+        let p = PhotonicParams::default();
+        let t = LossTable::build(&topo, &p);
+        for m in Modulation::KNOWN {
+            let direct = WaveguideSet::build(&topo, &p, m);
+            let shared = t.set(m);
+            for s in 0..8 {
+                for d in 0..8 {
+                    if s != d {
+                        assert_eq!(direct.loss(s, d), shared.loss(s, d), "{m} ({s},{d})");
+                    }
+                }
+                assert_eq!(
+                    direct.provisioning[s].per_lambda_mw, shared.provisioning[s].per_lambda_mw,
+                    "{m} src={s}"
+                );
+                assert_eq!(
+                    direct.receiver_cal[s].sigma_mw, shared.receiver_cal[s].sigma_mw,
+                    "{m} src={s}"
+                );
             }
         }
     }
@@ -102,17 +186,18 @@ mod tests {
     #[test]
     fn worst_reader_receives_sensitivity_at_full_power() {
         let (_, p, t) = build();
+        let ook = t.set(Modulation::OOK);
         for s in 0..8 {
             // The farthest ring reader is (s + 7) % 8.
             let far = (s + 7) % 8;
-            let rx = t.ook.received_mw(s, far, 1.0);
+            let rx = ook.received_mw(s, far, 1.0);
             assert!(
                 (rx - p.sensitivity_mw()).abs() / rx < 1e-9,
                 "src={s} rx={rx}"
             );
             // Nearer readers receive strictly more.
             let near = (s + 1) % 8;
-            assert!(t.ook.received_mw(s, near, 1.0) > rx);
+            assert!(ook.received_mw(s, near, 1.0) > rx);
         }
     }
 
@@ -122,8 +207,8 @@ mod tests {
         // banks beats 64 lambda despite the 5.8 dB signaling penalty.
         let (_, _, t) = build();
         for s in 0..8 {
-            let ook = t.ook.provisioning[s].total_optical_mw();
-            let pam = t.pam4.provisioning[s].total_optical_mw();
+            let ook = t.set(Modulation::OOK).provisioning[s].total_optical_mw();
+            let pam = t.set(Modulation::PAM4).provisioning[s].total_optical_mw();
             assert!(pam < ook, "cluster {s}: pam4 {pam} >= ook {ook}");
         }
     }
@@ -135,10 +220,11 @@ mod tests {
         // weaker invariant: every source has the same *sorted* loss
         // profile when the ring is homogeneous per position.
         let (_, _, t) = build();
+        let ook = t.set(Modulation::OOK);
         let profile = |s: usize| {
             let mut v: Vec<f64> = (0..8)
                 .filter(|&d| d != s)
-                .map(|d| (t.ook.loss(s, d) * 1e6).round() / 1e6)
+                .map(|d| (ook.loss(s, d) * 1e6).round() / 1e6)
                 .collect();
             v.sort_by(|a, b| a.partial_cmp(b).unwrap());
             v

@@ -21,7 +21,7 @@ fn engine() -> GwiDecisionEngine {
     GwiDecisionEngine::new(
         ClosTopology::default_64core(),
         PhotonicParams::default(),
-        Modulation::Ook,
+        Modulation::OOK,
     )
 }
 
@@ -33,12 +33,12 @@ fn parallel_surface_matches_serial_sweep_app() {
     let session = LoraxSession::new(&cfg);
     let bits = [8u32, 32];
     let reds = [0u32, 80, 100];
-    let serial = sweep_app(&e, "sobel", PolicyKind::LoraxOok, seed, scale, &bits, &reds);
+    let serial = sweep_app(&e, "sobel", PolicyKind::LORAX_OOK, seed, scale, &bits, &reds);
     for threads in [1usize, 4] {
         let par = SweepRunner::with_threads(threads).sweep_surface(
             &session,
             AppId::Sobel,
-            PolicyKind::LoraxOok,
+            PolicyKind::LORAX_OOK,
             &bits,
             &reds,
         );
@@ -60,7 +60,7 @@ fn app_sweep_independent_of_thread_count() {
     let cfg = SystemConfig { scale: 0.02, seed: 7, ..Default::default() };
     let scenarios = SweepGrid::new()
         .apps(&["sobel", "fft"])
-        .policies(&[PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4])
+        .policies(&[PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4])
         .scenarios();
     let serial: Vec<_> = SweepRunner::with_threads(1)
         .run_apps(&cfg, &scenarios)
@@ -90,13 +90,13 @@ fn sweep_matches_standalone_run_app() {
     let cfg = SystemConfig { scale: 0.02, seed: 11, ..Default::default() };
     let sys = LoraxSystem::new(&cfg);
     let scenarios =
-        SweepGrid::new().apps(&["sobel"]).policies(&[PolicyKind::LoraxOok]).scenarios();
+        SweepGrid::new().apps(&["sobel"]).policies(&[PolicyKind::LORAX_OOK]).scenarios();
     let swept = SweepRunner::with_threads(2)
         .run_apps_on(sys.session(), &scenarios)
         .pop()
         .unwrap()
         .unwrap();
-    let direct = sys.run_app("sobel", PolicyKind::LoraxOok).unwrap();
+    let direct = sys.run_app("sobel", PolicyKind::LORAX_OOK).unwrap();
     assert_eq!(swept.error_pct, direct.error_pct);
     assert_eq!(swept.sim.cycles, direct.sim.cycles);
     assert_eq!(swept.sim.epb_pj, direct.sim.epb_pj);
@@ -108,7 +108,7 @@ fn soa_replay_matches_aos_run() {
     let e = engine();
     let sim = Simulator::new(&e);
     let trace = generate(&SynthConfig { cycles: 2500, rate_per_100_cycles: 25, seed: 5, ..Default::default() });
-    for kind in [PolicyKind::Baseline, PolicyKind::Prior16, PolicyKind::LoraxOok] {
+    for kind in [PolicyKind::Baseline, PolicyKind::Prior16, PolicyKind::LORAX_OOK] {
         let p = Policy::new(kind, "blackscholes");
         let via_run = sim.run(&trace, &p);
         let buf = TraceBuffer::from_records(&e.topo, &trace);
@@ -125,7 +125,7 @@ fn soa_replay_matches_aos_run() {
 #[test]
 fn synth_sweep_independent_of_thread_count() {
     let cfg = SystemConfig { scale: 0.02, seed: 9, ..Default::default() };
-    let grid = synth_stress_grid(1500, &[10, 30], &[PolicyKind::Baseline, PolicyKind::LoraxOok], 9);
+    let grid = synth_stress_grid(1500, &[10, 30], &[PolicyKind::Baseline, PolicyKind::LORAX_OOK], 9);
     let a = SweepRunner::with_threads(1).run_synth(&cfg, &grid);
     let b = SweepRunner::with_threads(4).run_synth(&cfg, &grid);
     assert_eq!(a.len(), b.len());

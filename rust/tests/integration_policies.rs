@@ -28,7 +28,7 @@ fn tuned_lorax_respects_error_threshold() {
     // ceiling.
     let sys = LoraxSystem::new(&cfg());
     for app in EVALUATED_APPS {
-        let r = sys.run_app(app, PolicyKind::LoraxOok).unwrap();
+        let r = sys.run_app(app, PolicyKind::LORAX_OOK).unwrap();
         assert!(r.error_pct < 15.0, "{app}: PE={}", r.error_pct);
     }
 }
@@ -48,8 +48,8 @@ fn laser_power_ordering_matches_fig8() {
         let base = get(PolicyKind::Baseline);
         let prior = get(PolicyKind::Prior16);
         let trunc = get(PolicyKind::Truncation);
-        let ook = get(PolicyKind::LoraxOok);
-        let pam = get(PolicyKind::LoraxPam4);
+        let ook = get(PolicyKind::LORAX_OOK);
+        let pam = get(PolicyKind::LORAX_PAM4);
         assert!(prior < base, "{app}: prior {prior} !< base {base}");
         assert!(trunc < base, "{app}: trunc {trunc} !< base {base}");
         assert!(ook < base, "{app}: ook {ook} !< base {base}");
@@ -66,8 +66,8 @@ fn epb_improves_under_lorax() {
     let sys = LoraxSystem::new(&cfg());
     for app in EVALUATED_APPS {
         let base = sys.run_app(app, PolicyKind::Baseline).unwrap().sim.epb_pj;
-        let ook = sys.run_app(app, PolicyKind::LoraxOok).unwrap().sim.epb_pj;
-        let pam = sys.run_app(app, PolicyKind::LoraxPam4).unwrap().sim.epb_pj;
+        let ook = sys.run_app(app, PolicyKind::LORAX_OOK).unwrap().sim.epb_pj;
+        let pam = sys.run_app(app, PolicyKind::LORAX_PAM4).unwrap().sim.epb_pj;
         assert!(ook < base, "{app}: ook {ook} !< base {base}");
         assert!(pam < ook, "{app}: pam {pam} !< ook {ook}");
     }
@@ -81,7 +81,7 @@ fn error_grows_with_aggressiveness() {
     let mut prev = -1.0;
     for bits in [8, 16, 24, 32] {
         let t = AppTuning { approx_bits: bits, power_reduction_pct: 90, trunc_bits: bits };
-        let r = sys.run_app_with_tuning("blackscholes", PolicyKind::LoraxOok, t).unwrap();
+        let r = sys.run_app_with_tuning("blackscholes", PolicyKind::LORAX_OOK, t).unwrap();
         assert!(
             r.error_pct >= prev - 0.5,
             "bits={bits}: PE {} fell below {prev}",
@@ -100,11 +100,11 @@ fn canneal_tolerates_deep_approximation() {
     let sys = LoraxSystem::new(&cfg());
     // 20 bits = deep mantissa-only truncation (values keep their scale).
     let t = AppTuning { approx_bits: 20, power_reduction_pct: 100, trunc_bits: 20 };
-    let r = sys.run_app_with_tuning("canneal", PolicyKind::LoraxOok, t).unwrap();
+    let r = sys.run_app_with_tuning("canneal", PolicyKind::LORAX_OOK, t).unwrap();
     assert!(r.error_pct < 10.0, "canneal PE={}", r.error_pct);
     // And the same setting wrecks blackscholes by comparison — the
     // application-specific point of Table 3.
-    let b = sys.run_app_with_tuning("blackscholes", PolicyKind::LoraxOok, t).unwrap();
+    let b = sys.run_app_with_tuning("blackscholes", PolicyKind::LORAX_OOK, t).unwrap();
     assert!(b.error_pct > r.error_pct, "{} !> {}", b.error_pct, r.error_pct);
 }
 
@@ -116,7 +116,7 @@ fn fft_is_more_sensitive_than_the_tolerant_apps() {
     // flat regions; see DESIGN.md §Deviations.)
     let sys = LoraxSystem::new(&cfg());
     let t = AppTuning { approx_bits: 20, power_reduction_pct: 100, trunc_bits: 20 };
-    let pe = |app: &str| sys.run_app_with_tuning(app, PolicyKind::LoraxOok, t).unwrap().error_pct;
+    let pe = |app: &str| sys.run_app_with_tuning(app, PolicyKind::LORAX_OOK, t).unwrap().error_pct;
     let fft = pe("fft");
     let canneal = pe("canneal");
     assert!(fft > canneal, "fft {fft} !> canneal {canneal}");
@@ -132,7 +132,7 @@ fn prior16_pays_energy_for_lost_data_lorax_does_not() {
         let mut tuning = table3_defaults(app);
         tuning.approx_bits = 16; // iso-bits with [16]
         tuning.power_reduction_pct = 80;
-        let ook = sys.run_app_with_tuning(app, PolicyKind::LoraxOok, tuning).unwrap();
+        let ook = sys.run_app_with_tuning(app, PolicyKind::LORAX_OOK, tuning).unwrap();
         assert!(
             ook.sim.energy.laser_pj < prior.sim.energy.laser_pj,
             "{app}: {} !< {}",
@@ -148,7 +148,7 @@ fn prior16_pays_energy_for_lost_data_lorax_does_not() {
 fn pam4_vs_ook_tuning_power_floor_is_respected() {
     let sys = LoraxSystem::new(&cfg());
     let t = AppTuning { approx_bits: 16, power_reduction_pct: 80, trunc_bits: 16 };
-    let r = sys.run_app_with_tuning("sobel", PolicyKind::LoraxPam4, t).unwrap();
+    let r = sys.run_app_with_tuning("sobel", PolicyKind::LORAX_PAM4, t).unwrap();
     // PAM4's LSB error should stay bounded: the 1.5x floor keeps
     // reduced-mode BER manageable.
     assert!(r.error_pct < 20.0, "PE={}", r.error_pct);
@@ -157,8 +157,8 @@ fn pam4_vs_ook_tuning_power_floor_is_respected() {
 #[test]
 fn reports_are_reproducible() {
     let sys = LoraxSystem::new(&cfg());
-    let a = sys.run_app("streamcluster", PolicyKind::LoraxOok).unwrap();
-    let b = sys.run_app("streamcluster", PolicyKind::LoraxOok).unwrap();
+    let a = sys.run_app("streamcluster", PolicyKind::LORAX_OOK).unwrap();
+    let b = sys.run_app("streamcluster", PolicyKind::LORAX_OOK).unwrap();
     assert_eq!(a.error_pct, b.error_pct);
     assert_eq!(a.sim.cycles, b.sim.cycles);
     assert!((a.sim.epb_pj - b.sim.epb_pj).abs() < 1e-15);

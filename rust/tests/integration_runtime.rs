@@ -165,12 +165,12 @@ fn full_app_run_native_equals_xla_backend() {
     let sys = LoraxSystem::new(&cfg);
     let tuning = table3_defaults("sobel");
     let native = sys
-        .run_app_with_corruptor("sobel", PolicyKind::LoraxOok, tuning, NativeCorruptor)
+        .run_app_with_corruptor("sobel", PolicyKind::LORAX_OOK, tuning, NativeCorruptor)
         .unwrap();
     let xla = sys
         .run_app_with_corruptor(
             "sobel",
-            PolicyKind::LoraxOok,
+            PolicyKind::LORAX_OOK,
             tuning,
             XlaCorruptor::new().unwrap(),
         )

@@ -53,7 +53,7 @@ fn session_matches_facade_for_every_app_policy_pair() {
 fn repeated_session_runs_are_identical() {
     let cfg = SystemConfig { scale: 0.03, seed: 11, ..Default::default() };
     let session = LoraxSession::new(&cfg);
-    let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LoraxOok);
+    let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_OOK);
     let first = session.run(&spec).unwrap();
     // Second run hits every cache (workload, golden, decision table).
     let second = session.run(&spec).unwrap();
@@ -66,7 +66,7 @@ fn session_sweep_independent_of_thread_count() {
     let cfg = SystemConfig { scale: 0.02, seed: 7, ..Default::default() };
     let scenarios = SweepGrid::new()
         .apps(&["sobel", "fft"])
-        .policies(&[PolicyKind::Baseline, PolicyKind::LoraxOok, PolicyKind::LoraxPam4])
+        .policies(&[PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4])
         .scenarios();
     let session = LoraxSession::new(&cfg);
     let serial: Vec<AppRunReport> = SweepRunner::with_threads(1)

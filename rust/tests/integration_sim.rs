@@ -13,7 +13,7 @@ use lorax::traffic::synth::{generate, Pattern, SynthConfig};
 use lorax::traffic::trace::{TraceReader, TraceWriter};
 
 fn engine() -> GwiDecisionEngine {
-    GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), Modulation::Ook)
+    GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), Modulation::OOK)
 }
 
 #[test]
@@ -30,7 +30,7 @@ fn trace_file_roundtrip_through_simulator() {
     // Identical replay results.
     let e = engine();
     let sim = Simulator::new(&e);
-    let p = Policy::new(PolicyKind::LoraxOok, "fft");
+    let p = Policy::new(PolicyKind::LORAX_OOK, "fft");
     let a = sim.run(&trace, &p);
     let b = sim.run(&back, &p);
     assert_eq!(a.cycles, b.cycles);
@@ -42,7 +42,7 @@ fn live_channel_trace_replays_with_same_decisions() {
     // The simulator recomputes GWI decisions from packet metadata; the
     // counts it sees must match what the live channel actually did.
     let e = engine();
-    let policy = Policy::new(PolicyKind::LoraxOok, "blackscholes");
+    let policy = Policy::new(PolicyKind::LORAX_OOK, "blackscholes");
     let mut ch = PhotonicChannel::new(&e, policy, NativeCorruptor, 5);
     let w = lorax::apps::by_name_scaled("blackscholes", 5, 0.02).unwrap();
     w.run(&mut ch);
@@ -104,8 +104,8 @@ fn pam4_iso_bandwidth_same_occupancy_lower_laser() {
     let trace = generate(&SynthConfig { cycles: 2000, seed: 4, float_fraction: 1.0, ..Default::default() });
     let topo = ClosTopology::default_64core();
     let p = PhotonicParams::default();
-    let ook_engine = GwiDecisionEngine::new(topo.clone(), p.clone(), Modulation::Ook);
-    let pam_engine = GwiDecisionEngine::new(topo, p, Modulation::Pam4);
+    let ook_engine = GwiDecisionEngine::new(topo.clone(), p.clone(), Modulation::OOK);
+    let pam_engine = GwiDecisionEngine::new(topo, p, Modulation::PAM4);
     let ook = Simulator::new(&ook_engine).run(&trace, &Policy::new(PolicyKind::Baseline, "fft"));
     let pam = Simulator::new(&pam_engine).run(&trace, &Policy::new(PolicyKind::Baseline, "fft"));
     // Iso-bandwidth: same serialization, same total cycles.
