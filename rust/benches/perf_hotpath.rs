@@ -6,6 +6,9 @@
 //!   `xla` feature builds only);
 //! * GWI decision engine (decisions/s) and the memoized table;
 //! * cycle-level simulator replay (packets/s), packed SoA vs AoS entry;
+//! * trace-file replay: in-memory buffer vs file-backed zero-copy
+//!   (mmap) columns, bit-identity asserted, emitted as
+//!   `BENCH_trace_file.json`;
 //! * multi-scenario sweep through [`lorax::exec::SweepRunner`], serial
 //!   (1 thread) vs parallel (all cores) — the headline speedup;
 //! * end-to-end app run (one sobel pass through the full stack).
@@ -22,7 +25,7 @@ use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, mask_for_lsbs};
 use lorax::approx::policy::{Policy, PolicyKind};
 use lorax::config::SystemConfig;
 use lorax::coordinator::{DecisionTable, GwiDecisionEngine, LoraxSystem};
-use lorax::exec::{SweepGrid, SweepRunner, TraceBuffer};
+use lorax::exec::{SweepGrid, SweepRunner, TraceBuffer, TraceFile};
 use lorax::noc::sim::Simulator;
 use lorax::phys::params::{Modulation, PhotonicParams};
 use lorax::topology::clos::ClosTopology;
@@ -138,6 +141,52 @@ fn main() {
         black_box(sim.replay(&packed, &policy, &table));
     });
     report_and_record(&r, trace.len() as f64, "pkts");
+
+    // --- trace file: in-memory vs file-backed zero-copy replay ---------
+    // Same columns, three backings: the in-memory TraceBuffer, the
+    // mmap-ed .ltrace file (zero-copy, pages in on demand), and the
+    // owned-read fallback.  All three must be bit-identical; the hot
+    // loop performs zero per-record allocations in every case (fixed
+    // stack state + fixed histograms — see Simulator::replay_view).
+    let trace_dir = std::env::temp_dir().join("lorax_bench_trace_file");
+    std::fs::create_dir_all(&trace_dir).expect("temp dir for trace bench");
+    let trace_path = trace_dir.join("perf_hotpath.ltrace");
+    TraceFile::create(&trace_path, &packed).expect("writing bench trace");
+    let mapped = TraceFile::open(&trace_path).expect("opening bench trace");
+    let owned = TraceFile::open_in_memory(&trace_path).expect("reading bench trace");
+    let r_mem = bench("trace:replay in-memory buffer", 1, 5, || {
+        black_box(sim.replay(&packed, &policy, &table));
+    });
+    report_and_record(&r_mem, packed.len() as f64, "pkts");
+    let file_label = if mapped.is_mapped() { "mmap zero-copy" } else { "owned fallback" };
+    let r_file = bench(&format!("trace:replay file-backed ({file_label})"), 1, 5, || {
+        black_box(sim.replay_view(mapped.view(), &policy, &table));
+    });
+    report_and_record(&r_file, mapped.len() as f64, "pkts");
+    let via_mem = sim.replay(&packed, &policy, &table);
+    let via_map = sim.replay_view(mapped.view(), &policy, &table);
+    let via_read = sim.replay_view(owned.view(), &policy, &table);
+    for (name, r) in [("mmap", &via_map), ("owned-read", &via_read)] {
+        assert_eq!(via_mem.cycles, r.cycles, "{name} replay diverged");
+        assert_eq!(via_mem.energy.total_pj(), r.energy.total_pj(), "{name}");
+        assert_eq!(via_mem.latency_p95, r.latency_p95, "{name}");
+        assert_eq!(via_mem.reduced_packets, r.reduced_packets, "{name}");
+    }
+    println!("  (in-memory, mmap and owned-read replays bit-identical)");
+    let file_bytes = std::fs::metadata(&trace_path).map(|m| m.len()).unwrap_or(0);
+    let payload = format!(
+        "{{\"name\":\"trace_file\",\"packets\":{},\"file_bytes\":{file_bytes},\
+         \"mapped\":{},\"mem_rate_pkts_per_s\":{},\"file_rate_pkts_per_s\":{},\
+         \"file_vs_mem\":{},\"per_record_allocs\":0}}\n",
+        packed.len(),
+        mapped.is_mapped(),
+        lorax::util::bench::json_f64(packed.len() as f64 / r_mem.mean_s()),
+        lorax::util::bench::json_f64(mapped.len() as f64 / r_file.mean_s()),
+        lorax::util::bench::json_f64(r_mem.mean_s() / r_file.mean_s()),
+    );
+    if let Err(e) = lorax::util::bench::write_json_payload("trace_file", &payload) {
+        eprintln!("warning: could not write BENCH_trace_file.json: {e}");
+    }
 
     // --- multi-scenario sweep: serial vs parallel ----------------------
     let cfg = SystemConfig { scale: if smoke { 0.02 } else { 0.05 }, seed: 42, ..Default::default() };

@@ -29,6 +29,7 @@ pub struct ChannelStats {
 }
 
 impl ChannelStats {
+    /// Count `values` doubles delivered under `mode`.
     pub fn record_mode(&mut self, mode: TransferMode, values: u64) {
         match mode {
             TransferMode::FullPower => self.values_exact += values,
@@ -50,6 +51,7 @@ pub trait Channel {
     /// Control/coherence message of `words` payload words.
     fn send_control(&mut self, src: NodeId, dst: NodeId, words: u32);
 
+    /// Word-level accounting of everything sent so far.
     fn stats(&self) -> &ChannelStats;
 
     /// Drain the recorded trace (for NoC replay).
@@ -98,6 +100,7 @@ pub struct IdentityChannel {
 }
 
 impl IdentityChannel {
+    /// A fresh golden channel.
     pub fn new() -> IdentityChannel {
         IdentityChannel::default()
     }

@@ -23,8 +23,11 @@ use crate::phys::signaling::SignalingScheme;
 /// Which framework a simulation runs under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PolicyKind {
+    /// Plain Clos PNoC, every wavelength at full power.
     Baseline,
+    /// Static per-app LSB truncation (laser off), loss-oblivious.
     Truncation,
+    /// The framework of [16]: 16 LSBs at 20% power, loss-oblivious.
     Prior16,
     /// LORAX over the given signaling order (its *native* modulation;
     /// an [`crate::exec::ExperimentSpec`] `%mod` override can still run
@@ -33,9 +36,13 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// LORAX on OOK (the paper's headline framework).
     pub const LORAX_OOK: PolicyKind = PolicyKind::Lorax(Modulation::OOK);
+    /// LORAX on PAM4 (the paper's second calibrated instance).
     pub const LORAX_PAM4: PolicyKind = PolicyKind::Lorax(Modulation::PAM4);
+    /// LORAX on PAM8 (extrapolated device model).
     pub const LORAX_PAM8: PolicyKind = PolicyKind::Lorax(Modulation::PAM8);
+    /// LORAX on PAM16 (extrapolated device model).
     pub const LORAX_PAM16: PolicyKind = PolicyKind::Lorax(Modulation::PAM16);
 
     /// The five frameworks of the paper's §5.3 comparison (Fig. 8).
@@ -59,6 +66,7 @@ impl PolicyKind {
         PolicyKind::LORAX_PAM16,
     ];
 
+    /// Canonical framework name (the spec/CLI spelling).
     pub fn name(self) -> &'static str {
         match self {
             PolicyKind::Baseline => "baseline",
@@ -199,15 +207,19 @@ pub fn default_tuning(kind: PolicyKind, app: &str) -> AppTuning {
 /// A fully-resolved policy for one application run.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Policy {
+    /// The framework family.
     pub kind: PolicyKind,
+    /// The per-application knobs the framework runs with.
     pub tuning: AppTuning,
 }
 
 impl Policy {
+    /// `kind` with the measured Table-3 default tuning for `app`.
     pub fn new(kind: PolicyKind, app: &str) -> Policy {
         Policy { kind, tuning: default_tuning(kind, app) }
     }
 
+    /// `kind` with an explicit tuning.
     pub fn with_tuning(kind: PolicyKind, tuning: AppTuning) -> Policy {
         Policy { kind, tuning }
     }

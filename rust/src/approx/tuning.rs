@@ -19,20 +19,27 @@ use crate::coordinator::gwi::GwiDecisionEngine;
 /// One measured grid point of a sensitivity surface.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepPoint {
+    /// Approximated LSBs at this point.
     pub bits: u32,
+    /// Laser power reduction for those LSBs, percent.
     pub reduction_pct: u32,
+    /// Measured output error (paper eq. 3), percent.
     pub error_pct: f64,
 }
 
 /// A full Fig.-6 surface for one application.
 #[derive(Clone, Debug)]
 pub struct SensitivitySurface {
+    /// Application name.
     pub app: String,
+    /// Error ceiling the Table-3 selection runs against, percent.
     pub threshold_pct: f64,
+    /// Measured grid points, bits-major then reduction.
     pub points: Vec<SweepPoint>,
 }
 
 impl SensitivitySurface {
+    /// The measured error at one grid point, if it was swept.
     pub fn error_at(&self, bits: u32, reduction_pct: u32) -> Option<f64> {
         self.points
             .iter()
@@ -41,8 +48,9 @@ impl SensitivitySurface {
     }
 }
 
-/// The paper's Fig.-6 grid axes.
+/// The paper's Fig.-6 approximated-LSB-count axis.
 pub const BITS_AXIS: [u32; 8] = [4, 8, 12, 16, 20, 24, 28, 32];
+/// The paper's Fig.-6 laser-power-reduction axis, percent.
 pub const REDUCTION_AXIS: [u32; 11] = [0, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
 
 /// Sweep one application over the (bits, reduction) grid.

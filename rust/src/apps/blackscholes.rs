@@ -16,12 +16,14 @@ use crate::util::rng::Rng;
 use super::common::{core, gather_f64, mc_of, scatter_f64, shard};
 use super::Workload;
 
+/// Black–Scholes option pricing over a synthetic option book.
 pub struct BlackScholes {
     n_options: usize,
     seed: u64,
 }
 
 impl BlackScholes {
+    /// Engine over `n_options` deterministic options.
     pub fn new(n_options: usize, seed: u64) -> BlackScholes {
         BlackScholes { n_options, seed }
     }

@@ -20,6 +20,7 @@ use crate::util::stats::percentile;
 use super::common::{core, mc_of, shard, N_CORES};
 use super::Workload;
 
+/// Simulated-annealing netlist placement (canneal).
 pub struct Canneal {
     n_elements: usize,
     n_moves: usize,
@@ -27,6 +28,7 @@ pub struct Canneal {
 }
 
 impl Canneal {
+    /// Engine over `n_elements` netlist elements and `n_moves` moves.
     pub fn new(n_elements: usize, n_moves: usize, seed: u64) -> Canneal {
         Canneal { n_elements, n_moves, seed }
     }

@@ -4,6 +4,7 @@
 use crate::approx::channel::Channel;
 use crate::topology::clos::NodeId;
 
+/// Compute cores in the modeled system.
 pub const N_CORES: usize = 64;
 
 /// Core `i` of the 64-core system.

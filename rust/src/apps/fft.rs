@@ -15,12 +15,14 @@ use crate::util::rng::Rng;
 use super::common::{core, gather_f64, mc_of, N_CORES};
 use super::Workload;
 
+/// Distributed radix-2 FFT over interleaved complex samples.
 pub struct DistributedFft {
     n: usize,
     seed: u64,
 }
 
 impl DistributedFft {
+    /// Engine over an `n`-point signal (`n` a power of two >= 128).
     pub fn new(n: usize, seed: u64) -> DistributedFft {
         assert!(n.is_power_of_two() && n >= N_CORES * 2, "n must be a power of two >= 128");
         DistributedFft { n, seed }

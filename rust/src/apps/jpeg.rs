@@ -27,6 +27,7 @@ const QTABLE: [f64; 64] = [
     72.0, 92.0, 95.0, 98.0, 112.0, 100.0, 103.0, 99.0,
 ];
 
+/// JPEG-style 8x8 DCT + quantization compression pipeline.
 pub struct Jpeg {
     side: usize,
     seed: u64,
@@ -35,6 +36,7 @@ pub struct Jpeg {
 }
 
 impl Jpeg {
+    /// Engine over a `side` x `side` image (`side` a multiple of 8).
     pub fn new(side: usize, seed: u64) -> Jpeg {
         assert!(side % 8 == 0, "side must be a multiple of 8");
         Jpeg { side, seed, quality_scale: 0.5 } // ~quality 75

@@ -36,6 +36,7 @@ use crate::approx::channel::Channel;
 /// `run(&self, ..)` is deterministic, so this costs implementors
 /// nothing.
 pub trait Workload: Send + Sync {
+    /// Canonical application name (matches the [`AppId`] spelling).
     fn name(&self) -> &'static str;
 
     /// Execute the full workload, moving all distributed data through
@@ -86,13 +87,21 @@ pub fn output_error_pct(exact: &[f64], approx: &[f64]) -> f64 {
 /// so specs round-trip through their text form.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum AppId {
+    /// Black–Scholes option pricing (PARSEC).
     Blackscholes,
+    /// Simulated-annealing netlist placement (PARSEC).
     Canneal,
+    /// Distributed radix-2 FFT (SPLASH-2-style kernel).
     Fft,
+    /// JPEG 8x8 DCT + quantization pipeline.
     Jpeg,
+    /// Sobel edge detection.
     Sobel,
+    /// Online k-median clustering (PARSEC).
     Streamcluster,
+    /// Float-negligible fluidanimate traffic proxy (Fig. 2 only).
     Fluidanimate,
+    /// Float-negligible x264 SAD traffic proxy (Fig. 2 only).
     X264,
 }
 
@@ -120,6 +129,7 @@ impl AppId {
         AppId::Streamcluster,
     ];
 
+    /// Canonical lowercase name (the spec/CLI spelling).
     pub fn name(self) -> &'static str {
         match self {
             AppId::Blackscholes => "blackscholes",

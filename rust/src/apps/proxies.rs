@@ -20,6 +20,7 @@ pub struct FluidAnimateProxy {
 }
 
 impl FluidAnimateProxy {
+    /// Proxy over `n_particles` binned particles.
     pub fn new(n_particles: usize, seed: u64) -> FluidAnimateProxy {
         FluidAnimateProxy { n_particles, seed }
     }
@@ -68,6 +69,7 @@ pub struct X264Proxy {
 }
 
 impl X264Proxy {
+    /// Proxy over a `side` x `side` frame pair.
     pub fn new(side: usize, seed: u64) -> X264Proxy {
         X264Proxy { side: side.max(64), seed }
     }

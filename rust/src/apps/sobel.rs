@@ -14,12 +14,14 @@ use crate::util::rng::Rng;
 use super::common::{core, gather_f64, mc_of, N_CORES};
 use super::Workload;
 
+/// Sobel edge detection over a synthetic test image.
 pub struct Sobel {
     side: usize,
     seed: u64,
 }
 
 impl Sobel {
+    /// Engine over a `side` x `side` image (`side` divides over 64 cores).
     pub fn new(side: usize, seed: u64) -> Sobel {
         assert!(side % N_CORES == 0, "side must divide over 64 cores");
         Sobel { side, seed }

@@ -15,6 +15,7 @@ use crate::util::rng::Rng;
 use super::common::{core, mc_of, shard, N_CORES};
 use super::Workload;
 
+/// Online k-median clustering (streamcluster).
 pub struct StreamCluster {
     n_points: usize,
     dim: usize,
@@ -23,6 +24,7 @@ pub struct StreamCluster {
 }
 
 impl StreamCluster {
+    /// Engine over `n_points` `dim`-dimensional points, `k` medians.
     pub fn new(n_points: usize, dim: usize, k: usize, seed: u64) -> StreamCluster {
         StreamCluster { n_points, dim, k, seed }
     }

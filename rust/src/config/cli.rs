@@ -7,14 +7,19 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Context, Result};
 
+/// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Positional tokens in order (the subcommand is `positional[0]`).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: BTreeSet<String>,
 }
 
 impl Args {
+    /// Parse an argument iterator (excluding the program name).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
         let mut out = Args::default();
         let mut iter = args.into_iter().peekable();
@@ -35,18 +40,22 @@ impl Args {
         out
     }
 
+    /// Parse the process's own arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as a float, or `default` when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -54,6 +63,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as an integer, or `default` when absent.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -61,6 +71,7 @@ impl Args {
         }
     }
 
+    /// True when bare `--key` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.contains(key)
     }

@@ -20,7 +20,9 @@ pub struct SystemConfig {
     pub scale: f64,
     /// Output-error ceiling, percent (paper §5.1: 10%).
     pub error_threshold_pct: f64,
+    /// Photonic device parameters (Table 2).
     pub photonic: PhotonicParams,
+    /// Energy coefficients (DSENT/CACTI stand-ins).
     pub energy: EnergyParams,
 }
 

@@ -10,10 +10,12 @@ use anyhow::{bail, Result};
 /// in section `""`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TomlLite {
+    /// `(section, key) -> raw value` in file order (BTreeMap-sorted).
     pub entries: BTreeMap<(String, String), String>,
 }
 
 impl TomlLite {
+    /// Parse the TOML subset; errors carry 1-based line numbers.
     pub fn parse(text: &str) -> Result<TomlLite> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -38,12 +40,14 @@ impl TomlLite {
         Ok(TomlLite { entries })
     }
 
+    /// Raw value of `[section] key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.entries
             .get(&(section.to_string(), key.to_string()))
             .map(|s| s.as_str())
     }
 
+    /// `[section] key` parsed as a float (None when absent).
     pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -53,6 +57,7 @@ impl TomlLite {
         }
     }
 
+    /// `[section] key` parsed as an integer (None when absent).
     pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>> {
         match self.get(section, key) {
             None => Ok(None),

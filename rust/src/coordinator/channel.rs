@@ -23,8 +23,12 @@ use super::gwi::GwiDecisionEngine;
 /// Operates on the single-precision wire format: one u32 word per value,
 /// uniform (mask, thresholds) per transfer, RNG keyed by word index.
 pub trait Corruptor {
+    /// Corrupt the masked bits of every word in place: each masked bit
+    /// flips 1→0 with probability `t10 / 2^32` and 0→1 with
+    /// `t01 / 2^32`, keyed by `(seed, word index)`.
     fn corrupt_words(&mut self, words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32);
 
+    /// Backend name for reports ("native", "xla", ...).
     fn name(&self) -> &'static str;
 }
 
@@ -61,6 +65,8 @@ pub struct PhotonicChannel<'a, C: Corruptor> {
 }
 
 impl<'a, C: Corruptor> PhotonicChannel<'a, C> {
+    /// Channel over `engine` under `policy`; `seed` keys per-transfer
+    /// corruption deterministically.
     pub fn new(
         engine: &'a GwiDecisionEngine,
         policy: Policy,
@@ -107,6 +113,7 @@ impl<'a, C: Corruptor> PhotonicChannel<'a, C> {
         ch
     }
 
+    /// The policy this channel transmits under.
     pub fn policy(&self) -> &Policy {
         &self.policy
     }

@@ -18,17 +18,20 @@ use crate::util::math::prob_to_threshold;
 /// Resolved transmission parameters for one transfer.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Decision {
+    /// How the LSB wavelengths are driven.
     pub mode: TransferMode,
     /// Low-word mask of approximated bits (0 when `mode == FullPower`).
     pub mask: u32,
-    /// Channel-kernel thresholds for the masked bits.
+    /// Channel-kernel 1→0 flip threshold for the masked bits.
     pub t10: u32,
+    /// Channel-kernel 0→1 flip threshold for the masked bits.
     pub t01: u32,
     /// Laser level actually driven on the masked wavelengths.
     pub level: f64,
 }
 
 impl Decision {
+    /// Everything at full power, nothing masked.
     pub const FULL: Decision = Decision {
         mode: TransferMode::FullPower,
         mask: 0,
@@ -50,13 +53,17 @@ impl Decision {
 
 /// Per-source-cluster decision engine with the loss lookup table.
 pub struct GwiDecisionEngine {
+    /// The fabric the engine decides over.
     pub topo: ClosTopology,
+    /// Photonic device parameters (Table 2).
     pub params: PhotonicParams,
     /// Loss/provisioning/receiver set for the active modulation.
     pub waveguides: WaveguideSet,
 }
 
 impl GwiDecisionEngine {
+    /// Build the engine (loss tables, provisioning, receiver
+    /// calibration) for one modulation.
     pub fn new(topo: ClosTopology, params: PhotonicParams, m: Modulation) -> GwiDecisionEngine {
         let waveguides = WaveguideSet::build(&topo, &params, m);
         GwiDecisionEngine { topo, params, waveguides }
@@ -149,6 +156,7 @@ pub struct DecisionTable {
 }
 
 impl DecisionTable {
+    /// Evaluate every (src, dst) cluster pair once.
     pub fn build(engine: &GwiDecisionEngine, policy: &Policy) -> DecisionTable {
         let n = engine.topo.n_clusters;
         let mut cells = vec![Decision::FULL; n * n];
@@ -162,11 +170,13 @@ impl DecisionTable {
         DecisionTable { n_clusters: n, cells }
     }
 
+    /// The memoized decision for one (src, dst) cluster pair.
     #[inline]
     pub fn get(&self, src_cluster: usize, dst_cluster: usize) -> &Decision {
         &self.cells[src_cluster * self.n_clusters + dst_cluster]
     }
 
+    /// Table dimension (clusters per side).
     pub fn n_clusters(&self) -> usize {
         self.n_clusters
     }

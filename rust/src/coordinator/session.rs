@@ -10,7 +10,17 @@
 //!   (modulation, policy kind, tuning);
 //! * the [`WorkloadCache`], memoizing synthesized datasets and their
 //!   golden outputs per (app, seed, scale) so parallel sweeps stop
-//!   re-synthesizing inputs per scenario.
+//!   re-synthesizing inputs per scenario;
+//! * the [`TraceCache`], memoizing *packed* synthetic traces per
+//!   (topology, synth config) — every policy of a sweep replays one
+//!   shared [`TraceFile`], optionally spilled to disk in the `.ltrace`
+//!   format (`LORAX_TRACE_SPILL` or [`LoraxSession::with_trace_spill`])
+//!   and served zero-copy from a read-only mapping.
+//!
+//! [`LoraxSession::record_trace`] / [`LoraxSession::replay_trace`] are
+//! the trace-file entry points behind `lorax trace record/replay`: a
+//! recorded file replays bit-identically to the in-memory path (pinned
+//! by `tests/integration_trace_file.rs`).
 //!
 //! [`LoraxSession::run`] executes one [`ExperimentSpec`] and is the
 //! single experiment entry point: [`super::system::LoraxSystem`],
@@ -30,7 +40,8 @@ use crate::config::SystemConfig;
 use crate::exec::runner::DecisionTableCache;
 use crate::exec::spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 use crate::exec::trace_buf::TraceBuffer;
-use crate::exec::workload::{CachedWorkload, WorkloadCache};
+use crate::exec::trace_file::TraceFile;
+use crate::exec::workload::{CachedWorkload, TraceCache, WorkloadCache};
 use crate::noc::sim::{SimReport, Simulator};
 use crate::phys::params::Modulation;
 use crate::topology::clos::ClosTopology;
@@ -43,17 +54,24 @@ use super::gwi::{DecisionTable, GwiDecisionEngine};
 /// Results of one experiment run.
 #[derive(Clone, Debug)]
 pub struct AppRunReport {
+    /// Canonical application name (the run's label for synthetic runs).
     pub app: String,
+    /// The fully-resolved policy the run executed under.
     pub policy: Policy,
     /// Measured output error vs the golden run (paper eq. 3), percent;
-    /// 0 for synthetic-traffic runs (no workload output to compare).
+    /// 0 for synthetic-traffic and trace-file runs (no workload output
+    /// to compare).
     pub error_pct: f64,
+    /// Cycle-level simulation results (energy, latency, laser power).
     pub sim: SimReport,
+    /// Channel word-level accounting (zeroed for pure-replay runs).
     pub stats: ChannelStats,
+    /// GWI lookup-table accesses performed by the live channel.
     pub lut_accesses: u64,
 }
 
 impl AppRunReport {
+    /// One human-readable result line (app, policy, error, EPB, laser).
     pub fn summary(&self) -> String {
         format!(
             "{:<14} {:<11} PE={:>7.3}%  EPB={:.4} pJ/b  laser={:.3} mW  pkts={} (reduced {} / truncated {})",
@@ -109,13 +127,16 @@ pub struct LoraxSession {
     engines: [OnceLock<Box<GwiDecisionEngine>>; Modulation::N_KNOWN],
     tables: DecisionTableCache,
     workloads: WorkloadCache,
+    traces: TraceCache,
 }
 
 impl LoraxSession {
+    /// A session on the default Clos-64 fabric.
     pub fn new(cfg: &SystemConfig) -> LoraxSession {
         LoraxSession::with_topology(cfg, TopologySpec::Clos64)
     }
 
+    /// A session on an explicit fabric.
     pub fn with_topology(cfg: &SystemConfig, spec: TopologySpec) -> LoraxSession {
         LoraxSession {
             cfg: cfg.clone(),
@@ -124,17 +145,29 @@ impl LoraxSession {
             engines: Default::default(),
             tables: DecisionTableCache::new(),
             workloads: WorkloadCache::new(),
+            traces: TraceCache::new(),
         }
     }
 
+    /// Spill packed synthetic traces under `dir` as `.ltrace` files
+    /// (builder-style; replaces the env-driven default of
+    /// [`TraceCache::new`]).
+    pub fn with_trace_spill(mut self, dir: std::path::PathBuf) -> LoraxSession {
+        self.traces = TraceCache::with_spill_dir(Some(dir));
+        self
+    }
+
+    /// The configuration this session runs.
     pub fn cfg(&self) -> &SystemConfig {
         &self.cfg
     }
 
+    /// The materialized topology.
     pub fn topology(&self) -> &ClosTopology {
         &self.topo
     }
 
+    /// The typed fabric descriptor this session was built for.
     pub fn topology_spec(&self) -> TopologySpec {
         self.topology_spec
     }
@@ -168,12 +201,19 @@ impl LoraxSession {
         self.workloads.get_or_synth(app, self.cfg.seed, self.cfg.scale)
     }
 
+    /// The session's workload cache (hit/miss counters for benches).
     pub fn workload_cache(&self) -> &WorkloadCache {
         &self.workloads
     }
 
+    /// The session's memoized decision tables.
     pub fn decision_tables(&self) -> &DecisionTableCache {
         &self.tables
+    }
+
+    /// The session's packed-trace cache.
+    pub fn trace_cache(&self) -> &TraceCache {
+        &self.traces
     }
 
     /// Run one experiment with the native corruption backend.
@@ -246,7 +286,10 @@ impl LoraxSession {
         })
     }
 
-    /// Synthetic-traffic run: generate the trace, pack it, replay it.
+    /// Synthetic-traffic run: fetch (or generate + pack) the shared
+    /// trace from the [`TraceCache`] and replay its columns — every
+    /// policy replaying the same traffic shares one packed trace (one
+    /// read-only mapping when the cache spills to disk).
     fn run_synth_traffic(
         &self,
         spec: &ExperimentSpec,
@@ -256,11 +299,12 @@ impl LoraxSession {
         synth: &SynthConfig,
     ) -> AppRunReport {
         let engine = self.engine(m);
-        let trace = generate(synth);
-        let buf = TraceBuffer::from_records(&self.topo, &trace);
+        let file = self.traces.get_or_record(&self.synth_trace_key(synth), || {
+            TraceBuffer::from_records(&self.topo, &generate(synth))
+        });
         let mut sim = Simulator::new(engine);
         sim.energy_params = self.cfg.energy.clone();
-        let sim_report = sim.replay(&buf, &policy, table);
+        let sim_report = sim.replay_view(file.view(), &policy, table);
         AppRunReport {
             // The app names the run (and donated its default tuning);
             // the full spec, traffic included, is `spec.to_string()`.
@@ -271,6 +315,99 @@ impl LoraxSession {
             stats: ChannelStats::default(),
             lut_accesses: 0,
         }
+    }
+
+    /// [`TraceCache`] key for one synthetic configuration: every field
+    /// trace generation is deterministic in, plus the fabric.
+    fn synth_trace_key(&self, s: &SynthConfig) -> String {
+        format!(
+            "{}|{:?}|r{}|c{}|f{}|s{}",
+            self.topology_spec,
+            s.pattern,
+            s.rate_per_100_cycles,
+            s.cycles,
+            s.float_fraction,
+            s.seed
+        )
+    }
+
+    /// Record the packed trace a spec's traffic produces, without
+    /// simulating it — the data `lorax trace record` writes to disk.
+    ///
+    /// Synthetic specs pack the generated trace; app-driven specs run
+    /// the workload through the photonic channel exactly as
+    /// [`LoraxSession::run`] would (same policy pass, same seed), so
+    /// replaying the recorded file reproduces the run's `SimReport`
+    /// bit-for-bit.
+    pub fn record_trace(&self, spec: &ExperimentSpec) -> Result<TraceBuffer> {
+        spec.validate()?;
+        ensure!(
+            spec.topology == self.topology_spec,
+            "spec topology {} != session topology {}",
+            spec.topology,
+            self.topology_spec
+        );
+        match &spec.traffic {
+            TrafficSpec::Synthetic(synth) => {
+                Ok(TraceBuffer::from_records(&self.topo, &generate(synth)))
+            }
+            TrafficSpec::AppDriven => {
+                let policy = spec.resolved_policy();
+                let m = spec.resolved_modulation();
+                let table = self.decision_table(m, &policy);
+                let engine = self.engine(m);
+                let cached = self.workload(spec.app);
+                let mut ch = PhotonicChannel::with_decisions(
+                    engine,
+                    policy,
+                    NativeCorruptor,
+                    self.cfg.seed as u32,
+                    &table,
+                );
+                let _ = cached.workload.run(&mut ch);
+                Ok(TraceBuffer::from_records(&self.topo, &ch.take_trace()))
+            }
+        }
+    }
+
+    /// Replay a recorded trace file under `spec`'s policy/modulation —
+    /// the engine behind `lorax trace replay`.
+    ///
+    /// The replay streams the file's columns zero-copy (no pack step);
+    /// `error_pct`/`stats`/`lut_accesses` are zero, as for synthetic
+    /// runs, because a trace carries no payload values.  For a spec with
+    /// synthetic traffic, the report is identical to
+    /// [`LoraxSession::run`] on the same spec — the CI round-trip smoke
+    /// diffs exactly that.
+    pub fn replay_trace(&self, spec: &ExperimentSpec, file: &TraceFile) -> Result<AppRunReport> {
+        spec.validate()?;
+        ensure!(
+            spec.topology == self.topology_spec,
+            "spec topology {} != session topology {}",
+            spec.topology,
+            self.topology_spec
+        );
+        ensure!(
+            file.min_clusters() as usize <= self.topo.n_clusters,
+            "trace references cluster {} but topology {} has only {} clusters",
+            file.min_clusters().saturating_sub(1),
+            self.topology_spec,
+            self.topo.n_clusters
+        );
+        let policy = spec.resolved_policy();
+        let m = spec.resolved_modulation();
+        let table = self.decision_table(m, &policy);
+        let mut sim = Simulator::new(self.engine(m));
+        sim.energy_params = self.cfg.energy.clone();
+        let sim_report = sim.replay_view(file.view(), &policy, &table);
+        Ok(AppRunReport {
+            app: spec.app.name().to_string(),
+            policy,
+            error_pct: 0.0,
+            sim: sim_report,
+            stats: ChannelStats::default(),
+            lut_accesses: 0,
+        })
     }
 }
 
@@ -362,6 +499,57 @@ mod tests {
         assert_eq!(r.lut_accesses, 0);
         // No workload synthesized for pure replay.
         assert!(session.workload_cache().is_empty());
+        // The packed trace landed in the trace cache.
+        assert_eq!(session.trace_cache().len(), 1);
+    }
+
+    #[test]
+    fn policies_share_one_packed_synthetic_trace() {
+        let session = LoraxSession::new(&small_cfg());
+        let traffic = TrafficSpec::Synthetic(SynthConfig {
+            pattern: Pattern::Uniform,
+            rate_per_100_cycles: 15,
+            cycles: 1_500,
+            float_fraction: 0.5,
+            seed: 9,
+        });
+        for kind in [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4] {
+            let spec =
+                ExperimentSpec::new(AppId::Fft, kind).with_traffic(traffic.clone());
+            session.run(&spec).unwrap();
+        }
+        // One recording, two cache hits: the trace is policy-independent.
+        assert_eq!(session.trace_cache().len(), 1);
+        assert_eq!(session.trace_cache().misses(), 1);
+        assert_eq!(session.trace_cache().hits(), 2);
+        // A different seed is a different trace.
+        let other = ExperimentSpec::new(AppId::Fft, PolicyKind::Baseline).with_traffic(
+            TrafficSpec::Synthetic(SynthConfig {
+                pattern: Pattern::Uniform,
+                rate_per_100_cycles: 15,
+                cycles: 1_500,
+                float_fraction: 0.5,
+                seed: 10,
+            }),
+        );
+        session.run(&other).unwrap();
+        assert_eq!(session.trace_cache().len(), 2);
+    }
+
+    #[test]
+    fn recorded_trace_replays_bit_identically_for_synthetic_specs() {
+        let session = LoraxSession::new(&small_cfg());
+        let spec: ExperimentSpec =
+            "fft:LORAX-OOK:synth=hotspot2,r25,c2000,f0.6,s11".parse().unwrap();
+        let via_run = session.run(&spec).unwrap();
+        let buf = session.record_trace(&spec).unwrap();
+        let file = crate::exec::TraceFile::from_buffer(buf);
+        let via_file = session.replay_trace(&spec, &file).unwrap();
+        assert_eq!(via_run.sim.cycles, via_file.sim.cycles);
+        assert_eq!(via_run.sim.packets, via_file.sim.packets);
+        assert_eq!(via_run.sim.energy.total_pj(), via_file.sim.energy.total_pj());
+        assert_eq!(via_run.sim.latency_p95, via_file.sim.latency_p95);
+        assert_eq!(via_run.to_json(), via_file.to_json());
     }
 
     #[test]

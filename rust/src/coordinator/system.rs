@@ -26,6 +26,7 @@ pub struct LoraxSystem {
 }
 
 impl LoraxSystem {
+    /// Facade over a fresh session on the default Clos-64 fabric.
     pub fn new(cfg: &SystemConfig) -> LoraxSystem {
         LoraxSystem { session: LoraxSession::new(cfg) }
     }

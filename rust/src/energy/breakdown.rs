@@ -20,6 +20,7 @@ pub struct EnergyBreakdown {
 }
 
 impl EnergyBreakdown {
+    /// Sum of every energy component, pJ.
     pub fn total_pj(&self) -> f64 {
         self.laser_pj
             + self.tuning_pj
@@ -48,6 +49,7 @@ impl EnergyBreakdown {
         }
     }
 
+    /// Accumulate another breakdown (all components + delivered bits).
     pub fn add(&mut self, other: &EnergyBreakdown) {
         self.laser_pj += other.laser_pj;
         self.tuning_pj += other.tuning_pj;

@@ -12,12 +12,16 @@ use crate::traffic::synth::{Pattern, SynthConfig};
 /// (policy, app) pair.
 #[derive(Clone, Debug)]
 pub struct AppScenario {
+    /// Application name (validated into an `AppId` at spec build time).
     pub app: String,
+    /// Framework to run under.
     pub policy: PolicyKind,
+    /// Explicit tuning, or `None` for the Table-3 default.
     pub tuning: Option<AppTuning>,
 }
 
 impl AppScenario {
+    /// Scenario with the default (Table-3) tuning.
     pub fn new(app: &str, policy: PolicyKind) -> AppScenario {
         AppScenario { app: app.to_string(), policy, tuning: None }
     }
@@ -40,13 +44,18 @@ impl AppScenario {
 /// One synthetic-traffic replay: a generated trace under a policy.
 #[derive(Clone, Debug)]
 pub struct SynthScenario {
+    /// Human-readable scenario label (bench/CLI output).
     pub label: String,
+    /// Traffic generator configuration.
     pub synth: SynthConfig,
+    /// Framework to replay under.
     pub policy: PolicyKind,
+    /// Tuning for the policy's decisions.
     pub tuning: AppTuning,
 }
 
 impl SynthScenario {
+    /// Scenario from its parts.
     pub fn new(label: &str, synth: SynthConfig, policy: PolicyKind, tuning: AppTuning) -> Self {
         SynthScenario { label: label.to_string(), synth, policy, tuning }
     }
@@ -68,15 +77,18 @@ impl Default for SweepGrid {
 }
 
 impl SweepGrid {
+    /// An empty grid (one implicit default-tuning cell).
     pub fn new() -> SweepGrid {
         SweepGrid { apps: Vec::new(), policies: Vec::new(), tunings: vec![None] }
     }
 
+    /// Set the application axis.
     pub fn apps<S: AsRef<str>>(mut self, apps: &[S]) -> SweepGrid {
         self.apps = apps.iter().map(|s| s.as_ref().to_string()).collect();
         self
     }
 
+    /// Set the policy axis.
     pub fn policies(mut self, policies: &[PolicyKind]) -> SweepGrid {
         self.policies = policies.to_vec();
         self

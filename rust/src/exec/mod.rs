@@ -20,7 +20,12 @@
 //!   pay dataset synthesis once per app instead of once per scenario;
 //! * [`trace_buf`] — [`TraceBuffer`], the structure-of-arrays replay
 //!   format with routing resolved at record time, which lets
-//!   `Simulator::replay` run allocation-free.
+//!   `Simulator::replay` run allocation-free, and [`TraceView`], the
+//!   borrowed form the replay loop actually consumes;
+//! * [`trace_file`] — [`TraceFile`], the versioned mmap-able `.ltrace`
+//!   on-disk form of the same columns: `lorax trace record/replay`,
+//!   larger-than-RAM traces, and the [`workload::TraceCache`] spill all
+//!   ride it (zero-copy replay straight off the page cache).
 //!
 //! `lorax run`/`lorax sweep` and all the `benches/` reproduction targets
 //! run on this engine; `SweepRunner::with_threads(1)` is the serial
@@ -30,10 +35,12 @@ pub mod grid;
 pub mod runner;
 pub mod spec;
 pub mod trace_buf;
+pub mod trace_file;
 pub mod workload;
 
 pub use grid::{synth_stress_grid, AppScenario, SweepGrid, SynthScenario};
 pub use runner::{DecisionTableCache, SweepRunner};
 pub use spec::{ExperimentSpec, TopologySpec, TrafficSpec};
-pub use trace_buf::{TraceBuffer, FLAG_APPROX, FLAG_PHOTONIC};
-pub use workload::{CachedWorkload, WorkloadCache};
+pub use trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
+pub use trace_file::TraceFile;
+pub use workload::{CachedWorkload, TraceCache, WorkloadCache};

@@ -34,6 +34,7 @@ use crate::topology::clos::ClosTopology;
 
 use super::grid::{AppScenario, SynthScenario};
 use super::spec::{ExperimentSpec, TrafficSpec};
+use super::trace_file::TraceFile;
 
 /// Memoized decision tables shared across a session's sweeps.
 ///
@@ -52,6 +53,7 @@ pub struct DecisionTableCache {
 }
 
 impl DecisionTableCache {
+    /// An empty cache.
     pub fn new() -> DecisionTableCache {
         DecisionTableCache::default()
     }
@@ -94,6 +96,7 @@ impl DecisionTableCache {
         self.map.lock().unwrap().len()
     }
 
+    /// True when no table has been built yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -130,6 +133,7 @@ impl SweepRunner {
         SweepRunner { threads: threads.max(1) }
     }
 
+    /// Worker threads this runner fans across.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -248,6 +252,22 @@ impl SweepRunner {
                 .with_traffic(TrafficSpec::Synthetic(sc.synth.clone()));
             session.run(&spec).expect("synthetic scenario failed validation").sim
         })
+    }
+
+    /// Replay one recorded trace under many specs in parallel.
+    ///
+    /// Every worker thread borrows the *same* [`TraceFile`] — when the
+    /// file is mmap-ed, that is one read-only page mapping shared across
+    /// the whole sweep, so an N-policy study over a huge trace costs one
+    /// file-sized working set, not N.  Results are in spec order and
+    /// identical to replaying serially.
+    pub fn replay_trace_on(
+        &self,
+        session: &LoraxSession,
+        file: &TraceFile,
+        specs: &[ExperimentSpec],
+    ) -> Vec<Result<AppRunReport>> {
+        self.map(specs, |_, spec| session.replay_trace(spec, file))
     }
 }
 

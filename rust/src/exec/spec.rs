@@ -42,6 +42,7 @@ pub enum TopologySpec {
 }
 
 impl TopologySpec {
+    /// Canonical lowercase name (the `@<topo>` spec segment).
     pub fn name(self) -> &'static str {
         match self {
             TopologySpec::Clos64 => "clos64",
@@ -94,11 +95,17 @@ pub enum TrafficSpec {
 /// the run and donates its default tuning; no workload is synthesized.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentSpec {
+    /// Application under test (names the run even for synthetic traffic).
     pub app: AppId,
+    /// Transmission framework.
     pub policy: PolicyKind,
+    /// Explicit tuning, or `None` for the Table-3 default.
     pub tuning: Option<AppTuning>,
+    /// What drives the traffic (app data movement vs generated trace).
     pub traffic: TrafficSpec,
+    /// Photonic fabric to run on.
     pub topology: TopologySpec,
+    /// Modulation override, or `None` for the policy's native order.
     pub modulation: Option<Modulation>,
 }
 
@@ -116,16 +123,19 @@ impl ExperimentSpec {
         }
     }
 
+    /// Replace the default tuning with an explicit one.
     pub fn with_tuning(mut self, tuning: AppTuning) -> ExperimentSpec {
         self.tuning = Some(tuning);
         self
     }
 
+    /// Replace the traffic source.
     pub fn with_traffic(mut self, traffic: TrafficSpec) -> ExperimentSpec {
         self.traffic = traffic;
         self
     }
 
+    /// Run on an explicit signaling order instead of the policy's own.
     pub fn with_modulation(mut self, modulation: Modulation) -> ExperimentSpec {
         self.modulation = Some(modulation);
         self
@@ -212,6 +222,34 @@ impl fmt::Display for ExperimentSpec {
 impl FromStr for ExperimentSpec {
     type Err = anyhow::Error;
 
+    /// Parse the `app:policy[:b<b>r<r>t<t>][:synth=...][:@topo][:%mod]`
+    /// grammar (segments after `app:policy` may appear in any order).
+    ///
+    /// ```
+    /// use lorax::exec::{ExperimentSpec, TrafficSpec};
+    ///
+    /// // Minimal spec: Table-3 default tuning, app-driven traffic.
+    /// let spec: ExperimentSpec = "sobel:LORAX-OOK".parse().unwrap();
+    /// assert_eq!(spec.to_string(), "sobel:LORAX-OOK");
+    ///
+    /// // Explicit tuning (b = approximated LSBs, r = power reduction %,
+    /// // t = truncation bits) and an explicit modulation override.
+    /// let spec: ExperimentSpec = "fft:LORAX-PAM4:b16r100t16:%pam8".parse().unwrap();
+    /// assert_eq!(spec.resolved_tuning().approx_bits, 16);
+    /// assert_eq!(spec.to_string(), "fft:LORAX-PAM4:b16r100t16:%PAM8");
+    ///
+    /// // Synthetic traffic: pattern, rate/100 cycles, cycles, float
+    /// // fraction, seed.
+    /// let spec: ExperimentSpec =
+    ///     "fft:baseline:synth=hotspot2,r40,c20000,f0.6,s42".parse().unwrap();
+    /// assert!(matches!(spec.traffic, TrafficSpec::Synthetic(_)));
+    ///
+    /// // Every spec round-trips through Display, and bad specs fail
+    /// // with an error naming the valid choices.
+    /// assert_eq!(spec.to_string().parse::<ExperimentSpec>().unwrap(), spec);
+    /// assert!("sobel:nope".parse::<ExperimentSpec>().is_err());
+    /// assert!("sobel:baseline:b33r0t0".parse::<ExperimentSpec>().is_err());
+    /// ```
     fn from_str(s: &str) -> Result<ExperimentSpec, anyhow::Error> {
         let mut parts = s.split(':');
         let app: AppId = match parts.next() {

@@ -8,6 +8,12 @@
 //! photonic/approximable flags, payload size — once at record-ingest
 //! time, so `Simulator::replay` streams flat arrays and performs no
 //! per-packet routing work and no allocations.
+//!
+//! [`TraceView`] is the borrowed form of the same columns: the replay
+//! loop runs over a view, so it is agnostic to whether the columns live
+//! in this buffer's `Vec`s or in an mmap-ed
+//! [`crate::exec::trace_file::TraceFile`] (zero-copy, larger-than-RAM
+//! traces page in on demand).
 
 use crate::topology::clos::ClosTopology;
 use crate::traffic::packet::PayloadKind;
@@ -18,26 +24,70 @@ pub const FLAG_PHOTONIC: u8 = 1;
 /// Flag bit: the payload is flagged approximable by the application.
 pub const FLAG_APPROX: u8 = 2;
 
+/// Borrowed view of the packed replay columns — the currency of
+/// [`crate::noc::sim::Simulator::replay_view`].
+///
+/// A view can borrow from an in-memory [`TraceBuffer`] (via
+/// [`TraceBuffer::view`]) or directly from an mmap-ed
+/// [`crate::exec::trace_file::TraceFile`] — the replay hot loop is
+/// identical either way, and neither path allocates per record.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceView<'a> {
+    /// Injection cycle per packet (non-decreasing per source).
+    pub inject_cycle: &'a [u64],
+    /// Source cluster id per packet.
+    pub src_cluster: &'a [u8],
+    /// Destination cluster id per packet.
+    pub dst_cluster: &'a [u8],
+    /// Electrical hops on the route (from `topo.route`, computed once).
+    pub el_hops: &'a [u8],
+    /// [`FLAG_PHOTONIC`] | [`FLAG_APPROX`] bits per packet.
+    pub flags: &'a [u8],
+    /// Payload classification per packet.
+    pub kind: &'a [PayloadKind],
+    /// Payload length in 32-bit words per packet.
+    pub payload_words: &'a [u32],
+}
+
+impl TraceView<'_> {
+    /// Number of packed records.
+    pub fn len(&self) -> usize {
+        self.inject_cycle.len()
+    }
+
+    /// True when the view holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.inject_cycle.is_empty()
+    }
+}
+
 /// Packed, replay-ready trace columns (one index per packet, in
 /// injection order).
 #[derive(Clone, Debug, Default)]
 pub struct TraceBuffer {
+    /// Injection cycle per packet.
     pub inject_cycle: Vec<u64>,
+    /// Source cluster id per packet.
     pub src_cluster: Vec<u8>,
+    /// Destination cluster id per packet.
     pub dst_cluster: Vec<u8>,
     /// Electrical hops on the route (from `topo.route`, computed once).
     pub el_hops: Vec<u8>,
     /// [`FLAG_PHOTONIC`] | [`FLAG_APPROX`].
     pub flags: Vec<u8>,
+    /// Payload classification per packet.
     pub kind: Vec<PayloadKind>,
+    /// Payload length in 32-bit words per packet.
     pub payload_words: Vec<u32>,
 }
 
 impl TraceBuffer {
+    /// An empty buffer (no column allocations yet).
     pub fn new() -> TraceBuffer {
         TraceBuffer::default()
     }
 
+    /// An empty buffer with every column pre-sized for `n` records.
     pub fn with_capacity(n: usize) -> TraceBuffer {
         TraceBuffer {
             inject_cycle: Vec::with_capacity(n),
@@ -88,10 +138,25 @@ impl TraceBuffer {
         buf
     }
 
+    /// Borrow every column as a [`TraceView`] for zero-copy replay.
+    pub fn view(&self) -> TraceView<'_> {
+        TraceView {
+            inject_cycle: &self.inject_cycle,
+            src_cluster: &self.src_cluster,
+            dst_cluster: &self.dst_cluster,
+            el_hops: &self.el_hops,
+            flags: &self.flags,
+            kind: &self.kind,
+            payload_words: &self.payload_words,
+        }
+    }
+
+    /// Number of packed records.
     pub fn len(&self) -> usize {
         self.inject_cycle.len()
     }
 
+    /// True when the buffer holds no records.
     pub fn is_empty(&self) -> bool {
         self.inject_cycle.is_empty()
     }
@@ -131,6 +196,22 @@ mod tests {
             assert_eq!(buf.dst_cluster[i] as usize, topo.cluster_of(rec.packet.dst));
             assert_eq!(buf.kind[i], rec.packet.kind);
             assert_eq!(buf.payload_words[i], rec.packet.payload_words);
+        }
+    }
+
+    #[test]
+    fn view_borrows_all_columns() {
+        let topo = ClosTopology::default_64core();
+        let trace = generate(&SynthConfig { cycles: 200, seed: 9, ..Default::default() });
+        let buf = TraceBuffer::from_records(&topo, &trace);
+        let v = buf.view();
+        assert_eq!(v.len(), buf.len());
+        assert_eq!(v.is_empty(), buf.is_empty());
+        for i in 0..buf.len() {
+            assert_eq!(v.inject_cycle[i], buf.inject_cycle[i]);
+            assert_eq!(v.kind[i], buf.kind[i]);
+            assert_eq!(v.payload_words[i], buf.payload_words[i]);
+            assert_eq!(v.flags[i], buf.flags[i]);
         }
     }
 

@@ -1,0 +1,712 @@
+//! `.ltrace` — the versioned, mmap-able structure-of-arrays trace file.
+//!
+//! The AoS format in [`crate::traffic::trace`] is the *recording*
+//! interchange (one 24-byte record per packet, routing unresolved);
+//! replaying it forces a pack step per run.  This module is the
+//! *replay* interchange: the exact columns of [`TraceBuffer`], routing
+//! already resolved, laid out so the file can be mapped read-only and
+//! handed to [`crate::noc::sim::Simulator::replay_view`] as borrowed
+//! slices — no pack step, no per-record allocation, and files larger
+//! than RAM page in on demand.
+//!
+//! ## On-disk layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic "LXSOATR1"
+//!      8     4  version (u32, currently 1)
+//!     12     4  flags (u32, reserved, must be 0)
+//!     16     8  record count n (u64)
+//!     24     8  column-region byte length (u64, must equal 17*n)
+//!     32     4  min_clusters (u32): 1 + max cluster id referenced
+//!     36     4  FNV-1a-32 checksum of header bytes 0..36
+//!     40     8  reserved (must be 0; pads the header to 48 bytes)
+//!     48    8n  inject_cycle column (u64 per record)
+//!  48+ 8n    4n  payload_words column (u32 per record)
+//!  48+12n     n  src_cluster column (u8 per record)
+//!  48+13n     n  dst_cluster column (u8 per record)
+//!  48+14n     n  el_hops column (u8 per record)
+//!  48+15n     n  flags column (FLAG_PHOTONIC | FLAG_APPROX bits)
+//!  48+16n     n  kind column (PayloadKind discriminants 0..=2)
+//! ```
+//!
+//! Columns are ordered widest-first so every column is naturally
+//! aligned in a page-aligned mapping (the 48-byte header keeps the u64
+//! column 8-aligned, and `8n` keeps the u32 column 4-aligned).
+//!
+//! **Version bump rules:** any change to the header layout, column
+//! order, column width, flag bits, or `PayloadKind` discriminants bumps
+//! `VERSION`; readers reject unknown versions rather than guessing.
+//! Appending new *trailing* columns also bumps the version (the column
+//! region length is derived from the record count).
+//!
+//! ## Zero-copy open
+//!
+//! [`TraceFile::open`] maps the file read-only with a raw `mmap(2)` call
+//! (no registry crates — same technique as the SIGPIPE handler in
+//! `main.rs`) and validates the header plus the `kind` and cluster
+//! columns once; after that, [`TraceFile::view`] reborrows the mapping
+//! as typed slices.  On targets outside the mapping gate (the raw FFI
+//! declaration assumes 64-bit little-endian Unix, where `off_t` is
+//! `i64`), when mmap fails, or when `LORAX_TRACE_MMAP=0`, it falls back
+//! to reading the columns into an owned [`TraceBuffer`] — bit-identical
+//! replay either way, pinned by `tests/integration_trace_file.rs`.
+
+use std::io::{self, Write};
+use std::path::Path;
+
+use crate::traffic::packet::PayloadKind;
+
+use super::trace_buf::{TraceBuffer, TraceView};
+
+/// File magic: "LORAX SoA trace, revision 1" spelled in 8 bytes.
+pub const MAGIC: &[u8; 8] = b"LXSOATR1";
+/// Current format version (see the module docs for bump rules).
+pub const VERSION: u32 = 1;
+/// Fixed header length in bytes; the u64 column starts here (8-aligned).
+pub const HEADER_LEN: usize = 48;
+/// Total column bytes per record (8 + 4 + 5x1).
+pub const BYTES_PER_RECORD: usize = 17;
+
+/// FNV-1a 32-bit hash (header checksum; tiny, dependency-free).
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h = 0x811C_9DC5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash (stable cache-file naming in
+/// [`crate::exec::workload::TraceCache`]).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Render the 48-byte header for `n` records.
+fn encode_header(n: u64, min_clusters: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    // flags (12..16) reserved as zero.
+    h[16..24].copy_from_slice(&n.to_le_bytes());
+    h[24..32].copy_from_slice(&(n * BYTES_PER_RECORD as u64).to_le_bytes());
+    h[32..36].copy_from_slice(&min_clusters.to_le_bytes());
+    let sum = fnv1a32(&h[0..36]);
+    h[36..40].copy_from_slice(&sum.to_le_bytes());
+    // 40..48 reserved as zero.
+    h
+}
+
+/// Validate a header against `total_len` file bytes; returns
+/// (record count, min_clusters).
+fn decode_header(bytes: &[u8], total_len: usize) -> io::Result<(usize, u32)> {
+    if bytes.len() < HEADER_LEN {
+        return Err(invalid(format!("trace file too short for header: {} bytes", bytes.len())));
+    }
+    if &bytes[0..8] != MAGIC {
+        return Err(invalid("bad trace magic (not an .ltrace file)".to_string()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(invalid(format!("unsupported trace version {version} (reader: {VERSION})")));
+    }
+    let flags = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    if flags != 0 {
+        return Err(invalid(format!("reserved header flags set: {flags:#x}")));
+    }
+    let sum = u32::from_le_bytes(bytes[36..40].try_into().unwrap());
+    let want = fnv1a32(&bytes[0..36]);
+    if sum != want {
+        return Err(invalid(format!("header checksum {sum:#010x} != computed {want:#010x}")));
+    }
+    if bytes[40..48] != [0u8; 8] {
+        return Err(invalid("reserved header bytes 40..48 are not zero".to_string()));
+    }
+    let n = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let col_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    // Checked arithmetic throughout: a crafted header must produce a
+    // clean InvalidData error, never a debug-overflow panic.
+    let want_col_len = n
+        .checked_mul(BYTES_PER_RECORD as u64)
+        .filter(|&c| c == col_len)
+        .ok_or_else(|| {
+            invalid(format!("column region {col_len} != {n} records x {BYTES_PER_RECORD}"))
+        })?;
+    let expect = (HEADER_LEN as u64)
+        .checked_add(want_col_len)
+        .ok_or_else(|| invalid(format!("column region {col_len} overflows the file length")))?;
+    if total_len as u64 != expect {
+        return Err(invalid(format!("trace file length {total_len} != expected {expect}")));
+    }
+    let n: usize = n
+        .try_into()
+        .map_err(|_| invalid(format!("record count {n} exceeds this platform's usize")))?;
+    let min_clusters = u32::from_le_bytes(bytes[32..36].try_into().unwrap());
+    Ok((n, min_clusters))
+}
+
+/// Byte offset of each column within the file for `n` records, in
+/// layout order: (inject, payload_words, src, dst, el_hops, flags, kind).
+fn col_offsets(n: usize) -> (usize, usize, usize, usize, usize, usize, usize) {
+    let inject = HEADER_LEN;
+    let payload = inject + 8 * n;
+    let src = payload + 4 * n;
+    (inject, payload, src, src + n, src + 2 * n, src + 3 * n, src + 4 * n)
+}
+
+/// Validate the kind column (every byte must be a [`PayloadKind`]
+/// discriminant) — the invariant the mapped reborrow relies on.
+fn validate_kinds(kinds: &[u8]) -> io::Result<()> {
+    if let Some(pos) = kinds.iter().position(|&k| k > PayloadKind::Control as u8) {
+        return Err(invalid(format!("bad kind byte {} at record {pos}", kinds[pos])));
+    }
+    Ok(())
+}
+
+/// Validate a cluster-id column against the header's `min_clusters`
+/// declaration, so a corrupt file errors at open instead of indexing
+/// out of bounds deep inside the replay (the columns sit outside the
+/// checksummed header region).
+fn validate_clusters(name: &str, col: &[u8], min_clusters: u32) -> io::Result<()> {
+    if let Some(pos) = col.iter().position(|&c| c as u32 >= min_clusters) {
+        return Err(invalid(format!(
+            "{name} cluster {} at record {pos} >= declared min_clusters {min_clusters}",
+            col[pos]
+        )));
+    }
+    Ok(())
+}
+
+impl TraceBuffer {
+    /// Serialize this buffer in the `.ltrace` column format (see the
+    /// [module docs](crate::exec::trace_file) for the layout).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        let n = self.len();
+        let min_clusters = self
+            .src_cluster
+            .iter()
+            .chain(self.dst_cluster.iter())
+            .map(|&c| c as u32 + 1)
+            .max()
+            .unwrap_or(0);
+        w.write_all(&encode_header(n as u64, min_clusters))?;
+        let mut wide = Vec::with_capacity(8 * n);
+        for v in &self.inject_cycle {
+            wide.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&wide)?;
+        wide.clear();
+        for v in &self.payload_words {
+            wide.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&wide)?;
+        w.write_all(&self.src_cluster)?;
+        w.write_all(&self.dst_cluster)?;
+        w.write_all(&self.el_hops)?;
+        w.write_all(&self.flags)?;
+        let kinds: Vec<u8> = self.kind.iter().map(|&k| k as u8).collect();
+        w.write_all(&kinds)?;
+        w.flush()
+    }
+
+    /// Read a whole `.ltrace` file into an owned buffer (the
+    /// registry-free fallback path; [`TraceFile::open`] prefers the
+    /// zero-copy mapping).
+    pub fn from_file(path: &Path) -> io::Result<TraceBuffer> {
+        decode_owned(&std::fs::read(path)?)
+    }
+}
+
+/// Decode a full `.ltrace` byte image into owned columns.
+fn decode_owned(bytes: &[u8]) -> io::Result<TraceBuffer> {
+    let (n, min_clusters) = decode_header(bytes, bytes.len())?;
+    let (o_inj, o_pay, o_src, o_dst, o_el, o_flags, o_kind) = col_offsets(n);
+    let mut buf = TraceBuffer::with_capacity(n);
+    for i in 0..n {
+        let at = o_inj + 8 * i;
+        buf.inject_cycle.push(u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()));
+        let at = o_pay + 4 * i;
+        buf.payload_words.push(u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+    }
+    validate_clusters("src", &bytes[o_src..o_src + n], min_clusters)?;
+    validate_clusters("dst", &bytes[o_dst..o_dst + n], min_clusters)?;
+    buf.src_cluster.extend_from_slice(&bytes[o_src..o_src + n]);
+    buf.dst_cluster.extend_from_slice(&bytes[o_dst..o_dst + n]);
+    buf.el_hops.extend_from_slice(&bytes[o_el..o_el + n]);
+    buf.flags.extend_from_slice(&bytes[o_flags..o_flags + n]);
+    let kinds = &bytes[o_kind..o_kind + n];
+    validate_kinds(kinds)?;
+    buf.kind.extend(kinds.iter().map(|&k| match k {
+        0 => PayloadKind::Float64,
+        1 => PayloadKind::Int,
+        _ => PayloadKind::Control,
+    }));
+    Ok(buf)
+}
+
+/// Read-only page mapping of a validated `.ltrace` file (64-bit
+/// little-endian Unix only — the raw `mmap` declaration types `off_t`
+/// as `i64`, which is wrong on 32-bit ABIs — everything else uses the
+/// owned path).
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod mapping {
+    use super::*;
+    use std::os::unix::io::AsRawFd;
+
+    mod sys {
+        use std::ffi::c_void;
+        pub const PROT_READ: i32 = 1;
+        pub const MAP_PRIVATE: i32 = 2;
+        extern "C" {
+            pub fn mmap(
+                addr: *mut c_void,
+                len: usize,
+                prot: i32,
+                flags: i32,
+                fd: i32,
+                offset: i64,
+            ) -> *mut c_void;
+            pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        }
+    }
+
+    /// An owned read-only mapping plus the validated record count.
+    pub struct Mapping {
+        ptr: *const u8,
+        len: usize,
+        records: usize,
+        min_clusters: u32,
+    }
+
+    // SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated
+    // after validation; sharing immutable pages across threads is safe.
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            // SAFETY: ptr/len came from a successful mmap of this length.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+
+    impl Mapping {
+        /// Map and validate `path`.
+        pub fn map(path: &Path) -> io::Result<Mapping> {
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len();
+            let len: usize = len
+                .try_into()
+                .map_err(|_| super::invalid(format!("trace file of {len} bytes too large")))?;
+            if len < HEADER_LEN {
+                return Err(super::invalid(format!("trace file too short: {len} bytes")));
+            }
+            // SAFETY: null hint, validated length, read-only private
+            // mapping of an open fd at offset 0.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            let mut m = Mapping { ptr: ptr as *const u8, len, records: 0, min_clusters: 0 };
+            // SAFETY: the mapping spans `len` readable bytes; `m` owns it
+            // (Drop unmaps on every early return below).
+            let bytes = unsafe { std::slice::from_raw_parts(m.ptr, m.len) };
+            let (n, min_clusters) = decode_header(bytes, len)?;
+            let (_, _, o_src, o_dst, _, _, o_kind) = col_offsets(n);
+            validate_clusters("src", &bytes[o_src..o_src + n], min_clusters)?;
+            validate_clusters("dst", &bytes[o_dst..o_dst + n], min_clusters)?;
+            validate_kinds(&bytes[o_kind..o_kind + n])?;
+            m.records = n;
+            m.min_clusters = min_clusters;
+            Ok(m)
+        }
+
+        /// Validated record count.
+        pub fn len(&self) -> usize {
+            self.records
+        }
+
+        /// Header `min_clusters` field.
+        pub fn min_clusters(&self) -> u32 {
+            self.min_clusters
+        }
+
+        /// Reborrow the mapped columns as typed slices.
+        pub fn view(&self) -> TraceView<'_> {
+            let n = self.records;
+            let (o_inj, o_pay, o_src, o_dst, o_el, o_flags, o_kind) = col_offsets(n);
+            // SAFETY: offsets were validated against the file length; the
+            // base is page-aligned so o_inj (48) is 8-aligned and o_pay
+            // (48 + 8n) is 4-aligned; the kind column was validated to
+            // hold only PayloadKind discriminants (repr(u8)); the slices
+            // borrow `self`, which owns the mapping.
+            unsafe {
+                TraceView {
+                    inject_cycle: std::slice::from_raw_parts(
+                        self.ptr.add(o_inj) as *const u64,
+                        n,
+                    ),
+                    payload_words: std::slice::from_raw_parts(
+                        self.ptr.add(o_pay) as *const u32,
+                        n,
+                    ),
+                    src_cluster: std::slice::from_raw_parts(self.ptr.add(o_src), n),
+                    dst_cluster: std::slice::from_raw_parts(self.ptr.add(o_dst), n),
+                    el_hops: std::slice::from_raw_parts(self.ptr.add(o_el), n),
+                    flags: std::slice::from_raw_parts(self.ptr.add(o_flags), n),
+                    kind: std::slice::from_raw_parts(
+                        self.ptr.add(o_kind) as *const PayloadKind,
+                        n,
+                    ),
+                }
+            }
+        }
+    }
+
+    impl std::fmt::Debug for Mapping {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Mapping")
+                .field("len", &self.len)
+                .field("records", &self.records)
+                .finish()
+        }
+    }
+}
+
+/// How a [`TraceFile`]'s columns are backed.
+#[derive(Debug)]
+enum Backing {
+    /// Zero-copy read-only page mapping.
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    Mapped(mapping::Mapping),
+    /// Owned columns (in-memory construction, or the read fallback).
+    Owned(TraceBuffer),
+}
+
+/// A replay-ready trace: either an mmap-ed `.ltrace` file or an owned
+/// [`TraceBuffer`], behind one [`TraceFile::view`] interface.
+///
+/// `Send + Sync`: a file is immutable after open, so one instance (and
+/// one page cache mapping) can be shared read-only across every
+/// [`crate::exec::SweepRunner`] worker thread.
+#[derive(Debug)]
+pub struct TraceFile {
+    backing: Backing,
+}
+
+impl TraceFile {
+    /// Write `buf` to `path` in the `.ltrace` format.
+    ///
+    /// The file is staged as `<path>.tmp.<pid>.<seq>` and renamed into
+    /// place, so concurrent readers (and racing [`TraceCache`] spills
+    /// across threads *and* processes) never observe a half-written
+    /// file — the per-process sequence number keeps two threads of one
+    /// process writing the same key from clobbering each other's
+    /// staging file.
+    ///
+    /// [`TraceCache`]: crate::exec::workload::TraceCache
+    pub fn create(path: &Path, buf: &TraceBuffer) -> io::Result<()> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut w = io::BufWriter::new(std::fs::File::create(&tmp)?);
+        buf.write_to(&mut w)?;
+        w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Open `path` for replay, zero-copy when possible.
+    ///
+    /// Prefers a read-only mapping (64-bit little-endian Unix targets,
+    /// unless `LORAX_TRACE_MMAP=0`); otherwise reads the columns into
+    /// owned memory.  Either way the header checksum, length, cluster
+    /// ranges, and kind column are validated before any record is
+    /// served.
+    pub fn open(path: &Path) -> io::Result<TraceFile> {
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        {
+            let mmap_ok = std::env::var("LORAX_TRACE_MMAP").map(|v| v != "0").unwrap_or(true);
+            // On mapping failure fall through to the owned path below:
+            // validation errors re-surface identically from it, and
+            // mmap-specific failures (e.g. a filesystem without mapping
+            // support) degrade to a plain read.
+            if mmap_ok {
+                if let Ok(m) = mapping::Mapping::map(path) {
+                    return Ok(TraceFile { backing: Backing::Mapped(m) });
+                }
+            }
+        }
+        Self::open_in_memory(path)
+    }
+
+    /// Open `path` by reading it fully into owned memory (the explicit
+    /// no-mmap path; useful for tests and exotic filesystems).
+    pub fn open_in_memory(path: &Path) -> io::Result<TraceFile> {
+        Ok(TraceFile { backing: Backing::Owned(TraceBuffer::from_file(path)?) })
+    }
+
+    /// Wrap an in-memory buffer (no file involved) behind the same
+    /// interface — what [`TraceCache`] serves when spill is disabled.
+    ///
+    /// [`TraceCache`]: crate::exec::workload::TraceCache
+    pub fn from_buffer(buf: TraceBuffer) -> TraceFile {
+        TraceFile { backing: Backing::Owned(buf) }
+    }
+
+    /// Borrow the columns for replay (zero-copy from the mapping when
+    /// [`TraceFile::is_mapped`]).
+    pub fn view(&self) -> TraceView<'_> {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mapped(m) => m.view(),
+            Backing::Owned(b) => b.view(),
+        }
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mapped(m) => m.len(),
+            Backing::Owned(b) => b.len(),
+        }
+    }
+
+    /// True when the file holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// 1 + the largest cluster id any record references (0 when empty):
+    /// the minimum topology size a replay needs.
+    pub fn min_clusters(&self) -> u32 {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mapped(m) => m.min_clusters(),
+            Backing::Owned(b) => b
+                .src_cluster
+                .iter()
+                .chain(b.dst_cluster.iter())
+                .map(|&c| c as u32 + 1)
+                .max()
+                .unwrap_or(0),
+        }
+    }
+
+    /// True when the columns are served from a page mapping rather than
+    /// owned memory.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mapped(_) => true,
+            Backing::Owned(_) => false,
+        }
+    }
+
+    /// Copy the columns into an owned [`TraceBuffer`].
+    pub fn to_buffer(&self) -> TraceBuffer {
+        let v = self.view();
+        TraceBuffer {
+            inject_cycle: v.inject_cycle.to_vec(),
+            src_cluster: v.src_cluster.to_vec(),
+            dst_cluster: v.dst_cluster.to_vec(),
+            el_hops: v.el_hops.to_vec(),
+            flags: v.flags.to_vec(),
+            kind: v.kind.to_vec(),
+            payload_words: v.payload_words.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::clos::ClosTopology;
+    use crate::traffic::synth::{generate, SynthConfig};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lorax_trace_file_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_buf(cycles: u64, seed: u64) -> TraceBuffer {
+        let topo = ClosTopology::default_64core();
+        let trace = generate(&SynthConfig { cycles, seed, ..Default::default() });
+        TraceBuffer::from_records(&topo, &trace)
+    }
+
+    fn assert_views_equal(a: TraceView<'_>, b: TraceView<'_>) {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.inject_cycle, b.inject_cycle);
+        assert_eq!(a.src_cluster, b.src_cluster);
+        assert_eq!(a.dst_cluster, b.dst_cluster);
+        assert_eq!(a.el_hops, b.el_hops);
+        assert_eq!(a.flags, b.flags);
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.payload_words, b.payload_words);
+    }
+
+    #[test]
+    fn roundtrip_mapped_and_owned_match_source() {
+        let buf = sample_buf(800, 11);
+        assert!(!buf.is_empty());
+        let path = tmp("roundtrip.ltrace");
+        TraceFile::create(&path, &buf).unwrap();
+        let mapped = TraceFile::open(&path).unwrap();
+        let owned = TraceFile::open_in_memory(&path).unwrap();
+        assert_eq!(mapped.len(), buf.len());
+        assert_eq!(owned.len(), buf.len());
+        assert!(!owned.is_mapped());
+        assert_views_equal(mapped.view(), buf.view());
+        assert_views_equal(owned.view(), buf.view());
+        assert_eq!(mapped.min_clusters(), owned.min_clusters());
+        assert!(mapped.min_clusters() >= 1 && mapped.min_clusters() <= 8);
+        // to_buffer is a faithful copy.
+        assert_views_equal(mapped.to_buffer().view(), buf.view());
+    }
+
+    #[test]
+    fn empty_buffer_roundtrips() {
+        let buf = TraceBuffer::new();
+        let path = tmp("empty.ltrace");
+        TraceFile::create(&path, &buf).unwrap();
+        let f = TraceFile::open(&path).unwrap();
+        assert!(f.is_empty());
+        assert_eq!(f.min_clusters(), 0);
+        assert_eq!(f.view().len(), 0);
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            HEADER_LEN as u64,
+            "empty trace is header-only"
+        );
+    }
+
+    #[test]
+    fn file_size_matches_layout() {
+        let buf = sample_buf(300, 5);
+        let path = tmp("size.ltrace");
+        TraceFile::create(&path, &buf).unwrap();
+        let expect = (HEADER_LEN + BYTES_PER_RECORD * buf.len()) as u64;
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), expect);
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let buf = sample_buf(120, 3);
+        let path = tmp("corrupt.ltrace");
+        TraceFile::create(&path, &buf).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+        assert!(TraceFile::open_in_memory(&path).is_err());
+
+        // Unknown version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+
+        // Flipped header byte breaks the checksum.
+        let mut bad = good.clone();
+        bad[17] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+
+        // Truncated column region.
+        let mut bad = good.clone();
+        bad.truncate(bad.len() - 3);
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+
+        // Invalid kind discriminant in the last column.
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] = 7;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+        assert!(TraceFile::open_in_memory(&path).is_err());
+
+        // Cluster id beyond the header's min_clusters declaration (the
+        // columns sit outside the checksummed region, so this must be
+        // caught by the column scan, not the checksum).
+        let mut bad = good.clone();
+        let (_, _, o_src, ..) = col_offsets(buf.len());
+        bad[o_src] = 200;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+        assert!(TraceFile::open_in_memory(&path).is_err());
+
+        // Non-zero reserved tail bytes are rejected.
+        let mut bad = good.clone();
+        bad[44] = 1;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(TraceFile::open(&path).is_err());
+
+        // The pristine image still opens.
+        std::fs::write(&path, &good).unwrap();
+        assert!(TraceFile::open(&path).is_ok());
+    }
+
+    #[test]
+    fn from_buffer_serves_without_a_file() {
+        let buf = sample_buf(200, 8);
+        let copy = buf.clone();
+        let f = TraceFile::from_buffer(buf);
+        assert!(!f.is_mapped());
+        assert_views_equal(f.view(), copy.view());
+    }
+
+    #[test]
+    fn header_checksum_is_stable() {
+        // Pin the v1 header encoding: a changed layout must fail here
+        // and force a VERSION bump (see module docs).
+        let h = encode_header(3, 8);
+        assert_eq!(&h[0..8], MAGIC);
+        assert_eq!(u32::from_le_bytes(h[8..12].try_into().unwrap()), 1);
+        assert_eq!(u64::from_le_bytes(h[16..24].try_into().unwrap()), 3);
+        assert_eq!(u64::from_le_bytes(h[24..32].try_into().unwrap()), 51);
+        assert_eq!(u32::from_le_bytes(h[32..36].try_into().unwrap()), 8);
+        let (n, mc) = decode_header(&h, HEADER_LEN + 51).unwrap();
+        assert_eq!((n, mc), (3, 8));
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a32(b""), 0x811C_9DC5);
+        assert_eq!(fnv1a32(b"a"), 0xE40C_292C);
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+}

@@ -1,4 +1,5 @@
-//! [`WorkloadCache`] — memoized workload synthesis.
+//! [`WorkloadCache`] and [`TraceCache`] — memoized workload synthesis
+//! and memoized (optionally disk-spilled) packed traces.
 //!
 //! Synthesizing an application's dataset is the one serial cost the
 //! sweep engine could not amortize: every `run_app` call re-generated
@@ -9,17 +10,31 @@
 //! shares one immutable [`Workload`] plus its lazily-computed golden
 //! output across every run and worker thread of a
 //! [`crate::coordinator::LoraxSession`].
+//!
+//! [`TraceCache`] plays the same role for *packed traces*: synthetic
+//! traffic is a pure function of its `SynthConfig` + topology, so the
+//! session records each distinct trace once and every policy replays
+//! the same shared [`TraceFile`].  With a spill directory configured
+//! (`LORAX_TRACE_SPILL` or [`TraceCache::with_spill_dir`]) the packed
+//! columns land on disk in the `.ltrace` format and are served from one
+//! read-only mapping — reused across runs *and* processes, and not
+//! resident in the heap at all.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::approx::channel::IdentityChannel;
 use crate::apps::{AppId, Workload};
 
+use super::trace_buf::TraceBuffer;
+use super::trace_file::{fnv1a64, TraceFile};
+
 /// One synthesized workload and its golden (error-free) output.
 pub struct CachedWorkload {
+    /// The shared, immutable workload engine (dataset included).
     pub workload: Box<dyn Workload>,
     golden: OnceLock<Vec<f64>>,
 }
@@ -50,6 +65,7 @@ pub struct WorkloadCache {
 }
 
 impl WorkloadCache {
+    /// An empty cache.
     pub fn new() -> WorkloadCache {
         WorkloadCache::default()
     }
@@ -105,6 +121,134 @@ impl WorkloadCache {
         self.map.lock().unwrap().len()
     }
 
+    /// True when no workload has been synthesized yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Thread-safe memoization of packed traces, keyed by a caller-supplied
+/// identity string (the session keys synthetic traces by topology +
+/// `SynthConfig`; anything deterministic in the key is fair game).
+///
+/// With a spill directory, each distinct trace is written once as
+/// `<slug>-<fnv64>.ltrace` and served from a shared read-only
+/// [`TraceFile`] mapping; a pre-existing valid file for the same key is
+/// reused without re-recording (cross-process and cross-run reuse —
+/// the file's checksummed header guards against stale or corrupt
+/// spills).  Without one, the packed columns are shared in memory.
+pub struct TraceCache {
+    map: Mutex<HashMap<String, Arc<TraceFile>>>,
+    spill_dir: Option<PathBuf>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for TraceCache {
+    fn default() -> Self {
+        TraceCache::new()
+    }
+}
+
+impl TraceCache {
+    /// A cache spilling to `$LORAX_TRACE_SPILL` when that is set, else
+    /// purely in-memory.
+    pub fn new() -> TraceCache {
+        TraceCache::with_spill_dir(std::env::var_os("LORAX_TRACE_SPILL").map(PathBuf::from))
+    }
+
+    /// A cache with an explicit spill directory (`None` = in-memory).
+    pub fn with_spill_dir(spill_dir: Option<PathBuf>) -> TraceCache {
+        TraceCache {
+            map: Mutex::new(HashMap::new()),
+            spill_dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured spill directory, if any.
+    pub fn spill_dir(&self) -> Option<&Path> {
+        self.spill_dir.as_deref()
+    }
+
+    /// Fetch the packed trace for `key`, recording it (via `record`) at
+    /// most once per distinct key per process — and, when spilling, at
+    /// most once per key *ever*, since a valid spill file is reused.
+    pub fn get_or_record(
+        &self,
+        key: &str,
+        record: impl FnOnce() -> TraceBuffer,
+    ) -> Arc<TraceFile> {
+        if let Some(f) = self.map.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(f);
+        }
+        // Materialized outside the lock: a racing duplicate is benign
+        // (recording is deterministic) and the first insert wins, so the
+        // Arc every caller sees is the same mapping.
+        let built = Arc::new(self.materialize(key, record));
+        match self.map.lock().unwrap().entry(key.to_string()) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v.insert(built))
+            }
+        }
+    }
+
+    /// Build (or re-open) the backing [`TraceFile`] for one key.
+    fn materialize(&self, key: &str, record: impl FnOnce() -> TraceBuffer) -> TraceFile {
+        let Some(dir) = &self.spill_dir else {
+            return TraceFile::from_buffer(record());
+        };
+        let path = dir.join(Self::spill_file_name(key));
+        if let Ok(f) = TraceFile::open(&path) {
+            return f; // valid spill from an earlier run/process
+        }
+        let buf = record();
+        // Spill best-effort: an unwritable directory degrades to the
+        // in-memory backing instead of failing the run.
+        let spilled = std::fs::create_dir_all(dir)
+            .and_then(|_| TraceFile::create(&path, &buf))
+            .and_then(|_| TraceFile::open(&path));
+        match spilled {
+            Ok(f) => f,
+            Err(_) => TraceFile::from_buffer(buf),
+        }
+    }
+
+    /// Deterministic spill file name for a cache key: a readable slug
+    /// plus the key's FNV-1a-64 fingerprint.
+    pub fn spill_file_name(key: &str) -> String {
+        let mut slug: String = key
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+            .collect();
+        slug.truncate(48);
+        format!("{slug}-{:016x}.ltrace", fnv1a64(key.as_bytes()))
+    }
+
+    /// Lookups served from the in-process cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that materialized a trace (recorded, or re-opened from a
+    /// spill file).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct traces materialized so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when no trace has been materialized yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -145,5 +289,64 @@ mod tests {
         let cache = WorkloadCache::new();
         assert!(cache.is_empty());
         assert_eq!(cache.hit_rate(), 0.0);
+    }
+
+    fn small_trace(seed: u64) -> TraceBuffer {
+        use crate::topology::clos::ClosTopology;
+        use crate::traffic::synth::{generate, SynthConfig};
+        let topo = ClosTopology::default_64core();
+        TraceBuffer::from_records(
+            &topo,
+            &generate(&SynthConfig { cycles: 300, seed, ..Default::default() }),
+        )
+    }
+
+    #[test]
+    fn trace_cache_records_once_per_key() {
+        let cache = TraceCache::with_spill_dir(None);
+        let mut calls = 0;
+        let a = cache.get_or_record("k1", || {
+            calls += 1;
+            small_trace(1)
+        });
+        let b = cache.get_or_record("k1", || {
+            calls += 1;
+            small_trace(1)
+        });
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(calls, 1);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+        let c = cache.get_or_record("k2", || small_trace(2));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+        assert!(!a.is_mapped(), "no spill dir: in-memory backing");
+    }
+
+    #[test]
+    fn trace_cache_spills_and_reuses_files() {
+        let dir = std::env::temp_dir().join("lorax_trace_cache_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = "clos64:uniform-r10-c300-s5";
+        let cache = TraceCache::with_spill_dir(Some(dir.clone()));
+        assert_eq!(cache.spill_dir(), Some(dir.as_path()));
+        let a = cache.get_or_record(key, || small_trace(5));
+        let path = dir.join(TraceCache::spill_file_name(key));
+        assert!(path.is_file(), "{} missing", path.display());
+        assert_eq!(a.len(), small_trace(5).len());
+        // A fresh cache re-opens the spill without re-recording.
+        let cache2 = TraceCache::with_spill_dir(Some(dir.clone()));
+        let b = cache2.get_or_record(key, || panic!("spill file should have been reused"));
+        assert_eq!(b.len(), a.len());
+        assert_eq!(b.view().inject_cycle, a.view().inject_cycle);
+    }
+
+    #[test]
+    fn spill_file_names_are_stable_and_distinct() {
+        let a = TraceCache::spill_file_name("clos64:uniform,r20,c1000,f0.5,s1");
+        let b = TraceCache::spill_file_name("clos64:uniform,r20,c1000,f0.5,s2");
+        assert_ne!(a, b);
+        assert_eq!(a, TraceCache::spill_file_name("clos64:uniform,r20,c1000,f0.5,s1"));
+        assert!(a.ends_with(".ltrace"));
+        assert!(a.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '.'));
     }
 }

@@ -41,6 +41,14 @@
 //! thread count.  `lorax run`/`lorax sweep` and the `benches/` targets
 //! all run on it.
 //!
+//! Traces also persist: `exec::trace_file` defines the versioned,
+//! mmap-able `.ltrace` structure-of-arrays format (`lorax trace
+//! record`/`lorax trace replay`).  `Simulator::replay_view` streams the
+//! mapped columns zero-copy, so traces larger than RAM replay without a
+//! pack step, and one read-only mapping serves every sweep worker (see
+//! `docs/ARCHITECTURE.md` for the full layer walkthrough and format
+//! spec).
+//!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -55,6 +63,8 @@
 //! let report = session.run(&spec).unwrap();
 //! println!("{}", report.summary());   // or report.to_json()
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod approx;
 pub mod apps;

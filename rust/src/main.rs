@@ -11,6 +11,8 @@
 //! lorax tune                                 # Table 3 (sweep + select, all apps)
 //! lorax simulate --app fft --policy LORAX-OOK [--xla]
 //! lorax jpeg --outdir out/                   # Fig. 7 (writes PGMs)
+//! lorax trace record --spec app:policy --out f.ltrace   # pack to disk
+//! lorax trace replay f.ltrace --spec app:policy [--json] # zero-copy replay
 //! lorax reproduce [fig2|fig6|table3|fig7|fig8|headline|all]
 //! lorax verify-bridge                        # native channel == AOT/PJRT channel
 //!
@@ -27,7 +29,7 @@ use lorax::approx::tuning::{select_tuning, BITS_AXIS, REDUCTION_AXIS};
 use lorax::apps::AppId;
 use lorax::config::{Args, SystemConfig};
 use lorax::coordinator::{LoraxSession, LoraxSystem};
-use lorax::exec::{ExperimentSpec, SweepRunner};
+use lorax::exec::{ExperimentSpec, SweepRunner, TraceFile};
 use lorax::report::figures;
 
 /// Die quietly on SIGPIPE (e.g. `lorax reproduce | head`) instead of
@@ -210,6 +212,7 @@ fn run() -> Result<()> {
             emit(&figures::fig7_jpeg(&cfg, &outdir)?, csv);
             println!("PGM images written to {}", outdir.display());
         }
+        "trace" => trace_cmd(&cfg, &args)?,
         "reproduce" => {
             let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             reproduce(&cfg, what, &args, csv)?;
@@ -218,6 +221,61 @@ fn run() -> Result<()> {
         _ => {
             println!("{}", main_doc());
         }
+    }
+    Ok(())
+}
+
+/// `lorax trace record|replay` — the `.ltrace` file surface.
+///
+/// * `record --spec S --out f.ltrace` packs S's traffic (synthetic:
+///   generated; app-driven: the live channel's recorded trace) into the
+///   mmap-able SoA format.
+/// * `replay f.ltrace --spec S [--json]` replays the file zero-copy
+///   under S's policy; for a synthetic spec the output is bit-identical
+///   to `lorax run --spec S` (the CI smoke diffs the two JSON records).
+fn trace_cmd(cfg: &SystemConfig, args: &Args) -> Result<()> {
+    let verb = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let spec: ExperimentSpec = args
+        .get("spec")
+        .context("--spec <app:policy[:...]> required for trace commands")?
+        .parse()?;
+    let session = LoraxSession::new(cfg);
+    match verb {
+        "record" => {
+            let out = PathBuf::from(
+                args.get("out").context("--out <file.ltrace> required for trace record")?,
+            );
+            let buf = session.record_trace(&spec)?;
+            TraceFile::create(&out, &buf)
+                .with_context(|| format!("writing trace to {}", out.display()))?;
+            let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+            eprintln!(
+                "recorded {} packets ({bytes} bytes) for {spec} to {}",
+                buf.len(),
+                out.display()
+            );
+        }
+        "replay" => {
+            let path = args
+                .positional
+                .get(2)
+                .context("usage: lorax trace replay <file.ltrace> --spec <spec>")?;
+            let file = TraceFile::open(std::path::Path::new(path))
+                .with_context(|| format!("opening trace {path}"))?;
+            let report = session.replay_trace(&spec, &file)?;
+            if args.flag("json") {
+                print!("{}", report.to_json());
+            } else {
+                eprintln!(
+                    "replayed {} packets from {path} ({})",
+                    file.len(),
+                    if file.is_mapped() { "mmap, zero-copy" } else { "owned read" }
+                );
+                println!("{}", report.summary());
+                println!("{}", report.sim.summary());
+            }
+        }
+        other => bail!("unknown trace verb {other:?} (known: record, replay)"),
     }
     Ok(())
 }
@@ -306,6 +364,10 @@ COMMANDS
   tune           Table 3 — application-specific parameter selection ([--jobs <n>])
   simulate       one (app, policy) run (--app <name> --policy <name> [--xla])
   jpeg           Fig. 7  — JPEG quality panels (--outdir <dir>)
+  trace          record/replay mmap-able SoA trace files:
+                 trace record --spec <spec> --out <f.ltrace>
+                 trace replay <f.ltrace> --spec <spec> [--json]
+                 (replay is zero-copy; LORAX_TRACE_MMAP=0 forces reads)
   reproduce      regenerate [fig2|fig6|table3|fig7|fig8|headline|all]
   verify-bridge  assert native channel == AOT/PJRT channel bit-for-bit
                  (needs a build with `--features xla`)

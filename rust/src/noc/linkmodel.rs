@@ -27,22 +27,26 @@ use crate::traffic::packet::{Packet, PayloadKind, HEADER_WORDS};
 /// packed columns instead of reconstructing [`Packet`]s.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FlitView {
+    /// Payload classification.
     pub kind: PayloadKind,
     /// Payload length in 32-bit words (excluding header).
     pub payload_words: u32,
 }
 
 impl FlitView {
+    /// The size-and-kind view of a full packet.
     #[inline]
     pub fn of(pkt: &Packet) -> FlitView {
         FlitView { kind: pkt.kind, payload_words: pkt.payload_words }
     }
 
+    /// Payload plus header length, in 32-bit words.
     #[inline]
     pub fn total_words(&self) -> u32 {
         self.payload_words + HEADER_WORDS
     }
 
+    /// Total on-wire size in bits (payload + header).
     #[inline]
     pub fn total_bits(&self) -> u64 {
         self.total_words() as u64 * 32
@@ -51,8 +55,11 @@ impl FlitView {
 
 /// Static per-waveguide context for energy computation.
 pub struct LinkContext<'a> {
+    /// Photonic device parameters.
     pub params: &'a PhotonicParams,
+    /// Energy coefficients.
     pub energy: &'a EnergyParams,
+    /// The source waveguide's laser provisioning.
     pub provisioning: &'a LaserProvisioning,
     /// Reader banks on the waveguide (for selection-phase tuning).
     pub n_reader_banks: u32,

@@ -7,19 +7,22 @@
 //! are recomputed through the same [`GwiDecisionEngine`] the live channel
 //! used, so the replay is exact.
 //!
-//! §Perf: the hot path is [`Simulator::replay`], which streams a packed
-//! structure-of-arrays [`TraceBuffer`] (routing resolved once at record
-//! time) against a shared [`DecisionTable`] — no per-packet `route()`
-//! recomputation, no per-run table rebuild when the caller memoizes
-//! tables (see [`crate::exec`]), and no allocations inside the loop.
-//! [`Simulator::run`] keeps the historical AoS entry point by packing
-//! and delegating.
+//! §Perf: the hot path is [`Simulator::replay_view`], which streams the
+//! packed structure-of-arrays columns of a [`TraceView`] (routing
+//! resolved once at record time) against a shared [`DecisionTable`] — no
+//! per-packet `route()` recomputation, no per-run table rebuild when the
+//! caller memoizes tables (see [`crate::exec`]), and no allocations
+//! inside the loop.  The view may borrow an in-memory [`TraceBuffer`]
+//! ([`Simulator::replay`]) or an mmap-ed
+//! [`crate::exec::trace_file::TraceFile`] — file-backed replay is
+//! bit-identical and still allocation-free.  [`Simulator::run`] keeps
+//! the historical AoS entry point by packing and delegating.
 
 use crate::approx::policy::{Policy, TransferMode};
 use crate::coordinator::gwi::{Decision, DecisionTable, GwiDecisionEngine};
 use crate::energy::breakdown::EnergyBreakdown;
 use crate::energy::params::EnergyParams;
-use crate::exec::trace_buf::{TraceBuffer, FLAG_APPROX, FLAG_PHOTONIC};
+use crate::exec::trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
 use crate::traffic::trace::TraceRecord;
 use crate::util::stats::{CycleHistogram, Welford};
 
@@ -34,16 +37,24 @@ const MAX_CLUSTERS: usize = 64;
 /// Simulation results for one (trace, policy) run.
 #[derive(Clone, Debug)]
 pub struct SimReport {
+    /// Canonical name of the policy replayed.
     pub policy_name: &'static str,
+    /// Packets replayed (all kinds).
     pub packets: u64,
+    /// Packets that crossed a photonic (inter-cluster) link.
     pub photonic_packets: u64,
+    /// Cycle the last packet finished (the run's makespan).
     pub cycles: u64,
+    /// Accumulated per-component energy.
     pub energy: EnergyBreakdown,
+    /// Streaming latency statistics (mean/σ/min/max), cycles.
     pub latency: Welford,
     /// Real 95th-percentile latency in cycles (nearest-rank from an
     /// exact low-range histogram; 0 for an empty trace).
     pub latency_p95: f64,
+    /// Photonic packets sent with LSBs at reduced laser power.
     pub reduced_packets: u64,
+    /// Photonic packets sent with LSB wavelengths off.
     pub truncated_packets: u64,
     /// Time-averaged electrical laser power, mW (Fig. 8b); 0 (not NaN)
     /// for an empty trace.
@@ -54,6 +65,7 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// One human-readable result line (packets, EPB, laser, latency).
     pub fn summary(&self) -> String {
         format!(
             "{:<11} pkts={:<8} cycles={:<9} EPB={:.4} pJ/b  laser={:.3} mW  \
@@ -73,11 +85,15 @@ impl SimReport {
 
 /// Cycle-level simulator over a decision engine.
 pub struct Simulator<'a> {
+    /// The GWI decision engine (and with it: topology, photonic
+    /// parameters, waveguide calibration) this replay charges against.
     pub engine: &'a GwiDecisionEngine,
+    /// Energy coefficients (overridable per run; defaults are Table 2).
     pub energy_params: EnergyParams,
 }
 
 impl<'a> Simulator<'a> {
+    /// Simulator over `engine` with default energy coefficients.
     pub fn new(engine: &'a GwiDecisionEngine) -> Simulator<'a> {
         Simulator { engine, energy_params: EnergyParams::default() }
     }
@@ -91,11 +107,25 @@ impl<'a> Simulator<'a> {
         self.replay(&buf, policy, &table)
     }
 
-    /// Replay a packed trace against a prebuilt decision table.  The hot
-    /// loop performs no allocation and no routing work.
+    /// Replay a packed in-memory trace against a prebuilt decision table
+    /// (borrows the buffer's columns and delegates to
+    /// [`Simulator::replay_view`]).
     pub fn replay(
         &self,
         buf: &TraceBuffer,
+        policy: &Policy,
+        decisions: &DecisionTable,
+    ) -> SimReport {
+        self.replay_view(buf.view(), policy, decisions)
+    }
+
+    /// Replay packed trace columns against a prebuilt decision table.
+    /// The hot loop performs no allocation and no routing work, and is
+    /// backing-agnostic: the view may borrow a [`TraceBuffer`] or an
+    /// mmap-ed [`crate::exec::trace_file::TraceFile`].
+    pub fn replay_view(
+        &self,
+        buf: TraceView<'_>,
         policy: &Policy,
         decisions: &DecisionTable,
     ) -> SimReport {
@@ -327,6 +357,22 @@ mod tests {
         assert_eq!(via_run.truncated_packets, via_replay.truncated_packets);
         assert_eq!(via_run.energy.total_pj(), via_replay.energy.total_pj());
         assert_eq!(via_run.latency_p95, via_replay.latency_p95);
+    }
+
+    #[test]
+    fn replay_view_matches_replay() {
+        let e = engine(Modulation::OOK);
+        let sim = Simulator::new(&e);
+        let t = trace();
+        let p = Policy::new(PolicyKind::LORAX_OOK, "blackscholes");
+        let buf = TraceBuffer::from_records(&e.topo, &t);
+        let table = DecisionTable::build(&e, &p);
+        let a = sim.replay(&buf, &p, &table);
+        let b = sim.replay_view(buf.view(), &p, &table);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+        assert_eq!(a.latency_p95, b.latency_p95);
+        assert_eq!(a.reduced_packets, b.reduced_packets);
     }
 
     #[test]

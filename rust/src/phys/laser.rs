@@ -27,6 +27,7 @@ pub fn per_lambda_launch_dbm(loss_db: f64, p: &PhotonicParams) -> f64 {
 /// tables).
 #[derive(Clone, Debug)]
 pub struct LaserProvisioning {
+    /// The signaling order the waveguide was provisioned for.
     pub modulation: Modulation,
     /// Worst-case reader loss on this waveguide, dB.
     pub worst_loss_db: f64,

@@ -27,6 +27,7 @@ pub struct PathLoss {
 }
 
 impl PathLoss {
+    /// A dropped (destination-terminated) path from its composition.
     pub fn new(length_cm: f64, bends: u32, banks_passed: u32) -> Self {
         PathLoss { length_cm, bends, banks_passed, dropped: true }
     }

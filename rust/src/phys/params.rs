@@ -40,6 +40,26 @@ impl Modulation {
     /// [`super::signaling::SignalingScheme`] can drive the phys layer
     /// directly — but these are the orders with calibrated or
     /// extrapolated Table-2 device models.
+    ///
+    /// The list is ordered by [`Modulation::index`], names round-trip
+    /// case-insensitively through `FromStr`, and per-scheme slot arrays
+    /// (e.g. the session's lazy engine cache) are sized by
+    /// [`Modulation::N_KNOWN`]:
+    ///
+    /// ```
+    /// use lorax::phys::params::Modulation;
+    ///
+    /// assert_eq!(Modulation::KNOWN.len(), Modulation::N_KNOWN);
+    /// for (i, m) in Modulation::KNOWN.iter().enumerate() {
+    ///     assert_eq!(m.index(), i);
+    ///     assert_eq!(m.name().parse::<Modulation>().unwrap(), *m);
+    /// }
+    /// assert_eq!("pam8".parse::<Modulation>().unwrap(), Modulation::PAM8);
+    /// assert_eq!(Modulation::PAM8.bits_per_symbol(), 3);
+    /// // Unknown schemes list the valid names.
+    /// let err = "qam".parse::<Modulation>().unwrap_err().to_string();
+    /// assert!(err.contains("OOK, PAM4, PAM8, PAM16"));
+    /// ```
     pub const KNOWN: [Modulation; Self::N_KNOWN] =
         [Modulation::OOK, Modulation::PAM4, Modulation::PAM8, Modulation::PAM16];
 
@@ -74,6 +94,7 @@ impl Modulation {
         self.bits_per_symbol() as usize - 1
     }
 
+    /// Canonical scheme name (the spec/CLI spelling).
     pub fn name(self) -> &'static str {
         match self.levels {
             2 => "OOK",

@@ -49,6 +49,7 @@ pub struct BitErrorProbs {
 }
 
 impl BitErrorProbs {
+    /// Perfect channel: no bit ever flips.
     pub const ERROR_FREE: BitErrorProbs = BitErrorProbs { p10: 0.0, p01: 0.0 };
     /// Laser off: every masked bit reads '0'.
     pub const TRUNCATED: BitErrorProbs = BitErrorProbs { p10: 1.0, p01: 0.0 };
@@ -64,6 +65,38 @@ impl BitErrorProbs {
 /// error model.  [`PamL`] is the built-in family; the trait is the
 /// extension point for custom receiver/laser co-management models
 /// (PROTEUS-style loss-aware schemes, arXiv:2008.07566).
+///
+/// # Implementation contract
+///
+/// The decision engine, laser provisioning and the calibration pins in
+/// `tests/properties.rs` assume every implementation guarantees:
+///
+/// * **Purity & determinism** — every method is a pure function of its
+///   arguments and `self`; two calls with the same inputs return
+///   bit-identical values (decision tables are memoized and shared
+///   across threads on this assumption).
+/// * **Calibration point** — at the worst-case reader at full power
+///   (`mu_top_mw == mu_cal_mw`), `error_probs` must be negligible
+///   (every eye at `Q_cal`): the eq.-2 provisioning places that reader
+///   exactly at detector sensitivity, so a scheme that is error-prone
+///   *there* breaks every baseline comparison.
+/// * **Monotonicity** — `error_probs(..).p10` must be non-increasing in
+///   `mu_top_mw` (more received power never hurts), and
+///   `detectable` must be monotone in the same direction: once a level
+///   is detectable, any higher level is too.  The Table-3 tuning search
+///   assumes this when it treats reduction as an ordered axis.
+/// * **Truncation limit** — `mu_top_mw <= 0` must return
+///   [`BitErrorProbs::TRUNCATED`] and be undetectable: laser-off is
+///   all-zeros by construction, not a probabilistic outcome.
+/// * **Iso-bandwidth λ-count** — `n_lambda(p) * bits_per_symbol()` must
+///   be at least `p.n_lambda_ook` bits per cycle, so occupancy-based
+///   latency comparisons across schemes stay apples-to-apples.
+/// * **Loss/floor extrapolation** — `signaling_loss_db` and
+///   `power_floor` must return the calibrated §5.1 values for the
+///   paper's instances when they model them (0 dB/1.0x for OOK,
+///   `pam4_signaling_loss_db`/`pam4_power_factor` for PAM4); the
+///   per-scheme pins in `tests/properties.rs` enforce this for
+///   [`PamL`].
 pub trait SignalingScheme: std::fmt::Debug {
     /// Amplitude levels per symbol (2 for OOK).
     fn levels(&self) -> u32;
@@ -106,7 +139,9 @@ pub struct PamL {
 }
 
 impl PamL {
+    /// On-off keying (PAM-2).
     pub const OOK: PamL = PamL { levels: 2 };
+    /// The paper's 4-level instance.
     pub const PAM4: PamL = PamL { levels: 4 };
 
     /// A PAM scheme with `levels` levels (power of two, ≥ 2).
@@ -279,6 +314,7 @@ fn reduce(num: u64, den: u64) -> (u64, u64) {
 /// Receiver calibration for one waveguide (per signaling scheme).
 #[derive(Clone, Debug)]
 pub struct ReceiverCal {
+    /// The scheme this calibration dispatches through.
     pub modulation: Modulation,
     /// Worst-case-reader full-power '1' (or PAM-L top) level, mW.
     pub mu_cal_mw: f64,

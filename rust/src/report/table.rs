@@ -3,12 +3,14 @@
 /// Simple column-aligned table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Table caption, printed above the header.
     pub title: String,
     header: Vec<String>,
     rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -17,12 +19,14 @@ impl Table {
         }
     }
 
+    /// Append one row (cell count must match the header).
     pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells.iter().map(|c| c.to_string()).collect());
         self
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

@@ -12,9 +12,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-/// Fixed batch sizes of the AOT channel artifacts
+/// Large fixed batch size of the AOT channel artifact
 /// (mirrors `python/compile/model.py`).
 pub const CHANNEL_N: usize = 65536;
+/// Small fixed batch size (cheaper PJRT dispatch for short transfers).
 pub const CHANNEL_SMALL_N: usize = 4096;
 
 /// Locate the artifacts directory: `$LORAX_ARTIFACTS`, then `./artifacts`,
@@ -45,20 +46,25 @@ pub fn artifacts_dir() -> Result<PathBuf> {
 /// One artifact's declared signature.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Artifact name (the `<name>.hlo.txt` stem).
     pub name: String,
     /// Input dtype/shape strings as emitted by aot.py, e.g. `u32[65536]`.
     pub inputs: Vec<String>,
+    /// Number of outputs in the lowered tuple.
     pub n_outputs: usize,
+    /// Hex sha256 of the HLO text (integrity pin).
     pub sha: String,
 }
 
 /// Parsed manifest.txt.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifact specs by name.
     pub specs: BTreeMap<String, ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Parse manifest text (`name inputs -> n sha256:...` lines).
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut specs = BTreeMap::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -91,6 +97,7 @@ impl Manifest {
         Ok(Manifest { specs })
     }
 
+    /// Load and parse `<dir>/manifest.txt`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -98,6 +105,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// The spec for `name`, or an error naming the missing artifact.
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.specs
             .get(name)

@@ -22,10 +22,12 @@ pub struct XlaCorruptor {
 }
 
 impl XlaCorruptor {
+    /// Corruptor over a fresh PJRT CPU runtime.
     pub fn new() -> Result<XlaCorruptor> {
         Ok(XlaCorruptor { runtime: Runtime::cpu()?, batches: 0 })
     }
 
+    /// Corruptor over a caller-owned runtime (shared executable cache).
     pub fn from_runtime(runtime: Runtime) -> XlaCorruptor {
         XlaCorruptor { runtime, batches: 0 }
     }

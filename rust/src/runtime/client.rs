@@ -12,6 +12,7 @@ use super::artifacts::{artifacts_dir, Manifest};
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The parsed artifact manifest (names, signatures, hashes).
     pub manifest: Manifest,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -25,6 +26,7 @@ impl Runtime {
         Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

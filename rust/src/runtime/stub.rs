@@ -22,6 +22,7 @@ const REBUILD_HINT: &str = "built without the `xla` feature: rebuild with \
      AOT/PJRT channel";
 
 impl XlaCorruptor {
+    /// Always errors with the rebuild hint (the stub cannot corrupt).
     pub fn new() -> Result<XlaCorruptor> {
         bail!("{REBUILD_HINT}")
     }

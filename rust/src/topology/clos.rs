@@ -9,11 +9,14 @@ use crate::phys::loss::PathLoss;
 /// controllers (co-located with the cluster GWI, paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum NodeId {
+    /// Compute core 0..=63.
     Core(u8),
+    /// Per-cluster memory controller 0..=7 (at the cluster GWI).
     MemCtrl(u8),
 }
 
 impl NodeId {
+    /// Dense endpoint index: cores 0..64, then memory controllers.
     pub fn index(self) -> usize {
         match self {
             NodeId::Core(c) => c as usize,
@@ -25,14 +28,20 @@ impl NodeId {
 /// Static description of the 64-core Clos PNoC.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClosTopology {
+    /// Physical floorplan the waveguide lengths derive from.
     pub layout: DieLayout,
+    /// Total compute cores.
     pub n_cores: usize,
+    /// Clusters (one GWI + one source waveguide each).
     pub n_clusters: usize,
+    /// Cores per cluster.
     pub cores_per_cluster: usize,
+    /// Electrical concentrators per cluster.
     pub concentrators_per_cluster: usize,
 }
 
 impl ClosTopology {
+    /// The paper's Table-1 instance: 64 cores in 8 clusters.
     pub fn default_64core() -> ClosTopology {
         ClosTopology {
             layout: DieLayout::default_8cluster(),

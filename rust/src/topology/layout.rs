@@ -34,6 +34,7 @@ impl DieLayout {
         DieLayout { die_mm: die, cluster_pos: pos, bends_per_hop: 2 }
     }
 
+    /// Number of placed clusters.
     pub fn n_clusters(&self) -> usize {
         self.cluster_pos.len()
     }

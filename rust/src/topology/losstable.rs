@@ -12,6 +12,7 @@ use crate::phys::signaling::ReceiverCal;
 /// scheme.
 #[derive(Clone, Debug)]
 pub struct WaveguideSet {
+    /// The signaling order this set was calibrated for.
     pub modulation: Modulation,
     /// `loss_db[src][dst]`; `f64::NAN` on the diagonal (no photonic path).
     pub loss_db: Vec<Vec<f64>>,
@@ -22,6 +23,7 @@ pub struct WaveguideSet {
 }
 
 impl WaveguideSet {
+    /// Build one scheme's loss/provisioning set from a topology walk.
     pub fn build(topo: &ClosTopology, p: &PhotonicParams, m: Modulation) -> WaveguideSet {
         WaveguideSet::build_from_paths(&reader_path_profile(topo), p, m)
     }

@@ -9,22 +9,32 @@ pub const LINE_WORDS: u32 = 16;
 pub const HEADER_WORDS: u32 = 2;
 
 /// What a packet's payload carries.
+///
+/// `#[repr(u8)]` with pinned discriminants: these values ARE the on-disk
+/// encoding of the `kind` column in both trace formats
+/// ([`crate::traffic::trace`] records and [`crate::exec::trace_file`]
+/// columns), and the mmap-backed replay reborrows a validated byte
+/// column as `&[PayloadKind]` directly.  Never renumber; append only.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
 pub enum PayloadKind {
     /// IEEE-754 double-precision data (approximable when flagged).
-    Float64,
+    Float64 = 0,
     /// Integer/pointer data (never approximated).
-    Int,
+    Int = 1,
     /// Coherence/control traffic (never approximated).
-    Control,
+    Control = 2,
 }
 
 /// One network packet (metadata only; payload words travel separately
 /// through the channel implementations).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Packet {
+    /// Injecting endpoint.
     pub src: NodeId,
+    /// Destination endpoint.
     pub dst: NodeId,
+    /// Payload classification (drives approximability and Fig.-2 counts).
     pub kind: PayloadKind,
     /// Payload length in 32-bit words (excluding header).
     pub payload_words: u32,
@@ -33,10 +43,12 @@ pub struct Packet {
 }
 
 impl Packet {
+    /// Payload plus header length, in 32-bit words.
     pub fn total_words(&self) -> u32 {
         self.payload_words + HEADER_WORDS
     }
 
+    /// Total on-wire size in bits (payload + header).
     pub fn total_bits(&self) -> u64 {
         self.total_words() as u64 * 32
     }
@@ -45,15 +57,22 @@ impl Packet {
 /// Float/int/control packet and word counters — the data behind Fig. 2.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TrafficProfile {
+    /// Packets carrying [`PayloadKind::Float64`] payloads.
     pub float_packets: u64,
+    /// Packets carrying [`PayloadKind::Int`] payloads.
     pub int_packets: u64,
+    /// Packets carrying [`PayloadKind::Control`] payloads.
     pub control_packets: u64,
+    /// Payload words moved in float packets.
     pub float_words: u64,
+    /// Payload words moved in int packets.
     pub int_words: u64,
+    /// Payload words moved in control packets.
     pub control_words: u64,
 }
 
 impl TrafficProfile {
+    /// Count one packet into the per-kind packet/word totals.
     pub fn record(&mut self, packet: &Packet) {
         match packet.kind {
             PayloadKind::Float64 => {
@@ -71,6 +90,7 @@ impl TrafficProfile {
         }
     }
 
+    /// Packets of any kind recorded so far.
     pub fn total_packets(&self) -> u64 {
         self.float_packets + self.int_packets + self.control_packets
     }
@@ -86,6 +106,7 @@ impl TrafficProfile {
         }
     }
 
+    /// Fold another profile's counters into this one.
     pub fn merge(&mut self, other: &TrafficProfile) {
         self.float_packets += other.float_packets;
         self.int_packets += other.int_packets;

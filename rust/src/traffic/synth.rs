@@ -23,6 +23,7 @@ pub enum Pattern {
 /// Generator configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SynthConfig {
+    /// Spatial destination pattern.
     pub pattern: Pattern,
     /// Packets injected per core per 100 cycles (injection rate x100).
     pub rate_per_100_cycles: u32,
@@ -30,6 +31,7 @@ pub struct SynthConfig {
     pub cycles: u64,
     /// Fraction of data packets carrying floats, in [0, 1].
     pub float_fraction: f64,
+    /// Generator seed (traces are deterministic per config).
     pub seed: u64,
 }
 

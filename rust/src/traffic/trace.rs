@@ -7,6 +7,11 @@
 //!
 //! Format (little-endian): 8-byte magic `LORAXTR1`, u32 record count,
 //! then fixed 24-byte records.
+//!
+//! This is the array-of-structs *recording* interchange (routing
+//! unresolved, node-level addressing).  The replay-optimized on-disk
+//! form — routing resolved, structure-of-arrays, mmap-able — is
+//! [`crate::exec::trace_file`].
 
 use std::io::{self, Read, Write};
 
@@ -20,6 +25,7 @@ const MAGIC: &[u8; 8] = b"LORAXTR1";
 pub struct TraceRecord {
     /// Injection time hint in cycles (logical order from the engine).
     pub inject_cycle: u64,
+    /// The injected packet's metadata.
     pub packet: Packet,
 }
 
@@ -60,10 +66,12 @@ pub struct TraceWriter<W: Write> {
 }
 
 impl<W: Write> TraceWriter<W> {
+    /// A writer buffering records for `sink`.
     pub fn new(sink: W) -> TraceWriter<W> {
         TraceWriter { sink, count: 0, buf: Vec::with_capacity(24 * 1024) }
     }
 
+    /// Append one record (buffered until [`TraceWriter::finish`]).
     pub fn push(&mut self, rec: &TraceRecord) {
         self.buf.extend_from_slice(&rec.inject_cycle.to_le_bytes());
         self.buf.extend_from_slice(&node_to_u16(rec.packet.src).to_le_bytes());
@@ -85,10 +93,12 @@ impl<W: Write> TraceWriter<W> {
         Ok(self.sink)
     }
 
+    /// Records pushed so far.
     pub fn len(&self) -> u32 {
         self.count
     }
 
+    /// True when no record has been pushed yet.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
@@ -98,6 +108,7 @@ impl<W: Write> TraceWriter<W> {
 pub struct TraceReader;
 
 impl TraceReader {
+    /// Parse an entire trace stream; validates magic and body length.
     pub fn read_all<R: Read>(mut src: R) -> io::Result<Vec<TraceRecord>> {
         let mut magic = [0u8; 8];
         src.read_exact(&mut magic)?;

@@ -14,21 +14,26 @@ use super::stats::trimmed_mean;
 /// One benchmark's timing result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name (also the `BENCH_*.json` slug).
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
     /// Per-iteration wall time, seconds.
     pub secs: Vec<f64>,
 }
 
 impl BenchResult {
+    /// 20%-trimmed mean iteration time, seconds (the point estimate).
     pub fn mean_s(&self) -> f64 {
         trimmed_mean(&self.secs, 0.2)
     }
 
+    /// Fastest iteration, seconds.
     pub fn min_s(&self) -> f64 {
         self.secs.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Slowest iteration, seconds.
     pub fn max_s(&self) -> f64 {
         self.secs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }

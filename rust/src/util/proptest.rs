@@ -16,11 +16,14 @@ use super::rng::Rng;
 
 /// Seeded value source handed to properties.
 pub struct Gen {
+    /// The underlying generator (free for direct draws).
     pub rng: Rng,
+    /// The seed this case runs under (printed on failure).
     pub seed: u64,
 }
 
 impl Gen {
+    /// Generator for one property case.
     pub fn new(seed: u64) -> Self {
         Gen { rng: Rng::new(seed), seed }
     }
@@ -31,18 +34,22 @@ impl Gen {
         lo + (self.rng.next_u64() % ((hi - lo + 1) as u64)) as i64
     }
 
+    /// `usize` in `[lo, hi]` inclusive.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.int(lo as i64, hi as i64) as usize
     }
 
+    /// Uniform full-range `u32`.
     pub fn u32(&mut self) -> u32 {
         self.rng.next_u32()
     }
 
+    /// Uniform `f64` in `[lo, hi)`.
     pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

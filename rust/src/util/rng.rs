@@ -60,6 +60,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Generator seeded via SplitMix64 expansion of `seed`.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut s = [0u64; 4];
@@ -74,6 +75,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next uniform 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -87,6 +89,7 @@ impl Rng {
         result
     }
 
+    /// Next uniform 32-bit draw (upper half of a 64-bit draw).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -13,10 +13,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation in (O(1), numerically stable).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -26,10 +28,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sample mean (`NaN` when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -38,6 +42,7 @@ impl Welford {
         }
     }
 
+    /// Unbiased sample variance (0 below two observations).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -46,18 +51,22 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation (`+inf` when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation (`-inf` when empty).
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Fold another accumulator in (parallel-merge form).
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
             return;
@@ -156,6 +165,7 @@ fn coarse_lower_bound(idx: usize) -> u64 {
 }
 
 impl CycleHistogram {
+    /// Empty histogram (fixed-size inline storage, no allocation).
     pub fn new() -> Self {
         CycleHistogram {
             exact: [0; EXACT_CYCLES],
@@ -166,6 +176,7 @@ impl CycleHistogram {
         }
     }
 
+    /// Count one cycle value (allocation-free).
     #[inline]
     pub fn push(&mut self, v: u64) {
         // Range check in u64 before any narrowing cast (a `v as usize`
@@ -180,6 +191,7 @@ impl CycleHistogram {
         self.max = self.max.max(v);
     }
 
+    /// Values counted so far.
     pub fn total(&self) -> u64 {
         self.total
     }
@@ -230,11 +242,13 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Histogram of `nbins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
         Histogram { lo, hi, bins: vec![0; nbins] }
     }
 
+    /// Count one value (out-of-range values clamp to the edge bins).
     pub fn push(&mut self, x: f64) {
         let f = ((x - self.lo) / (self.hi - self.lo)).clamp(0.0, 1.0);
         let mut idx = (f * self.bins.len() as f64) as usize;
@@ -244,10 +258,12 @@ impl Histogram {
         self.bins[idx] += 1;
     }
 
+    /// The per-bin counts.
     pub fn bins(&self) -> &[u64] {
         &self.bins
     }
 
+    /// Values counted so far.
     pub fn total(&self) -> u64 {
         self.bins.iter().sum()
     }

@@ -1,0 +1,212 @@
+//! Round-trip pins for the mmap-able `.ltrace` trace format.
+//!
+//! The acceptance invariant of the trace-file subsystem: for **every**
+//! application in [`AppId::ALL`], `TraceBuffer -> file -> replay` is
+//! bit-identical to the in-memory replay — through both the zero-copy
+//! mapped path and the owned-read fallback — and one read-only mapping
+//! can be shared across parallel replay workers without changing any
+//! result.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lorax::apps::AppId;
+use lorax::approx::policy::PolicyKind;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSession;
+use lorax::exec::{ExperimentSpec, SweepRunner, TraceBuffer, TraceCache, TraceFile, TrafficSpec};
+use lorax::noc::sim::{SimReport, Simulator};
+use lorax::traffic::synth::{Pattern, SynthConfig};
+
+fn small_cfg() -> SystemConfig {
+    SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("lorax_integration_trace").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_reports_identical(app: AppId, a: &SimReport, b: &SimReport) {
+    assert_eq!(a.packets, b.packets, "{app}");
+    assert_eq!(a.photonic_packets, b.photonic_packets, "{app}");
+    assert_eq!(a.cycles, b.cycles, "{app}");
+    assert_eq!(a.reduced_packets, b.reduced_packets, "{app}");
+    assert_eq!(a.truncated_packets, b.truncated_packets, "{app}");
+    // Bit-identical floats, not approximate: the file replay must walk
+    // the exact same column values in the exact same order.
+    assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits(), "{app}");
+    assert_eq!(a.epb_pj.to_bits(), b.epb_pj.to_bits(), "{app}");
+    assert_eq!(a.avg_laser_mw.to_bits(), b.avg_laser_mw.to_bits(), "{app}");
+    assert_eq!(a.latency_p95.to_bits(), b.latency_p95.to_bits(), "{app}");
+}
+
+/// The headline acceptance pin: every app's recorded trace replays
+/// bit-identically from disk (mapped and owned) vs from memory.
+#[test]
+fn every_app_roundtrips_bit_identically_through_the_file() {
+    let session = LoraxSession::new(&small_cfg());
+    let dir = tmp_dir("apps");
+    for app in AppId::ALL {
+        let spec = ExperimentSpec::new(app, PolicyKind::LORAX_OOK);
+        let buf = session.record_trace(&spec).unwrap();
+        assert!(!buf.is_empty(), "{app} recorded no packets");
+
+        let policy = spec.resolved_policy();
+        let m = spec.resolved_modulation();
+        let table = session.decision_table(m, &policy);
+        let mut sim = Simulator::new(session.engine(m));
+        sim.energy_params = session.cfg().energy.clone();
+        let in_memory = sim.replay(&buf, &policy, &table);
+
+        let path = dir.join(format!("{app}.ltrace"));
+        TraceFile::create(&path, &buf).unwrap();
+        let mapped = TraceFile::open(&path).unwrap();
+        let owned = TraceFile::open_in_memory(&path).unwrap();
+        assert_eq!(mapped.len(), buf.len(), "{app}");
+        let via_mapped = sim.replay_view(mapped.view(), &policy, &table);
+        let via_owned = sim.replay_view(owned.view(), &policy, &table);
+        assert_reports_identical(app, &in_memory, &via_mapped);
+        assert_reports_identical(app, &in_memory, &via_owned);
+    }
+}
+
+/// App-driven recording reproduces the exact trace the session's own run
+/// replays: `replay_trace` on the recorded file matches `run`'s
+/// SimReport for the same spec.
+#[test]
+fn recorded_app_trace_matches_the_live_run() {
+    let session = LoraxSession::new(&small_cfg());
+    for app in [AppId::Sobel, AppId::Fft] {
+        let spec = ExperimentSpec::new(app, PolicyKind::LORAX_OOK);
+        let live = session.run(&spec).unwrap();
+        let file = TraceFile::from_buffer(session.record_trace(&spec).unwrap());
+        let replayed = session.replay_trace(&spec, &file).unwrap();
+        assert_reports_identical(app, &live.sim, &replayed.sim);
+        // Replay carries no workload output: quality fields are zeroed.
+        assert_eq!(replayed.error_pct, 0.0);
+        assert_eq!(replayed.lut_accesses, 0);
+    }
+}
+
+/// One mapped file shared read-only across parallel replay workers:
+/// results equal the serial per-spec replays, regardless of thread
+/// count.
+#[test]
+fn one_mapping_shared_across_parallel_replays() {
+    let session = LoraxSession::new(&small_cfg());
+    let synth = SynthConfig {
+        pattern: Pattern::Transpose,
+        rate_per_100_cycles: 30,
+        cycles: 4_000,
+        float_fraction: 0.7,
+        seed: 21,
+    };
+    let base = ExperimentSpec::new(AppId::Fft, PolicyKind::Baseline)
+        .with_traffic(TrafficSpec::Synthetic(synth));
+    let buf = session.record_trace(&base).unwrap();
+    let dir = tmp_dir("shared");
+    let path = dir.join("shared.ltrace");
+    TraceFile::create(&path, &buf).unwrap();
+    let file = TraceFile::open(&path).unwrap();
+
+    let specs: Vec<ExperimentSpec> = [
+        PolicyKind::Baseline,
+        PolicyKind::Truncation,
+        PolicyKind::Prior16,
+        PolicyKind::LORAX_OOK,
+        PolicyKind::LORAX_PAM4,
+    ]
+    .into_iter()
+    .map(|k| ExperimentSpec::new(AppId::Fft, k))
+    .collect();
+
+    let serial = SweepRunner::with_threads(1).replay_trace_on(&session, &file, &specs);
+    let parallel = SweepRunner::with_threads(8).replay_trace_on(&session, &file, &specs);
+    assert_eq!(serial.len(), specs.len());
+    for ((s, p), spec) in serial.iter().zip(parallel.iter()).zip(specs.iter()) {
+        let (s, p) = (s.as_ref().unwrap(), p.as_ref().unwrap());
+        assert_reports_identical(spec.app, &s.sim, &p.sim);
+        assert_eq!(s.policy.kind, spec.policy);
+    }
+    // Policies must actually differ on the same columns (the replay is
+    // policy-sensitive, not a fixed function of the trace).
+    let base_laser = serial[0].as_ref().unwrap().sim.energy.laser_pj;
+    let lorax_laser = serial[3].as_ref().unwrap().sim.energy.laser_pj;
+    assert!(lorax_laser < base_laser, "lorax {lorax_laser} !< baseline {base_laser}");
+}
+
+/// Session-level synthetic runs spill through the trace cache when a
+/// spill dir is configured, and the spilled file replays identically.
+#[test]
+fn session_spill_roundtrip() {
+    let dir = tmp_dir("spill");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk_spec = || -> ExperimentSpec {
+        "fft:LORAX-OOK:synth=uniform,r20,c2500,f0.6,s33".parse().unwrap()
+    };
+    let plain = LoraxSession::new(&small_cfg());
+    let spilling = LoraxSession::new(&small_cfg()).with_trace_spill(dir.clone());
+    let a = plain.run(&mk_spec()).unwrap();
+    let b = spilling.run(&mk_spec()).unwrap();
+    assert_reports_identical(AppId::Fft, &a.sim, &b.sim);
+    // The spill landed on disk as a valid .ltrace file...
+    let files: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map(|e| e == "ltrace").unwrap_or(false))
+        .collect();
+    assert_eq!(files.len(), 1, "expected one spill file, got {files:?}");
+    let spilled = TraceFile::open(&files[0]).unwrap();
+    assert_eq!(spilled.len() as u64, a.sim.packets);
+    // ...and a fresh cache re-opens it without re-recording.
+    let cache = TraceCache::with_spill_dir(Some(dir));
+    let key = file_key_of(&mk_spec());
+    let key_file = cache.get_or_record(&key, || panic!("existing spill should be reused"));
+    assert_eq!(key_file.len(), spilled.len());
+}
+
+/// Reconstruct the session's synthetic-trace cache key (kept in lockstep
+/// with `LoraxSession::synth_trace_key` by the assertion in
+/// `session_spill_roundtrip`: the reuse panics if the keys diverge).
+fn file_key_of(spec: &ExperimentSpec) -> String {
+    let TrafficSpec::Synthetic(s) = &spec.traffic else { panic!("synthetic spec expected") };
+    format!(
+        "{}|{:?}|r{}|c{}|f{}|s{}",
+        spec.topology, s.pattern, s.rate_per_100_cycles, s.cycles, s.float_fraction, s.seed
+    )
+}
+
+/// `TraceBuffer::{write_to, from_file}` are exact inverses, and the
+/// mapped view sees the same columns.
+#[test]
+fn buffer_file_conversions_are_exact() {
+    let session = LoraxSession::new(&small_cfg());
+    let spec = ExperimentSpec::new(AppId::Jpeg, PolicyKind::Truncation);
+    let buf = session.record_trace(&spec).unwrap();
+    let dir = tmp_dir("conv");
+    let path = dir.join("conv.ltrace");
+    TraceFile::create(&path, &buf).unwrap();
+    let back = TraceBuffer::from_file(&path).unwrap();
+    assert_eq!(back.inject_cycle, buf.inject_cycle);
+    assert_eq!(back.src_cluster, buf.src_cluster);
+    assert_eq!(back.dst_cluster, buf.dst_cluster);
+    assert_eq!(back.el_hops, buf.el_hops);
+    assert_eq!(back.flags, buf.flags);
+    assert_eq!(back.kind, buf.kind);
+    assert_eq!(back.payload_words, buf.payload_words);
+    let mapped = TraceFile::open(&path).unwrap();
+    assert_eq!(mapped.to_buffer().inject_cycle, buf.inject_cycle);
+    // Arc sharing works across threads (TraceFile is Send + Sync).
+    let shared: Arc<TraceFile> = Arc::new(mapped);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let f = Arc::clone(&shared);
+            std::thread::spawn(move || f.view().len())
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), buf.len());
+    }
+}
