@@ -1,0 +1,106 @@
+//! Bench: the fault-tolerant sweep fabric vs the in-process sweep.
+//!
+//! Measures the deterministic coordinator/worker scheduler's overhead on
+//! a fault-free (app × policy) grid, then runs the same grid under a
+//! crash+recover+duplicate fault plan and reports the recovery cost
+//! (extra scheduler steps, retries, reassignments).  Asserts the
+//! fabric's cells are byte-identical to the in-process sweep in both
+//! cases — the determinism contract the integration suite pins.
+//!
+//! Run: `cargo bench --bench fabric`
+//! Env: LORAX_BENCH_SCALE (default 0.05), LORAX_BENCH_SMOKE=1.
+
+use lorax::approx::policy::PolicyKind;
+use lorax::config::SystemConfig;
+use lorax::coordinator::{AppRunReport, LoraxSession};
+use lorax::exec::{ExperimentSpec, FabricConfig, FaultPlan, SweepFabric};
+use lorax::util::bench::{bench, black_box, json_f64, report_and_record, write_json_payload};
+
+fn main() {
+    let smoke = std::env::var("LORAX_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let scale: f64 = std::env::var("LORAX_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 0.02 } else { 0.05 });
+    let cfg = SystemConfig { scale, seed: 42, ..Default::default() };
+    let session = LoraxSession::new(&cfg);
+    let iters = if smoke { 1 } else { 2 };
+
+    let apps: &[&str] =
+        if smoke { &["sobel", "fft"] } else { &["blackscholes", "fft", "jpeg", "sobel"] };
+    let policies = [PolicyKind::Baseline, PolicyKind::LORAX_OOK];
+    let specs: Vec<ExperimentSpec> = apps
+        .iter()
+        .flat_map(|app| {
+            policies
+                .iter()
+                .map(move |&p| ExperimentSpec::new(app.parse().expect("known app id"), p))
+        })
+        .collect();
+    println!("-- fabric sweep: {} cells at scale {scale} --", specs.len());
+
+    // --- in-process reference -----------------------------------------
+    let ri = bench("fabric:inproc", 0, iters, || {
+        black_box(session.sweep_cells(&specs));
+    });
+    report_and_record(&ri, specs.len() as f64, "cells");
+
+    // --- fault-free fabric --------------------------------------------
+    let workers = 4usize;
+    let fabric = SweepFabric::new(FabricConfig { workers, ..FabricConfig::default() })
+        .expect("workers > 0");
+    let rf = bench(&format!("fabric:fault-free x{workers}"), 0, iters, || {
+        black_box(session.sweep_cells_fabric(&specs, &fabric));
+    });
+    report_and_record(&rf, specs.len() as f64, "cells");
+
+    let inproc = session.sweep_cells(&specs);
+    let clean = session.sweep_cells_fabric(&specs, &fabric);
+    assert_eq!(
+        clean.cells_json(AppRunReport::to_json),
+        inproc.cells_json(AppRunReport::to_json),
+        "fault-free fabric must be byte-identical to the in-process sweep"
+    );
+    assert_eq!(clean.health.degraded_cells, 0);
+
+    // --- crash+recover plan: recovery cost ----------------------------
+    let plan: FaultPlan = "crash:1@1+3,dup:0@0".parse().expect("valid fault plan");
+    let faulty = session.sweep_cells_fabric(&specs, &fabric.clone().with_plan(plan));
+    assert_eq!(
+        faulty.cells_json(AppRunReport::to_json),
+        inproc.cells_json(AppRunReport::to_json),
+        "a recovering fault plan must still be byte-identical"
+    );
+    assert_eq!(faulty.health.degraded_cells, 0);
+    let recovery_extra_steps = faulty.health.steps.saturating_sub(clean.health.steps);
+    println!(
+        "fabric recovery: {} extra steps, {} retries, {} reassigned, {} duplicates dropped",
+        recovery_extra_steps,
+        faulty.health.retries,
+        faulty.health.reassigned,
+        faulty.health.duplicates_dropped
+    );
+
+    let overhead = if ri.mean_s() > 0.0 { rf.mean_s() / ri.mean_s() } else { 0.0 };
+    println!("  -> fabric overhead vs in-process: {overhead:.3}x");
+    let payload = format!(
+        "{{\"name\":\"fabric\",\"cells\":{},\"shards\":{},\"workers\":{workers},\
+         \"inproc_mean_s\":{},\"fabric_mean_s\":{},\"overhead\":{},\
+         \"fault_free_steps\":{},\"faulty_steps\":{},\"recovery_extra_steps\":{},\
+         \"retries\":{},\"reassigned\":{},\"degraded_cells\":{}}}\n",
+        specs.len(),
+        clean.health.shards,
+        json_f64(ri.mean_s()),
+        json_f64(rf.mean_s()),
+        json_f64(overhead),
+        clean.health.steps,
+        faulty.health.steps,
+        recovery_extra_steps,
+        faulty.health.retries,
+        faulty.health.reassigned,
+        faulty.health.degraded_cells,
+    );
+    if let Err(e) = write_json_payload("fabric", &payload) {
+        eprintln!("warning: could not write fabric json: {e}");
+    }
+}

@@ -108,8 +108,8 @@ fn main() {
         black_box(parallel.run_synth(&cfg, &synth));
     });
     report_and_record(&rp, synth.len() as f64, "scenarios");
-    let a = serial.run_synth(&cfg, &synth);
-    let b = parallel.run_synth(&cfg, &synth);
+    let a = serial.run_synth(&cfg, &synth).expect("serial synth sweep");
+    let b = parallel.run_synth(&cfg, &synth).expect("parallel synth sweep");
     for ((x, y), sc) in a.iter().zip(b.iter()).zip(synth.iter()) {
         assert_eq!(x.cycles, y.cycles, "{}", sc.label);
         assert_eq!(x.energy.total_pj(), y.energy.total_pj(), "{}", sc.label);

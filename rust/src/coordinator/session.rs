@@ -37,10 +37,11 @@ use crate::approx::channel::ChannelStats;
 use crate::approx::policy::{Policy, PolicyKind};
 use crate::apps::{output_error_pct, AppId};
 use crate::config::SystemConfig;
-use crate::exec::runner::DecisionTableCache;
+use crate::exec::fabric::{SweepFabric, SweepReport};
+use crate::exec::runner::{trace_replay_shard_size, DecisionTableCache, SweepRunner};
 use crate::exec::spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 use crate::exec::trace_buf::TraceBuffer;
-use crate::exec::trace_file::TraceFile;
+use crate::exec::trace_file::{fnv1a64, TraceFile};
 use crate::exec::workload::{CachedWorkload, TraceCache, WorkloadCache};
 use crate::noc::sim::{SimReport, Simulator};
 use crate::phys::params::Modulation;
@@ -409,6 +410,60 @@ impl LoraxSession {
             lut_accesses: 0,
         })
     }
+
+    /// Run a spec grid through the in-process [`SweepRunner`] into an
+    /// ordered [`SweepReport`] — the fault-free reference path the
+    /// fabric is pinned byte-identical against.  Per-cell failures
+    /// become [`crate::exec::CellState::Failed`] entries; the grid never
+    /// aborts on one bad spec.
+    pub fn sweep_cells(&self, specs: &[ExperimentSpec]) -> SweepReport<AppRunReport> {
+        let results =
+            SweepRunner::new().map(specs, |_, spec| self.run(spec).map_err(|e| format!("{e:#}")));
+        SweepReport::from_results(results)
+    }
+
+    /// Run a spec grid through the fault-tolerant coordinator/worker
+    /// `fabric` (see [`crate::exec::fabric`]).  Cell execution is this
+    /// session's deterministic [`LoraxSession::run`], so the successful
+    /// cells are byte-identical to [`LoraxSession::sweep_cells`] under
+    /// any surviving fault schedule; results are fingerprinted with the
+    /// FNV-1a-64 of their JSON record for the payload integrity check.
+    pub fn sweep_cells_fabric(
+        &self,
+        specs: &[ExperimentSpec],
+        fabric: &SweepFabric,
+    ) -> SweepReport<AppRunReport> {
+        fabric.run(
+            specs.len(),
+            |i| self.run(&specs[i]).map_err(|e| format!("{e:#}")),
+            |r| fnv1a64(r.to_json().as_bytes()),
+        )
+    }
+
+    /// Replay one recorded trace under many specs through the fabric,
+    /// shard sizes derived from the `.ltrace` header's record count so
+    /// every shard carries a comparable replay workload (~200k records).
+    pub fn replay_cells_fabric(
+        &self,
+        specs: &[ExperimentSpec],
+        file: &TraceFile,
+        fabric: &SweepFabric,
+    ) -> Result<SweepReport<AppRunReport>> {
+        ensure!(
+            file.min_clusters() as usize <= self.topo.n_clusters,
+            "trace references cluster {} but topology {} has only {} clusters",
+            file.min_clusters().saturating_sub(1),
+            self.topology_spec,
+            self.topo.n_clusters
+        );
+        let sized =
+            fabric.clone().with_shard_size(trace_replay_shard_size(file.len() as u64, 200_000));
+        Ok(sized.run(
+            specs.len(),
+            |i| self.replay_trace(&specs[i], file).map_err(|e| format!("{e:#}")),
+            |r| fnv1a64(r.to_json().as_bytes()),
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -550,6 +605,34 @@ mod tests {
         assert_eq!(via_run.sim.energy.total_pj(), via_file.sim.energy.total_pj());
         assert_eq!(via_run.sim.latency_p95, via_file.sim.latency_p95);
         assert_eq!(via_run.to_json(), via_file.to_json());
+    }
+
+    #[test]
+    fn fabric_sweep_matches_in_process_sweep() {
+        use crate::exec::fabric::{FabricConfig, FaultPlan};
+
+        let session = LoraxSession::new(&small_cfg());
+        let specs: Vec<ExperimentSpec> = ["sobel:Baseline", "sobel:LORAX-OOK", "fft:LORAX-OOK"]
+            .iter()
+            .map(|s| s.parse().unwrap())
+            .collect();
+        let inproc = session.sweep_cells(&specs);
+        assert_eq!(inproc.cells.len(), 3);
+        assert_eq!(inproc.degraded_cells(), 0);
+
+        // Initial placement is deterministic (worker i <- shard i), so
+        // both events fire on the first assignment round.
+        let plan: FaultPlan = "crash:0@0+2,dup:1@1".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig { workers: 2, ..FabricConfig::default() })
+            .unwrap()
+            .with_plan(plan);
+        let via_fabric = session.sweep_cells_fabric(&specs, &fabric);
+        assert_eq!(
+            via_fabric.cells_json(AppRunReport::to_json),
+            inproc.cells_json(AppRunReport::to_json)
+        );
+        assert_eq!(via_fabric.degraded_cells(), 0);
+        assert!(via_fabric.health.retries >= 1);
     }
 
     #[test]

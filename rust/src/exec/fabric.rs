@@ -1,0 +1,1223 @@
+//! The fault-tolerant coordinator/worker sweep fabric.
+//!
+//! [`crate::exec::SweepRunner`] answers "how do we use every core";
+//! this module answers "what happens when a worker dies mid-sweep".  A
+//! [`SweepFabric`] shards a cell grid into contiguous range-keyed work
+//! units ([`crate::exec::runner::shard_cells`]), delivers them through
+//! per-worker mailboxes, and reassembles an **ordered** [`SweepReport`]
+//! whose successful cells are bit-identical to the fault-free in-process
+//! path — the same determinism discipline `SweepRunner::map` established
+//! for threads, extended to crashes.
+//!
+//! The coordinator owns all the robustness machinery:
+//!
+//! * **heartbeats** — every worker is pinged each `heartbeat_every`
+//!   steps; silence past `heartbeat_timeout` flips it to
+//!   presumed-crashed and its in-flight shards reassign immediately;
+//! * **bounded retry with exponential backoff** — a failed attempt `k`
+//!   re-enters the queue after `backoff_base << (k-1)` steps (capped),
+//!   up to `max_attempts` total attempts;
+//! * **idempotent result acceptance** — completions are keyed by shard
+//!   id: duplicates and completions for already-finalized shards are
+//!   dropped, and a *late* completion from a timed-out attempt is still
+//!   accepted (cell execution is deterministic, so every attempt
+//!   produces the same bytes);
+//! * **payload integrity** — each completion carries a fingerprint of
+//!   its cells; a mismatch (injected corruption, in production a
+//!   truncated IPC frame) counts as a failed attempt and retries;
+//! * **graceful degradation** — when a shard's retry budget is spent or
+//!   the scheduler's step budget runs out, its cells are marked
+//!   [`CellState::Unfinished`] with a typed [`FabricError`] and the
+//!   sweep *returns a partial report* — the fabric never panics.
+//!
+//! The scheduler is a deterministic single-threaded discrete-step
+//! simulation (the `Driver`/mailbox pattern): messages are envelopes
+//! with a delivery step, workers are state machines processed in id
+//! order, and a [`FaultPlan`] injects crash / drop / duplicate / delay /
+//! corrupt events at exact (worker, shard) boundaries.  Every crash
+//! schedule is therefore replayable — the property tests sweep seeded
+//! plans and diff the report JSON byte-for-byte against the fault-free
+//! run.  See "Sweep fabric & failure model" in docs/ARCHITECTURE.md.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Context};
+
+use crate::util::rng::Rng;
+
+use super::runner::{shard_cells, Shard};
+use super::trace_file::fnv1a64;
+
+/// Typed failure taxonomy of the fabric — every way a sweep can degrade,
+/// as a value in the report instead of a panic in a worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricError {
+    /// The fabric was configured with zero workers.
+    NoWorkers,
+    /// A shard's retry budget is spent; its cells are degraded.
+    AttemptsExhausted {
+        /// The shard that kept failing.
+        shard: usize,
+        /// Attempts consumed (== the configured `max_attempts`).
+        attempts: u32,
+    },
+    /// The scheduler hit its step budget with work still outstanding
+    /// (e.g. every worker crashed and none recovers); the remaining
+    /// cells are degraded.
+    Stalled {
+        /// The step at which the scheduler gave up.
+        step: u64,
+        /// Shards still unfinished at that point.
+        outstanding: usize,
+    },
+}
+
+impl fmt::Display for FabricError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FabricError::NoWorkers => write!(f, "sweep fabric configured with zero workers"),
+            FabricError::AttemptsExhausted { shard, attempts } => {
+                write!(f, "shard {shard} failed all {attempts} attempts")
+            }
+            FabricError::Stalled { step, outstanding } => {
+                write!(f, "scheduler stalled at step {step} with {outstanding} shard(s) unfinished")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+/// What a [`FaultEvent`] does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker crashes on receiving the shard assignment (mailbox
+    /// lost); it rejoins empty-handed `recover_after` steps later, or
+    /// never (`None`).
+    Crash {
+        /// Steps until the worker comes back up (`None` = never).
+        recover_after: Option<u64>,
+    },
+    /// The completion message is dropped in flight.
+    DropResult,
+    /// The completion message is delivered twice.
+    DuplicateResult,
+    /// The completion message is delayed by the given number of steps.
+    DelayResult {
+        /// Extra delivery delay in scheduler steps.
+        steps: u64,
+    },
+    /// The completion payload is corrupted (its fingerprint will not
+    /// verify, so the coordinator must detect and retry).
+    CorruptResult,
+}
+
+/// One injected fault: `kind` fires (once) when worker `worker` handles
+/// shard `shard`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Worker the fault targets.
+    pub worker: usize,
+    /// Shard id at which the fault fires.
+    pub shard: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (w, s) = (self.worker, self.shard);
+        match self.kind {
+            FaultKind::Crash { recover_after: None } => write!(f, "crash:{w}@{s}"),
+            FaultKind::Crash { recover_after: Some(k) } => write!(f, "crash:{w}@{s}+{k}"),
+            FaultKind::DropResult => write!(f, "drop:{w}@{s}"),
+            FaultKind::DuplicateResult => write!(f, "dup:{w}@{s}"),
+            FaultKind::DelayResult { steps } => write!(f, "delay:{w}@{s}+{steps}"),
+            FaultKind::CorruptResult => write!(f, "corrupt:{w}@{s}"),
+        }
+    }
+}
+
+/// A deterministic, replayable crash schedule: an ordered list of
+/// [`FaultEvent`]s, each consumed the first time its (worker, shard)
+/// pair comes up.
+///
+/// Text form (round-trips through [`FromStr`]/[`fmt::Display`], e.g. for
+/// `lorax sweep --fault-plan`): comma-separated events of the shape
+/// `<kind>:<worker>@<shard>[+k]` —
+///
+/// ```text
+/// crash:2@3        worker 2 crashes at shard 3, never recovers
+/// crash:2@3+5      ... recovers 5 steps later
+/// drop:1@0         worker 1's result for shard 0 is dropped
+/// dup:0@2          ... delivered twice
+/// delay:0@2+4      ... delivered 4 steps late
+/// corrupt:1@5      ... delivered with a corrupt payload
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty (fault-free) plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Append one event (builder-style).
+    pub fn with(mut self, event: FaultEvent) -> FaultPlan {
+        self.events.push(event);
+        self
+    }
+
+    /// The scheduled events, in order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when no fault is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// A seeded pseudo-random schedule over every shard boundary:
+    /// roughly two shards in three draw one fault (crash+recover, drop,
+    /// duplicate, delay, or corrupt) on a random worker.  Crashes always
+    /// recover and each shard carries at most one event, so a seeded
+    /// plan can never exhaust a shard's retry budget — the property
+    /// tests rely on that to assert byte-identical output for *every*
+    /// seed.
+    pub fn seeded(seed: u64, workers: usize, shards: usize) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if workers == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ 0xFA_B41C_5EED);
+        for shard in 0..shards {
+            let worker = rng.below(workers);
+            if !rng.chance(0.65) {
+                continue;
+            }
+            let kind = match rng.below(5) {
+                0 => FaultKind::Crash { recover_after: Some(1 + rng.below(5) as u64) },
+                1 => FaultKind::DropResult,
+                2 => FaultKind::DuplicateResult,
+                3 => FaultKind::DelayResult { steps: 1 + rng.below(4) as u64 },
+                _ => FaultKind::CorruptResult,
+            };
+            plan.events.push(FaultEvent { worker, shard, kind });
+        }
+        plan
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse one `<kind>:<worker>@<shard>[+k]` event.
+fn parse_event(s: &str) -> anyhow::Result<FaultEvent> {
+    let usage = "expected <kind>:<worker>@<shard>[+k]";
+    let (kind_s, rest) = s.split_once(':').with_context(|| format!("fault event {s:?}: {usage}"))?;
+    let (worker_s, loc) =
+        rest.split_once('@').with_context(|| format!("fault event {s:?}: {usage}"))?;
+    let worker: usize = worker_s
+        .trim()
+        .parse()
+        .with_context(|| format!("fault event {s:?}: bad worker index {worker_s:?}"))?;
+    let (shard_s, extra) = match loc.split_once('+') {
+        Some((a, b)) => (a, Some(b)),
+        None => (loc, None),
+    };
+    let shard: usize = shard_s
+        .trim()
+        .parse()
+        .with_context(|| format!("fault event {s:?}: bad shard index {shard_s:?}"))?;
+    let extra: Option<u64> = match extra {
+        Some(k) => Some(
+            k.trim().parse().with_context(|| format!("fault event {s:?}: bad step count {k:?}"))?,
+        ),
+        None => None,
+    };
+    let kind = match (kind_s.trim(), extra) {
+        ("crash", k) => FaultKind::Crash { recover_after: k },
+        ("drop", None) => FaultKind::DropResult,
+        ("dup", None) => FaultKind::DuplicateResult,
+        ("delay", Some(k)) => FaultKind::DelayResult { steps: k },
+        ("delay", None) => FaultKind::DelayResult { steps: 1 },
+        ("corrupt", None) => FaultKind::CorruptResult,
+        ("drop" | "dup" | "corrupt", Some(_)) => {
+            bail!("fault event {s:?}: {kind_s} does not take a +k suffix")
+        }
+        (other, _) => {
+            bail!("unknown fault kind {other:?} in {s:?} (known: crash, drop, dup, delay, corrupt)")
+        }
+    };
+    Ok(FaultEvent { worker, shard, kind })
+}
+
+impl FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            plan.events.push(parse_event(part)?);
+        }
+        Ok(plan)
+    }
+}
+
+/// Scheduler tuning.  All durations are abstract scheduler *steps* (one
+/// step = one coordinator round: deliver mail, detect failures, assign,
+/// let every worker act), not wall-clock — which is what makes fault
+/// schedules exactly replayable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FabricConfig {
+    /// Worker count (>= 1, validated by [`SweepFabric::new`]).
+    pub workers: usize,
+    /// Cells per shard (floor 1).
+    pub shard_size: usize,
+    /// Total attempts a shard gets before its cells degrade.
+    pub max_attempts: u32,
+    /// Ping every worker each `heartbeat_every` steps (floor 1).
+    pub heartbeat_every: u64,
+    /// Steps of silence after which a worker is presumed crashed.
+    pub heartbeat_timeout: u64,
+    /// Steps an assignment may stay outstanding before it is retried.
+    pub shard_timeout: u64,
+    /// Retry attempt `k` waits `backoff_base << (k-1)` steps ...
+    pub backoff_base: u64,
+    /// ... capped at `backoff_cap` steps.
+    pub backoff_cap: u64,
+    /// Hard step budget (0 = derived from the shard count); exceeding
+    /// it degrades every outstanding cell instead of spinning forever.
+    pub max_steps: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> FabricConfig {
+        FabricConfig {
+            workers: 4,
+            shard_size: 1,
+            max_attempts: 4,
+            heartbeat_every: 2,
+            heartbeat_timeout: 6,
+            shard_timeout: 8,
+            backoff_base: 1,
+            backoff_cap: 8,
+            max_steps: 0,
+        }
+    }
+}
+
+impl FabricConfig {
+    /// Backoff before retrying after failed attempt `attempt` (>= 1).
+    fn backoff(&self, attempt: u32) -> u64 {
+        let shift = attempt.saturating_sub(1).min(16);
+        (self.backoff_base << shift).min(self.backoff_cap)
+    }
+
+    /// The step budget: explicit `max_steps`, or a bound generous enough
+    /// that only a permanently-dead pool can hit it.
+    fn step_budget(&self, shards: usize) -> u64 {
+        if self.max_steps > 0 {
+            return self.max_steps;
+        }
+        let per_attempt = self.shard_timeout + self.backoff_cap + self.heartbeat_timeout + 8;
+        200 + shards as u64 * self.max_attempts as u64 * per_attempt
+    }
+}
+
+/// Final state of one sweep cell in a [`SweepReport`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellState<O> {
+    /// The cell executed and produced a result.
+    Done(O),
+    /// The cell's executor ran and returned an error (a deterministic
+    /// per-cell failure — retrying would reproduce it).
+    Failed(String),
+    /// The cell's shard never completed within the retry budget; the
+    /// error says why the fabric gave up.
+    Unfinished(FabricError),
+}
+
+impl<O> CellState<O> {
+    /// The result, when [`CellState::Done`].
+    pub fn done(&self) -> Option<&O> {
+        match self {
+            CellState::Done(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// True for [`CellState::Unfinished`] (a degraded cell).
+    pub fn is_unfinished(&self) -> bool {
+        matches!(self, CellState::Unfinished(_))
+    }
+}
+
+/// Robustness counters for one fabric run — the sweep's health record,
+/// rendered by [`crate::report::fabric_health_table`] and appended to
+/// `lorax sweep --json` output as one `fabric_health` JSON record.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricHealth {
+    /// Configured worker count (0 for the in-process path).
+    pub workers: usize,
+    /// Shards the grid was split into.
+    pub shards: usize,
+    /// Scheduler steps the sweep took.
+    pub steps: u64,
+    /// Attempts re-queued after a failure (timeout, crash, corruption).
+    pub retries: u64,
+    /// Retries that landed on a different worker than the previous
+    /// attempt.
+    pub reassigned: u64,
+    /// Assignments that outlived their deadline.
+    pub timeouts: u64,
+    /// Workers the coordinator (ever) declared dead by heartbeat.
+    pub crashed_workers: u64,
+    /// Completions dropped by idempotent acceptance (duplicate or
+    /// already-finalized shard).
+    pub duplicates_dropped: u64,
+    /// Completion messages lost in flight (injected drops).
+    pub results_dropped: u64,
+    /// Completions rejected by the payload fingerprint check.
+    pub corrupt_payloads: u64,
+    /// Cells left [`CellState::Unfinished`] in the final report.
+    pub degraded_cells: u64,
+}
+
+impl FabricHealth {
+    /// One newline-terminated JSON record (same flat shape as
+    /// [`crate::util::bench`] records), keyed `"name":"fabric_health"`
+    /// so cell records and the health record interleave in one NDJSON
+    /// stream yet stay trivially separable.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"fabric_health\",\"workers\":{},\"shards\":{},\"steps\":{},\
+             \"retries\":{},\"reassigned\":{},\"timeouts\":{},\"crashed_workers\":{},\
+             \"duplicates_dropped\":{},\"results_dropped\":{},\"corrupt_payloads\":{},\
+             \"degraded_cells\":{}}}\n",
+            self.workers,
+            self.shards,
+            self.steps,
+            self.retries,
+            self.reassigned,
+            self.timeouts,
+            self.crashed_workers,
+            self.duplicates_dropped,
+            self.results_dropped,
+            self.corrupt_payloads,
+            self.degraded_cells,
+        )
+    }
+}
+
+/// Ordered sweep results plus the fabric's health counters.
+///
+/// `cells[i]` is cell `i`'s outcome — the order is the spec grid's
+/// order, independent of sharding, scheduling, retries, or faults.
+#[derive(Clone, Debug)]
+pub struct SweepReport<O> {
+    /// Per-cell outcomes, in grid order.
+    pub cells: Vec<CellState<O>>,
+    /// Robustness counters (all-zero for the in-process path).
+    pub health: FabricHealth,
+}
+
+impl<O> SweepReport<O> {
+    /// Wrap the in-process runner's ordered results (the fault-free
+    /// reference path): no fabric ran, so the health record is zeroed.
+    pub fn from_results(results: Vec<Result<O, String>>) -> SweepReport<O> {
+        let cells = results
+            .into_iter()
+            .map(|r| match r {
+                Ok(o) => CellState::Done(o),
+                Err(e) => CellState::Failed(e),
+            })
+            .collect();
+        SweepReport { cells, health: FabricHealth::default() }
+    }
+
+    /// Count of degraded ([`CellState::Unfinished`]) cells.
+    pub fn degraded_cells(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_unfinished()).count()
+    }
+
+    /// The per-cell NDJSON lines (no health record): `render` emits a
+    /// [`CellState::Done`] cell's record (newline appended if missing);
+    /// failed/unfinished cells become `cell_failed` / `cell_unfinished`
+    /// records carrying the cell index and error.  This is the portion
+    /// pinned byte-identical between the fabric and in-process paths.
+    pub fn cells_json(&self, render: impl Fn(&O) -> String) -> String {
+        let mut out = String::new();
+        for (i, c) in self.cells.iter().enumerate() {
+            match c {
+                CellState::Done(o) => {
+                    let line = render(o);
+                    out.push_str(&line);
+                    if !line.ends_with('\n') {
+                        out.push('\n');
+                    }
+                }
+                CellState::Failed(e) => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"cell_failed\",\"cell\":{i},\"error\":{e:?}}}\n"
+                    ));
+                }
+                CellState::Unfinished(err) => {
+                    out.push_str(&format!(
+                        "{{\"name\":\"cell_unfinished\",\"cell\":{i},\"error\":{:?}}}\n",
+                        err.to_string()
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Full NDJSON report: every cell record, then the `fabric_health`
+    /// record — what `lorax sweep --json` prints.
+    pub fn to_json(&self, render: impl Fn(&O) -> String) -> String {
+        format!("{}{}", self.cells_json(render), self.health.to_json())
+    }
+}
+
+/// Messages the coordinator sends a worker.
+#[derive(Clone, Debug)]
+enum WorkerMsg {
+    /// Execute one shard (attempt number for stale-completion checks).
+    Assign { shard: Shard, attempt: u32 },
+    /// Liveness probe; answered with a pong.
+    Ping,
+}
+
+/// A completed shard attempt, as sent back to the coordinator.
+#[derive(Clone, Debug)]
+struct Completion<O> {
+    worker: usize,
+    shard: usize,
+    attempt: u32,
+    cells: Vec<Result<O, String>>,
+    checksum: u64,
+}
+
+/// Messages a worker sends the coordinator.
+#[derive(Clone, Debug)]
+enum CoordMsg<O> {
+    Pong { worker: usize },
+    Done(Completion<O>),
+}
+
+/// Worker liveness in the simulation.
+#[derive(Clone, Copy, Debug)]
+enum Liveness {
+    Up,
+    Down { recover_at: Option<u64> },
+}
+
+/// One simulated worker: a mailbox of (deliver-at, message) envelopes
+/// plus its liveness state.
+struct WorkerSim {
+    mailbox: VecDeque<(u64, WorkerMsg)>,
+    state: Liveness,
+}
+
+/// Coordinator bookkeeping for one outstanding assignment.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    worker: usize,
+    attempt: u32,
+    deadline: u64,
+}
+
+/// Order-independent-inputs, order-dependent-fold fingerprint of a
+/// completion payload: cell results hashed in shard order.
+fn payload_checksum<O>(cells: &[Result<O, String>], fingerprint: &impl Fn(&O) -> u64) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for c in cells {
+        let v = match c {
+            Ok(o) => fingerprint(o),
+            Err(e) => fnv1a64(e.as_bytes()),
+        };
+        h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3).rotate_left(17);
+    }
+    h
+}
+
+/// Consume (at most once) the first armed fault event matching
+/// (worker, shard, kind-predicate).
+fn fire(
+    events: &[FaultEvent],
+    armed: &mut [bool],
+    worker: usize,
+    shard: usize,
+    want: impl Fn(&FaultKind) -> bool,
+) -> Option<FaultKind> {
+    for (i, e) in events.iter().enumerate() {
+        if armed[i] && e.worker == worker && e.shard == shard && want(&e.kind) {
+            armed[i] = false;
+            return Some(e.kind);
+        }
+    }
+    None
+}
+
+/// Degrade every cell of a not-yet-finalized shard with `err`.
+fn degrade_shard<O>(
+    shard: Shard,
+    err: FabricError,
+    cells: &mut [Option<CellState<O>>],
+    health: &mut FabricHealth,
+    finalized_shard: &mut [bool],
+    finalized: &mut usize,
+) {
+    for i in shard.range() {
+        cells[i] = Some(CellState::Unfinished(err));
+    }
+    health.degraded_cells += shard.len as u64;
+    finalized_shard[shard.id] = true;
+    *finalized += 1;
+}
+
+/// Re-queue a failed attempt with backoff, or degrade the shard when
+/// its attempt budget is spent.
+#[allow(clippy::too_many_arguments)]
+fn retry_or_degrade<O>(
+    shard: Shard,
+    attempt: u32,
+    now: u64,
+    cfg: &FabricConfig,
+    pending: &mut VecDeque<(usize, u32, u64)>,
+    cells: &mut [Option<CellState<O>>],
+    health: &mut FabricHealth,
+    finalized_shard: &mut [bool],
+    finalized: &mut usize,
+) {
+    if attempt >= cfg.max_attempts {
+        let err = FabricError::AttemptsExhausted { shard: shard.id, attempts: attempt };
+        degrade_shard(shard, err, cells, health, finalized_shard, finalized);
+    } else {
+        health.retries += 1;
+        pending.push_back((shard.id, attempt + 1, now + cfg.backoff(attempt)));
+    }
+}
+
+/// The message-driven coordinator/worker sweep fabric (see the module
+/// docs for the protocol and failure model).
+#[derive(Clone, Debug)]
+pub struct SweepFabric {
+    cfg: FabricConfig,
+    plan: FaultPlan,
+}
+
+impl SweepFabric {
+    /// A fabric with the given scheduler tuning and no injected faults.
+    pub fn new(cfg: FabricConfig) -> Result<SweepFabric, FabricError> {
+        if cfg.workers == 0 {
+            return Err(FabricError::NoWorkers);
+        }
+        Ok(SweepFabric { cfg, plan: FaultPlan::none() })
+    }
+
+    /// Inject a fault schedule (builder-style; tests and `--fault-plan`).
+    pub fn with_plan(mut self, plan: FaultPlan) -> SweepFabric {
+        self.plan = plan;
+        self
+    }
+
+    /// Override the shard size (builder-style; floor 1) — how the
+    /// trace-replay entry point applies its header-derived sizing.
+    pub fn with_shard_size(mut self, shard_size: usize) -> SweepFabric {
+        self.cfg.shard_size = shard_size.max(1);
+        self
+    }
+
+    /// The scheduler tuning.
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// The injected fault schedule.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Run cells `0..n_cells` through the fabric.
+    ///
+    /// `exec(i)` computes cell `i` and **must be deterministic** — a
+    /// retried shard re-executes its cells and the fabric relies on
+    /// every attempt producing identical bytes (which is also why a
+    /// per-cell `Err` is a *result*, not a retryable fault).
+    /// `fingerprint` hashes one result for the payload integrity check.
+    ///
+    /// Never panics: cells that cannot complete come back as
+    /// [`CellState::Unfinished`] in an otherwise-ordered report.
+    pub fn run<O, E, F>(&self, n_cells: usize, exec: E, fingerprint: F) -> SweepReport<O>
+    where
+        O: Clone,
+        E: Fn(usize) -> Result<O, String>,
+        F: Fn(&O) -> u64,
+    {
+        let shards = shard_cells(n_cells, self.cfg.shard_size);
+        let mut health = FabricHealth {
+            workers: self.cfg.workers,
+            shards: shards.len(),
+            ..FabricHealth::default()
+        };
+        let mut cells: Vec<Option<CellState<O>>> = vec![None; n_cells];
+        if !shards.is_empty() {
+            self.drive(&shards, &mut cells, &mut health, &exec, &fingerprint);
+        }
+        let steps = health.steps;
+        let cells = cells
+            .into_iter()
+            .map(|c| {
+                // Every shard is finalized before drive() returns, so
+                // this fallback is unreachable — but the fabric's
+                // contract is "never panic", so degrade instead.
+                c.unwrap_or(CellState::Unfinished(FabricError::Stalled {
+                    step: steps,
+                    outstanding: 0,
+                }))
+            })
+            .collect();
+        SweepReport { cells, health }
+    }
+
+    /// The deterministic scheduler loop (single-threaded discrete-step
+    /// simulation; see module docs).
+    fn drive<O: Clone>(
+        &self,
+        shards: &[Shard],
+        cells: &mut [Option<CellState<O>>],
+        health: &mut FabricHealth,
+        exec: &impl Fn(usize) -> Result<O, String>,
+        fingerprint: &impl Fn(&O) -> u64,
+    ) {
+        let cfg = &self.cfg;
+        let events = self.plan.events().to_vec();
+        let mut armed = vec![true; events.len()];
+        let n_workers = cfg.workers;
+        let hb_every = cfg.heartbeat_every.max(1);
+
+        let mut workers: Vec<WorkerSim> = (0..n_workers)
+            .map(|_| WorkerSim { mailbox: VecDeque::new(), state: Liveness::Up })
+            .collect();
+        let mut inbox: VecDeque<(u64, CoordMsg<O>)> = VecDeque::new();
+
+        // (shard id, attempt, ready-at) — FIFO within readiness.
+        let mut pending: VecDeque<(usize, u32, u64)> =
+            shards.iter().map(|s| (s.id, 1, 0)).collect();
+        // BTreeMap: deterministic iteration order for failure scans.
+        let mut in_flight: BTreeMap<usize, InFlight> = BTreeMap::new();
+        let mut finalized_shard = vec![false; shards.len()];
+        let mut last_worker: Vec<Option<usize>> = vec![None; shards.len()];
+        let mut believed_up = vec![true; n_workers];
+        let mut last_seen = vec![0u64; n_workers];
+        let mut finalized = 0usize;
+        let budget = cfg.step_budget(shards.len());
+        let mut step = 0u64;
+
+        while finalized < shards.len() {
+            step += 1;
+            if step > budget {
+                // Step budget spent (a permanently-dead pool): degrade
+                // everything outstanding and return a partial report.
+                let outstanding = shards.len() - finalized;
+                for s in shards {
+                    if !finalized_shard[s.id] {
+                        let err = FabricError::Stalled { step, outstanding };
+                        degrade_shard(*s, err, cells, health, &mut finalized_shard, &mut finalized);
+                    }
+                }
+                break;
+            }
+
+            // 1. Heartbeats.
+            if step % hb_every == 0 {
+                for w in workers.iter_mut() {
+                    w.mailbox.push_back((step, WorkerMsg::Ping));
+                }
+            }
+
+            // 2. Coordinator inbox: process every message due by now,
+            // FIFO; retain the rest (delayed envelopes) in order.
+            let mut keep: VecDeque<(u64, CoordMsg<O>)> = VecDeque::new();
+            while let Some((at, msg)) = inbox.pop_front() {
+                if at > step {
+                    keep.push_back((at, msg));
+                    continue;
+                }
+                match msg {
+                    CoordMsg::Pong { worker } => {
+                        last_seen[worker] = step;
+                        believed_up[worker] = true;
+                    }
+                    CoordMsg::Done(c) => {
+                        last_seen[c.worker] = step;
+                        believed_up[c.worker] = true;
+                        if finalized_shard[c.shard] {
+                            // Idempotent acceptance: duplicates and
+                            // completions for finalized shards drop.
+                            health.duplicates_dropped += 1;
+                            continue;
+                        }
+                        if payload_checksum(&c.cells, fingerprint) != c.checksum {
+                            health.corrupt_payloads += 1;
+                            // A corrupt payload fails exactly the attempt
+                            // it belongs to; stale attempts change nothing.
+                            let current = in_flight
+                                .get(&c.shard)
+                                .map(|f| f.worker == c.worker && f.attempt == c.attempt)
+                                .unwrap_or(false);
+                            if current {
+                                in_flight.remove(&c.shard);
+                                retry_or_degrade(
+                                    shards[c.shard],
+                                    c.attempt,
+                                    step,
+                                    cfg,
+                                    &mut pending,
+                                    cells,
+                                    health,
+                                    &mut finalized_shard,
+                                    &mut finalized,
+                                );
+                            }
+                            continue;
+                        }
+                        // Accept — even a late completion from a
+                        // timed-out attempt (execution is deterministic,
+                        // so the bytes are the same).
+                        let sh = shards[c.shard];
+                        for (k, out) in c.cells.into_iter().enumerate() {
+                            cells[sh.start + k] = Some(match out {
+                                Ok(o) => CellState::Done(o),
+                                Err(e) => CellState::Failed(e),
+                            });
+                        }
+                        finalized_shard[c.shard] = true;
+                        finalized += 1;
+                        in_flight.remove(&c.shard);
+                    }
+                }
+            }
+            inbox = keep;
+
+            // 3. Failure detection: silence beyond the heartbeat timeout
+            // flips a worker to presumed-crashed ...
+            for w in 0..n_workers {
+                if believed_up[w] && step.saturating_sub(last_seen[w]) > cfg.heartbeat_timeout {
+                    believed_up[w] = false;
+                    health.crashed_workers += 1;
+                }
+            }
+            // ... and its in-flight shards reassign immediately.
+            let dead: Vec<(usize, u32)> = in_flight
+                .iter()
+                .filter(|(_, f)| !believed_up[f.worker])
+                .map(|(&s, f)| (s, f.attempt))
+                .collect();
+            for (sid, attempt) in dead {
+                in_flight.remove(&sid);
+                retry_or_degrade(
+                    shards[sid],
+                    attempt,
+                    step,
+                    cfg,
+                    &mut pending,
+                    cells,
+                    health,
+                    &mut finalized_shard,
+                    &mut finalized,
+                );
+            }
+
+            // 4. Deadlines: an assignment outstanding past its deadline
+            // is retried (the late completion may still win the race —
+            // acceptance is idempotent either way).
+            let expired: Vec<(usize, u32)> = in_flight
+                .iter()
+                .filter(|(_, f)| step >= f.deadline)
+                .map(|(&s, f)| (s, f.attempt))
+                .collect();
+            for (sid, attempt) in expired {
+                in_flight.remove(&sid);
+                health.timeouts += 1;
+                retry_or_degrade(
+                    shards[sid],
+                    attempt,
+                    step,
+                    cfg,
+                    &mut pending,
+                    cells,
+                    health,
+                    &mut finalized_shard,
+                    &mut finalized,
+                );
+            }
+
+            // 5. Assignment: ready pending shards to idle live workers,
+            // in worker-id order (deterministic placement).
+            pending.retain(|&(sid, _, _)| !finalized_shard[sid]);
+            let mut busy = vec![false; n_workers];
+            for f in in_flight.values() {
+                busy[f.worker] = true;
+            }
+            for w in 0..n_workers {
+                if !believed_up[w] || busy[w] {
+                    continue;
+                }
+                let Some(pos) = pending.iter().position(|&(_, _, ready)| ready <= step) else {
+                    break;
+                };
+                let Some((sid, attempt, _)) = pending.remove(pos) else {
+                    break;
+                };
+                let sh = shards[sid];
+                if let Some(prev) = last_worker[sid] {
+                    if prev != w {
+                        health.reassigned += 1;
+                    }
+                }
+                last_worker[sid] = Some(w);
+                in_flight.insert(
+                    sid,
+                    InFlight { worker: w, attempt, deadline: step + cfg.shard_timeout },
+                );
+                busy[w] = true;
+                workers[w].mailbox.push_back((step, WorkerMsg::Assign { shard: sh, attempt }));
+            }
+
+            // 6. Workers act, in id order: recover if due, then process
+            // every message due by now.
+            for w in 0..n_workers {
+                if let Liveness::Down { recover_at } = workers[w].state {
+                    match recover_at {
+                        Some(t) if step >= t => workers[w].state = Liveness::Up,
+                        _ => {
+                            // Mail delivered to a down worker is lost.
+                            workers[w].mailbox.retain(|&(at, _)| at > step);
+                            continue;
+                        }
+                    }
+                }
+                loop {
+                    let Some(pos) = workers[w].mailbox.iter().position(|&(at, _)| at <= step)
+                    else {
+                        break;
+                    };
+                    let Some((_, msg)) = workers[w].mailbox.remove(pos) else {
+                        break;
+                    };
+                    match msg {
+                        WorkerMsg::Ping => {
+                            inbox.push_back((step + 1, CoordMsg::Pong { worker: w }));
+                        }
+                        WorkerMsg::Assign { shard, attempt } => {
+                            if let Some(FaultKind::Crash { recover_after }) =
+                                fire(&events, &mut armed, w, shard.id, |k| {
+                                    matches!(k, FaultKind::Crash { .. })
+                                })
+                            {
+                                workers[w].state = Liveness::Down {
+                                    recover_at: recover_after.map(|k| step + k),
+                                };
+                                workers[w].mailbox.clear();
+                                break;
+                            }
+                            let outs: Vec<Result<O, String>> = shard.range().map(exec).collect();
+                            let mut checksum = payload_checksum(&outs, fingerprint);
+                            if fire(&events, &mut armed, w, shard.id, |k| {
+                                matches!(k, FaultKind::CorruptResult)
+                            })
+                            .is_some()
+                            {
+                                checksum ^= 0x5EED_BAD_C0DE;
+                            }
+                            if fire(&events, &mut armed, w, shard.id, |k| {
+                                matches!(k, FaultKind::DropResult)
+                            })
+                            .is_some()
+                            {
+                                health.results_dropped += 1;
+                                continue;
+                            }
+                            let delay = match fire(&events, &mut armed, w, shard.id, |k| {
+                                matches!(k, FaultKind::DelayResult { .. })
+                            }) {
+                                Some(FaultKind::DelayResult { steps }) => steps,
+                                _ => 0,
+                            };
+                            let deliver_at = step + 1 + delay;
+                            let done = Completion {
+                                worker: w,
+                                shard: shard.id,
+                                attempt,
+                                cells: outs,
+                                checksum,
+                            };
+                            if fire(&events, &mut armed, w, shard.id, |k| {
+                                matches!(k, FaultKind::DuplicateResult)
+                            })
+                            .is_some()
+                            {
+                                inbox.push_back((deliver_at + 1, CoordMsg::Done(done.clone())));
+                            }
+                            inbox.push_back((deliver_at, CoordMsg::Done(done)));
+                        }
+                    }
+                }
+            }
+        }
+        health.steps = step;
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn toy_exec(i: usize) -> Result<usize, String> {
+        if i == 7 {
+            Err(format!("cell {i} is cursed"))
+        } else {
+            Ok(i * 3 + 1)
+        }
+    }
+
+    fn toy_fp(o: &usize) -> u64 {
+        fnv1a64(&o.to_le_bytes())
+    }
+
+    fn reference(n: usize) -> SweepReport<usize> {
+        SweepReport::from_results((0..n).map(toy_exec).collect())
+    }
+
+    fn render(o: &usize) -> String {
+        format!("{{\"name\":\"toy\",\"v\":{o}}}\n")
+    }
+
+    #[test]
+    fn fault_free_fabric_matches_in_process() {
+        for workers in [1, 2, 5] {
+            for shard_size in [1, 3, 16] {
+                let fabric = SweepFabric::new(FabricConfig {
+                    workers,
+                    shard_size,
+                    ..FabricConfig::default()
+                })
+                .unwrap();
+                let got = fabric.run(13, toy_exec, toy_fp);
+                assert_eq!(
+                    got.cells_json(render),
+                    reference(13).cells_json(render),
+                    "workers={workers} shard_size={shard_size}"
+                );
+                assert_eq!(got.degraded_cells(), 0);
+                assert_eq!(got.health.retries, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_grid_yields_empty_report() {
+        let fabric = SweepFabric::new(FabricConfig::default()).unwrap();
+        let r = fabric.run(0, toy_exec, toy_fp);
+        assert!(r.cells.is_empty());
+        assert_eq!(r.health.shards, 0);
+        assert_eq!(r.health.steps, 0);
+        assert_eq!(r.to_json(render), r.health.to_json());
+    }
+
+    #[test]
+    fn zero_workers_is_a_typed_error() {
+        let err = SweepFabric::new(FabricConfig { workers: 0, ..FabricConfig::default() })
+            .err()
+            .unwrap();
+        assert_eq!(err, FabricError::NoWorkers);
+        // And it converts into the crate-wide anyhow error.
+        let e: anyhow::Error = err.into();
+        assert!(format!("{e}").contains("zero workers"));
+    }
+
+    #[test]
+    fn crash_recover_retries_and_matches() {
+        // Single worker, crash on shard 2, recover 3 steps later: the
+        // shard retries on the same worker and the output is identical.
+        let plan: FaultPlan = "crash:0@2+3".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig {
+            workers: 1,
+            ..FabricConfig::default()
+        })
+        .unwrap()
+        .with_plan(plan);
+        let got = fabric.run(5, toy_exec, toy_fp);
+        assert_eq!(got.cells_json(render), reference(5).cells_json(render));
+        assert!(got.health.retries >= 1, "health={:?}", got.health);
+        assert_eq!(got.degraded_cells(), 0);
+    }
+
+    #[test]
+    fn duplicate_completion_is_dropped_once() {
+        let plan: FaultPlan = "dup:0@1".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig { workers: 1, ..FabricConfig::default() })
+            .unwrap()
+            .with_plan(plan);
+        let got = fabric.run(4, toy_exec, toy_fp);
+        assert_eq!(got.cells_json(render), reference(4).cells_json(render));
+        assert_eq!(got.health.duplicates_dropped, 1);
+    }
+
+    #[test]
+    fn corrupt_payload_detected_and_retried() {
+        let plan: FaultPlan = "corrupt:0@0".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig { workers: 1, ..FabricConfig::default() })
+            .unwrap()
+            .with_plan(plan);
+        let got = fabric.run(3, toy_exec, toy_fp);
+        assert_eq!(got.cells_json(render), reference(3).cells_json(render));
+        assert_eq!(got.health.corrupt_payloads, 1);
+        assert!(got.health.retries >= 1);
+    }
+
+    #[test]
+    fn dropped_result_times_out_and_retries() {
+        let plan: FaultPlan = "drop:0@0".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig { workers: 1, ..FabricConfig::default() })
+            .unwrap()
+            .with_plan(plan);
+        let got = fabric.run(2, toy_exec, toy_fp);
+        assert_eq!(got.cells_json(render), reference(2).cells_json(render));
+        assert_eq!(got.health.results_dropped, 1);
+        assert!(got.health.timeouts >= 1);
+        assert!(got.health.retries >= 1);
+    }
+
+    #[test]
+    fn fully_crashed_pool_degrades_never_panics() {
+        // Both workers crash forever on their first assignment; every
+        // cell must come back Unfinished in a partial report.
+        let plan: FaultPlan = "crash:0@0,crash:1@1".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig {
+            workers: 2,
+            max_steps: 400,
+            ..FabricConfig::default()
+        })
+        .unwrap()
+        .with_plan(plan);
+        let got = fabric.run(6, toy_exec, toy_fp);
+        assert_eq!(got.cells.len(), 6);
+        assert!(got.cells.iter().all(|c| c.is_unfinished()), "health={:?}", got.health);
+        assert_eq!(got.health.degraded_cells, 6);
+        assert!(got.health.crashed_workers >= 2);
+        let json = got.to_json(render);
+        assert!(json.contains("\"name\":\"cell_unfinished\""), "{json}");
+        assert!(json.contains("\"name\":\"fabric_health\""), "{json}");
+    }
+
+    #[test]
+    fn crashed_worker_shards_reassign_to_survivors() {
+        // Worker 0 crashes forever at shard 0; workers 1..2 finish the
+        // sweep, so some retry must land on a different worker.
+        let plan: FaultPlan = "crash:0@0".parse().unwrap();
+        let fabric = SweepFabric::new(FabricConfig { workers: 3, ..FabricConfig::default() })
+            .unwrap()
+            .with_plan(plan);
+        let got = fabric.run(9, toy_exec, toy_fp);
+        assert_eq!(got.cells_json(render), reference(9).cells_json(render));
+        assert!(got.health.reassigned >= 1, "health={:?}", got.health);
+        assert_eq!(got.degraded_cells(), 0);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let mk = || {
+            SweepFabric::new(FabricConfig { workers: 3, ..FabricConfig::default() })
+                .unwrap()
+                .with_plan(FaultPlan::seeded(42, 3, 11))
+        };
+        let a = mk().run(11, toy_exec, toy_fp);
+        let b = mk().run(11, toy_exec, toy_fp);
+        assert_eq!(a.cells_json(render), b.cells_json(render));
+        assert_eq!(a.health, b.health);
+    }
+
+    #[test]
+    fn fault_plan_round_trips_through_text() {
+        let text = "crash:2@3,crash:0@1+5,drop:1@0,dup:0@2,delay:1@4+3,corrupt:0@5";
+        let plan: FaultPlan = text.parse().unwrap();
+        assert_eq!(plan.events().len(), 6);
+        assert_eq!(plan.to_string(), text);
+        let again: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(again, plan);
+        // Empty and whitespace-only parse to the fault-free plan.
+        assert!("".parse::<FaultPlan>().unwrap().is_empty());
+        assert!(" , ".parse::<FaultPlan>().unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_events() {
+        for bad in ["nope:0@1", "crash:x@1", "crash:0@y", "crash:0", "drop:0@1+2", "crash"] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_varied() {
+        let a = FaultPlan::seeded(7, 4, 32);
+        let b = FaultPlan::seeded(7, 4, 32);
+        assert_eq!(a, b);
+        let c = FaultPlan::seeded(8, 4, 32);
+        assert_ne!(a, c);
+        assert!(!a.is_empty());
+        // Seeded crashes always recover (the property suite relies on
+        // the pool surviving every seed).
+        for e in a.events() {
+            if let FaultKind::Crash { recover_after } = e.kind {
+                assert!(recover_after.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let cfg = FabricConfig { backoff_base: 1, backoff_cap: 8, ..FabricConfig::default() };
+        assert_eq!(cfg.backoff(1), 1);
+        assert_eq!(cfg.backoff(2), 2);
+        assert_eq!(cfg.backoff(3), 4);
+        assert_eq!(cfg.backoff(4), 8);
+        assert_eq!(cfg.backoff(10), 8);
+        assert_eq!(cfg.backoff(200), 8); // shift clamps, no overflow
+    }
+
+    #[test]
+    fn health_json_shape() {
+        let h = FabricHealth { workers: 4, shards: 9, steps: 31, ..FabricHealth::default() };
+        let j = h.to_json();
+        assert!(j.starts_with('{') && j.ends_with("}\n"), "{j}");
+        assert!(j.contains("\"name\":\"fabric_health\""), "{j}");
+        assert!(j.contains("\"workers\":4"), "{j}");
+        assert!(j.contains("\"degraded_cells\":0"), "{j}");
+    }
+}

@@ -25,12 +25,20 @@
 //! * [`trace_file`] — [`TraceFile`], the versioned mmap-able `.ltrace`
 //!   on-disk form of the same columns: `lorax trace record/replay`,
 //!   larger-than-RAM traces, and the [`workload::TraceCache`] spill all
-//!   ride it (zero-copy replay straight off the page cache).
+//!   ride it (zero-copy replay straight off the page cache), with every
+//!   open/validate failure a typed [`trace_file::TraceFileError`];
+//! * [`fabric`] — [`fabric::SweepFabric`], the fault-tolerant
+//!   coordinator/worker sweep fabric: range-keyed shards through
+//!   per-worker mailboxes with heartbeats, bounded retry/backoff,
+//!   idempotent result acceptance and graceful degradation to a partial
+//!   [`fabric::SweepReport`], plus the [`fabric::FaultPlan`] crash
+//!   injection layer that keeps every schedule deterministic.
 //!
 //! `lorax run`/`lorax sweep` and all the `benches/` reproduction targets
 //! run on this engine; `SweepRunner::with_threads(1)` is the serial
 //! reference executor the perf benches compare against.
 
+pub mod fabric;
 pub mod grid;
 pub mod runner;
 pub mod spec;
@@ -38,9 +46,13 @@ pub mod trace_buf;
 pub mod trace_file;
 pub mod workload;
 
+pub use fabric::{
+    CellState, FabricConfig, FabricError, FabricHealth, FaultEvent, FaultKind, FaultPlan,
+    SweepFabric, SweepReport,
+};
 pub use grid::{synth_stress_grid, AppScenario, SweepGrid, SynthScenario};
-pub use runner::{DecisionTableCache, SweepRunner};
+pub use runner::{shard_cells, trace_replay_shard_size, DecisionTableCache, Shard, SweepRunner};
 pub use spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 pub use trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
-pub use trace_file::TraceFile;
+pub use trace_file::{TraceFile, TraceFileError};
 pub use workload::{CachedWorkload, TraceCache, WorkloadCache};

@@ -36,6 +36,47 @@ use super::grid::{AppScenario, SynthScenario};
 use super::spec::{ExperimentSpec, TrafficSpec};
 use super::trace_file::TraceFile;
 
+/// One contiguous range-keyed work unit of a sweep grid: cells
+/// `start .. start + len`, identified by `id` (its index in the shard
+/// list).  The unit of assignment, retry and idempotent acceptance in
+/// [`crate::exec::fabric`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Index of this shard in the shard list (the idempotency key).
+    pub id: usize,
+    /// First cell index covered.
+    pub start: usize,
+    /// Number of cells covered (>= 1).
+    pub len: usize,
+}
+
+impl Shard {
+    /// The cell indices this shard covers.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.len
+    }
+}
+
+/// Split `n_cells` cells into contiguous shards of `shard_size` cells
+/// (floor 1; the last shard may be short).  Empty grid ⇒ no shards.
+pub fn shard_cells(n_cells: usize, shard_size: usize) -> Vec<Shard> {
+    let size = shard_size.max(1);
+    (0..n_cells)
+        .step_by(size)
+        .enumerate()
+        .map(|(id, start)| Shard { id, start, len: size.min(n_cells - start) })
+        .collect()
+}
+
+/// Shard sizing for trace-replay sweeps: how many replay cells fit a
+/// `target_records` per-shard budget given a trace of `records` records
+/// (from the `.ltrace` header's count field).  Floor 1 — a huge trace
+/// still yields one cell per shard.
+pub fn trace_replay_shard_size(records: u64, target_records: u64) -> usize {
+    let per = target_records / records.max(1);
+    per.clamp(1, 4096) as usize
+}
+
 /// Memoized decision tables shared across a session's sweeps.
 ///
 /// Keyed by (modulation, policy kind, tuning).  A decision table is a
@@ -234,8 +275,14 @@ impl SweepRunner {
 
     /// Replay synthetic-traffic scenarios through the cycle-level
     /// simulator via a fresh session (deterministic in the scenario
-    /// seeds, independent of thread count).
-    pub fn run_synth(&self, cfg: &SystemConfig, scenarios: &[SynthScenario]) -> Vec<SimReport> {
+    /// seeds, independent of thread count).  An empty scenario list
+    /// yields `Ok(vec![])`; a scenario that fails validation surfaces as
+    /// an `Err` instead of a panic.
+    pub fn run_synth(
+        &self,
+        cfg: &SystemConfig,
+        scenarios: &[SynthScenario],
+    ) -> Result<Vec<SimReport>> {
         let session = LoraxSession::new(cfg);
         self.run_synth_on(&session, scenarios)
     }
@@ -245,13 +292,15 @@ impl SweepRunner {
         &self,
         session: &LoraxSession,
         scenarios: &[SynthScenario],
-    ) -> Vec<SimReport> {
+    ) -> Result<Vec<SimReport>> {
         self.map(scenarios, |_, sc| {
             let spec = ExperimentSpec::new(AppId::Fft, sc.policy)
                 .with_tuning(sc.tuning)
                 .with_traffic(TrafficSpec::Synthetic(sc.synth.clone()));
-            session.run(&spec).expect("synthetic scenario failed validation").sim
+            session.run(&spec).map(|r| r.sim)
         })
+        .into_iter()
+        .collect()
     }
 
     /// Replay one recorded trace under many specs in parallel.
@@ -362,5 +411,49 @@ mod tests {
     #[test]
     fn runner_thread_floor_is_one() {
         assert_eq!(SweepRunner::with_threads(0).threads(), 1);
+    }
+
+    #[test]
+    fn shard_cells_covers_exactly_once() {
+        assert!(shard_cells(0, 4).is_empty());
+        let shards = shard_cells(10, 4);
+        assert_eq!(
+            shards,
+            vec![
+                Shard { id: 0, start: 0, len: 4 },
+                Shard { id: 1, start: 4, len: 4 },
+                Shard { id: 2, start: 8, len: 2 },
+            ]
+        );
+        let mut seen = vec![false; 10];
+        for s in &shards {
+            for i in s.range() {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        // shard_size floor is 1.
+        assert_eq!(shard_cells(3, 0).len(), 3);
+    }
+
+    #[test]
+    fn trace_replay_shard_size_tracks_record_budget() {
+        // Small trace: many cells per shard (capped).
+        assert_eq!(trace_replay_shard_size(10, 200_000), 4096);
+        // 50k-record trace with a 200k budget: 4 cells per shard.
+        assert_eq!(trace_replay_shard_size(50_000, 200_000), 4);
+        // Huge trace: floor of one cell per shard.
+        assert_eq!(trace_replay_shard_size(1_000_000, 200_000), 1);
+        // Degenerate empty trace must not divide by zero.
+        assert_eq!(trace_replay_shard_size(0, 200_000), 4096);
+    }
+
+    #[test]
+    fn empty_grids_yield_empty_reports() {
+        let cfg = SystemConfig::default();
+        assert!(SweepRunner::with_threads(2).run_apps(&cfg, &[]).is_empty());
+        let synth = SweepRunner::with_threads(2).run_synth(&cfg, &[]).unwrap();
+        assert!(synth.is_empty());
     }
 }

@@ -51,7 +51,18 @@
 //! `i64`), when mmap fails, or when `LORAX_TRACE_MMAP=0`, it falls back
 //! to reading the columns into an owned [`TraceBuffer`] — bit-identical
 //! replay either way, pinned by `tests/integration_trace_file.rs`.
+//!
+//! ## Error model
+//!
+//! Every open/validate failure is a [`TraceFileError`] variant, never a
+//! panic: a corrupt or truncated spill file must degrade to a cache
+//! miss + re-record in [`crate::exec::workload::TraceCache`], and a
+//! sweep-fabric worker handed a bad trace must fail its shard, not the
+//! process.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::fmt;
 use std::io::{self, Write};
 use std::path::Path;
 
@@ -89,8 +100,156 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-fn invalid(msg: String) -> io::Error {
-    io::Error::new(io::ErrorKind::InvalidData, msg)
+/// Why a `.ltrace` file failed to open or validate — the typed
+/// counterpart of the on-disk invariants in the module docs.  Callers
+/// that can re-record (the spill cache) match on it; callers that can't
+/// bubble it into `anyhow::Error` with full context.
+#[derive(Debug)]
+pub enum TraceFileError {
+    /// The underlying filesystem operation failed.
+    Io(io::Error),
+    /// The file is shorter than the fixed 48-byte header.
+    TruncatedHeader {
+        /// Observed file length in bytes.
+        len: usize,
+    },
+    /// The first 8 bytes are not the `.ltrace` magic.
+    BadMagic,
+    /// The header declares a version this reader does not speak.
+    UnsupportedVersion {
+        /// Version found in the header.
+        found: u32,
+    },
+    /// Reserved header flag bits are set.
+    ReservedFlags {
+        /// The offending flags word.
+        flags: u32,
+    },
+    /// The stored header checksum does not match the header bytes.
+    ChecksumMismatch {
+        /// Checksum stored in the header.
+        stored: u32,
+        /// Checksum recomputed over header bytes 0..36.
+        computed: u32,
+    },
+    /// Reserved header tail bytes (40..48) are not zero.
+    ReservedTail,
+    /// The declared column-region length disagrees with the record
+    /// count (17 bytes per record).
+    MisalignedColumns {
+        /// Column-region byte length stored in the header.
+        declared: u64,
+        /// Record count stored in the header.
+        records: u64,
+    },
+    /// The file's byte length disagrees with the header's declaration
+    /// (e.g. a truncated column region).
+    LengthMismatch {
+        /// Observed file length in bytes.
+        len: u64,
+        /// Length the header implies.
+        expected: u64,
+    },
+    /// The record count does not fit this platform's `usize`.
+    TooManyRecords {
+        /// Record count stored in the header.
+        records: u64,
+    },
+    /// A kind-column byte is not a valid `PayloadKind` discriminant.
+    BadKind {
+        /// Record index of the bad byte.
+        record: usize,
+        /// The offending byte.
+        value: u8,
+    },
+    /// A cluster-id column entry exceeds the header's `min_clusters`
+    /// declaration.
+    BadCluster {
+        /// Which column ("src" or "dst").
+        column: &'static str,
+        /// Record index of the bad entry.
+        record: usize,
+        /// The offending cluster id.
+        cluster: u8,
+        /// The header's `min_clusters` declaration.
+        min_clusters: u32,
+    },
+}
+
+impl fmt::Display for TraceFileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceFileError::Io(e) => write!(f, "trace file I/O error: {e}"),
+            TraceFileError::TruncatedHeader { len } => {
+                write!(f, "trace file too short for header: {len} bytes")
+            }
+            TraceFileError::BadMagic => write!(f, "bad trace magic (not an .ltrace file)"),
+            TraceFileError::UnsupportedVersion { found } => {
+                write!(f, "unsupported trace version {found} (reader: {VERSION})")
+            }
+            TraceFileError::ReservedFlags { flags } => {
+                write!(f, "reserved header flags set: {flags:#x}")
+            }
+            TraceFileError::ChecksumMismatch { stored, computed } => {
+                write!(f, "header checksum {stored:#010x} != computed {computed:#010x}")
+            }
+            TraceFileError::ReservedTail => {
+                write!(f, "reserved header bytes 40..48 are not zero")
+            }
+            TraceFileError::MisalignedColumns { declared, records } => {
+                write!(
+                    f,
+                    "column region {declared} != {records} records x {BYTES_PER_RECORD}"
+                )
+            }
+            TraceFileError::LengthMismatch { len, expected } => {
+                write!(f, "trace file length {len} != expected {expected}")
+            }
+            TraceFileError::TooManyRecords { records } => {
+                write!(f, "record count {records} exceeds this platform's usize")
+            }
+            TraceFileError::BadKind { record, value } => {
+                write!(f, "bad kind byte {value} at record {record}")
+            }
+            TraceFileError::BadCluster { column, record, cluster, min_clusters } => {
+                write!(
+                    f,
+                    "{column} cluster {cluster} at record {record} >= declared \
+                     min_clusters {min_clusters}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceFileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TraceFileError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for TraceFileError {
+    fn from(e: io::Error) -> TraceFileError {
+        TraceFileError::Io(e)
+    }
+}
+
+/// Read a little-endian u32 at `at` (caller has bounds-checked the
+/// header length; `copy_from_slice` still guards in debug).
+fn le_u32(bytes: &[u8], at: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&bytes[at..at + 4]);
+    u32::from_le_bytes(b)
+}
+
+/// Read a little-endian u64 at `at`.
+fn le_u64(bytes: &[u8], at: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[at..at + 8]);
+    u64::from_le_bytes(b)
 }
 
 /// Render the 48-byte header for `n` records.
@@ -110,49 +269,45 @@ fn encode_header(n: u64, min_clusters: u32) -> [u8; HEADER_LEN] {
 
 /// Validate a header against `total_len` file bytes; returns
 /// (record count, min_clusters).
-fn decode_header(bytes: &[u8], total_len: usize) -> io::Result<(usize, u32)> {
+fn decode_header(bytes: &[u8], total_len: usize) -> Result<(usize, u32), TraceFileError> {
     if bytes.len() < HEADER_LEN {
-        return Err(invalid(format!("trace file too short for header: {} bytes", bytes.len())));
+        return Err(TraceFileError::TruncatedHeader { len: bytes.len() });
     }
     if &bytes[0..8] != MAGIC {
-        return Err(invalid("bad trace magic (not an .ltrace file)".to_string()));
+        return Err(TraceFileError::BadMagic);
     }
-    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let version = le_u32(bytes, 8);
     if version != VERSION {
-        return Err(invalid(format!("unsupported trace version {version} (reader: {VERSION})")));
+        return Err(TraceFileError::UnsupportedVersion { found: version });
     }
-    let flags = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let flags = le_u32(bytes, 12);
     if flags != 0 {
-        return Err(invalid(format!("reserved header flags set: {flags:#x}")));
+        return Err(TraceFileError::ReservedFlags { flags });
     }
-    let sum = u32::from_le_bytes(bytes[36..40].try_into().unwrap());
-    let want = fnv1a32(&bytes[0..36]);
-    if sum != want {
-        return Err(invalid(format!("header checksum {sum:#010x} != computed {want:#010x}")));
+    let stored = le_u32(bytes, 36);
+    let computed = fnv1a32(&bytes[0..36]);
+    if stored != computed {
+        return Err(TraceFileError::ChecksumMismatch { stored, computed });
     }
     if bytes[40..48] != [0u8; 8] {
-        return Err(invalid("reserved header bytes 40..48 are not zero".to_string()));
+        return Err(TraceFileError::ReservedTail);
     }
-    let n = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
-    let col_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    let n = le_u64(bytes, 16);
+    let col_len = le_u64(bytes, 24);
     // Checked arithmetic throughout: a crafted header must produce a
-    // clean InvalidData error, never a debug-overflow panic.
+    // clean typed error, never a debug-overflow panic.
     let want_col_len = n
         .checked_mul(BYTES_PER_RECORD as u64)
         .filter(|&c| c == col_len)
-        .ok_or_else(|| {
-            invalid(format!("column region {col_len} != {n} records x {BYTES_PER_RECORD}"))
-        })?;
+        .ok_or(TraceFileError::MisalignedColumns { declared: col_len, records: n })?;
     let expect = (HEADER_LEN as u64)
         .checked_add(want_col_len)
-        .ok_or_else(|| invalid(format!("column region {col_len} overflows the file length")))?;
+        .ok_or(TraceFileError::LengthMismatch { len: total_len as u64, expected: u64::MAX })?;
     if total_len as u64 != expect {
-        return Err(invalid(format!("trace file length {total_len} != expected {expect}")));
+        return Err(TraceFileError::LengthMismatch { len: total_len as u64, expected: expect });
     }
-    let n: usize = n
-        .try_into()
-        .map_err(|_| invalid(format!("record count {n} exceeds this platform's usize")))?;
-    let min_clusters = u32::from_le_bytes(bytes[32..36].try_into().unwrap());
+    let n: usize = n.try_into().map_err(|_| TraceFileError::TooManyRecords { records: n })?;
+    let min_clusters = le_u32(bytes, 32);
     Ok((n, min_clusters))
 }
 
@@ -167,9 +322,9 @@ fn col_offsets(n: usize) -> (usize, usize, usize, usize, usize, usize, usize) {
 
 /// Validate the kind column (every byte must be a [`PayloadKind`]
 /// discriminant) — the invariant the mapped reborrow relies on.
-fn validate_kinds(kinds: &[u8]) -> io::Result<()> {
+fn validate_kinds(kinds: &[u8]) -> Result<(), TraceFileError> {
     if let Some(pos) = kinds.iter().position(|&k| k > PayloadKind::Control as u8) {
-        return Err(invalid(format!("bad kind byte {} at record {pos}", kinds[pos])));
+        return Err(TraceFileError::BadKind { record: pos, value: kinds[pos] });
     }
     Ok(())
 }
@@ -178,12 +333,18 @@ fn validate_kinds(kinds: &[u8]) -> io::Result<()> {
 /// declaration, so a corrupt file errors at open instead of indexing
 /// out of bounds deep inside the replay (the columns sit outside the
 /// checksummed header region).
-fn validate_clusters(name: &str, col: &[u8], min_clusters: u32) -> io::Result<()> {
+fn validate_clusters(
+    column: &'static str,
+    col: &[u8],
+    min_clusters: u32,
+) -> Result<(), TraceFileError> {
     if let Some(pos) = col.iter().position(|&c| c as u32 >= min_clusters) {
-        return Err(invalid(format!(
-            "{name} cluster {} at record {pos} >= declared min_clusters {min_clusters}",
-            col[pos]
-        )));
+        return Err(TraceFileError::BadCluster {
+            column,
+            record: pos,
+            cluster: col[pos],
+            min_clusters,
+        });
     }
     Ok(())
 }
@@ -223,21 +384,19 @@ impl TraceBuffer {
     /// Read a whole `.ltrace` file into an owned buffer (the
     /// registry-free fallback path; [`TraceFile::open`] prefers the
     /// zero-copy mapping).
-    pub fn from_file(path: &Path) -> io::Result<TraceBuffer> {
+    pub fn from_file(path: &Path) -> Result<TraceBuffer, TraceFileError> {
         decode_owned(&std::fs::read(path)?)
     }
 }
 
 /// Decode a full `.ltrace` byte image into owned columns.
-fn decode_owned(bytes: &[u8]) -> io::Result<TraceBuffer> {
+fn decode_owned(bytes: &[u8]) -> Result<TraceBuffer, TraceFileError> {
     let (n, min_clusters) = decode_header(bytes, bytes.len())?;
     let (o_inj, o_pay, o_src, o_dst, o_el, o_flags, o_kind) = col_offsets(n);
     let mut buf = TraceBuffer::with_capacity(n);
     for i in 0..n {
-        let at = o_inj + 8 * i;
-        buf.inject_cycle.push(u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()));
-        let at = o_pay + 4 * i;
-        buf.payload_words.push(u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+        buf.inject_cycle.push(le_u64(bytes, o_inj + 8 * i));
+        buf.payload_words.push(le_u32(bytes, o_pay + 4 * i));
     }
     validate_clusters("src", &bytes[o_src..o_src + n], min_clusters)?;
     validate_clusters("dst", &bytes[o_dst..o_dst + n], min_clusters)?;
@@ -305,14 +464,14 @@ mod mapping {
 
     impl Mapping {
         /// Map and validate `path`.
-        pub fn map(path: &Path) -> io::Result<Mapping> {
+        pub fn map(path: &Path) -> Result<Mapping, TraceFileError> {
             let file = std::fs::File::open(path)?;
             let len = file.metadata()?.len();
             let len: usize = len
                 .try_into()
-                .map_err(|_| super::invalid(format!("trace file of {len} bytes too large")))?;
+                .map_err(|_| TraceFileError::TooManyRecords { records: len })?;
             if len < HEADER_LEN {
-                return Err(super::invalid(format!("trace file too short: {len} bytes")));
+                return Err(TraceFileError::TruncatedHeader { len });
             }
             // SAFETY: null hint, validated length, read-only private
             // mapping of an open fd at offset 0.
@@ -327,7 +486,7 @@ mod mapping {
                 )
             };
             if ptr.is_null() || ptr as isize == -1 {
-                return Err(io::Error::last_os_error());
+                return Err(TraceFileError::Io(io::Error::last_os_error()));
             }
             let mut m = Mapping { ptr: ptr as *const u8, len, records: 0, min_clusters: 0 };
             // SAFETY: the mapping spans `len` readable bytes; `m` owns it
@@ -427,7 +586,7 @@ impl TraceFile {
     /// staging file.
     ///
     /// [`TraceCache`]: crate::exec::workload::TraceCache
-    pub fn create(path: &Path, buf: &TraceBuffer) -> io::Result<()> {
+    pub fn create(path: &Path, buf: &TraceBuffer) -> Result<(), TraceFileError> {
         use std::sync::atomic::{AtomicU64, Ordering};
         static SEQ: AtomicU64 = AtomicU64::new(0);
         let tmp = path.with_extension(format!(
@@ -438,7 +597,8 @@ impl TraceFile {
         let mut w = io::BufWriter::new(std::fs::File::create(&tmp)?);
         buf.write_to(&mut w)?;
         w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
-        std::fs::rename(&tmp, path)
+        std::fs::rename(&tmp, path)?;
+        Ok(())
     }
 
     /// Open `path` for replay, zero-copy when possible.
@@ -448,7 +608,7 @@ impl TraceFile {
     /// owned memory.  Either way the header checksum, length, cluster
     /// ranges, and kind column are validated before any record is
     /// served.
-    pub fn open(path: &Path) -> io::Result<TraceFile> {
+    pub fn open(path: &Path) -> Result<TraceFile, TraceFileError> {
         #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
         {
             let mmap_ok = std::env::var("LORAX_TRACE_MMAP").map(|v| v != "0").unwrap_or(true);
@@ -467,7 +627,7 @@ impl TraceFile {
 
     /// Open `path` by reading it fully into owned memory (the explicit
     /// no-mmap path; useful for tests and exotic filesystems).
-    pub fn open_in_memory(path: &Path) -> io::Result<TraceFile> {
+    pub fn open_in_memory(path: &Path) -> Result<TraceFile, TraceFileError> {
         Ok(TraceFile { backing: Backing::Owned(TraceBuffer::from_file(path)?) })
     }
 
@@ -545,6 +705,7 @@ impl TraceFile {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::topology::clos::ClosTopology;
@@ -628,33 +789,52 @@ mod tests {
         let mut bad = good.clone();
         bad[0] ^= 0xFF;
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
-        assert!(TraceFile::open_in_memory(&path).is_err());
+        assert!(matches!(TraceFile::open(&path), Err(TraceFileError::BadMagic)));
+        assert!(matches!(TraceFile::open_in_memory(&path), Err(TraceFileError::BadMagic)));
 
         // Unknown version.
         let mut bad = good.clone();
         bad[8] = 99;
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
+        assert!(matches!(
+            TraceFile::open(&path),
+            Err(TraceFileError::UnsupportedVersion { found: 99 })
+        ));
 
         // Flipped header byte breaks the checksum.
         let mut bad = good.clone();
         bad[17] ^= 0x01;
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
+        assert!(matches!(TraceFile::open(&path), Err(TraceFileError::ChecksumMismatch { .. })));
 
         // Truncated column region.
         let mut bad = good.clone();
         bad.truncate(bad.len() - 3);
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
+        assert!(matches!(TraceFile::open(&path), Err(TraceFileError::LengthMismatch { .. })));
+
+        // Truncated below the header itself.
+        let mut bad = good.clone();
+        bad.truncate(HEADER_LEN - 1);
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(
+            TraceFile::open(&path),
+            Err(TraceFileError::TruncatedHeader { len }) if len == HEADER_LEN - 1
+        ));
+        assert!(matches!(
+            TraceFile::open_in_memory(&path),
+            Err(TraceFileError::TruncatedHeader { .. })
+        ));
 
         // Invalid kind discriminant in the last column.
         let mut bad = good.clone();
         let last = bad.len() - 1;
         bad[last] = 7;
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
+        assert!(matches!(
+            TraceFile::open(&path),
+            Err(TraceFileError::BadKind { value: 7, .. })
+        ));
         assert!(TraceFile::open_in_memory(&path).is_err());
 
         // Cluster id beyond the header's min_clusters declaration (the
@@ -664,14 +844,31 @@ mod tests {
         let (_, _, o_src, ..) = col_offsets(buf.len());
         bad[o_src] = 200;
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
+        assert!(matches!(
+            TraceFile::open(&path),
+            Err(TraceFileError::BadCluster { column: "src", record: 0, cluster: 200, .. })
+        ));
         assert!(TraceFile::open_in_memory(&path).is_err());
 
         // Non-zero reserved tail bytes are rejected.
         let mut bad = good.clone();
         bad[44] = 1;
         std::fs::write(&path, &bad).unwrap();
-        assert!(TraceFile::open(&path).is_err());
+        assert!(matches!(TraceFile::open(&path), Err(TraceFileError::ReservedTail)));
+
+        // Typed errors render and convert: the anyhow bridge keeps CLI
+        // `.with_context(..)` call sites working unchanged.
+        let err = TraceFile::open(&path).unwrap_err();
+        assert!(err.to_string().contains("reserved header bytes"));
+        let e: anyhow::Error = err.into();
+        assert!(format!("{e}").contains("reserved header bytes"));
+
+        // A missing file surfaces as Io with a source chain.
+        let gone = tmp("never_written.ltrace");
+        let _ = std::fs::remove_file(&gone);
+        let err = TraceFile::open(&gone).unwrap_err();
+        assert!(matches!(err, TraceFileError::Io(_)));
+        assert!(std::error::Error::source(&err).is_some());
 
         // The pristine image still opens.
         std::fs::write(&path, &good).unwrap();

@@ -30,7 +30,7 @@ use crate::approx::channel::IdentityChannel;
 use crate::apps::{AppId, Workload};
 
 use super::trace_buf::TraceBuffer;
-use super::trace_file::{fnv1a64, TraceFile};
+use super::trace_file::{fnv1a64, TraceFile, TraceFileError};
 
 /// One synthesized workload and its golden (error-free) output.
 pub struct CachedWorkload {
@@ -206,6 +206,8 @@ impl TraceCache {
             return TraceFile::from_buffer(record());
         };
         let path = dir.join(Self::spill_file_name(key));
+        // A corrupt or truncated spill (any TraceFileError) is a cache
+        // miss: fall through and re-record over it.
         if let Ok(f) = TraceFile::open(&path) {
             return f; // valid spill from an earlier run/process
         }
@@ -213,6 +215,7 @@ impl TraceCache {
         // Spill best-effort: an unwritable directory degrades to the
         // in-memory backing instead of failing the run.
         let spilled = std::fs::create_dir_all(dir)
+            .map_err(TraceFileError::from)
             .and_then(|_| TraceFile::create(&path, &buf))
             .and_then(|_| TraceFile::open(&path));
         match spilled {
@@ -338,6 +341,39 @@ mod tests {
         let b = cache2.get_or_record(key, || panic!("spill file should have been reused"));
         assert_eq!(b.len(), a.len());
         assert_eq!(b.view().inject_cycle, a.view().inject_cycle);
+    }
+
+    #[test]
+    fn corrupt_spill_degrades_to_rerecord() {
+        let dir = std::env::temp_dir().join("lorax_trace_cache_corrupt_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = "clos64:uniform-r10-c300-s9";
+        let cache = TraceCache::with_spill_dir(Some(dir.clone()));
+        let a = cache.get_or_record(key, || small_trace(9));
+        let path = dir.join(TraceCache::spill_file_name(key));
+        assert!(path.is_file());
+
+        // Corrupt the spill: flip a header byte (checksum mismatch) and
+        // truncate the column region.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0x40;
+        bytes.truncate(bytes.len() - 2);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(TraceFile::open(&path).is_err(), "corrupt spill must not open");
+
+        // A fresh cache treats the corrupt file as a miss and re-records
+        // instead of aborting the session.
+        let cache2 = TraceCache::with_spill_dir(Some(dir.clone()));
+        let mut recorded = false;
+        let b = cache2.get_or_record(key, || {
+            recorded = true;
+            small_trace(9)
+        });
+        assert!(recorded, "corrupt spill must degrade to a re-record");
+        assert_eq!(b.len(), a.len());
+        assert_eq!(b.view().inject_cycle, a.view().inject_cycle);
+        // And the re-record healed the file on disk.
+        assert!(TraceFile::open(&path).is_ok());
     }
 
     #[test]

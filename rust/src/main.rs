@@ -8,6 +8,9 @@
 //! lorax sweep --app fft [--grid small]       # Fig. 6, parallel sweep engine
 //! lorax sweep --apps all --jobs 8            # every evaluated app
 //! lorax sweep --mods ook,pam4,pam8           # signaling-order study
+//! lorax sweep --json --apps all              # ordered cell grid as NDJSON
+//! lorax sweep --fabric --workers 4 --fault-plan crash:2@3 --json
+//!                                            # fault-tolerant sweep fabric
 //! lorax tune                                 # Table 3 (sweep + select, all apps)
 //! lorax simulate --app fft --policy LORAX-OOK [--xla]
 //! lorax jpeg --outdir out/                   # Fig. 7 (writes PGMs)
@@ -146,6 +149,13 @@ fn run() -> Result<()> {
                 emit(&figures::signaling_comparison(&cfg, &app_refs, &mods)?, csv);
                 return Ok(());
             }
+            // --fabric / --fault-plan / --json switch to the cell-grid
+            // mode: an ordered (app x policy) ExperimentSpec sweep, run
+            // in-process or through the fault-tolerant fabric, with the
+            // fabric health record appended to the report.
+            if args.flag("fabric") || args.flag("json") || args.get("fault-plan").is_some() {
+                return sweep_cells_cmd(&cfg, &args, csv);
+            }
             let (bits, reds) = grid(&args);
             let kind: PolicyKind = args.get_or("policy", "LORAX-OOK").parse()?;
             let apps: Vec<String> = match (args.get("apps"), args.get("app")) {
@@ -221,6 +231,79 @@ fn run() -> Result<()> {
         _ => {
             println!("{}", main_doc());
         }
+    }
+    Ok(())
+}
+
+/// `lorax sweep --fabric|--json|--fault-plan` — the cell-grid sweep.
+///
+/// Builds an ordered (app × policy) [`ExperimentSpec`] grid and runs it
+/// either in-process ([`LoraxSession::sweep_cells`]) or through the
+/// fault-tolerant coordinator/worker fabric (`--fabric`, with
+/// `--workers N`, `--shard-size N` and an optional `--fault-plan`
+/// crash schedule).  `--json` emits one NDJSON record per cell plus the
+/// `fabric_health` record — the successful cells are byte-identical
+/// between the two paths, which the CI fabric smoke diffs.
+fn sweep_cells_cmd(cfg: &SystemConfig, args: &Args, csv: bool) -> Result<()> {
+    use lorax::exec::{CellState, FabricConfig, FaultPlan, SweepFabric};
+
+    let apps: Vec<String> = match (args.get("apps"), args.get("app")) {
+        (Some("all"), _) | (None, None) => {
+            lorax::apps::EVALUATED_APPS.iter().map(|s| s.to_string()).collect()
+        }
+        (Some(list), _) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        (None, Some(app)) => vec![app.to_string()],
+    };
+    let ids = apps
+        .iter()
+        .map(|app| app.parse::<AppId>())
+        .collect::<Result<Vec<AppId>>>()?;
+    let kinds: Vec<PolicyKind> = match args.get("policies") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().parse()).collect::<Result<Vec<PolicyKind>>>()?
+        }
+        None => vec![args.get_or("policy", "LORAX-OOK").parse()?],
+    };
+    let specs: Vec<ExperimentSpec> = ids
+        .iter()
+        .flat_map(|&app| kinds.iter().map(move |&kind| ExperimentSpec::new(app, kind)))
+        .collect();
+    let session = LoraxSession::new(cfg);
+    let report = if args.flag("fabric") || args.get("fault-plan").is_some() {
+        let workers = args.get_u64("workers", 4)? as usize;
+        let shard_size = args.get_u64("shard-size", 1)? as usize;
+        let plan: FaultPlan = match args.get("fault-plan") {
+            Some(s) => s.parse().context("parsing --fault-plan")?,
+            None => FaultPlan::none(),
+        };
+        let fabric =
+            SweepFabric::new(FabricConfig { workers, shard_size, ..FabricConfig::default() })?
+                .with_plan(plan);
+        eprintln!(
+            "sweeping {} cell(s) over the fault-tolerant fabric ({workers} worker(s){})",
+            specs.len(),
+            if fabric.plan().is_empty() {
+                String::new()
+            } else {
+                format!(", fault plan {}", fabric.plan())
+            }
+        );
+        session.sweep_cells_fabric(&specs, &fabric)
+    } else {
+        session.sweep_cells(&specs)
+    };
+    if args.flag("json") {
+        print!("{}", report.to_json(lorax::coordinator::AppRunReport::to_json));
+    } else {
+        for (i, cell) in report.cells.iter().enumerate() {
+            match cell {
+                CellState::Done(r) => println!("{}", r.summary()),
+                CellState::Failed(e) => println!("cell {i} ({}) failed: {e}", specs[i]),
+                CellState::Unfinished(e) => println!("cell {i} ({}) unfinished: {e}", specs[i]),
+            }
+        }
+        println!();
+        emit(&lorax::report::fabric_health_table(&report.health), csv);
     }
     Ok(())
 }
@@ -360,7 +443,14 @@ COMMANDS
                   [--grid small|tiny] [--jobs <n>]); with --mods
                  <ook,pam4,pam8,pam16> runs the signaling-order study
                  instead (LORAX per PAM level: laser power + output
-                 quality; apps default to all evaluated; no --policy)
+                 quality; apps default to all evaluated; no --policy);
+                 with --fabric/--json/--fault-plan runs the (app x
+                 policy) cell grid — in-process, or over the
+                 fault-tolerant coordinator/worker fabric:
+                   --fabric --workers <n> [--shard-size <n>]
+                   [--policies <a,b>] [--fault-plan crash:2@3,...]
+                 (fault kinds: crash:<w>@<s>[+k] drop dup delay corrupt;
+                  --json emits one record per cell + fabric_health)
   tune           Table 3 — application-specific parameter selection ([--jobs <n>])
   simulate       one (app, policy) run (--app <name> --policy <name> [--xla])
   jpeg           Fig. 7  — JPEG quality panels (--outdir <dir>)
@@ -380,5 +470,5 @@ OPTIONS
   --jobs <n>         sweep worker threads for every sweep-running command
                      (0 = auto; env LORAX_SWEEP_THREADS)
   --csv              emit tables as CSV
-  --json             (run) emit the report as one JSON record"
+  --json             (run, sweep, trace replay) emit JSON records"
 }

@@ -5,4 +5,4 @@
 pub mod figures;
 pub mod table;
 
-pub use table::Table;
+pub use table::{fabric_health_table, Table};

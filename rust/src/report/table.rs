@@ -1,5 +1,7 @@
 //! Aligned text tables with CSV export (report/bench output).
 
+use crate::exec::fabric::FabricHealth;
+
 /// Simple column-aligned table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
@@ -87,9 +89,55 @@ impl Table {
     }
 }
 
+/// Render a sweep fabric's health counters (retries, reassigned shards,
+/// degraded cells, ...) as a metric/value table — the text-mode
+/// counterpart of [`FabricHealth::to_json`] in `lorax sweep` output.
+pub fn fabric_health_table(h: &FabricHealth) -> Table {
+    let mut t = Table::new("sweep fabric health", &["metric", "value"]);
+    let rows: [(&str, u64); 11] = [
+        ("workers", h.workers as u64),
+        ("shards", h.shards as u64),
+        ("scheduler steps", h.steps),
+        ("retries", h.retries),
+        ("reassigned shards", h.reassigned),
+        ("timeouts", h.timeouts),
+        ("crashed workers", h.crashed_workers),
+        ("duplicates dropped", h.duplicates_dropped),
+        ("results dropped", h.results_dropped),
+        ("corrupt payloads", h.corrupt_payloads),
+        ("degraded cells", h.degraded_cells),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.to_string(), v.to_string()]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fabric_health_renders_every_counter() {
+        let h = FabricHealth {
+            workers: 4,
+            shards: 9,
+            steps: 31,
+            retries: 2,
+            reassigned: 1,
+            degraded_cells: 3,
+            ..FabricHealth::default()
+        };
+        let t = fabric_health_table(&h);
+        assert_eq!(t.n_rows(), 11);
+        let r = t.render();
+        assert!(r.contains("== sweep fabric health =="));
+        assert!(r.contains("reassigned shards"));
+        assert!(r.contains("degraded cells"));
+        let csv = t.to_csv();
+        assert!(csv.contains("retries,2"));
+        assert!(csv.contains("degraded cells,3"));
+    }
 
     #[test]
     fn renders_aligned() {

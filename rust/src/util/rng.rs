@@ -115,6 +115,14 @@ impl Rng {
         (self.next_u64() % n as u64) as usize
     }
 
+    /// Bernoulli draw: true with probability `p` (clamped by the
+    /// `[0, 1)` uniform underneath).  Drives seeded fault schedules in
+    /// `exec::fabric` among others.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
     /// Standard normal via Box–Muller (both values used alternately).
     pub fn next_gaussian(&mut self) -> f64 {
         // Draw until u1 > 0 to avoid ln(0).
@@ -194,6 +202,21 @@ mod tests {
             hit[rng.below(10)] = true;
         }
         assert!(hit.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn chance_frequency_tracks_p() {
+        let mut rng = Rng::new(13);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| rng.chance(0.65)).count();
+        let freq = hits as f64 / n as f64;
+        assert!((freq - 0.65).abs() < 0.01, "freq={freq}");
+        // Determinism: same seed, same draws.
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..100 {
+            assert_eq!(a.chance(0.3), b.chance(0.3));
+        }
     }
 
     #[test]

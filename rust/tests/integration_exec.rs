@@ -126,8 +126,8 @@ fn soa_replay_matches_aos_run() {
 fn synth_sweep_independent_of_thread_count() {
     let cfg = SystemConfig { scale: 0.02, seed: 9, ..Default::default() };
     let grid = synth_stress_grid(1500, &[10, 30], &[PolicyKind::Baseline, PolicyKind::LORAX_OOK], 9);
-    let a = SweepRunner::with_threads(1).run_synth(&cfg, &grid);
-    let b = SweepRunner::with_threads(4).run_synth(&cfg, &grid);
+    let a = SweepRunner::with_threads(1).run_synth(&cfg, &grid).unwrap();
+    let b = SweepRunner::with_threads(4).run_synth(&cfg, &grid).unwrap();
     assert_eq!(a.len(), b.len());
     for ((x, y), sc) in a.iter().zip(b.iter()).zip(grid.iter()) {
         assert_eq!(x.cycles, y.cycles, "{}", sc.label);

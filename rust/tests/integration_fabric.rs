@@ -1,0 +1,176 @@
+//! Integration: the fault-tolerant sweep fabric against the in-process
+//! sweep — the robustness acceptance criteria of `exec::fabric`.
+//!
+//! * fault-free fabric output is byte-identical to `sweep_cells`;
+//! * explicit crash+recover+duplicate+corrupt schedules stay
+//!   byte-identical (the fabric recovers, never diverges);
+//! * every seeded `FaultPlan` preserves byte-identity (property test);
+//! * a permanently-dead pool degrades to a partial report, never panics;
+//! * `.ltrace` replay through the fabric matches direct `replay_trace`.
+
+use lorax::approx::policy::PolicyKind;
+use lorax::apps::AppId;
+use lorax::config::SystemConfig;
+use lorax::coordinator::{AppRunReport, LoraxSession};
+use lorax::exec::{
+    CellState, ExperimentSpec, FabricConfig, FaultPlan, SweepFabric, SweepReport, TraceFile,
+};
+
+fn cfg() -> SystemConfig {
+    SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
+}
+
+fn spec_grid() -> Vec<ExperimentSpec> {
+    let apps = [AppId::Sobel, AppId::Fft];
+    let policies = [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4];
+    apps.iter()
+        .flat_map(|&a| policies.iter().map(move |&p| ExperimentSpec::new(a, p)))
+        .collect()
+}
+
+fn fabric(workers: usize) -> SweepFabric {
+    SweepFabric::new(FabricConfig { workers, ..FabricConfig::default() }).unwrap()
+}
+
+fn cells_json(r: &SweepReport<AppRunReport>) -> String {
+    r.cells_json(AppRunReport::to_json)
+}
+
+#[test]
+fn fault_free_fabric_matches_in_process_sweep() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let inproc = session.sweep_cells(&specs);
+    let fab = session.sweep_cells_fabric(&specs, &fabric(3));
+    assert_eq!(cells_json(&fab), cells_json(&inproc), "fault-free fabric must be byte-identical");
+    assert_eq!(fab.health.degraded_cells, 0);
+    assert_eq!(fab.health.retries, 0);
+    assert_eq!(fab.health.workers, 3);
+    assert_eq!(fab.health.shards, specs.len());
+}
+
+#[test]
+fn crash_recover_duplicate_corrupt_schedule_is_byte_identical() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let inproc = session.sweep_cells(&specs);
+    // Initial placement is deterministic (worker i <- shard i), so all
+    // three events fire: worker 0 crashes holding shard 0 and stays
+    // silent past the heartbeat timeout, worker 1 duplicates its shard-1
+    // completion, worker 2 returns a corrupt shard-2 payload.
+    let plan: FaultPlan = "crash:0@0+9,dup:1@1,corrupt:2@2".parse().unwrap();
+    let fab = session.sweep_cells_fabric(&specs, &fabric(3).with_plan(plan));
+    assert_eq!(
+        cells_json(&fab),
+        cells_json(&inproc),
+        "recovering fault schedule must still be byte-identical"
+    );
+    assert_eq!(fab.health.degraded_cells, 0);
+    assert!(fab.health.retries >= 2, "crash + corrupt each force a retry: {:?}", fab.health);
+    assert!(fab.health.crashed_workers >= 1, "silent worker must be detected: {:?}", fab.health);
+    assert!(fab.health.reassigned >= 1, "crashed worker's shard must move: {:?}", fab.health);
+    assert_eq!(fab.health.duplicates_dropped, 1);
+    assert_eq!(fab.health.corrupt_payloads, 1);
+}
+
+#[test]
+fn each_fault_kind_bumps_its_counter() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let inproc = session.sweep_cells(&specs);
+    // Single worker: every shard lands on worker 0, so each event fires.
+    type Check = fn(&lorax::exec::FabricHealth) -> bool;
+    let cases: [(&str, Check); 5] = [
+        ("dup:0@0", |h| h.duplicates_dropped == 1 && h.retries == 0),
+        ("corrupt:0@0", |h| h.corrupt_payloads == 1 && h.retries >= 1),
+        ("drop:0@0", |h| h.results_dropped == 1 && h.timeouts >= 1 && h.retries >= 1),
+        ("delay:0@0+3", |h| h.timeouts == 0 && h.retries == 0),
+        ("crash:0@1+2", |h| h.retries >= 1),
+    ];
+    for (plan, check) in cases {
+        let fab =
+            session.sweep_cells_fabric(&specs, &fabric(1).with_plan(plan.parse().unwrap()));
+        assert_eq!(cells_json(&fab), cells_json(&inproc), "{plan}: bytes diverged");
+        assert_eq!(fab.health.degraded_cells, 0, "{plan}");
+        assert!(check(&fab.health), "{plan}: unexpected counters {:?}", fab.health);
+    }
+}
+
+#[test]
+fn seeded_fault_plans_preserve_byte_identity() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let inproc = session.sweep_cells(&specs);
+    // Property: every seeded schedule (crashes always recover, <=1 event
+    // per shard) converges to the exact fault-free bytes.
+    for seed in 1u64..=10 {
+        let plan = FaultPlan::seeded(seed, 3, specs.len());
+        let fab = session.sweep_cells_fabric(&specs, &fabric(3).with_plan(plan.clone()));
+        assert_eq!(
+            cells_json(&fab),
+            cells_json(&inproc),
+            "seed {seed} plan {plan:?} diverged"
+        );
+        assert_eq!(fab.health.degraded_cells, 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn fully_crashed_pool_degrades_to_partial_report() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    // Both workers crash on their first assignment and never recover:
+    // the fabric must return a complete, ordered report of unfinished
+    // cells — graceful degradation, never a panic.
+    let f = SweepFabric::new(FabricConfig { workers: 2, max_steps: 400, ..Default::default() })
+        .unwrap()
+        .with_plan("crash:0@0,crash:1@1".parse().unwrap());
+    let fab = session.sweep_cells_fabric(&specs, &f);
+    assert_eq!(fab.cells.len(), specs.len());
+    assert!(fab.cells.iter().all(|c| matches!(c, CellState::Unfinished(_))));
+    assert_eq!(fab.health.degraded_cells, specs.len() as u64);
+    let json = fab.to_json(AppRunReport::to_json);
+    assert!(json.contains("\"cell_unfinished\""));
+    assert!(json.contains("\"fabric_health\""));
+}
+
+#[test]
+fn empty_grid_yields_empty_reports_on_both_paths() {
+    let session = LoraxSession::new(&cfg());
+    let inproc = session.sweep_cells(&[]);
+    let fab = session.sweep_cells_fabric(&[], &fabric(4));
+    assert!(inproc.cells.is_empty() && fab.cells.is_empty());
+    assert_eq!(fab.health.shards, 0);
+    assert_eq!(cells_json(&fab), "");
+    // The only record an empty fabric sweep emits is its health line.
+    assert!(fab.to_json(AppRunReport::to_json).starts_with("{\"name\":\"fabric_health\""));
+}
+
+#[test]
+fn trace_replay_through_fabric_matches_direct_replay() {
+    let session = LoraxSession::new(&cfg());
+    let rec_spec = ExperimentSpec::new(AppId::Sobel, PolicyKind::LORAX_OOK);
+    let file = TraceFile::from_buffer(session.record_trace(&rec_spec).unwrap());
+    let specs: Vec<ExperimentSpec> =
+        [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4]
+            .iter()
+            .map(|&p| ExperimentSpec::new(AppId::Sobel, p))
+            .collect();
+    let fab = session
+        .replay_cells_fabric(&specs, &file, &fabric(2).with_plan("dup:0@0".parse().unwrap()))
+        .unwrap();
+    let direct: String =
+        specs.iter().map(|s| session.replay_trace(s, &file).unwrap().to_json()).collect();
+    assert_eq!(cells_json(&fab), direct, "fabric replay must match direct replay, cell for cell");
+    assert_eq!(fab.health.degraded_cells, 0);
+    assert!(fab.health.shards >= 1, "header-derived sharding must produce shards");
+}
+
+#[test]
+fn fault_plan_text_form_round_trips() {
+    let text = "crash:2@3,crash:0@1+5,drop:1@0,dup:0@2,delay:1@4+3,corrupt:0@5";
+    let plan: FaultPlan = text.parse().unwrap();
+    assert_eq!(plan.to_string(), text);
+    assert!("corrupt:0@5+2".parse::<FaultPlan>().is_err(), "corrupt takes no +k");
+    assert!("explode:0@1".parse::<FaultPlan>().is_err(), "unknown fault kind");
+}
