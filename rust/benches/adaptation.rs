@@ -1,0 +1,193 @@
+//! Bench: epoch-based adaptation vs the best static policy, per traffic
+//! shape.
+//!
+//! For each (non-)stationary synthetic traffic shape this enumerates a
+//! grid of *static* LORAX policies — reductions × {OOK, PAM4} — runs
+//! each monitor-only (epoch records, no retuning) to measure its laser
+//! energy and mean epoch quality loss, then runs the *adaptive*
+//! controller once on the same trace and compares: did adaptation land
+//! below every static that meets the same quality bound?  Also measures
+//! the controller's wall-clock overhead vs a plain static replay and
+//! how many epochs it takes to make its first retune.
+//!
+//! Emits `BENCH_adaptation.json` (schema 7 in docs/BENCHMARKS.md).
+//!
+//! Run: `cargo bench --bench adaptation`
+//! Env: LORAX_BENCH_SMOKE=1 (2 shapes, short traces).
+
+use lorax::adapt::AdaptSpec;
+use lorax::approx::policy::{default_tuning, PolicyKind};
+use lorax::apps::AppId;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSession;
+use lorax::exec::{ExperimentSpec, TrafficSpec};
+use lorax::traffic::synth::{Pattern, SynthConfig, TimeProfile};
+use lorax::util::bench::{bench, black_box, json_f64, write_json_payload};
+
+struct Shape {
+    name: &'static str,
+    pattern: Pattern,
+    profile: TimeProfile,
+}
+
+fn spec_for(shape: &Shape, kind: PolicyKind, red: u32, cycles: u64, seed: u64) -> ExperimentSpec {
+    let mut tuning = default_tuning(kind, "fft");
+    tuning.power_reduction_pct = red;
+    ExperimentSpec::new(AppId::Fft, kind).with_tuning(tuning).with_traffic(
+        TrafficSpec::Synthetic(SynthConfig {
+            pattern: shape.pattern,
+            profile: shape.profile,
+            rate_per_100_cycles: 30,
+            cycles,
+            float_fraction: 0.8,
+            seed,
+        }),
+    )
+}
+
+fn main() {
+    let smoke = std::env::var("LORAX_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let cfg = SystemConfig { scale: 0.02, seed: 42, ..Default::default() };
+    let session = LoraxSession::new(&cfg);
+    let cycles: u64 = if smoke { 8_000 } else { 24_000 };
+    let epoch: u64 = 2_000;
+    let bound_pct = 4.0;
+    let adapt = AdaptSpec { epoch_cycles: epoch, quality_bound_pct: bound_pct, ..AdaptSpec::OFF };
+    let monitor = AdaptSpec { power_step_pct: 0, ..adapt };
+    let adaptive = AdaptSpec { power_step_pct: 20, ..adapt };
+
+    let shapes = [
+        Shape {
+            name: "stationary-uniform",
+            pattern: Pattern::Uniform,
+            profile: TimeProfile::Stationary,
+        },
+        Shape {
+            name: "phase-transpose",
+            pattern: Pattern::Transpose,
+            profile: TimeProfile::PhaseShift { period: epoch * 2 },
+        },
+        Shape {
+            name: "bursty-uniform",
+            pattern: Pattern::Uniform,
+            profile: TimeProfile::Bursty { period: epoch, duty_pct: 50 },
+        },
+        Shape {
+            name: "diurnal-hotspot",
+            pattern: Pattern::Hotspot { cluster: 2 },
+            profile: TimeProfile::Diurnal { period: cycles / 3 },
+        },
+        Shape {
+            name: "flash-neighbor",
+            pattern: Pattern::Neighbor,
+            profile: TimeProfile::FlashCrowd { at: cycles / 3, width: epoch * 2, peak_x: 4 },
+        },
+    ];
+    let n_shapes = if smoke { 2 } else { shapes.len() };
+    let reductions: &[u32] = &[0, 20, 40, 60, 80, 100];
+    let kinds = [PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4];
+
+    let mut shape_payloads = Vec::new();
+    let mut any_win = false;
+    for shape in &shapes[..n_shapes] {
+        // --- static grid, monitor-only (epoch quality, no retunes) ----
+        let mut statics = Vec::new();
+        for &kind in &kinds {
+            for &red in reductions {
+                let spec = spec_for(shape, kind, red, cycles, cfg.seed).with_adapt(monitor);
+                let r = session.run_adaptive(&spec).expect("static monitor run");
+                assert_eq!(r.retunes, 0, "monitor-only must never retune");
+                statics.push((
+                    format!("{}-r{red}", kind.name()),
+                    r.report.sim.energy.laser_pj,
+                    r.mean_quality_loss_pct(),
+                ));
+            }
+        }
+        // --- adaptive run on the same cached trace --------------------
+        let spec =
+            spec_for(shape, PolicyKind::LORAX_PAM4, 0, cycles, cfg.seed).with_adapt(adaptive);
+        let r = session.run_adaptive(&spec).expect("adaptive run");
+        let a_laser = r.report.sim.energy.laser_pj;
+        let a_loss = r.mean_quality_loss_pct();
+        let first_retune =
+            r.epochs.iter().position(|e| e.retuned).map(|i| i as i64 + 1).unwrap_or(-1);
+
+        // The comparison set: statics meeting the same mean-quality
+        // bound the controller regulates to.
+        let meeting: Vec<&(String, f64, f64)> =
+            statics.iter().filter(|(_, _, loss)| *loss <= bound_pct).collect();
+        let best = meeting.iter().min_by(|a, b| a.1.total_cmp(&b.1));
+        let (best_name, best_laser) = match best {
+            Some((name, laser, _)) => (name.as_str(), *laser),
+            None => ("none", 0.0),
+        };
+        let win = !meeting.is_empty() && a_loss <= bound_pct && a_laser < best_laser;
+        any_win |= win;
+        println!(
+            "{:<20} adaptive {:>12.1} pJ laser (loss {:>6.3}%, {} retunes) vs best static \
+             {best_name} {:>12.1} pJ [{} of {} statics meet {bound_pct}%] {}",
+            shape.name,
+            a_laser,
+            a_loss,
+            r.retunes,
+            best_laser,
+            meeting.len(),
+            statics.len(),
+            if win { "ADAPTIVE WINS" } else { "-" }
+        );
+
+        // --- controller overhead vs the plain static path -------------
+        let static_spec = spec_for(shape, PolicyKind::LORAX_PAM4, 0, cycles, cfg.seed);
+        let iters = if smoke { 1 } else { 3 };
+        let rs = bench(&format!("adapt:static {}", shape.name), 1, iters, || {
+            black_box(session.run(&static_spec).expect("static run"));
+        });
+        let ra = bench(&format!("adapt:adaptive {}", shape.name), 1, iters, || {
+            black_box(session.run_adaptive(&spec).expect("adaptive run"));
+        });
+        let overhead = if rs.mean_s() > 0.0 { ra.mean_s() / rs.mean_s() } else { 0.0 };
+        println!("  -> adaptation overhead: {overhead:.3}x ({} epochs)", r.epochs.len());
+
+        shape_payloads.push(format!(
+            "{{\"shape\":{:?},\"pattern\":{:?},\"profile\":{:?},\
+             \"adaptive_laser_pj\":{},\"adaptive_mean_loss_pct\":{},\"adaptive_retunes\":{},\
+             \"adaptive_mod_switches\":{},\"epochs\":{},\"epochs_to_first_retune\":{},\
+             \"best_static\":{:?},\"best_static_laser_pj\":{},\"statics_meeting_bound\":{},\
+             \"statics_total\":{},\"adaptive_beats_all_statics\":{},\"overhead_ratio\":{}}}",
+            shape.name,
+            shape.pattern.to_string(),
+            shape.profile.to_string(),
+            json_f64(a_laser),
+            json_f64(a_loss),
+            r.retunes,
+            r.mod_switches,
+            r.epochs.len(),
+            first_retune,
+            best_name,
+            json_f64(best_laser),
+            meeting.len(),
+            statics.len(),
+            win,
+            json_f64(overhead),
+        ));
+    }
+
+    println!(
+        "adaptation: {}",
+        if any_win {
+            "adaptive beat every bound-meeting static on at least one shape"
+        } else {
+            "WARNING: no shape where adaptation beat every bound-meeting static"
+        }
+    );
+    let payload = format!(
+        "{{\"name\":\"adaptation\",\"quality_bound_pct\":{},\"epoch_cycles\":{epoch},\
+         \"cycles\":{cycles},\"any_adaptive_win\":{any_win},\"shapes\":[{}]}}\n",
+        json_f64(bound_pct),
+        shape_payloads.join(",")
+    );
+    if let Err(e) = write_json_payload("adaptation", &payload) {
+        eprintln!("warning: could not write adaptation json: {e}");
+    }
+}

@@ -1,0 +1,473 @@
+//! [`AdaptController`] — the PROTEUS-style rule engine behind
+//! `lorax run --adapt`, plus the per-epoch records it emits.
+
+use crate::approx::policy::{AppTuning, Policy, PolicyKind};
+use crate::coordinator::session::{AppRunReport, LoraxSession};
+use crate::noc::sim::{EpochHook, EpochObservation, ReplayTuning};
+use crate::phys::params::Modulation;
+use crate::util::bench::json_f64;
+
+use super::spec::AdaptSpec;
+
+/// Laser-reduction depth (percentage points) at or above which the
+/// controller prefers dropping to a cheaper signaling order over holding
+/// a high-order fabric: deep reduction means the traffic tolerates
+/// degraded LSBs, so the extra per-wavelength laser cost of a high PAM
+/// order is buying bandwidth the quality headroom says we don't need.
+const MOD_SWITCH_REDUCTION: u32 = 40;
+
+/// One signaling order up (saturating at the highest known order).
+fn step_up(m: Modulation) -> Modulation {
+    Modulation::KNOWN[(m.index() + 1).min(Modulation::N_KNOWN - 1)]
+}
+
+/// One signaling order down (saturating at OOK).
+fn step_down(m: Modulation) -> Modulation {
+    Modulation::KNOWN[m.index().saturating_sub(1)]
+}
+
+/// The pure rule state machine, separated from the session plumbing so
+/// the rule table is unit-testable without building engines.
+///
+/// Per epoch it applies, in order:
+///
+/// | rule | trigger                                   | action |
+/// |------|-------------------------------------------|--------|
+/// | R1   | quality loss > bound                      | reduction −= step; ceiling := reduction |
+/// | R2   | quality loss < bound/2                    | reduction += step (≤ ceiling) |
+/// | R3   | load > `hi_load` and reduction < 40       | modulation one order up |
+/// | R4   | load < `lo_load`, or reduction ≥ 40       | modulation one order down |
+///
+/// R1/R2 are an AIMD loop on the LSB laser reduction with a *violation
+/// ceiling*: a bound violation pins the ceiling at the backed-off level
+/// so the controller does not immediately re-probe the level that just
+/// failed; every compliant epoch relaxes the ceiling by one point, so a
+/// traffic shift that restores headroom is eventually re-explored.
+/// R3/R4 apply with a one-epoch cooldown after any switch, to keep the
+/// order from thrashing when load sits near a threshold.
+struct RuleState {
+    spec: AdaptSpec,
+    fabric: Modulation,
+    reduction: u32,
+    red_ceiling: u32,
+    mod_cooldown: u32,
+}
+
+impl RuleState {
+    fn new(spec: AdaptSpec, fabric: Modulation, reduction: u32) -> RuleState {
+        RuleState { spec, fabric, reduction, red_ceiling: 100, mod_cooldown: 0 }
+    }
+
+    /// The (modulation, reduction) the *next* epoch should run under.
+    fn decide(&mut self, obs: &EpochObservation) -> (Modulation, u32) {
+        let step = self.spec.power_step_pct;
+        // R1/R2 only fire on epochs that carried approximable traffic —
+        // an idle epoch says nothing about quality.
+        if obs.approximable_packets > 0 {
+            if obs.quality_loss_pct > self.spec.quality_bound_pct {
+                self.reduction = self.reduction.saturating_sub(step);
+                self.red_ceiling = self.reduction;
+            } else {
+                if obs.quality_loss_pct < self.spec.quality_bound_pct * 0.5 {
+                    self.reduction = (self.reduction + step).min(100).min(self.red_ceiling);
+                }
+                self.red_ceiling = (self.red_ceiling + 1).min(100);
+            }
+        }
+        if self.mod_cooldown > 0 {
+            self.mod_cooldown -= 1;
+        } else {
+            let next = if obs.load > self.spec.hi_load && self.reduction < MOD_SWITCH_REDUCTION {
+                step_up(self.fabric)
+            } else if obs.load < self.spec.lo_load || self.reduction >= MOD_SWITCH_REDUCTION {
+                step_down(self.fabric)
+            } else {
+                self.fabric
+            };
+            if next != self.fabric {
+                self.fabric = next;
+                self.mod_cooldown = 1;
+            }
+        }
+        (self.fabric, self.reduction)
+    }
+}
+
+/// What the controller saw — and did — over one epoch.  Serialized as
+/// one `{"record":"adapt_epoch",...}` NDJSON line by `lorax run --adapt
+/// --json` (schema in docs/BENCHMARKS.md).
+#[derive(Clone, Copy, Debug)]
+pub struct EpochRecord {
+    /// Epoch index (0-based).
+    pub epoch: u64,
+    /// First cycle covered (inclusive).
+    pub start_cycle: u64,
+    /// One past the last cycle covered.
+    pub end_cycle: u64,
+    /// Packets injected during the epoch.
+    pub packets: u64,
+    /// Packets that crossed a photonic link.
+    pub photonic_packets: u64,
+    /// Photonic packets eligible for approximation.
+    pub approximable_packets: u64,
+    /// Approximable packets sent with LSBs at reduced laser power.
+    pub reduced_packets: u64,
+    /// Approximable packets sent with LSB wavelengths off.
+    pub truncated_packets: u64,
+    /// Offered load (waveguide-occupancy fraction; can exceed 1).
+    pub load: f64,
+    /// Laser energy charged during the epoch, pJ.
+    pub laser_pj: f64,
+    /// Mean modeled quality loss per approximable packet, percent.
+    pub quality_loss_pct: f64,
+    /// Signaling order the epoch ran under.
+    pub modulation: Modulation,
+    /// LSB laser reduction the epoch ran under, percent.
+    pub reduction_pct: u32,
+    /// Did the controller retune at this epoch's boundary?
+    pub retuned: bool,
+}
+
+impl EpochRecord {
+    fn from_observation(obs: &EpochObservation, modulation: Modulation, red: u32) -> EpochRecord {
+        EpochRecord {
+            epoch: obs.epoch,
+            start_cycle: obs.start_cycle,
+            end_cycle: obs.end_cycle,
+            packets: obs.packets,
+            photonic_packets: obs.photonic_packets,
+            approximable_packets: obs.approximable_packets,
+            reduced_packets: obs.reduced_packets,
+            truncated_packets: obs.truncated_packets,
+            load: obs.load,
+            laser_pj: obs.laser_pj,
+            quality_loss_pct: obs.quality_loss_pct,
+            modulation,
+            reduction_pct: red,
+            retuned: false,
+        }
+    }
+
+    /// One newline-terminated `{"record":"adapt_epoch",...}` object
+    /// (flat snake_case keys, finite numbers — the `BENCH_*.json`
+    /// record shape).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"record\":\"adapt_epoch\",\"epoch\":{},\"start_cycle\":{},\"end_cycle\":{},\
+             \"packets\":{},\"photonic_packets\":{},\"approximable_packets\":{},\
+             \"reduced_packets\":{},\"truncated_packets\":{},\"load\":{},\"laser_pj\":{},\
+             \"quality_loss_pct\":{},\"modulation\":{:?},\"reduction_pct\":{},\"retuned\":{}}}\n",
+            self.epoch,
+            self.start_cycle,
+            self.end_cycle,
+            self.packets,
+            self.photonic_packets,
+            self.approximable_packets,
+            self.reduced_packets,
+            self.truncated_packets,
+            json_f64(self.load),
+            json_f64(self.laser_pj),
+            json_f64(self.quality_loss_pct),
+            self.modulation.name(),
+            self.reduction_pct,
+            self.retuned,
+        )
+    }
+}
+
+/// The epoch-boundary hook that turns a static replay into an adaptive
+/// one.  Plugged into
+/// [`crate::noc::sim::Simulator::replay_view_hooked`]; each retune
+/// resolves against the owning [`LoraxSession`]'s lazily-built engine
+/// slots and memoized decision tables, so switching modulation or
+/// reduction mid-run costs one cache lookup after the first visit to a
+/// given (modulation, policy) point.
+///
+/// Non-loss-aware policies (baseline, truncation, Prior16) have no
+/// laser-reduction knob; for those the controller degrades to
+/// monitor-only and records epochs without retuning — as it does when
+/// [`AdaptSpec::monitor_only`] is set.
+pub struct AdaptController<'s> {
+    session: &'s LoraxSession,
+    kind: PolicyKind,
+    tuning: AppTuning,
+    rules: RuleState,
+    epochs: Vec<EpochRecord>,
+    retunes: u64,
+    mod_switches: u64,
+}
+
+impl<'s> AdaptController<'s> {
+    /// A controller starting from `policy` on the `fabric` order.
+    pub fn new(
+        session: &'s LoraxSession,
+        spec: AdaptSpec,
+        policy: Policy,
+        fabric: Modulation,
+    ) -> AdaptController<'s> {
+        AdaptController {
+            session,
+            kind: policy.kind,
+            tuning: policy.tuning,
+            rules: RuleState::new(spec, fabric, policy.tuning.power_reduction_pct),
+            epochs: Vec::new(),
+            retunes: 0,
+            mod_switches: 0,
+        }
+    }
+
+    /// The policy currently in effect.
+    pub fn current_policy(&self) -> Policy {
+        Policy::with_tuning(self.kind, self.tuning)
+    }
+
+    /// Consume the controller and attach its epoch trail to the run's
+    /// report.
+    pub fn into_report(self, report: AppRunReport) -> AdaptiveRunReport {
+        AdaptiveRunReport {
+            adapt: self.rules.spec,
+            final_modulation: self.rules.fabric,
+            final_reduction_pct: self.tuning.power_reduction_pct,
+            retunes: self.retunes,
+            mod_switches: self.mod_switches,
+            epochs: self.epochs,
+            report,
+        }
+    }
+}
+
+impl<'s> EpochHook<'s> for AdaptController<'s> {
+    fn epoch_cycles(&self) -> u64 {
+        self.rules.spec.epoch_cycles
+    }
+
+    fn on_epoch(&mut self, obs: &EpochObservation) -> Option<ReplayTuning<'s>> {
+        let red = self.tuning.power_reduction_pct;
+        let mut rec = EpochRecord::from_observation(obs, self.rules.fabric, red);
+        if self.rules.spec.monitor_only() || !self.current_policy().loss_aware() {
+            self.epochs.push(rec);
+            return None;
+        }
+        let prev_fabric = self.rules.fabric;
+        let (next_m, next_red) = self.rules.decide(obs);
+        let retuned = next_m != prev_fabric || next_red != red;
+        rec.retuned = retuned;
+        self.epochs.push(rec);
+        if !retuned {
+            return None;
+        }
+        self.retunes += 1;
+        if next_m != prev_fabric {
+            self.mod_switches += 1;
+            // The LORAX family is modulation-bound: moving the fabric
+            // moves the policy's native order with it, so the decision
+            // table is rebuilt (once, then cached) for the new eye.
+            if matches!(self.kind, PolicyKind::Lorax(_)) {
+                self.kind = PolicyKind::Lorax(next_m);
+            }
+        }
+        self.tuning.power_reduction_pct = next_red;
+        let policy = self.current_policy();
+        let session: &'s LoraxSession = self.session;
+        Some(ReplayTuning {
+            engine: session.engine(next_m),
+            policy,
+            decisions: session.decision_table(next_m, &policy),
+        })
+    }
+}
+
+/// The result of one adaptive run: the ordinary [`AppRunReport`] plus
+/// the controller's epoch trail and retune counters.
+#[derive(Clone, Debug)]
+pub struct AdaptiveRunReport {
+    /// The run's aggregate results (same shape as a static run).
+    pub report: AppRunReport,
+    /// The adaptation parameters the run executed under.
+    pub adapt: AdaptSpec,
+    /// Per-epoch trail, in replay order (empty when disabled).
+    pub epochs: Vec<EpochRecord>,
+    /// Total retunes applied (reduction and/or modulation changes).
+    pub retunes: u64,
+    /// Retunes that changed the signaling order.
+    pub mod_switches: u64,
+    /// Signaling order in effect when the replay ended.
+    pub final_modulation: Modulation,
+    /// LSB laser reduction in effect when the replay ended, percent.
+    pub final_reduction_pct: u32,
+}
+
+impl AdaptiveRunReport {
+    /// Wrap a static run (adaptation disabled): no epochs, no retunes,
+    /// and [`AdaptiveRunReport::to_ndjson`] equal to
+    /// [`AppRunReport::to_json`] byte-for-byte.
+    pub fn from_static(report: AppRunReport, adapt: AdaptSpec) -> AdaptiveRunReport {
+        AdaptiveRunReport {
+            adapt,
+            epochs: Vec::new(),
+            retunes: 0,
+            mod_switches: 0,
+            final_modulation: report.policy.kind.modulation(),
+            final_reduction_pct: report.policy.tuning.power_reduction_pct,
+            report,
+        }
+    }
+
+    /// Approximable-packet-weighted mean of the per-epoch quality-loss
+    /// proxy, percent (0 when no epoch carried approximable traffic).
+    pub fn mean_quality_loss_pct(&self) -> f64 {
+        let mut weight = 0u64;
+        let mut sum = 0.0;
+        for e in &self.epochs {
+            weight += e.approximable_packets;
+            sum += e.quality_loss_pct * e.approximable_packets as f64;
+        }
+        if weight == 0 {
+            0.0
+        } else {
+            sum / weight as f64
+        }
+    }
+
+    /// Worst single-epoch quality loss, percent — the number the
+    /// per-epoch bound actually constrains (0 with no epochs).
+    pub fn max_epoch_quality_loss_pct(&self) -> f64 {
+        self.epochs
+            .iter()
+            .filter(|e| e.approximable_packets > 0)
+            .map(|e| e.quality_loss_pct)
+            .fold(0.0, f64::max)
+    }
+
+    /// The `{"record":"adapt_summary",...}` closing NDJSON line.
+    pub fn summary_json(&self) -> String {
+        format!(
+            "{{\"record\":\"adapt_summary\",\"adapt\":{:?},\"epochs\":{},\"retunes\":{},\
+             \"mod_switches\":{},\"final_modulation\":{:?},\"final_reduction_pct\":{},\
+             \"mean_quality_loss_pct\":{},\"max_epoch_quality_loss_pct\":{},\
+             \"avg_laser_mw\":{}}}\n",
+            self.adapt.to_string(),
+            self.epochs.len(),
+            self.retunes,
+            self.mod_switches,
+            self.final_modulation.name(),
+            self.final_reduction_pct,
+            json_f64(self.mean_quality_loss_pct()),
+            json_f64(self.max_epoch_quality_loss_pct()),
+            json_f64(self.report.sim.avg_laser_mw),
+        )
+    }
+
+    /// The machine-readable form `lorax run --adapt --json` prints:
+    /// one `adapt_epoch` line per epoch, the ordinary run record, then
+    /// the `adapt_summary` line.  With adaptation disabled this is
+    /// *exactly* [`AppRunReport::to_json`] — no extra records — so the
+    /// disabled path diffs clean against a plain `lorax run`.
+    pub fn to_ndjson(&self) -> String {
+        if !self.adapt.enabled() {
+            return self.report.to_json();
+        }
+        let mut out = String::new();
+        for e in &self.epochs {
+            out.push_str(&e.to_json());
+        }
+        out.push_str(&self.report.to_json());
+        out.push_str(&self.summary_json());
+        out
+    }
+
+    /// Human-readable result: the run summary line plus one adaptation
+    /// line (epoch count, retunes, final tuning, quality trail).
+    pub fn summary(&self) -> String {
+        if !self.adapt.enabled() {
+            return self.report.summary();
+        }
+        format!(
+            "{}\n  adapt[{}]: {} epochs, {} retunes ({} order switches), \
+             final {} @ -{}% LSB laser, loss mean {:.3}% max {:.3}%",
+            self.report.summary(),
+            self.adapt,
+            self.epochs.len(),
+            self.retunes,
+            self.mod_switches,
+            self.final_modulation.name(),
+            self.final_reduction_pct,
+            self.mean_quality_loss_pct(),
+            self.max_epoch_quality_loss_pct(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(load: f64, quality_loss_pct: f64, approximable: u64) -> EpochObservation {
+        EpochObservation {
+            epoch: 0,
+            start_cycle: 0,
+            end_cycle: 1000,
+            packets: approximable.max(1),
+            photonic_packets: approximable,
+            approximable_packets: approximable,
+            reduced_packets: 0,
+            truncated_packets: 0,
+            laser_pj: 1.0,
+            occupancy_cycles: 0,
+            load,
+            quality_loss_pct,
+        }
+    }
+
+    #[test]
+    fn order_steps_saturate() {
+        assert_eq!(step_up(Modulation::OOK), Modulation::PAM4);
+        assert_eq!(step_up(Modulation::PAM16), Modulation::PAM16);
+        assert_eq!(step_down(Modulation::PAM8), Modulation::PAM4);
+        assert_eq!(step_down(Modulation::OOK), Modulation::OOK);
+    }
+
+    #[test]
+    fn quality_rules_ramp_and_back_off() {
+        let spec = AdaptSpec { epoch_cycles: 1000, power_step_pct: 20, ..AdaptSpec::default() };
+        let mut rules = RuleState::new(spec, Modulation::PAM4, 20);
+        // R2: plenty of headroom at moderate load — probe deeper.
+        let (_, red) = rules.decide(&obs(0.2, 0.5, 100));
+        assert_eq!(red, 40);
+        // R1: violation — back off and pin the ceiling there.
+        let (_, red) = rules.decide(&obs(0.2, 9.0, 100));
+        assert_eq!(red, 20);
+        assert_eq!(rules.red_ceiling, 20);
+        // R2 again: probing is capped by the violation ceiling (which
+        // relaxes a point per compliant epoch, not a step).
+        let (_, red) = rules.decide(&obs(0.2, 0.5, 100));
+        assert_eq!(red, 20);
+        assert_eq!(rules.red_ceiling, 21);
+        // Idle epochs say nothing about quality: no change.
+        let (_, red) = rules.decide(&obs(0.2, 0.0, 0));
+        assert_eq!(red, 20);
+    }
+
+    #[test]
+    fn load_rules_move_the_order_with_cooldown() {
+        let spec = AdaptSpec { epoch_cycles: 1000, ..AdaptSpec::default() };
+        // High load with shallow reduction buys bandwidth (R3)...
+        let mut rules = RuleState::new(spec, Modulation::PAM4, 0);
+        let (m, _) = rules.decide(&obs(0.9, 9.0, 100));
+        assert_eq!(m, Modulation::PAM8);
+        // ...then the one-epoch cooldown holds the order still.
+        let (m, _) = rules.decide(&obs(0.9, 9.0, 100));
+        assert_eq!(m, Modulation::PAM8);
+        let (m, _) = rules.decide(&obs(0.9, 9.0, 100));
+        assert_eq!(m, Modulation::PAM16);
+        // Idle fabric steps back down (R4).
+        let mut rules = RuleState::new(spec, Modulation::PAM8, 0);
+        let (m, _) = rules.decide(&obs(0.01, 9.0, 100));
+        assert_eq!(m, Modulation::PAM4);
+        // Deep reduction prefers a cheaper order even at moderate load.
+        let mut rules = RuleState::new(spec, Modulation::PAM8, MOD_SWITCH_REDUCTION);
+        let (m, red) = rules.decide(&obs(0.2, 0.5, 100));
+        assert!(red >= MOD_SWITCH_REDUCTION);
+        assert_eq!(m, Modulation::PAM4);
+    }
+}

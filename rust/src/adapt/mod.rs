@@ -1,0 +1,35 @@
+//! Online adaptive co-management: epoch-based laser/modulation retuning.
+//!
+//! Every other execution path in this crate is *static per run*: the GWI
+//! decision table is built once and replayed unchanged.  This module adds
+//! the PROTEUS-style alternative (arXiv 2008.07566): a rule-based
+//! monitor/controller pair that observes per-epoch load and error
+//! headroom through the [`crate::noc::sim::EpochHook`] replay hook and
+//! retunes the LSB laser-power reduction and the signaling order
+//! ([`crate::phys::params::Modulation`]) mid-simulation.
+//!
+//! The pieces:
+//!
+//! - [`AdaptSpec`] — the round-trippable text axis
+//!   (`:adapt=e2000,q5,h0.4,l0.1,p20` on an
+//!   [`crate::exec::ExperimentSpec`]): epoch length, quality bound, load
+//!   thresholds, retune step.
+//! - [`AdaptController`] — the [`crate::noc::sim::EpochHook`]
+//!   implementation.  Each retune resolves against
+//!   [`crate::coordinator::LoraxSession`]'s per-modulation engine slots
+//!   and memoized [`crate::exec::runner::DecisionTableCache`], so a
+//!   switch is a cached-table swap, not a table rebuild.
+//! - [`EpochRecord`] / [`AdaptiveRunReport`] — the per-epoch NDJSON
+//!   records and the run-level report `lorax run --adapt` and
+//!   `benches/adaptation.rs` emit.
+//!
+//! With adaptation disabled (`adapt=off`, or no `:adapt=` segment at
+//! all) nothing in this module runs and replay output is byte-identical
+//! to the static path — pinned by tests in `tests/properties.rs` and
+//! diffed in CI.
+
+mod controller;
+mod spec;
+
+pub use controller::{AdaptController, AdaptiveRunReport, EpochRecord};
+pub use spec::AdaptSpec;

@@ -1,0 +1,195 @@
+//! [`AdaptSpec`] — the text-form adaptation axis of an experiment spec.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Parameters of the epoch-based adaptation controller.
+///
+/// An `AdaptSpec` rides on [`crate::exec::ExperimentSpec`] as the
+/// `:adapt=` segment and round-trips through its text form:
+///
+/// ```
+/// use lorax::adapt::AdaptSpec;
+///
+/// let spec: AdaptSpec = "e2000,q5,h0.4,l0.1,p20".parse().unwrap();
+/// assert_eq!(spec.epoch_cycles, 2000);
+/// assert_eq!(spec.to_string().parse::<AdaptSpec>().unwrap(), spec);
+/// assert_eq!("off".parse::<AdaptSpec>().unwrap(), AdaptSpec::OFF);
+/// ```
+///
+/// Unspecified fields take the [`AdaptSpec::default`] values, so
+/// `adapt=e500` is a complete spec.  `epoch_cycles == 0` disables the
+/// controller entirely (canonical text form `off`); a disabled spec
+/// leaves the replay hot loop byte-identical to the static path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptSpec {
+    /// Epoch length in NoC cycles (`e<cycles>`); 0 disables adaptation.
+    pub epoch_cycles: u64,
+    /// Per-epoch quality-loss bound, percent (`q<pct>`): the controller
+    /// backs laser reduction off whenever an epoch's modeled quality
+    /// loss exceeds this, and probes deeper reduction while under half
+    /// of it.
+    pub quality_bound_pct: f64,
+    /// Load (waveguide occupancy fraction) above which the controller
+    /// steps the signaling order *up* for bandwidth (`h<load>`).
+    pub hi_load: f64,
+    /// Load below which it steps the order back *down* to cut static
+    /// laser power (`l<load>`).
+    pub lo_load: f64,
+    /// Laser-reduction retune step, percentage points per epoch
+    /// (`p<step>`); 0 = monitor-only (records epochs, never retunes).
+    pub power_step_pct: u32,
+}
+
+impl AdaptSpec {
+    /// The canonical disabled spec (text form `off`).  Any spec with
+    /// `epoch_cycles == 0` displays — and therefore re-parses — as this
+    /// value.
+    pub const OFF: AdaptSpec = AdaptSpec {
+        epoch_cycles: 0,
+        quality_bound_pct: 4.0,
+        hi_load: 0.35,
+        lo_load: 0.1,
+        power_step_pct: 20,
+    };
+
+    /// Does this spec run the controller at all?
+    pub fn enabled(&self) -> bool {
+        self.epoch_cycles != 0
+    }
+
+    /// Enabled but with a zero retune step: the controller observes and
+    /// records every epoch without ever changing the tuning.  This is
+    /// how the adaptation bench measures a *static* policy's per-epoch
+    /// quality under non-stationary traffic.
+    pub fn monitor_only(&self) -> bool {
+        self.enabled() && self.power_step_pct == 0
+    }
+
+    /// Check field ranges.  A disabled spec is always valid; the other
+    /// fields only constrain an enabled one.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        ensure!(
+            self.quality_bound_pct > 0.0 && self.quality_bound_pct.is_finite(),
+            "adapt: quality bound must be a positive percentage, got q{}",
+            self.quality_bound_pct
+        );
+        ensure!(
+            self.lo_load >= 0.0 && self.lo_load.is_finite(),
+            "adapt: low-load threshold must be >= 0, got l{}",
+            self.lo_load
+        );
+        ensure!(
+            self.hi_load > self.lo_load && self.hi_load.is_finite(),
+            "adapt: high-load threshold must exceed the low one, got h{} <= l{}",
+            self.hi_load,
+            self.lo_load
+        );
+        ensure!(
+            self.power_step_pct <= 100,
+            "adapt: power step is a percentage, got p{}",
+            self.power_step_pct
+        );
+        Ok(())
+    }
+}
+
+impl Default for AdaptSpec {
+    /// An enabled controller with the defaults the PROTEUS-style rule
+    /// table was tuned for: 2000-cycle epochs, 4% quality bound, 20-pt
+    /// retune step.
+    fn default() -> AdaptSpec {
+        AdaptSpec { epoch_cycles: 2000, ..AdaptSpec::OFF }
+    }
+}
+
+impl fmt::Display for AdaptSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if !self.enabled() {
+            return f.write_str("off");
+        }
+        write!(
+            f,
+            "e{},q{},h{},l{},p{}",
+            self.epoch_cycles,
+            self.quality_bound_pct,
+            self.hi_load,
+            self.lo_load,
+            self.power_step_pct
+        )
+    }
+}
+
+impl FromStr for AdaptSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<AdaptSpec, anyhow::Error> {
+        let lower = s.trim().to_ascii_lowercase();
+        if lower == "off" {
+            return Ok(AdaptSpec::OFF);
+        }
+        let mut spec = AdaptSpec::default();
+        for part in lower.split(',') {
+            let part = part.trim();
+            if let Some(v) = part.strip_prefix('e') {
+                spec.epoch_cycles =
+                    v.parse().with_context(|| format!("adapt epoch cycles {v:?}"))?;
+            } else if let Some(v) = part.strip_prefix('q') {
+                spec.quality_bound_pct =
+                    v.parse().with_context(|| format!("adapt quality bound {v:?}"))?;
+            } else if let Some(v) = part.strip_prefix('h') {
+                spec.hi_load = v.parse().with_context(|| format!("adapt high load {v:?}"))?;
+            } else if let Some(v) = part.strip_prefix('l') {
+                spec.lo_load = v.parse().with_context(|| format!("adapt low load {v:?}"))?;
+            } else if let Some(v) = part.strip_prefix('p') {
+                spec.power_step_pct =
+                    v.parse().with_context(|| format!("adapt power step {v:?}"))?;
+            } else {
+                bail!(
+                    "adapt spec {s:?}: unknown field {part:?} \
+                     (expected e<cycles>,q<pct>,h<load>,l<load>,p<step> or \"off\")"
+                );
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_off_round_trip() {
+        let d = AdaptSpec::default();
+        assert!(d.enabled() && !d.monitor_only());
+        assert_eq!(d.to_string(), "e2000,q4,h0.35,l0.1,p20");
+        assert_eq!(d.to_string().parse::<AdaptSpec>().unwrap(), d);
+        assert_eq!(AdaptSpec::OFF.to_string(), "off");
+        assert!(!AdaptSpec::OFF.enabled());
+        assert_eq!("OFF".parse::<AdaptSpec>().unwrap(), AdaptSpec::OFF);
+    }
+
+    #[test]
+    fn partial_specs_fill_defaults() {
+        let s: AdaptSpec = "e500".parse().unwrap();
+        assert_eq!(s, AdaptSpec { epoch_cycles: 500, ..AdaptSpec::default() });
+        let s: AdaptSpec = "e500,p0".parse().unwrap();
+        assert!(s.monitor_only());
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        for bad in ["e2000,q0", "e2000,q-1", "e2000,h0.1,l0.5", "e2000,p101", "e2000,x9", "wat"] {
+            assert!(bad.parse::<AdaptSpec>().is_err(), "{bad:?} should not parse");
+        }
+        // A disabled spec is valid regardless of the other fields.
+        assert!(AdaptSpec { quality_bound_pct: -1.0, ..AdaptSpec::OFF }.validate().is_ok());
+    }
+}

@@ -43,6 +43,7 @@ use crate::exec::spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 use crate::exec::trace_buf::TraceBuffer;
 use crate::exec::trace_file::{fnv1a64, TraceFile};
 use crate::exec::workload::{CachedWorkload, TraceCache, WorkloadCache};
+use crate::adapt::{AdaptController, AdaptSpec, AdaptiveRunReport};
 use crate::noc::sim::{SimReport, Simulator};
 use crate::phys::params::Modulation;
 use crate::topology::clos::ClosTopology;
@@ -218,8 +219,96 @@ impl LoraxSession {
     }
 
     /// Run one experiment with the native corruption backend.
+    ///
+    /// A spec with an enabled `:adapt=` axis routes through
+    /// [`LoraxSession::run_adaptive`] (same aggregate report, epoch
+    /// trail dropped); everything else takes the static path.
     pub fn run(&self, spec: &ExperimentSpec) -> Result<AppRunReport> {
+        if spec.adapt_enabled() {
+            return Ok(self.run_adaptive(spec)?.report);
+        }
         self.run_with_corruptor(spec, NativeCorruptor)
+    }
+
+    /// Run one experiment under the epoch-based adaptation controller
+    /// (see [`crate::adapt`]): the replay streams through
+    /// [`Simulator::replay_view_hooked`]
+    /// (`crate::noc::sim::Simulator::replay_view_hooked`) with an
+    /// [`AdaptController`] observing every epoch and retuning laser
+    /// reduction / signaling order against this session's cached
+    /// engines and decision tables.
+    ///
+    /// With adaptation disabled (no `:adapt=` axis, or `adapt=off`)
+    /// this is exactly [`LoraxSession::run`] wrapped in
+    /// [`AdaptiveRunReport::from_static`] — no hook on the replay path,
+    /// byte-identical output.
+    pub fn run_adaptive(&self, spec: &ExperimentSpec) -> Result<AdaptiveRunReport> {
+        let adapt = spec.adapt.unwrap_or(AdaptSpec::OFF);
+        if !adapt.enabled() {
+            let mut fixed = spec.clone();
+            fixed.adapt = None;
+            return Ok(AdaptiveRunReport::from_static(self.run(&fixed)?, adapt));
+        }
+        spec.validate()?;
+        ensure!(
+            spec.topology == self.topology_spec,
+            "spec topology {} != session topology {}",
+            spec.topology,
+            self.topology_spec
+        );
+        let policy = spec.resolved_policy();
+        let m = spec.resolved_modulation();
+        let table = self.decision_table(m, &policy);
+        let engine = self.engine(m);
+        let mut hook = AdaptController::new(self, adapt, policy, m);
+        let report = match &spec.traffic {
+            TrafficSpec::AppDriven => {
+                // Same live channel pass as the static path (the
+                // controller manages the replay side; payload
+                // corruption stays under the starting policy), then the
+                // hooked replay.
+                let cached = self.workload(spec.app);
+                let golden = cached.golden();
+                let mut ch = PhotonicChannel::with_decisions(
+                    engine,
+                    policy,
+                    NativeCorruptor,
+                    self.cfg.seed as u32,
+                    &table,
+                );
+                let out = cached.workload.run(&mut ch);
+                let error_pct = output_error_pct(golden, &out);
+                let buf = TraceBuffer::from_records(&self.topo, &ch.take_trace());
+                let mut sim = Simulator::new(engine);
+                sim.energy_params = self.cfg.energy.clone();
+                let sim_report = sim.replay_view_hooked(buf.view(), &policy, &table, &mut hook);
+                AppRunReport {
+                    app: spec.app.name().to_string(),
+                    policy,
+                    error_pct,
+                    sim: sim_report,
+                    stats: *ch.stats(),
+                    lut_accesses: ch.lut_accesses,
+                }
+            }
+            TrafficSpec::Synthetic(synth) => {
+                let file = self.traces.get_or_record(&self.synth_trace_key(synth), || {
+                    TraceBuffer::from_records(&self.topo, &generate(synth))
+                });
+                let mut sim = Simulator::new(engine);
+                sim.energy_params = self.cfg.energy.clone();
+                let sim_report = sim.replay_view_hooked(file.view(), &policy, &table, &mut hook);
+                AppRunReport {
+                    app: spec.app.name().to_string(),
+                    policy,
+                    error_pct: 0.0,
+                    sim: sim_report,
+                    stats: ChannelStats::default(),
+                    lut_accesses: 0,
+                }
+            }
+        };
+        Ok(hook.into_report(report))
     }
 
     /// Run one experiment with an arbitrary corruption backend (e.g. the
@@ -322,13 +411,14 @@ impl LoraxSession {
     /// trace generation is deterministic in, plus the fabric.
     fn synth_trace_key(&self, s: &SynthConfig) -> String {
         format!(
-            "{}|{:?}|r{}|c{}|f{}|s{}",
+            "{}|{:?}|r{}|c{}|f{}|s{}|{}",
             self.topology_spec,
             s.pattern,
             s.rate_per_100_cycles,
             s.cycles,
             s.float_fraction,
-            s.seed
+            s.seed,
+            s.profile
         )
     }
 
@@ -545,6 +635,7 @@ mod tests {
                 cycles: 2_000,
                 float_fraction: 0.6,
                 seed: 5,
+                ..Default::default()
             }),
         );
         let r = session.run(&spec).unwrap();
@@ -567,6 +658,7 @@ mod tests {
             cycles: 1_500,
             float_fraction: 0.5,
             seed: 9,
+            ..Default::default()
         });
         for kind in [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4] {
             let spec =
@@ -585,6 +677,7 @@ mod tests {
                 cycles: 1_500,
                 float_fraction: 0.5,
                 seed: 10,
+                ..Default::default()
             }),
         );
         session.run(&other).unwrap();
@@ -605,6 +698,41 @@ mod tests {
         assert_eq!(via_run.sim.energy.total_pj(), via_file.sim.energy.total_pj());
         assert_eq!(via_run.sim.latency_p95, via_file.sim.latency_p95);
         assert_eq!(via_run.to_json(), via_file.to_json());
+    }
+
+    #[test]
+    fn adaptive_disabled_is_byte_identical_to_a_static_run() {
+        let session = LoraxSession::new(&small_cfg());
+        let base: ExperimentSpec = "fft:LORAX-OOK:synth=uniform,r20,c2000,f0.6,s5".parse().unwrap();
+        let plain = session.run(&base).unwrap();
+        let off = base.with_adapt(AdaptSpec::OFF);
+        let r = session.run_adaptive(&off).unwrap();
+        assert!(r.epochs.is_empty());
+        assert_eq!(r.to_ndjson(), plain.to_json());
+        assert_eq!(r.summary(), plain.summary());
+    }
+
+    #[test]
+    fn adaptive_synthetic_run_records_epochs() {
+        let session = LoraxSession::new(&small_cfg());
+        let spec: ExperimentSpec =
+            "fft:LORAX-PAM4:synth=transpose,r30,c8000,f0.8,s3,phase2000:adapt=e1000,q4,h0.4,l0.05,p20"
+                .parse()
+                .unwrap();
+        let r = session.run_adaptive(&spec).unwrap();
+        assert!(r.report.sim.packets > 0);
+        // 8000 cycles at e1000: eight whole epochs (the trailing
+        // boundary only flushes if a partial epoch carried packets).
+        assert!(r.epochs.len() >= 8, "{}", r.epochs.len());
+        let ndjson = r.to_ndjson();
+        let lines: Vec<&str> = ndjson.lines().collect();
+        assert_eq!(lines.len(), r.epochs.len() + 2);
+        assert!(lines[0].starts_with("{\"record\":\"adapt_epoch\""), "{}", lines[0]);
+        assert!(lines.last().unwrap().starts_with("{\"record\":\"adapt_summary\""));
+        // `run` on an adapt-enabled spec routes through the controller
+        // deterministically: same aggregate record both ways.
+        let via_run = session.run(&spec).unwrap();
+        assert_eq!(via_run.to_json(), r.report.to_json());
     }
 
     #[test]

@@ -150,6 +150,7 @@ pub fn synth_stress_grid(
                         cycles,
                         float_fraction: 0.6,
                         seed,
+                        ..Default::default()
                     },
                     policy,
                     tuning,

@@ -13,6 +13,8 @@
 //! fft:LORAX-PAM4:b16r100t16                # explicit tuning
 //! sobel:LORAX-PAM8                         # higher signaling orders
 //! fft:baseline:synth=hotspot2,r40,c20000,f0.6,s42   # synthetic traffic
+//! fft:LORAX-OOK:synth=transpose,r30,c40000,phase5000   # non-stationary
+//! sobel:LORAX-PAM8:adapt=e2000,q5,h0.4,l0.1,p20        # epoch adaptation
 //! sobel:LORAX-OOK:@clos64:%pam8            # explicit topology/modulation
 //! ```
 
@@ -21,11 +23,12 @@ use std::str::FromStr;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::adapt::AdaptSpec;
 use crate::approx::policy::{default_tuning, AppTuning, Policy, PolicyKind};
 use crate::apps::AppId;
 use crate::phys::params::Modulation;
 use crate::topology::clos::ClosTopology;
-use crate::traffic::synth::{Pattern, SynthConfig};
+use crate::traffic::synth::{Pattern, SynthConfig, TimeProfile};
 
 use super::grid::AppScenario;
 
@@ -107,6 +110,9 @@ pub struct ExperimentSpec {
     pub topology: TopologySpec,
     /// Modulation override, or `None` for the policy's native order.
     pub modulation: Option<Modulation>,
+    /// Epoch-based adaptation, or `None` (≡ [`AdaptSpec::OFF`]) for the
+    /// static replay path.
+    pub adapt: Option<AdaptSpec>,
 }
 
 impl ExperimentSpec {
@@ -120,6 +126,7 @@ impl ExperimentSpec {
             traffic: TrafficSpec::AppDriven,
             topology: TopologySpec::Clos64,
             modulation: None,
+            adapt: None,
         }
     }
 
@@ -139,6 +146,18 @@ impl ExperimentSpec {
     pub fn with_modulation(mut self, modulation: Modulation) -> ExperimentSpec {
         self.modulation = Some(modulation);
         self
+    }
+
+    /// Attach an epoch-adaptation axis ([`AdaptSpec::OFF`] keeps the
+    /// static path and is equivalent to no axis at all).
+    pub fn with_adapt(mut self, adapt: AdaptSpec) -> ExperimentSpec {
+        self.adapt = Some(adapt);
+        self
+    }
+
+    /// Whether this spec runs the adaptive (epoch-retuning) replay path.
+    pub fn adapt_enabled(&self) -> bool {
+        self.adapt.is_some_and(|a| a.enabled())
     }
 
     /// Typed spec for one sweep-grid cell (the app name is validated
@@ -175,16 +194,21 @@ impl ExperimentSpec {
             );
         }
         if let TrafficSpec::Synthetic(s) = &self.traffic {
-            ensure!(s.cycles > 0, "synthetic traffic: cycles must be > 0");
+            // A zero rate or zero cycle count is a valid (empty) trace:
+            // it records, spills and replays like any other.
             ensure!(
                 (0.0..=1.0).contains(&s.float_fraction),
                 "synthetic traffic: float_fraction {} outside [0, 1]",
                 s.float_fraction
             );
+            s.profile.validate()?;
             if let Pattern::Hotspot { cluster } = s.pattern {
                 let n = self.topology.build().n_clusters;
                 ensure!(cluster < n, "synthetic traffic: hotspot cluster {cluster} >= {n}");
             }
+        }
+        if let Some(a) = self.adapt {
+            a.validate()?;
         }
         Ok(())
     }
@@ -202,12 +226,14 @@ impl fmt::Display for ExperimentSpec {
             write!(
                 f,
                 ":synth={},r{},c{},f{},s{}",
-                pattern_name(s.pattern),
-                s.rate_per_100_cycles,
-                s.cycles,
-                s.float_fraction,
-                s.seed
+                s.pattern, s.rate_per_100_cycles, s.cycles, s.float_fraction, s.seed
             )?;
+            if s.profile != TimeProfile::Stationary {
+                write!(f, ",{}", s.profile)?;
+            }
+        }
+        if let Some(a) = self.adapt {
+            write!(f, ":adapt={a}")?;
         }
         if self.topology != TopologySpec::default() {
             write!(f, ":@{}", self.topology)?;
@@ -239,10 +265,20 @@ impl FromStr for ExperimentSpec {
     /// assert_eq!(spec.to_string(), "fft:LORAX-PAM4:b16r100t16:%PAM8");
     ///
     /// // Synthetic traffic: pattern, rate/100 cycles, cycles, float
-    /// // fraction, seed.
+    /// // fraction, seed, and an optional time-varying profile.
     /// let spec: ExperimentSpec =
     ///     "fft:baseline:synth=hotspot2,r40,c20000,f0.6,s42".parse().unwrap();
     /// assert!(matches!(spec.traffic, TrafficSpec::Synthetic(_)));
+    /// let spec: ExperimentSpec =
+    ///     "fft:LORAX-OOK:synth=transpose,r30,c40000,phase5000".parse().unwrap();
+    /// assert!(matches!(spec.traffic, TrafficSpec::Synthetic(_)));
+    ///
+    /// // Epoch-based adaptation (epoch cycles, quality bound %, load
+    /// // thresholds, power step %); `adapt=off` keeps the static path.
+    /// let spec: ExperimentSpec =
+    ///     "sobel:LORAX-PAM8:adapt=e2000,q5,h0.4,l0.1,p20".parse().unwrap();
+    /// assert!(spec.adapt_enabled());
+    /// assert!(!"sobel:LORAX-PAM8:adapt=off".parse::<ExperimentSpec>().unwrap().adapt_enabled());
     ///
     /// // Every spec round-trips through Display, and bad specs fail
     /// // with an error naming the valid choices.
@@ -270,6 +306,8 @@ impl FromStr for ExperimentSpec {
                 spec.modulation = Some(m.parse()?);
             } else if let Some(synth) = part.strip_prefix("synth=") {
                 spec.traffic = TrafficSpec::Synthetic(parse_synth(synth)?);
+            } else if let Some(adapt) = part.strip_prefix("adapt=") {
+                spec.adapt = Some(adapt.parse()?);
             } else if part.starts_with('b') {
                 spec.tuning = Some(parse_tuning(part)?);
             } else {
@@ -278,34 +316,6 @@ impl FromStr for ExperimentSpec {
         }
         spec.validate()?;
         Ok(spec)
-    }
-}
-
-fn pattern_name(p: Pattern) -> String {
-    match p {
-        Pattern::Uniform => "uniform".to_string(),
-        Pattern::Hotspot { cluster } => format!("hotspot{cluster}"),
-        Pattern::Transpose => "transpose".to_string(),
-        Pattern::Neighbor => "neighbor".to_string(),
-    }
-}
-
-fn parse_pattern(s: &str) -> Result<Pattern> {
-    match s {
-        "uniform" => Ok(Pattern::Uniform),
-        "transpose" => Ok(Pattern::Transpose),
-        "neighbor" => Ok(Pattern::Neighbor),
-        _ => {
-            let cluster = s
-                .strip_prefix("hotspot")
-                .and_then(|c| c.parse::<usize>().ok())
-                .with_context(|| {
-                    format!(
-                        "unknown pattern {s:?} (known: uniform, hotspot<n>, transpose, neighbor)"
-                    )
-                })?;
-            Ok(Pattern::Hotspot { cluster })
-        }
     }
 }
 
@@ -322,15 +332,21 @@ fn parse_tuning(s: &str) -> Result<AppTuning> {
     })
 }
 
-/// `<pattern>,r<rate>,c<cycles>,f<float_fraction>,s<seed>`.
+/// `<pattern>,r<rate>,c<cycles>,f<float_fraction>,s<seed>[,<profile>]`
+/// — the profile field is any [`TimeProfile`] text form
+/// (e.g. `bursty4000x25`, `diurnal10000`, `flash5000x2000x4`,
+/// `phase2500`) and defaults to stationary.
 fn parse_synth(s: &str) -> Result<SynthConfig> {
     let mut parts = s.split(',');
-    let pattern = parse_pattern(
-        parts.next().with_context(|| format!("synth {s:?}: missing pattern"))?,
-    )?;
+    let pattern: Pattern =
+        parts.next().with_context(|| format!("synth {s:?}: missing pattern"))?.parse()?;
     let mut cfg = SynthConfig { pattern, ..SynthConfig::default() };
     for p in parts {
-        if let Some(v) = p.strip_prefix('r') {
+        // Profile keywords first: `stationary` and `flash...` would
+        // otherwise be eaten by the single-letter `s`/`f` prefixes.
+        if is_profile_field(p) {
+            cfg.profile = p.parse()?;
+        } else if let Some(v) = p.strip_prefix('r') {
             cfg.rate_per_100_cycles =
                 v.parse().with_context(|| format!("synth {s:?}: bad rate {p:?}"))?;
         } else if let Some(v) = p.strip_prefix('c') {
@@ -345,6 +361,14 @@ fn parse_synth(s: &str) -> Result<SynthConfig> {
         }
     }
     Ok(cfg)
+}
+
+/// Whether a `synth=` field names a [`TimeProfile`] (vs the one-letter
+/// numeric prefixes).
+fn is_profile_field(p: &str) -> bool {
+    let lower = p.to_ascii_lowercase();
+    lower == "stationary"
+        || ["bursty", "diurnal", "flash", "phase"].iter().any(|k| lower.starts_with(k))
 }
 
 #[cfg(test)]
@@ -364,6 +388,7 @@ mod tests {
             .with_tuning(AppTuning { approx_bits: 16, power_reduction_pct: 100, trunc_bits: 16 })
             .with_traffic(TrafficSpec::Synthetic(SynthConfig {
                 pattern: Pattern::Hotspot { cluster: 2 },
+                profile: TimeProfile::Stationary,
                 rate_per_100_cycles: 40,
                 cycles: 20_000,
                 float_fraction: 0.6,
@@ -373,6 +398,38 @@ mod tests {
         let shown = spec.to_string();
         assert_eq!(shown, "fft:LORAX-PAM4:b16r100t16:synth=hotspot2,r40,c20000,f0.6,s42:%PAM4");
         assert_eq!(shown.parse::<ExperimentSpec>().unwrap(), spec);
+    }
+
+    #[test]
+    fn profiled_and_adaptive_specs_roundtrip() {
+        let spec = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_OOK)
+            .with_traffic(TrafficSpec::Synthetic(SynthConfig {
+                pattern: Pattern::Transpose,
+                profile: TimeProfile::PhaseShift { period: 5000 },
+                rate_per_100_cycles: 30,
+                cycles: 40_000,
+                float_fraction: 0.6,
+                seed: 7,
+            }))
+            .with_adapt(AdaptSpec { epoch_cycles: 2000, ..AdaptSpec::default() });
+        let shown = spec.to_string();
+        assert_eq!(shown.parse::<ExperimentSpec>().unwrap(), spec, "{shown}");
+        assert!(shown.contains("phase5000"), "{shown}");
+        assert!(shown.contains(":adapt=e2000"), "{shown}");
+        // Disabled adaptation round-trips as `adapt=off`.
+        let off = ExperimentSpec::new(AppId::Fft, PolicyKind::LORAX_OOK).with_adapt(AdaptSpec::OFF);
+        assert_eq!(off.to_string(), "fft:LORAX-OOK:adapt=off");
+        assert_eq!(off.to_string().parse::<ExperimentSpec>().unwrap(), off);
+    }
+
+    #[test]
+    fn empty_synthetic_traces_are_valid_specs() {
+        for text in
+            ["fft:baseline:synth=uniform,r0,c5000,f0.5,s1", "fft:baseline:synth=uniform,c0"]
+        {
+            let spec: ExperimentSpec = text.parse().unwrap_or_else(|e| panic!("{text}: {e:#}"));
+            assert!(spec.validate().is_ok(), "{text}");
+        }
     }
 
     #[test]
@@ -426,6 +483,10 @@ mod tests {
         assert!("sobel:baseline:synth=hotspot9,r1,c100,f0.5,s1"
             .parse::<ExperimentSpec>()
             .is_err());
+        assert!("sobel:baseline:synth=uniform,bursty0x50".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:synth=uniform,sawtooth4".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:adapt=e2000,q0".parse::<ExperimentSpec>().is_err());
+        assert!("sobel:baseline:adapt=wat".parse::<ExperimentSpec>().is_err());
     }
 
     #[test]

@@ -49,6 +49,14 @@
 //! `docs/ARCHITECTURE.md` for the full layer walkthrough and format
 //! spec).
 //!
+//! Policies need not be static per run: the [`adapt`] module layers a
+//! PROTEUS-style epoch controller on replay (`lorax run --adapt`),
+//! observing per-epoch load and quality headroom through the
+//! `noc::sim::EpochHook` and retuning LSB laser reduction and signaling
+//! order mid-simulation via the session's cached decision tables —
+//! exercised against the non-stationary [`traffic::synth`] profiles
+//! (bursty, diurnal, flash-crowd, phase-shifting).
+//!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -66,6 +74,7 @@
 
 #![warn(missing_docs)]
 
+pub mod adapt;
 pub mod approx;
 pub mod apps;
 pub mod config;

@@ -5,7 +5,10 @@
 //! lorax characterize                         # Fig. 2
 //! lorax run --spec sobel:LORAX-OOK [--json]  # one typed ExperimentSpec
 //! lorax run --app fft --policy baseline      # same, from app/policy flags
+//! lorax run --spec ... --adapt e2000,q4 --json  # epoch-adaptive run (NDJSON)
 //! lorax sweep --app fft [--grid small]       # Fig. 6, parallel sweep engine
+//! lorax sweep --patterns transpose,hotspot2 --profile phase5000 --adapt e2000
+//!                                            # traffic-shape study
 //! lorax sweep --apps all --jobs 8            # every evaluated app
 //! lorax sweep --mods ook,pam4,pam8           # signaling-order study
 //! lorax sweep --json --apps all              # ordered cell grid as NDJSON
@@ -106,7 +109,7 @@ fn run() -> Result<()> {
         "config" => println!("{}", cfg.describe()),
         "characterize" => emit(&figures::fig2_characterization(&cfg)?, csv),
         "run" => {
-            let spec: ExperimentSpec = match (args.get("spec"), args.get("app")) {
+            let mut spec: ExperimentSpec = match (args.get("spec"), args.get("app")) {
                 (Some(s), _) => s.parse()?,
                 (None, Some(app)) => {
                     let kind: PolicyKind = args.get_or("policy", "LORAX-OOK").parse()?;
@@ -114,16 +117,39 @@ fn run() -> Result<()> {
                 }
                 (None, None) => bail!("--spec <spec> or --app <name> required for run"),
             };
+            // --adapt overlays (or overrides) the spec's adaptation
+            // axis; `--adapt off` pins the static path explicitly.
+            if let Some(a) = args.get("adapt") {
+                spec = spec.with_adapt(a.parse().context("parsing --adapt")?);
+            }
             let session = LoraxSession::new(&cfg);
-            let report = session.run(&spec)?;
-            if args.flag("json") {
-                print!("{}", report.to_json());
+            if spec.adapt_enabled() {
+                let report = session.run_adaptive(&spec)?;
+                if args.flag("json") {
+                    print!("{}", report.to_ndjson());
+                } else {
+                    println!("{}", report.summary());
+                    println!("{}", report.report.sim.summary());
+                    emit(&figures::adaptation_timeline(&cfg, &report), csv);
+                }
             } else {
-                println!("{}", report.summary());
-                println!("{}", report.sim.summary());
+                let report = session.run(&spec)?;
+                if args.flag("json") {
+                    print!("{}", report.to_json());
+                } else {
+                    println!("{}", report.summary());
+                    println!("{}", report.sim.summary());
+                }
             }
         }
         "sweep" => {
+            // --patterns turns the sweep into a traffic-shape study:
+            // named synthetic patterns (x optional time profile, x
+            // policies), each optionally under the adaptation
+            // controller.
+            if args.get("patterns").is_some() {
+                return sweep_patterns_cmd(&cfg, &args);
+            }
             // --mods turns the sweep into the signaling-order study:
             // LORAX at each PAM level, laser power and output quality
             // per scheme (modulation is the third experiment axis).
@@ -230,6 +256,66 @@ fn run() -> Result<()> {
         "verify-bridge" => verify_bridge(&cfg)?,
         _ => {
             println!("{}", main_doc());
+        }
+    }
+    Ok(())
+}
+
+/// `lorax sweep --patterns <p1,p2,...>` — the traffic-shape study.
+///
+/// Runs one synthetic-traffic spec per (pattern × policy), every
+/// pattern name going through `Pattern::FromStr` (so a typo lists the
+/// valid names), with an optional non-stationary `--profile` and an
+/// optional `--adapt` controller spec applied to every cell.  `--json`
+/// emits each cell's NDJSON (per-epoch records included when
+/// adaptation is on).
+fn sweep_patterns_cmd(cfg: &SystemConfig, args: &Args) -> Result<()> {
+    use lorax::exec::TrafficSpec;
+    use lorax::traffic::synth::{Pattern, SynthConfig, TimeProfile};
+
+    let patterns = args
+        .get("patterns")
+        .unwrap_or("uniform")
+        .split(',')
+        .map(|s| s.trim().parse::<Pattern>())
+        .collect::<Result<Vec<Pattern>>>()?;
+    let profile: TimeProfile = args.get_or("profile", "stationary").parse()?;
+    let adapt: Option<lorax::adapt::AdaptSpec> = match args.get("adapt") {
+        Some(a) => Some(a.parse().context("parsing --adapt")?),
+        None => None,
+    };
+    let kinds: Vec<PolicyKind> = match args.get("policies") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().parse()).collect::<Result<Vec<PolicyKind>>>()?
+        }
+        None => vec![args.get_or("policy", "LORAX-OOK").parse()?],
+    };
+    let app: AppId = args.get_or("app", "fft").parse()?;
+    let rate = args.get_u64("rate", 30)? as u32;
+    let cycles = args.get_u64("cycles", 20_000)?;
+    let session = LoraxSession::new(cfg);
+    for &pattern in &patterns {
+        for &kind in &kinds {
+            let mut spec = ExperimentSpec::new(app, kind).with_traffic(TrafficSpec::Synthetic(
+                SynthConfig {
+                    pattern,
+                    profile,
+                    rate_per_100_cycles: rate,
+                    cycles,
+                    float_fraction: 0.6,
+                    seed: cfg.seed,
+                },
+            ));
+            if let Some(a) = adapt {
+                spec = spec.with_adapt(a);
+            }
+            let report = session.run_adaptive(&spec)?;
+            if args.flag("json") {
+                print!("{}", report.to_ndjson());
+            } else {
+                println!("{spec}");
+                println!("{}", report.summary());
+            }
         }
     }
     Ok(())
@@ -438,6 +524,9 @@ COMMANDS
   characterize   Fig. 2  — float/int traffic per application
   run            one typed experiment (--spec <app>:<policy>[:b<b>r<r>t<t>]
                  | --app <name> [--policy <name>]) [--json]
+                 [--adapt e<cyc>,q<pct>,h<load>,l<load>,p<step>|off] runs
+                 the epoch adaptation controller (per-epoch records +
+                 adapt_summary in --json; timeline table otherwise)
   sweep          Fig. 6  — sensitivity surfaces on the parallel sweep engine
                  (--app <name> | --apps <a,b|all>, [--policy <name>]
                   [--grid small|tiny] [--jobs <n>]); with --mods
@@ -450,7 +539,12 @@ COMMANDS
                    --fabric --workers <n> [--shard-size <n>]
                    [--policies <a,b>] [--fault-plan crash:2@3,...]
                  (fault kinds: crash:<w>@<s>[+k] drop dup delay corrupt;
-                  --json emits one record per cell + fabric_health)
+                  --json emits one record per cell + fabric_health);
+                 with --patterns <uniform,hotspot<n>,transpose,neighbor>
+                 runs the traffic-shape study instead ([--profile
+                 stationary|bursty<p>x<d>|diurnal<p>|flash<a>x<w>x<x>|
+                 phase<p>] [--rate <n>] [--cycles <n>] [--policies <a,b>]
+                 [--adapt <spec>])
   tune           Table 3 — application-specific parameter selection ([--jobs <n>])
   simulate       one (app, policy) run (--app <name> --policy <name> [--xla])
   jpeg           Fig. 7  — JPEG quality panels (--outdir <dir>)

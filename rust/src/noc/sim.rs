@@ -18,12 +18,15 @@
 //! bit-identical and still allocation-free.  [`Simulator::run`] keeps
 //! the historical AoS entry point by packing and delegating.
 
+use std::sync::Arc;
+
 use crate::approx::policy::{Policy, TransferMode};
 use crate::coordinator::gwi::{Decision, DecisionTable, GwiDecisionEngine};
 use crate::energy::breakdown::EnergyBreakdown;
 use crate::energy::params::EnergyParams;
 use crate::exec::trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
 use crate::traffic::trace::TraceRecord;
+use crate::util::rng::ALWAYS;
 use crate::util::stats::{CycleHistogram, Welford};
 
 use super::linkmodel::{
@@ -83,6 +86,153 @@ impl SimReport {
     }
 }
 
+/// What the replay observed over one adaptation epoch — the input to an
+/// [`EpochHook`]'s rule evaluation.
+///
+/// All counters cover packets whose *inject cycle* falls inside
+/// `[start_cycle, end_cycle)`; energy and occupancy are charged to the
+/// epoch of the packet that caused them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochObservation {
+    /// Epoch index (0-based, monotonically increasing).
+    pub epoch: u64,
+    /// First cycle covered (inclusive).
+    pub start_cycle: u64,
+    /// One past the last cycle covered.
+    pub end_cycle: u64,
+    /// Packets injected during the epoch (all kinds).
+    pub packets: u64,
+    /// Packets that crossed a photonic (inter-cluster) link.
+    pub photonic_packets: u64,
+    /// Photonic packets eligible for approximation.
+    pub approximable_packets: u64,
+    /// Approximable packets sent with LSBs at reduced laser power.
+    pub reduced_packets: u64,
+    /// Approximable packets sent with LSB wavelengths off.
+    pub truncated_packets: u64,
+    /// Laser energy charged during the epoch, pJ.
+    pub laser_pj: f64,
+    /// Source-waveguide occupancy charged during the epoch, cycles.
+    pub occupancy_cycles: u64,
+    /// Offered load: occupancy cycles over (epoch span × waveguides).
+    /// Can exceed 1 under backlog.
+    pub load: f64,
+    /// Mean per-approximable-packet quality-loss proxy, percent: the
+    /// fraction of mantissa bits at risk weighted by their flip
+    /// probability (see [`quality_loss_fraction`]).  The controller's
+    /// *error headroom* is its quality bound minus this.
+    pub quality_loss_pct: f64,
+}
+
+impl EpochObservation {
+    /// Epoch span in cycles.
+    pub fn span(&self) -> u64 {
+        self.end_cycle.saturating_sub(self.start_cycle)
+    }
+}
+
+/// A mid-replay retune returned by an [`EpochHook`]: the engine, policy
+/// and decision table every packet from the next one on is charged
+/// against.  Carrying an [`Arc`] table means a retune is a cached-table
+/// swap (see [`crate::exec::DecisionTableCache`]), not a rebuild.
+pub struct ReplayTuning<'e> {
+    /// Decision engine (fabric calibration: modulation, provisioning).
+    pub engine: &'e GwiDecisionEngine,
+    /// Policy the remaining packets run under.
+    pub policy: Policy,
+    /// Decision table matching (engine, policy).
+    pub decisions: Arc<DecisionTable>,
+}
+
+/// Epoch-boundary callback driving mid-replay retuning — the monitor
+/// half of the [`crate::adapt`] subsystem's monitor/controller pair.
+///
+/// Contract: [`EpochHook::on_epoch`] fires once per elapsed epoch in
+/// inject-cycle order (including empty epochs, so an idle controller
+/// still sees silence), plus once for the trailing partial epoch (whose
+/// retune result is ignored — no packets remain).  With
+/// [`EpochHook::epoch_cycles`] `== 0` the hook is never consulted and
+/// the replay is byte-identical to the static path.
+pub trait EpochHook<'e> {
+    /// Epoch length in cycles; 0 disables epoch accounting entirely.
+    fn epoch_cycles(&self) -> u64;
+    /// Observe one finished epoch; optionally retune the replay.
+    fn on_epoch(&mut self, obs: &EpochObservation) -> Option<ReplayTuning<'e>>;
+}
+
+/// The no-op hook behind [`Simulator::replay_view`]: no epochs, no
+/// retuning, no per-packet accounting overhead.
+pub struct StaticEpochs;
+
+impl<'e> EpochHook<'e> for StaticEpochs {
+    fn epoch_cycles(&self) -> u64 {
+        0
+    }
+    fn on_epoch(&mut self, _obs: &EpochObservation) -> Option<ReplayTuning<'e>> {
+        None
+    }
+}
+
+/// Replay-side quality-loss proxy for one approximable photonic packet,
+/// in [0, 1]: the fraction of mantissa bits the decision puts at risk
+/// (`popcount(mask)/32`) weighted by the masked bits' loss probability —
+/// 1 for truncated wavelengths (bits dropped outright), the 1→0 flip
+/// threshold `t10/ALWAYS` for reduced ones, 0 at full power.  Synthetic
+/// traffic has no workload output to measure eq.-3 error against, so
+/// this channel-model proxy is what the adaptation controller steers on.
+pub fn quality_loss_fraction(d: &Decision) -> f64 {
+    let at_risk = d.mask.count_ones() as f64 / 32.0;
+    match d.mode {
+        TransferMode::FullPower => 0.0,
+        TransferMode::Truncated => at_risk,
+        TransferMode::Reduced { .. } => at_risk * (d.t10 as f64 / ALWAYS as f64),
+    }
+}
+
+/// Per-epoch accumulators of the hooked replay loop.
+#[derive(Default)]
+struct EpochCounters {
+    packets: u64,
+    photonic: u64,
+    approximable: u64,
+    reduced: u64,
+    truncated: u64,
+    occupancy: u64,
+    q_sum: f64,
+}
+
+impl EpochCounters {
+    fn observe(
+        &self,
+        epoch: u64,
+        start: u64,
+        end: u64,
+        laser_pj: f64,
+        n_waveguides: usize,
+    ) -> EpochObservation {
+        let span = end.saturating_sub(start).max(1);
+        let quality_loss_pct = if self.approximable == 0 {
+            0.0
+        } else {
+            100.0 * self.q_sum / self.approximable as f64
+        };
+        EpochObservation {
+            epoch,
+            start_cycle: start,
+            end_cycle: end,
+            packets: self.packets,
+            photonic_packets: self.photonic,
+            approximable_packets: self.approximable,
+            reduced_packets: self.reduced,
+            truncated_packets: self.truncated,
+            laser_pj,
+            occupancy_cycles: self.occupancy,
+            load: self.occupancy as f64 / (span as f64 * n_waveguides as f64),
+            quality_loss_pct,
+        }
+    }
+}
+
 /// Cycle-level simulator over a decision engine.
 pub struct Simulator<'a> {
     /// The GWI decision engine (and with it: topology, photonic
@@ -129,8 +279,25 @@ impl<'a> Simulator<'a> {
         policy: &Policy,
         decisions: &DecisionTable,
     ) -> SimReport {
-        let p = &self.engine.params;
-        let m = self.engine.waveguides.modulation;
+        self.replay_view_hooked(buf, policy, decisions, &mut StaticEpochs)
+    }
+
+    /// [`Simulator::replay_view`] with an [`EpochHook`] observing (and
+    /// optionally retuning) the replay at epoch boundaries.
+    ///
+    /// With a zero epoch length the epoch branches never execute and
+    /// the result is byte-identical to the static path — pinned by
+    /// tests.  A retune swaps the engine, policy and decision table
+    /// used for all later packets; the queueing state (per-waveguide
+    /// next-free cycles) carries across untouched, so a modulation
+    /// switch models in-flight reconfiguration, not a restart.
+    pub fn replay_view_hooked<'e, H: EpochHook<'e>>(
+        &self,
+        buf: TraceView<'_>,
+        policy: &Policy,
+        decisions: &DecisionTable,
+        hook: &mut H,
+    ) -> SimReport {
         let n_clusters = self.engine.topo.n_clusters;
         assert!(n_clusters <= MAX_CLUSTERS, "topology too large for replay state");
         assert!(decisions.n_clusters() >= n_clusters, "decision table too small");
@@ -143,12 +310,51 @@ impl<'a> Simulator<'a> {
         let mut photonic = 0u64;
         let mut reduced = 0u64;
         let mut truncated = 0u64;
-        let loss_aware = policy.loss_aware();
         let lut_access_pj = self.energy_params.lut_access_pj;
         let lut_latency = self.energy_params.lut_latency_cycles;
 
+        // Replay tuning state; a retune swaps all three coherently.
+        let mut cur_engine = self.engine;
+        let mut cur_policy = *policy;
+        let mut cur_table: Option<Arc<DecisionTable>> = None;
+        let mut loss_aware = cur_policy.loss_aware();
+
+        // Epoch accounting (entirely skipped when epoch_len == 0).
+        let epoch_len = hook.epoch_cycles();
+        let mut epoch_idx = 0u64;
+        let mut epoch_start = 0u64;
+        let mut epoch_end = epoch_len;
+        let mut ep = EpochCounters::default();
+        let mut laser_mark = 0f64;
+
         for i in 0..buf.len() {
             let inject = buf.inject_cycle[i];
+            if epoch_len != 0 {
+                // Flush every epoch that ended before this packet
+                // (including empty ones: an idle controller still gets
+                // to power down during silence).
+                while inject >= epoch_end {
+                    let obs = ep.observe(
+                        epoch_idx,
+                        epoch_start,
+                        epoch_end,
+                        energy.laser_pj - laser_mark,
+                        n_clusters,
+                    );
+                    if let Some(t) = hook.on_epoch(&obs) {
+                        cur_engine = t.engine;
+                        cur_policy = t.policy;
+                        cur_table = Some(t.decisions);
+                        loss_aware = cur_policy.loss_aware();
+                    }
+                    ep = EpochCounters::default();
+                    laser_mark = energy.laser_pj;
+                    epoch_idx += 1;
+                    epoch_start = epoch_end;
+                    epoch_end += epoch_len;
+                }
+                ep.packets += 1;
+            }
             let flags = buf.flags[i];
             let el_hops = buf.el_hops[i] as u32;
             let view = FlitView { kind: buf.kind[i], payload_words: buf.payload_words[i] };
@@ -158,17 +364,22 @@ impl<'a> Simulator<'a> {
                 let sc = buf.src_cluster[i] as usize;
                 let dc = buf.dst_cluster[i] as usize;
                 let approximable = flags & FLAG_APPROX != 0;
-                let decision =
-                    if approximable { *decisions.get(sc, dc) } else { Decision::FULL };
+                let table = match &cur_table {
+                    Some(t) => t.as_ref(),
+                    None => decisions,
+                };
+                let decision = if approximable { *table.get(sc, dc) } else { Decision::FULL };
                 match decision.mode {
                     TransferMode::Reduced { .. } => reduced += 1,
                     TransferMode::Truncated => truncated += 1,
                     TransferMode::FullPower => {}
                 }
+                let p = &cur_engine.params;
+                let m = cur_engine.waveguides.modulation;
                 let ctx = LinkContext {
                     params: p,
                     energy: &self.energy_params,
-                    provisioning: &self.engine.waveguides.provisioning[sc],
+                    provisioning: &cur_engine.waveguides.provisioning[sc],
                     n_reader_banks: (n_clusters - 1) as u32,
                 };
                 let mut pe = flit_energy(&ctx, view, &decision, el_hops);
@@ -184,6 +395,19 @@ impl<'a> Simulator<'a> {
                 let start = ready.max(wg_free[sc]);
                 let occupancy = flit_occupancy_cycles(view, p, m);
                 wg_free[sc] = start + occupancy;
+                if epoch_len != 0 {
+                    ep.photonic += 1;
+                    ep.occupancy += occupancy;
+                    if approximable {
+                        ep.approximable += 1;
+                        ep.q_sum += quality_loss_fraction(&decision);
+                        match decision.mode {
+                            TransferMode::Reduced { .. } => ep.reduced += 1,
+                            TransferMode::Truncated => ep.truncated += 1,
+                            TransferMode::FullPower => {}
+                        }
+                    }
+                }
                 let mut f = start + occupancy + dst_el;
                 if loss_aware && approximable {
                     f += lut_latency;
@@ -197,6 +421,19 @@ impl<'a> Simulator<'a> {
             latency.push(lat as f64);
             hist.push(lat);
             last_finish = last_finish.max(finish);
+        }
+
+        // Trailing partial epoch: observed for the record stream, but
+        // any retune it returns has no packets left to apply to.
+        if epoch_len != 0 && ep.packets > 0 {
+            let obs = ep.observe(
+                epoch_idx,
+                epoch_start,
+                epoch_end,
+                energy.laser_pj - laser_mark,
+                n_clusters,
+            );
+            let _ = hook.on_epoch(&obs);
         }
 
         // Static lookup-table power over the whole run (loss-aware only).
@@ -251,6 +488,7 @@ mod tests {
             cycles: 2000,
             float_fraction: 0.7,
             seed: 42,
+            ..Default::default()
         })
     }
 
@@ -373,6 +611,88 @@ mod tests {
         assert_eq!(a.energy.total_pj(), b.energy.total_pj());
         assert_eq!(a.latency_p95, b.latency_p95);
         assert_eq!(a.reduced_packets, b.reduced_packets);
+    }
+
+    /// Records every observation, never retunes.
+    struct MonitorHook {
+        epoch_cycles: u64,
+        seen: Vec<EpochObservation>,
+    }
+
+    impl<'e> EpochHook<'e> for MonitorHook {
+        fn epoch_cycles(&self) -> u64 {
+            self.epoch_cycles
+        }
+        fn on_epoch(&mut self, obs: &EpochObservation) -> Option<ReplayTuning<'e>> {
+            self.seen.push(*obs);
+            None
+        }
+    }
+
+    #[test]
+    fn monitor_hook_is_invisible_to_results() {
+        // A hook that observes but never retunes must not perturb any
+        // simulation output, only add the epoch record stream.
+        let e = engine(Modulation::OOK);
+        let sim = Simulator::new(&e);
+        let t = trace();
+        let p = Policy::new(PolicyKind::LORAX_OOK, "blackscholes");
+        let buf = TraceBuffer::from_records(&e.topo, &t);
+        let table = DecisionTable::build(&e, &p);
+        let a = sim.replay_view(buf.view(), &p, &table);
+        let mut hook = MonitorHook { epoch_cycles: 500, seen: Vec::new() };
+        let b = sim.replay_view_hooked(buf.view(), &p, &table, &mut hook);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+        assert_eq!(a.latency_p95, b.latency_p95);
+        assert_eq!(a.reduced_packets, b.reduced_packets);
+        assert_eq!(a.truncated_packets, b.truncated_packets);
+        // 2000 trace cycles / 500-cycle epochs -> 4 full epochs (the
+        // last one partial, still observed).
+        assert!(hook.seen.len() >= 4, "epochs={}", hook.seen.len());
+        assert_eq!(hook.seen[0].start_cycle, 0);
+        assert_eq!(hook.seen[0].end_cycle, 500);
+        let total: u64 = hook.seen.iter().map(|o| o.packets).sum();
+        assert_eq!(total, a.packets);
+        let laser: f64 = hook.seen.iter().map(|o| o.laser_pj).sum();
+        assert!((laser - a.energy.laser_pj).abs() < 1e-6, "{laser} vs {}", a.energy.laser_pj);
+        assert!(hook.seen.iter().all(|o| o.load > 0.0));
+        assert!(hook.seen.iter().all(|o| o.quality_loss_pct >= 0.0));
+    }
+
+    #[test]
+    fn zero_epoch_hook_is_the_static_path() {
+        let e = engine(Modulation::OOK);
+        let sim = Simulator::new(&e);
+        let t = trace();
+        let p = Policy::new(PolicyKind::LORAX_OOK, "fft");
+        let buf = TraceBuffer::from_records(&e.topo, &t);
+        let table = DecisionTable::build(&e, &p);
+        let a = sim.replay_view(buf.view(), &p, &table);
+        let mut hook = MonitorHook { epoch_cycles: 0, seen: Vec::new() };
+        let b = sim.replay_view_hooked(buf.view(), &p, &table, &mut hook);
+        assert!(hook.seen.is_empty(), "zero epoch length must never fire the hook");
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+    }
+
+    #[test]
+    fn quality_loss_fraction_ranks_modes() {
+        let full = Decision::FULL;
+        assert_eq!(quality_loss_fraction(&full), 0.0);
+        let reduced = Decision {
+            mode: TransferMode::Reduced { level: 0.5 },
+            mask: 0xFFFF,
+            t10: ALWAYS / 100,
+            t01: 0,
+            level: 0.5,
+        };
+        let truncated =
+            Decision { mode: TransferMode::Truncated, mask: 0xFFFF, t10: ALWAYS, t01: 0, level: 0.0 };
+        let r = quality_loss_fraction(&reduced);
+        let t = quality_loss_fraction(&truncated);
+        assert!(r > 0.0 && r < t, "r={r} t={t}");
+        assert!((t - 0.5).abs() < 1e-12);
     }
 
     #[test]

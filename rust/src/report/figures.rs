@@ -278,6 +278,36 @@ pub fn signaling_comparison(
     Ok(t)
 }
 
+/// Adaptation timeline — one row per controller epoch: what the traffic
+/// did (load, packets), what it cost (laser power), what the quality
+/// proxy said, and the (modulation, reduction) tuning in effect, with a
+/// `*` marking epochs whose boundary retuned the replay.  The table
+/// form of the `adapt_epoch` NDJSON records `lorax run --adapt --json`
+/// emits.
+pub fn adaptation_timeline(cfg: &SystemConfig, report: &crate::adapt::AdaptiveRunReport) -> Table {
+    let mut t = Table::new(
+        &format!("Adaptation timeline — {} epochs [{}]", report.epochs.len(), report.adapt),
+        &["epoch", "cycles", "pkts", "load", "laser mW", "order", "reduction", "loss %", ""],
+    );
+    let cycle_ns = cfg.energy.cycle_ns();
+    for e in &report.epochs {
+        let span = e.end_cycle.saturating_sub(e.start_cycle).max(1);
+        let laser_mw = e.laser_pj / (span as f64 * cycle_ns);
+        t.row(&[
+            e.epoch.to_string(),
+            format!("{}..{}", e.start_cycle, e.end_cycle),
+            e.packets.to_string(),
+            Table::f(e.load, 3),
+            Table::f(laser_mw, 3),
+            e.modulation.name().to_string(),
+            format!("{}%", e.reduction_pct),
+            Table::f(e.quality_loss_pct, 3),
+            if e.retuned { "*".to_string() } else { String::new() },
+        ]);
+    }
+    t
+}
+
 /// §5.3 headline numbers from a set of Fig.-8 runs: average and best-case
 /// reductions of LORAX-OOK / LORAX-PAM4 vs baseline, [16] and truncation.
 pub fn headline_summary(all: &[Vec<AppRunReport>]) -> Table {
@@ -372,6 +402,23 @@ mod tests {
         assert!(r.contains("PAM8"), "{r}");
         assert!(r.contains("laser mW"), "{r}");
         assert!(signaling_comparison(&cfg, &["nope"], &mods).is_err());
+    }
+
+    #[test]
+    fn adaptation_timeline_rows_per_epoch() {
+        let cfg = tiny();
+        let session = LoraxSession::new(&cfg);
+        let spec: crate::exec::ExperimentSpec =
+            "fft:LORAX-OOK:synth=uniform,r25,c4000,f0.7,s2,bursty1000x50:adapt=e1000"
+                .parse()
+                .unwrap();
+        let r = session.run_adaptive(&spec).unwrap();
+        let t = adaptation_timeline(&cfg, &r);
+        assert_eq!(t.n_rows(), r.epochs.len());
+        assert!(t.n_rows() >= 4, "{}", t.n_rows());
+        let rendered = t.render();
+        assert!(rendered.contains("laser mW"), "{rendered}");
+        assert!(rendered.contains("OOK"), "{rendered}");
     }
 
     #[test]

@@ -1,11 +1,31 @@
-//! Synthetic traffic generators for NoC stress benches and property tests
-//! (uniform-random, hotspot, transpose, nearest-neighbour cluster
-//! patterns at a configurable injection rate).
+//! Synthetic traffic generators for NoC stress benches, property tests
+//! and the adaptation studies: spatial patterns (uniform-random,
+//! hotspot, transpose, nearest-neighbour cluster) at a configurable
+//! injection rate, optionally shaped in time by a [`TimeProfile`]
+//! (bursty on/off, diurnal, flash-crowd, phase-shifting).
+//!
+//! Determinism contract: a trace is a pure function of its
+//! [`SynthConfig`].  The generator draws exactly one Bernoulli variate
+//! per (cycle, core) regardless of profile — a [`TimeProfile`] only
+//! moves the acceptance threshold and rotates destinations, so the
+//! [`TimeProfile::Stationary`] path reproduces the original stationary
+//! generator bit-for-bit (pinned in `tests/properties.rs`).
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Context};
 
 use super::packet::{Packet, PayloadKind, LINE_WORDS};
 use super::trace::TraceRecord;
 use crate::topology::clos::NodeId;
 use crate::util::rng::Rng;
+
+/// Cores per cluster in the generated 64-core system (destination
+/// rotation advances in units of this).
+const CLUSTER_CORES: u64 = 8;
+/// Cores in the generated system.
+const N_CORES: u64 = 64;
 
 /// Synthetic spatial traffic patterns.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,11 +33,238 @@ pub enum Pattern {
     /// Uniform random core-to-core.
     Uniform,
     /// All cores target cores of one hotspot cluster.
-    Hotspot { cluster: usize },
+    Hotspot {
+        /// Cluster index every core targets.
+        cluster: usize,
+    },
     /// Core i -> core (i + n/2) mod n (maximal ring distance).
     Transpose,
     /// Core i -> a core in the ring-adjacent cluster.
     Neighbor,
+}
+
+impl fmt::Display for Pattern {
+    /// Canonical lowercase name; [`FromStr`] parses it back
+    /// (`hotspot<cluster>` carries its cluster inline).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pattern::Uniform => f.write_str("uniform"),
+            Pattern::Hotspot { cluster } => write!(f, "hotspot{cluster}"),
+            Pattern::Transpose => f.write_str("transpose"),
+            Pattern::Neighbor => f.write_str("neighbor"),
+        }
+    }
+}
+
+impl FromStr for Pattern {
+    type Err = anyhow::Error;
+
+    /// Case-insensitive pattern name, mirroring
+    /// [`crate::phys::params::Modulation`]'s `FromStr`: unknown names
+    /// fail with an error listing the valid choices.
+    ///
+    /// ```
+    /// use lorax::traffic::synth::Pattern;
+    /// assert_eq!("Uniform".parse::<Pattern>().unwrap(), Pattern::Uniform);
+    /// assert_eq!("HOTSPOT3".parse::<Pattern>().unwrap(), Pattern::Hotspot { cluster: 3 });
+    /// let err = "ring".parse::<Pattern>().unwrap_err().to_string();
+    /// assert!(err.contains("uniform, hotspot<cluster>, transpose, neighbor"));
+    /// ```
+    fn from_str(s: &str) -> Result<Pattern, anyhow::Error> {
+        let lower = s.trim().to_ascii_lowercase();
+        match lower.as_str() {
+            "uniform" => Ok(Pattern::Uniform),
+            "transpose" => Ok(Pattern::Transpose),
+            "neighbor" => Ok(Pattern::Neighbor),
+            _ => {
+                let cluster = lower
+                    .strip_prefix("hotspot")
+                    .and_then(|c| c.parse::<usize>().ok())
+                    .with_context(|| {
+                        format!(
+                            "unknown pattern {s:?} (known: uniform, hotspot<cluster>, \
+                             transpose, neighbor)"
+                        )
+                    })?;
+                Ok(Pattern::Hotspot { cluster })
+            }
+        }
+    }
+}
+
+/// Time-varying envelope applied on top of a spatial [`Pattern`] — the
+/// non-stationary shapes a service under real traffic sees, and what
+/// the [`crate::adapt`] controller reacts to.  Every variant is a pure
+/// function of the cycle index: no extra RNG draws, so traces stay
+/// deterministic per seed and composable with every pattern.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TimeProfile {
+    /// Constant injection rate (the original generator; the default).
+    #[default]
+    Stationary,
+    /// On/off square wave: base rate for the first `duty_pct`% of every
+    /// `period` cycles, silence for the rest.
+    Bursty {
+        /// Burst period in cycles.
+        period: u64,
+        /// On-fraction of each period, percent (0..=100).
+        duty_pct: u32,
+    },
+    /// Sinusoidal rate swing `rate x (1 - cos(2pi t / period))` — peaks
+    /// at 2x the base rate, troughs at 0, mean equal to the base rate.
+    Diurnal {
+        /// Full day-night period in cycles.
+        period: u64,
+    },
+    /// Base rate everywhere except a `width`-cycle window starting at
+    /// cycle `at`, where the rate is multiplied by `peak_x`.
+    FlashCrowd {
+        /// First cycle of the crowd window.
+        at: u64,
+        /// Window length in cycles.
+        width: u64,
+        /// Rate multiplier inside the window (>= 1).
+        peak_x: u32,
+    },
+    /// Every `period` cycles the spatial pattern's destination cluster
+    /// advances by one (rate unchanged) — the working set migrates, so
+    /// path loss and with it the safe approximation depth drift over
+    /// time.  Phase 0 is the identity.
+    PhaseShift {
+        /// Cycles between destination-cluster rotations.
+        period: u64,
+    },
+}
+
+impl TimeProfile {
+    /// Effective injection rate (packets per core per 100 cycles) at
+    /// `cycle` for a configured `base` rate.  Values above 100 saturate
+    /// the per-(cycle, core) Bernoulli draw at certain injection.
+    pub fn rate_at(&self, cycle: u64, base: u32) -> u32 {
+        match *self {
+            TimeProfile::Stationary | TimeProfile::PhaseShift { .. } => base,
+            TimeProfile::Bursty { period, duty_pct } => {
+                let period = period.max(1);
+                if (cycle % period) as u128 * 100 < period as u128 * duty_pct as u128 {
+                    base
+                } else {
+                    0
+                }
+            }
+            TimeProfile::Diurnal { period } => {
+                let period = period.max(1);
+                let t = (cycle % period) as f64 / period as f64;
+                let swing = 1.0 - (std::f64::consts::TAU * t).cos();
+                (base as f64 * swing).round() as u32
+            }
+            TimeProfile::FlashCrowd { at, width, peak_x } => {
+                if cycle >= at && cycle - at < width {
+                    base.saturating_mul(peak_x)
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Destination-cluster rotation (in clusters) in force at `cycle`.
+    /// Zero for every profile except [`TimeProfile::PhaseShift`].
+    pub fn phase_at(&self, cycle: u64) -> u64 {
+        match *self {
+            TimeProfile::PhaseShift { period } => cycle / period.max(1),
+            _ => 0,
+        }
+    }
+
+    /// Reject meaningless parameterizations (zero periods or windows,
+    /// duty cycles above 100%, sub-unity flash multipliers).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            TimeProfile::Stationary => {}
+            TimeProfile::Bursty { period, duty_pct } => {
+                ensure!(period > 0, "bursty profile: period must be > 0");
+                ensure!(duty_pct <= 100, "bursty profile: duty {duty_pct}% > 100");
+            }
+            TimeProfile::Diurnal { period } => {
+                ensure!(period > 0, "diurnal profile: period must be > 0");
+            }
+            TimeProfile::FlashCrowd { width, peak_x, .. } => {
+                ensure!(width > 0, "flash profile: width must be > 0");
+                ensure!(peak_x >= 1, "flash profile: peak multiplier must be >= 1");
+            }
+            TimeProfile::PhaseShift { period } => {
+                ensure!(period > 0, "phase profile: period must be > 0");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for TimeProfile {
+    /// Canonical lowercase form of the `synth=` profile field;
+    /// [`FromStr`] parses it back.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            TimeProfile::Stationary => f.write_str("stationary"),
+            TimeProfile::Bursty { period, duty_pct } => write!(f, "bursty{period}x{duty_pct}"),
+            TimeProfile::Diurnal { period } => write!(f, "diurnal{period}"),
+            TimeProfile::FlashCrowd { at, width, peak_x } => {
+                write!(f, "flash{at}x{width}x{peak_x}")
+            }
+            TimeProfile::PhaseShift { period } => write!(f, "phase{period}"),
+        }
+    }
+}
+
+impl FromStr for TimeProfile {
+    type Err = anyhow::Error;
+
+    /// Case-insensitive profile form: `stationary`,
+    /// `bursty<period>x<duty%>`, `diurnal<period>`,
+    /// `flash<at>x<width>x<peak>`, or `phase<period>`.
+    ///
+    /// ```
+    /// use lorax::traffic::synth::TimeProfile;
+    /// assert_eq!(
+    ///     "bursty4000x25".parse::<TimeProfile>().unwrap(),
+    ///     TimeProfile::Bursty { period: 4000, duty_pct: 25 }
+    /// );
+    /// assert!("sawtooth9".parse::<TimeProfile>().is_err());
+    /// ```
+    fn from_str(s: &str) -> Result<TimeProfile, anyhow::Error> {
+        let malformed = || {
+            format!(
+                "unknown traffic profile {s:?} (known: stationary, bursty<period>x<duty%>, \
+                 diurnal<period>, flash<at>x<width>x<peak>, phase<period>)"
+            )
+        };
+        let lower = s.trim().to_ascii_lowercase();
+        let profile = if lower == "stationary" {
+            TimeProfile::Stationary
+        } else if let Some(body) = lower.strip_prefix("bursty") {
+            let (period, duty) = body.split_once('x').with_context(malformed)?;
+            TimeProfile::Bursty {
+                period: period.parse().with_context(malformed)?,
+                duty_pct: duty.parse().with_context(malformed)?,
+            }
+        } else if let Some(body) = lower.strip_prefix("diurnal") {
+            TimeProfile::Diurnal { period: body.parse().with_context(malformed)? }
+        } else if let Some(body) = lower.strip_prefix("flash") {
+            let (at, rest) = body.split_once('x').with_context(malformed)?;
+            let (width, peak) = rest.split_once('x').with_context(malformed)?;
+            TimeProfile::FlashCrowd {
+                at: at.parse().with_context(malformed)?,
+                width: width.parse().with_context(malformed)?,
+                peak_x: peak.parse().with_context(malformed)?,
+            }
+        } else if let Some(body) = lower.strip_prefix("phase") {
+            TimeProfile::PhaseShift { period: body.parse().with_context(malformed)? }
+        } else {
+            bail!(malformed())
+        };
+        profile.validate()?;
+        Ok(profile)
+    }
 }
 
 /// Generator configuration.
@@ -25,6 +272,8 @@ pub enum Pattern {
 pub struct SynthConfig {
     /// Spatial destination pattern.
     pub pattern: Pattern,
+    /// Time-varying envelope over the pattern (default stationary).
+    pub profile: TimeProfile,
     /// Packets injected per core per 100 cycles (injection rate x100).
     pub rate_per_100_cycles: u32,
     /// Total cycles of generated traffic.
@@ -39,6 +288,7 @@ impl Default for SynthConfig {
     fn default() -> Self {
         SynthConfig {
             pattern: Pattern::Uniform,
+            profile: TimeProfile::Stationary,
             rate_per_100_cycles: 10,
             cycles: 10_000,
             float_fraction: 0.5,
@@ -47,18 +297,24 @@ impl Default for SynthConfig {
     }
 }
 
-/// Generate a synthetic trace over the 64-core system.
+/// Generate a synthetic trace over the 64-core system.  A zero rate or
+/// zero cycle count yields a valid empty trace (callers need not
+/// filter; empty traces record, spill and replay like any other).
 pub fn generate(cfg: &SynthConfig) -> Vec<TraceRecord> {
-    let n_cores = 64u8;
+    let n_cores = N_CORES as u8;
     let mut rng = Rng::new(cfg.seed);
     let mut out = Vec::new();
     for cycle in 0..cfg.cycles {
+        let rate = cfg.profile.rate_at(cycle, cfg.rate_per_100_cycles) as usize;
+        let phase = cfg.profile.phase_at(cycle);
         for core in 0..n_cores {
-            // Bernoulli injection at the configured rate.
-            if rng.below(100) >= cfg.rate_per_100_cycles as usize {
+            // Bernoulli injection at the effective rate.  The variate
+            // is drawn unconditionally so every profile walks the same
+            // draw sequence as the stationary generator.
+            if rng.below(100) >= rate {
                 continue;
             }
-            let dst = pick_dst(cfg.pattern, core, n_cores, &mut rng);
+            let dst = rotate_cluster(pick_dst(cfg.pattern, core, n_cores, &mut rng), phase);
             if dst == NodeId::Core(core) {
                 continue;
             }
@@ -93,6 +349,20 @@ fn pick_dst(pattern: Pattern, src: u8, n: u8, rng: &mut Rng) -> NodeId {
             let next_cluster = (src as usize / 8 + 1) % 8;
             NodeId::Core((next_cluster * 8 + rng.below(8)) as u8)
         }
+    }
+}
+
+/// Advance a core destination's cluster by `phase` (keeping the
+/// within-cluster offset).  Phase 0 is the identity, so stationary
+/// traffic never enters this arithmetic.
+fn rotate_cluster(dst: NodeId, phase: u64) -> NodeId {
+    if phase == 0 {
+        return dst;
+    }
+    let shift = (phase % (N_CORES / CLUSTER_CORES)) * CLUSTER_CORES;
+    match dst {
+        NodeId::Core(c) => NodeId::Core(((c as u64 + shift) % N_CORES) as u8),
+        other => other,
     }
 }
 
@@ -164,5 +434,121 @@ mod tests {
     fn no_self_traffic() {
         let t = generate(&SynthConfig { cycles: 2000, ..Default::default() });
         assert!(t.iter().all(|r| r.packet.src != r.packet.dst));
+    }
+
+    #[test]
+    fn zero_rate_and_zero_cycles_yield_empty_traces() {
+        let none = generate(&SynthConfig { rate_per_100_cycles: 0, ..Default::default() });
+        assert!(none.is_empty());
+        let none = generate(&SynthConfig { cycles: 0, ..Default::default() });
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn pattern_names_roundtrip_case_insensitively() {
+        let all =
+            [Pattern::Uniform, Pattern::Hotspot { cluster: 5 }, Pattern::Transpose, Pattern::Neighbor];
+        for p in all {
+            let shown = p.to_string();
+            assert_eq!(shown.parse::<Pattern>().unwrap(), p, "{shown}");
+            assert_eq!(shown.to_uppercase().parse::<Pattern>().unwrap(), p, "{shown}");
+        }
+        let err = "mesh".parse::<Pattern>().unwrap_err().to_string();
+        assert!(err.contains("uniform, hotspot<cluster>, transpose, neighbor"), "{err}");
+    }
+
+    #[test]
+    fn profile_forms_roundtrip() {
+        let all = [
+            TimeProfile::Stationary,
+            TimeProfile::Bursty { period: 4000, duty_pct: 25 },
+            TimeProfile::Diurnal { period: 10_000 },
+            TimeProfile::FlashCrowd { at: 5000, width: 2000, peak_x: 4 },
+            TimeProfile::PhaseShift { period: 2500 },
+        ];
+        for p in all {
+            let shown = p.to_string();
+            assert_eq!(shown.parse::<TimeProfile>().unwrap(), p, "{shown}");
+            assert_eq!(shown.to_uppercase().parse::<TimeProfile>().unwrap(), p, "{shown}");
+        }
+        for bad in ["sawtooth9", "bursty100x101", "diurnal0", "flash0x0x2", "phase0", "bursty9"] {
+            assert!(bad.parse::<TimeProfile>().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn bursty_profile_gates_injection_windows() {
+        let period = 1000u64;
+        let t = generate(&SynthConfig {
+            profile: TimeProfile::Bursty { period, duty_pct: 30 },
+            rate_per_100_cycles: 40,
+            cycles: 8000,
+            ..Default::default()
+        });
+        assert!(!t.is_empty());
+        // Every packet lands inside the first 30% of its period.
+        assert!(t.iter().all(|r| (r.inject_cycle % period) * 100 < period * 30));
+    }
+
+    #[test]
+    fn diurnal_profile_peaks_mid_period() {
+        let period = 4000u64;
+        let t = generate(&SynthConfig {
+            profile: TimeProfile::Diurnal { period },
+            rate_per_100_cycles: 30,
+            cycles: period,
+            ..Default::default()
+        });
+        let mid = t
+            .iter()
+            .filter(|r| {
+                let pos = r.inject_cycle % period;
+                pos >= period / 4 && pos < 3 * period / 4
+            })
+            .count();
+        // The central half-period around the cosine peak carries the
+        // bulk of the day's traffic.
+        assert!(mid * 2 > t.len(), "mid={mid} total={}", t.len());
+    }
+
+    #[test]
+    fn flash_crowd_multiplies_rate_in_window() {
+        let t = generate(&SynthConfig {
+            profile: TimeProfile::FlashCrowd { at: 2000, width: 1000, peak_x: 5 },
+            rate_per_100_cycles: 10,
+            cycles: 6000,
+            ..Default::default()
+        });
+        let inside = t.iter().filter(|r| (2000..3000).contains(&r.inject_cycle)).count();
+        let before = t.iter().filter(|r| r.inject_cycle < 1000).count();
+        assert!(inside > 3 * before, "inside={inside} before={before}");
+    }
+
+    #[test]
+    fn phase_shift_rotates_destination_clusters() {
+        let topo = ClosTopology::default_64core();
+        let period = 1000u64;
+        let t = generate(&SynthConfig {
+            pattern: Pattern::Hotspot { cluster: 0 },
+            profile: TimeProfile::PhaseShift { period },
+            rate_per_100_cycles: 20,
+            cycles: 4000,
+            ..Default::default()
+        });
+        assert!(!t.is_empty());
+        for r in &t {
+            let want = ((r.inject_cycle / period) % 8) as usize;
+            assert_eq!(topo.cluster_of(r.packet.dst), want, "cycle {}", r.inject_cycle);
+        }
+    }
+
+    #[test]
+    fn profiles_preserve_seed_determinism() {
+        let cfg = SynthConfig {
+            profile: TimeProfile::Diurnal { period: 2000 },
+            cycles: 4000,
+            ..Default::default()
+        };
+        assert_eq!(generate(&cfg), generate(&cfg));
     }
 }

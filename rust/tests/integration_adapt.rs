@@ -1,0 +1,93 @@
+//! End-to-end pins for the epoch-adaptation subsystem and the
+//! empty-trace corner of the synthetic generator.
+//!
+//! Adaptive runs enter through the same surface as static ones (spec
+//! text -> session -> trace cache -> replay), so every test here drives
+//! the stack from a parsed spec string, exactly like the CLI does.
+
+use lorax::adapt::AdaptSpec;
+use lorax::config::SystemConfig;
+use lorax::coordinator::LoraxSession;
+use lorax::exec::{ExperimentSpec, TraceFile};
+
+fn small_cfg() -> SystemConfig {
+    SystemConfig { scale: 0.02, seed: 11, ..Default::default() }
+}
+
+/// With loss headroom the controller must actually act: a loss-aware
+/// policy starting at zero reduction measures zero epoch loss, so rule
+/// R2 fires on the very first epoch and keeps ramping from there.
+#[test]
+fn adaptive_run_retunes_under_phase_traffic() {
+    let session = LoraxSession::new(&small_cfg());
+    let spec: ExperimentSpec =
+        "fft:LORAX-PAM4:b0r0t0:synth=transpose,r30,c8000,f0.8,s3,phase2000:adapt=e1000,q4,p20"
+            .parse()
+            .unwrap();
+    let r = session.run_adaptive(&spec).unwrap();
+    assert!(r.epochs.len() >= 8, "expected full epochs, got {}", r.epochs.len());
+    assert!(r.retunes > 0, "no retunes over {} epochs", r.epochs.len());
+    assert!(r.final_reduction_pct > 0);
+    assert!(r.epochs.iter().any(|e| e.retuned));
+    // The NDJSON stream carries one adapt_epoch line per epoch plus the
+    // run record and the adapt_summary trailer.
+    let ndjson = r.to_ndjson();
+    assert_eq!(ndjson.lines().count(), r.epochs.len() + 2);
+    assert!(ndjson.contains("\"record\":\"adapt_epoch\""));
+    assert!(ndjson.contains("\"record\":\"adapt_summary\""));
+}
+
+/// Monitor-only adaptation (`p0`) observes every epoch but never
+/// perturbs the run: zero retunes, and the inner report byte-identical
+/// to the plain static run of the same cells.
+#[test]
+fn monitor_only_observes_without_perturbing_the_run() {
+    let session = LoraxSession::new(&small_cfg());
+    let base = "fft:LORAX-OOK:synth=uniform,r25,c6000,f0.7,s9";
+    let spec: ExperimentSpec = format!("{base}:adapt=e1500,q4,p0").parse().unwrap();
+    assert!(spec.adapt.unwrap().monitor_only());
+    let r = session.run_adaptive(&spec).unwrap();
+    assert_eq!(r.retunes, 0);
+    assert_eq!(r.mod_switches, 0);
+    assert!(r.epochs.len() >= 4, "got {} epochs", r.epochs.len());
+    let fixed = session.run(&base.parse().unwrap()).unwrap();
+    assert_eq!(r.report.to_json(), fixed.to_json());
+}
+
+/// The empty-trace satellite: a zero rate or zero cycle count yields a
+/// valid empty trace through every surface — session run (trace cache),
+/// record -> `.ltrace` file -> replay, and the adaptive path — with all
+/// report fields finite.
+#[test]
+fn empty_synthetic_traces_flow_through_every_surface() {
+    let session = LoraxSession::new(&small_cfg());
+    let dir = std::env::temp_dir().join("lorax_integration_adapt_empty");
+    std::fs::create_dir_all(&dir).unwrap();
+    let texts = ["fft:baseline:synth=uniform,r0,c5000,f0.5,s1", "fft:baseline:synth=uniform,c0"];
+    for (i, text) in texts.iter().enumerate() {
+        let spec: ExperimentSpec = text.parse().unwrap_or_else(|e| panic!("{text}: {e:#}"));
+        let live = session.run(&spec).unwrap();
+        assert_eq!(live.sim.packets, 0, "{text}");
+        assert_eq!(live.sim.cycles, 0, "{text}");
+        assert_eq!(live.sim.epb_pj, 0.0, "{text}");
+        assert!(live.sim.avg_laser_mw.is_finite(), "{text}");
+        assert!(live.sim.latency_p95.is_finite(), "{text}");
+
+        let buf = session.record_trace(&spec).unwrap();
+        assert!(buf.is_empty(), "{text}");
+        let path = dir.join(format!("empty{i}.ltrace"));
+        TraceFile::create(&path, &buf).unwrap();
+        let file = TraceFile::open(&path).unwrap();
+        assert_eq!(file.len(), 0, "{text}");
+        let replayed = session.replay_trace(&spec, &file).unwrap();
+        assert_eq!(replayed.sim.packets, 0, "{text}");
+        assert_eq!(replayed.sim.cycles, 0, "{text}");
+
+        // An empty trace spans zero simulated cycles, so the adaptive
+        // path observes no epochs and changes nothing.
+        let adapt = AdaptSpec { epoch_cycles: 500, ..AdaptSpec::OFF };
+        let adaptive = session.run_adaptive(&spec.clone().with_adapt(adapt)).unwrap();
+        assert!(adaptive.epochs.is_empty(), "{text}");
+        assert_eq!(adaptive.retunes, 0, "{text}");
+    }
+}

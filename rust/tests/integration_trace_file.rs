@@ -102,6 +102,7 @@ fn one_mapping_shared_across_parallel_replays() {
         cycles: 4_000,
         float_fraction: 0.7,
         seed: 21,
+        ..Default::default()
     };
     let base = ExperimentSpec::new(AppId::Fft, PolicyKind::Baseline)
         .with_traffic(TrafficSpec::Synthetic(synth));
@@ -173,8 +174,14 @@ fn session_spill_roundtrip() {
 fn file_key_of(spec: &ExperimentSpec) -> String {
     let TrafficSpec::Synthetic(s) = &spec.traffic else { panic!("synthetic spec expected") };
     format!(
-        "{}|{:?}|r{}|c{}|f{}|s{}",
-        spec.topology, s.pattern, s.rate_per_100_cycles, s.cycles, s.float_fraction, s.seed
+        "{}|{:?}|r{}|c{}|f{}|s{}|{}",
+        spec.topology,
+        s.pattern,
+        s.rate_per_100_cycles,
+        s.cycles,
+        s.float_fraction,
+        s.seed,
+        s.profile
     )
 }
 

@@ -416,9 +416,11 @@ fn prop_select_tuning_always_feasible() {
 fn prop_experiment_spec_display_roundtrips() {
     // Every spec expressible from the CLI grid surfaces — any (app,
     // policy), the Fig.-6 tuning lattice, synthetic-traffic stress
-    // cells, and explicit modulation overrides — must parse back from
-    // its Display form to an identical spec.
-    use lorax::traffic::synth::{Pattern, SynthConfig};
+    // cells with any time profile, adaptation axes, and explicit
+    // modulation overrides — must parse back from its Display form to
+    // an identical spec.
+    use lorax::adapt::AdaptSpec;
+    use lorax::traffic::synth::{Pattern, SynthConfig, TimeProfile};
     check("spec-display-roundtrip", 256, |g| {
         let app = *g.choose(&AppId::ALL);
         let policy = *g.choose(&PolicyKind::PARSEABLE);
@@ -437,8 +439,23 @@ fn prop_experiment_spec_display_roundtrips() {
                 2 => Pattern::Transpose,
                 _ => Pattern::Neighbor,
             };
+            let profile = match g.usize(0, 4) {
+                0 => TimeProfile::Stationary,
+                1 => TimeProfile::Bursty {
+                    period: g.usize(1, 10_000) as u64,
+                    duty_pct: g.usize(0, 100) as u32,
+                },
+                2 => TimeProfile::Diurnal { period: g.usize(1, 50_000) as u64 },
+                3 => TimeProfile::FlashCrowd {
+                    at: g.usize(0, 50_000) as u64,
+                    width: g.usize(1, 10_000) as u64,
+                    peak_x: g.usize(1, 8) as u32,
+                },
+                _ => TimeProfile::PhaseShift { period: g.usize(1, 10_000) as u64 },
+            };
             spec = spec.with_traffic(TrafficSpec::Synthetic(SynthConfig {
                 pattern,
+                profile,
                 rate_per_100_cycles: g.usize(1, 100) as u32,
                 cycles: g.usize(100, 100_000) as u64,
                 float_fraction: g.usize(0, 10) as f64 / 10.0,
@@ -448,9 +465,135 @@ fn prop_experiment_spec_display_roundtrips() {
         if g.bool() {
             spec = spec.with_modulation(*g.choose(&Modulation::KNOWN));
         }
+        if g.bool() {
+            // Disabled specs canonicalize to OFF through the text form,
+            // so generate either exactly OFF or a valid enabled spec.
+            spec = spec.with_adapt(if g.bool() {
+                AdaptSpec::OFF
+            } else {
+                AdaptSpec {
+                    epoch_cycles: g.usize(1, 100_000) as u64,
+                    quality_bound_pct: g.usize(1, 200) as f64 / 10.0,
+                    hi_load: g.usize(5, 10) as f64 / 10.0,
+                    lo_load: g.usize(0, 4) as f64 / 10.0,
+                    power_step_pct: g.usize(0, 100) as u32,
+                }
+            });
+        }
         let shown = spec.to_string();
         let parsed: ExperimentSpec =
             shown.parse().unwrap_or_else(|e| panic!("{shown:?} failed to parse: {e:#}"));
         assert_eq!(parsed, spec, "{shown}");
+    });
+}
+
+#[test]
+fn prop_stationary_generator_bit_identical() {
+    // Frozen copy of the pre-TimeProfile stationary generator: the
+    // profile refactor promised that stationary traffic walks the exact
+    // same RNG draw sequence as before, so `generate` must reproduce
+    // this reference bit-for-bit for every stationary config.
+    use lorax::topology::clos::NodeId;
+    use lorax::traffic::synth::{generate, Pattern, SynthConfig};
+    use lorax::traffic::{Packet, PayloadKind, TraceRecord, LINE_WORDS};
+    use lorax::util::rng::Rng;
+
+    fn frozen_pick_dst(pattern: Pattern, src: u8, n: u8, rng: &mut Rng) -> NodeId {
+        match pattern {
+            Pattern::Uniform => NodeId::Core(rng.below(n as usize) as u8),
+            Pattern::Hotspot { cluster } => NodeId::Core((cluster * 8 + rng.below(8)) as u8),
+            Pattern::Transpose => NodeId::Core((src + n / 2) % n),
+            Pattern::Neighbor => {
+                let next_cluster = (src as usize / 8 + 1) % 8;
+                NodeId::Core((next_cluster * 8 + rng.below(8)) as u8)
+            }
+        }
+    }
+
+    fn frozen_generate(cfg: &SynthConfig) -> Vec<TraceRecord> {
+        let n_cores = 64u8;
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = Vec::new();
+        for cycle in 0..cfg.cycles {
+            for core in 0..n_cores {
+                if rng.below(100) >= cfg.rate_per_100_cycles as usize {
+                    continue;
+                }
+                let dst = frozen_pick_dst(cfg.pattern, core, n_cores, &mut rng);
+                if dst == NodeId::Core(core) {
+                    continue;
+                }
+                let kind = if rng.next_f64() < cfg.float_fraction {
+                    PayloadKind::Float64
+                } else {
+                    PayloadKind::Int
+                };
+                out.push(TraceRecord {
+                    inject_cycle: cycle,
+                    packet: Packet {
+                        src: NodeId::Core(core),
+                        dst,
+                        kind,
+                        payload_words: LINE_WORDS,
+                        approximable: kind == PayloadKind::Float64,
+                    },
+                });
+            }
+        }
+        out
+    }
+
+    check("stationary-generator-frozen", 24, |g| {
+        let pattern = match g.usize(0, 3) {
+            0 => Pattern::Uniform,
+            1 => Pattern::Hotspot { cluster: g.usize(0, 7) },
+            2 => Pattern::Transpose,
+            _ => Pattern::Neighbor,
+        };
+        let cfg = SynthConfig {
+            pattern,
+            // 0 and >100 rates exercise the empty-trace and saturated
+            // Bernoulli corners.
+            rate_per_100_cycles: g.usize(0, 120) as u32,
+            cycles: g.usize(0, 600) as u64,
+            float_fraction: g.usize(0, 10) as f64 / 10.0,
+            seed: g.rng.next_u64(),
+            ..Default::default()
+        };
+        assert_eq!(generate(&cfg), frozen_generate(&cfg), "{cfg:?}");
+    });
+}
+
+#[test]
+fn prop_adaptation_disabled_is_byte_identical_to_static() {
+    // The adapt subsystem's zero-cost promise: a spec with adaptation
+    // disabled must produce byte-for-byte the JSON of the plain static
+    // replay — no epoch state, no observation records, no drift.
+    use lorax::adapt::AdaptSpec;
+    use lorax::config::SystemConfig;
+    use lorax::coordinator::LoraxSession;
+    use lorax::traffic::synth::{Pattern, SynthConfig};
+
+    let session = LoraxSession::new(&SystemConfig { scale: 0.02, seed: 5, ..Default::default() });
+    check("adapt-disabled-static", 8, |g| {
+        let pattern = match g.usize(0, 3) {
+            0 => Pattern::Uniform,
+            1 => Pattern::Hotspot { cluster: g.usize(0, 7) },
+            2 => Pattern::Transpose,
+            _ => Pattern::Neighbor,
+        };
+        let spec = ExperimentSpec::new(AppId::Fft, *g.choose(&PolicyKind::PARSEABLE))
+            .with_traffic(TrafficSpec::Synthetic(SynthConfig {
+                pattern,
+                rate_per_100_cycles: g.usize(1, 60) as u32,
+                cycles: g.usize(200, 3_000) as u64,
+                float_fraction: g.usize(0, 10) as f64 / 10.0,
+                seed: g.usize(0, 1 << 16) as u64,
+                ..Default::default()
+            }));
+        let fixed = session.run(&spec).unwrap();
+        let adaptive = session.run_adaptive(&spec.clone().with_adapt(AdaptSpec::OFF)).unwrap();
+        assert!(adaptive.epochs.is_empty(), "disabled run observed epochs");
+        assert_eq!(adaptive.to_ndjson(), fixed.to_json(), "{spec}");
     });
 }
