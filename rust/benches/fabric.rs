@@ -3,9 +3,11 @@
 //! Measures the deterministic coordinator/worker scheduler's overhead on
 //! a fault-free (app × policy) grid, then runs the same grid under a
 //! crash+recover+duplicate fault plan and reports the recovery cost
-//! (extra scheduler steps, retries, reassignments).  Asserts the
-//! fabric's cells are byte-identical to the in-process sweep in both
-//! cases — the determinism contract the integration suite pins.
+//! (extra scheduler steps, retries, reassignments).  Also runs the grid
+//! over the real subprocess transport (`lorax worker` children on
+//! framed pipes) and reports its overhead vs in-process.  Asserts the
+//! fabric's cells are byte-identical to the in-process sweep in every
+//! case — the determinism contract the integration suite pins.
 //!
 //! Run: `cargo bench --bench fabric`
 //! Env: LORAX_BENCH_SCALE (default 0.05), LORAX_BENCH_SMOKE=1.
@@ -13,7 +15,9 @@
 use lorax::approx::policy::PolicyKind;
 use lorax::config::SystemConfig;
 use lorax::coordinator::{AppRunReport, LoraxSession};
-use lorax::exec::{ExperimentSpec, FabricConfig, FaultPlan, SweepFabric};
+use lorax::exec::{
+    ExperimentSpec, FabricConfig, FaultPlan, ProcessFabric, ProcessFabricConfig, SweepFabric,
+};
 use lorax::util::bench::{bench, black_box, json_f64, report_and_record, write_json_payload};
 
 fn main() {
@@ -81,11 +85,33 @@ fn main() {
         faulty.health.duplicates_dropped
     );
 
+    // --- subprocess transport: real workers on framed pipes -----------
+    let process = ProcessFabric::new(ProcessFabricConfig {
+        workers,
+        worker_bin: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_lorax"))),
+        ..ProcessFabricConfig::default()
+    })
+    .expect("workers > 0");
+    let rp = bench(&format!("fabric:subprocess x{workers}"), 0, iters, || {
+        black_box(session.sweep_cells_process(&specs, &process).expect("process sweep"));
+    });
+    report_and_record(&rp, specs.len() as f64, "cells");
+    let proc_report = session.sweep_cells_process(&specs, &process).expect("process sweep");
+    assert_eq!(
+        proc_report.cells_json(|s| s.clone()),
+        inproc.cells_json(AppRunReport::to_json),
+        "subprocess transport must be byte-identical to the in-process sweep"
+    );
+    assert_eq!(proc_report.health.degraded_cells, 0);
+
     let overhead = if ri.mean_s() > 0.0 { rf.mean_s() / ri.mean_s() } else { 0.0 };
+    let transport_overhead = if ri.mean_s() > 0.0 { rp.mean_s() / ri.mean_s() } else { 0.0 };
     println!("  -> fabric overhead vs in-process: {overhead:.3}x");
+    println!("  -> subprocess-transport overhead vs in-process: {transport_overhead:.3}x");
     let payload = format!(
         "{{\"name\":\"fabric\",\"cells\":{},\"shards\":{},\"workers\":{workers},\
          \"inproc_mean_s\":{},\"fabric_mean_s\":{},\"overhead\":{},\
+         \"transport_mean_s\":{},\"transport_overhead\":{},\
          \"fault_free_steps\":{},\"faulty_steps\":{},\"recovery_extra_steps\":{},\
          \"retries\":{},\"reassigned\":{},\"degraded_cells\":{}}}\n",
         specs.len(),
@@ -93,6 +119,8 @@ fn main() {
         json_f64(ri.mean_s()),
         json_f64(rf.mean_s()),
         json_f64(overhead),
+        json_f64(rp.mean_s()),
+        json_f64(transport_overhead),
         clean.health.steps,
         faulty.health.steps,
         recovery_extra_steps,

@@ -67,6 +67,7 @@ const ENERGY_KEYS: &[&str] = &[
     "rx_fj_per_bit",
     "lut_static_mw_total",
     "lut_access_pj",
+    "lut_latency_cycles",
 ];
 
 impl SystemConfig {
@@ -140,6 +141,7 @@ impl SystemConfig {
             ("energy", "rx_fj_per_bit") => self.energy.rx_fj_per_bit = f()?,
             ("energy", "lut_static_mw_total") => self.energy.lut_static_mw_total = f()?,
             ("energy", "lut_access_pj") => self.energy.lut_access_pj = f()?,
+            ("energy", "lut_latency_cycles") => self.energy.lut_latency_cycles = u()?,
             _ => {
                 let known = match section {
                     "run" | "" => RUN_KEYS,
@@ -168,6 +170,46 @@ impl SystemConfig {
             self.set(section.trim(), key.trim(), value.trim())?;
         }
         Ok(())
+    }
+
+    /// Serialize every settable key as `section.key=value` override
+    /// strings — the wire form the subprocess sweep transport ships a
+    /// coordinator's configuration to `lorax worker` children with
+    /// (applying them onto [`SystemConfig::default`] reconstructs this
+    /// config exactly; `f64` `Display` is shortest-round-trip, so the
+    /// trip is lossless).  Covers exactly the keys [`SystemConfig::set`]
+    /// accepts, kept in sync by the `overrides_roundtrip` test.
+    pub fn to_overrides(&self) -> Vec<String> {
+        let p = &self.photonic;
+        let e = &self.energy;
+        vec![
+            format!("run.seed={}", self.seed),
+            format!("run.scale={}", self.scale),
+            format!("run.error_threshold_pct={}", self.error_threshold_pct),
+            format!("photonic.detector_sensitivity_dbm={}", p.detector_sensitivity_dbm),
+            format!("photonic.mr_through_loss_db={}", p.mr_through_loss_db),
+            format!("photonic.mr_drop_loss_db={}", p.mr_drop_loss_db),
+            format!("photonic.wg_prop_loss_db_per_cm={}", p.wg_prop_loss_db_per_cm),
+            format!("photonic.wg_bend_loss_db_per_90={}", p.wg_bend_loss_db_per_90),
+            format!("photonic.thermo_tuning_uw_per_nm={}", p.thermo_tuning_uw_per_nm),
+            format!("photonic.tuning_range_nm={}", p.tuning_range_nm),
+            format!("photonic.pam4_signaling_loss_db={}", p.pam4_signaling_loss_db),
+            format!("photonic.pam4_power_factor={}", p.pam4_power_factor),
+            format!("photonic.n_lambda_ook={}", p.n_lambda_ook),
+            format!("photonic.n_lambda_pam4={}", p.n_lambda_pam4),
+            format!("photonic.q_calibration={}", p.q_calibration),
+            format!("photonic.detection_margin_db={}", p.detection_margin_db),
+            format!("photonic.vcsel_wall_plug_efficiency={}", p.vcsel_wall_plug_efficiency),
+            format!("energy.clock_ghz={}", e.clock_ghz),
+            format!("energy.router_pj_per_word={}", e.router_pj_per_word),
+            format!("energy.gwi_pj_per_word={}", e.gwi_pj_per_word),
+            format!("energy.mod_fj_per_bit={}", e.mod_fj_per_bit),
+            format!("energy.pam4_mod_fj_per_symbol={}", e.pam4_mod_fj_per_symbol),
+            format!("energy.rx_fj_per_bit={}", e.rx_fj_per_bit),
+            format!("energy.lut_static_mw_total={}", e.lut_static_mw_total),
+            format!("energy.lut_access_pj={}", e.lut_access_pj),
+            format!("energy.lut_latency_cycles={}", e.lut_latency_cycles),
+        ]
     }
 
     /// Pretty-print the Table-1/Table-2 style configuration summary.
@@ -272,6 +314,40 @@ mod tests {
                 c.set(section, key, "1").unwrap_or_else(|e| panic!("[{section}] {key}: {e}"));
             }
         }
+    }
+
+    #[test]
+    fn overrides_roundtrip() {
+        // A mutated config must survive the to_overrides -> set trip
+        // exactly: this is how a coordinator's configuration reaches
+        // worker subprocesses.  The awkward values exercise the f64
+        // shortest-round-trip Display guarantee.
+        let mut c =
+            SystemConfig { seed: 987654321, scale: 0.012345678912345678, ..Default::default() };
+        c.photonic.q_calibration = 6.999999999999999;
+        c.photonic.n_lambda_ook = 48;
+        c.energy.router_pj_per_word = 1.0 / 3.0;
+        c.energy.lut_latency_cycles = 3;
+        let mut back = SystemConfig::default();
+        back.apply_overrides(c.to_overrides().iter().map(|s| s.as_str())).unwrap();
+        assert_eq!(format!("{c:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn to_overrides_covers_every_settable_key() {
+        let keys: Vec<String> = SystemConfig::default()
+            .to_overrides()
+            .iter()
+            .map(|s| s.split('=').next().unwrap().to_string())
+            .collect();
+        for (section, names) in
+            [("run", RUN_KEYS), ("photonic", PHOTONIC_KEYS), ("energy", ENERGY_KEYS)]
+        {
+            for key in names {
+                assert!(keys.contains(&format!("{section}.{key}")), "missing {section}.{key}");
+            }
+        }
+        assert_eq!(keys.len(), RUN_KEYS.len() + PHOTONIC_KEYS.len() + ENERGY_KEYS.len());
     }
 
     #[test]

@@ -11,15 +11,21 @@
 //!   experiment resource (lazy per-modulation engines, memoized decision
 //!   tables, memoized workloads) and the single
 //!   `run(&ExperimentSpec) -> AppRunReport` entry point.
+//! * [`serve`] — the `lorax serve` sweep service: a Unix-domain-socket
+//!   NDJSON protocol over one long-lived session (memoization across
+//!   requests), with bounded in-flight connections, per-connection
+//!   timeouts and a clean drain on `SIGTERM`.
 //! * [`system`] — [`LoraxSystem`], the stringly-typed convenience facade
 //!   over the session (what `lorax simulate` drives).
 
 pub mod channel;
 pub mod gwi;
+pub mod serve;
 pub mod session;
 pub mod system;
 
 pub use channel::{Corruptor, NativeCorruptor, PhotonicChannel};
 pub use gwi::{Decision, DecisionTable, GwiDecisionEngine};
+pub use serve::{query, serve, ServeOptions};
 pub use session::{AppRunReport, LoraxSession};
 pub use system::LoraxSystem;

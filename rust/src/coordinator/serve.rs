@@ -1,0 +1,393 @@
+//! `lorax serve` — a resilient sweep service on a Unix-domain socket.
+//!
+//! The service binds one [`LoraxSession`] (so decision tables, workloads
+//! and packed traces are memoized *across* requests) and answers a
+//! line-oriented NDJSON protocol:
+//!
+//! * each request line is one [`ExperimentSpec`] text form, or several
+//!   separated by whitespace (an ordered sweep);
+//! * a single non-adaptive spec answers with exactly the bytes
+//!   `lorax run --spec <spec> --json` prints (pinned by CI): one
+//!   `app_run` NDJSON line;
+//! * a single adaptive spec answers with the `lorax run --json`
+//!   adaptive form: per-epoch lines, the controller summary line, and
+//!   the final `app_run` line;
+//! * a multi-spec line answers with the `lorax sweep --json` cell-grid
+//!   form (per-cell lines in request order, then one `fabric_health`
+//!   line), executed in-process or fanned out over the
+//!   [`ProcessFabric`] subprocess transport when
+//!   [`ServeOptions::process_workers`] is non-zero;
+//! * a request that cannot be parsed or executed answers with a single
+//!   `{"name":"serve_error",...}` line — the connection stays usable.
+//!
+//! Robustness contract: accepted connections are bounded by
+//! [`ServeOptions::max_inflight`] (excess connections queue in the
+//! listener backlog), every connection carries a read/write timeout and
+//! a maximum request-line length, and `SIGTERM`/`SIGINT` drain cleanly —
+//! the accept loop stops, in-flight requests finish, and the socket file
+//! is removed before [`serve`] returns.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::SystemConfig;
+use crate::exec::spec::ExperimentSpec;
+use crate::exec::transport::{ProcessFabric, ProcessFabricConfig};
+
+use super::session::{AppRunReport, LoraxSession};
+
+/// How [`serve`] listens, bounds and degrades.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Unix-domain socket path to bind (a stale file is replaced).
+    pub socket: PathBuf,
+    /// Maximum concurrently served connections; further accepted
+    /// connections wait for a slot before their first request is read.
+    pub max_inflight: usize,
+    /// Per-connection read/write timeout: a client that stalls mid-line
+    /// for longer than this is disconnected.
+    pub timeout: Duration,
+    /// When non-zero, multi-spec request lines fan out over a
+    /// [`ProcessFabric`] with this many worker subprocesses; zero keeps
+    /// sweeps in-process.
+    pub process_workers: usize,
+    /// Maximum request-line length in bytes; longer lines answer with a
+    /// `serve_error` and close the connection.
+    pub max_line: usize,
+}
+
+impl ServeOptions {
+    /// Defaults for everything but the socket path: 4 in-flight
+    /// connections, 30 s timeouts, in-process sweeps, 64 KiB lines.
+    pub fn new(socket: PathBuf) -> ServeOptions {
+        ServeOptions {
+            socket,
+            max_inflight: 4,
+            timeout: Duration::from_secs(30),
+            process_workers: 0,
+            max_line: 64 * 1024,
+        }
+    }
+}
+
+/// Flipped by the signal handler; the accept loop polls it.
+static STOP: AtomicBool = AtomicBool::new(false);
+
+/// Async-signal-safe `SIGTERM`/`SIGINT` handler: just set the flag.
+extern "C" fn on_stop_signal(_signum: i32) {
+    STOP.store(true, Ordering::SeqCst);
+}
+
+/// Route `SIGTERM` (15) and `SIGINT` (2) to [`on_stop_signal`] via the
+/// same raw libc `signal` binding the CLI uses for `SIGPIPE`.
+fn install_stop_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(15, on_stop_signal as usize);
+        signal(2, on_stop_signal as usize);
+    }
+}
+
+/// In-flight connection gate: count behind a mutex, condvar to wake
+/// waiters when a slot frees up.
+struct Gate {
+    n: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate { n: Mutex::new(0), freed: Condvar::new() }
+    }
+
+    /// Block until the in-flight count is below `max`, then take a
+    /// slot.  Returns `false` (no slot taken) if a stop is requested
+    /// while waiting.
+    fn acquire(&self, max: usize) -> bool {
+        let mut n = self.n.lock().unwrap_or_else(|e| e.into_inner());
+        while *n >= max {
+            if STOP.load(Ordering::SeqCst) {
+                return false;
+            }
+            let (guard, _timed_out) = self
+                .freed
+                .wait_timeout(n, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+            n = guard;
+        }
+        *n += 1;
+        true
+    }
+
+    fn release(&self) {
+        let mut n = self.n.lock().unwrap_or_else(|e| e.into_inner());
+        *n = n.saturating_sub(1);
+        self.freed.notify_one();
+    }
+}
+
+/// Run the sweep service until `SIGTERM`/`SIGINT`, then drain in-flight
+/// requests, remove the socket file and return.
+///
+/// The bound socket is created fresh (a stale file from a previous
+/// crashed server is removed first), so two concurrent servers on the
+/// same path are last-writer-wins — deliberate, matching the crash-safe
+/// "restart replaces" semantics of the trace writer.
+pub fn serve(cfg: &SystemConfig, opts: &ServeOptions) -> Result<()> {
+    STOP.store(false, Ordering::SeqCst);
+    install_stop_handler();
+    if opts.socket.exists() {
+        std::fs::remove_file(&opts.socket)
+            .with_context(|| format!("removing stale socket {}", opts.socket.display()))?;
+    }
+    let listener = UnixListener::bind(&opts.socket)
+        .with_context(|| format!("binding {}", opts.socket.display()))?;
+    // Nonblocking so the accept loop can poll the stop flag.
+    listener.set_nonblocking(true).context("setting the listener nonblocking")?;
+    let session = LoraxSession::new(cfg);
+    let gate = Gate::new();
+    eprintln!("lorax serve: listening on {}", opts.socket.display());
+    let served = std::thread::scope(|scope| -> Result<u64> {
+        let mut served = 0u64;
+        while !STOP.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    if !gate.acquire(opts.max_inflight.max(1)) {
+                        // Stop requested while waiting for a slot: the
+                        // connection was never served; drop it.
+                        break;
+                    }
+                    served += 1;
+                    let session = &session;
+                    let gate = &gate;
+                    scope.spawn(move || {
+                        if let Err(e) = handle_connection(stream, session, opts) {
+                            eprintln!("lorax serve: connection error: {e:#}");
+                        }
+                        gate.release();
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accepting a connection"),
+            }
+        }
+        // Scope exit joins every connection thread: the drain.
+        Ok(served)
+    })?;
+    let _ = std::fs::remove_file(&opts.socket);
+    eprintln!("lorax serve: drained ({served} connections), socket removed");
+    Ok(())
+}
+
+/// Serve one connection: one reply per request line, until EOF, a
+/// timeout, or an oversized line.
+fn handle_connection(
+    mut stream: UnixStream,
+    session: &LoraxSession,
+    opts: &ServeOptions,
+) -> Result<()> {
+    stream.set_read_timeout(Some(opts.timeout)).context("setting the read timeout")?;
+    stream.set_write_timeout(Some(opts.timeout)).context("setting the write timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning the stream")?);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        // Cap the request line: `take` bounds how much one `read_line`
+        // can buffer, and one extra byte distinguishes "exactly at the
+        // limit" from "over it".
+        let read = reader.by_ref().take(opts.max_line as u64 + 1).read_line(&mut line);
+        match read {
+            Ok(0) => return Ok(()), // clean EOF
+            Ok(_) if line.len() > opts.max_line => {
+                let reply = serve_error_line(
+                    "<oversized>",
+                    &format!("request line exceeds {} bytes", opts.max_line),
+                );
+                stream.write_all(reply.as_bytes()).context("writing the reply")?;
+                return Ok(());
+            }
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                // The client stalled mid-request; tell it and hang up.
+                let reply = serve_error_line("<timeout>", "request timed out");
+                let _ = stream.write_all(reply.as_bytes());
+                return Ok(());
+            }
+            Err(e) => return Err(e).context("reading a request line"),
+        }
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let reply = answer(session, text, opts);
+        stream.write_all(reply.as_bytes()).context("writing the reply")?;
+        stream.flush().context("flushing the reply")?;
+        if STOP.load(Ordering::SeqCst) {
+            // Draining: the in-flight request above was finished and
+            // answered; don't start reading another.
+            return Ok(());
+        }
+    }
+}
+
+/// One reply for one request line — never an error: failures become a
+/// `serve_error` NDJSON line so the connection survives bad requests.
+fn answer(session: &LoraxSession, text: &str, opts: &ServeOptions) -> String {
+    match run_request(session, text, opts) {
+        Ok(ndjson) => ndjson,
+        Err(e) => serve_error_line(text, &format!("{e:#}")),
+    }
+}
+
+/// The `serve_error` NDJSON line (the `{:?}` formatting JSON-escapes
+/// quotes and backslashes, matching the fabric's cell-error encoding).
+fn serve_error_line(request: &str, error: &str) -> String {
+    format!("{{\"name\":\"serve_error\",\"request\":{request:?},\"error\":{error:?}}}\n")
+}
+
+/// Execute one request line against the shared session.
+fn run_request(session: &LoraxSession, text: &str, opts: &ServeOptions) -> Result<String> {
+    let parts: Vec<&str> = text.split_whitespace().collect();
+    if parts.len() == 1 {
+        // Single spec: byte-identical to `lorax run --json`.
+        let spec: ExperimentSpec = parts[0].parse()?;
+        if spec.adapt_enabled() {
+            Ok(session.run_adaptive(&spec)?.to_ndjson())
+        } else {
+            Ok(session.run(&spec)?.to_json())
+        }
+    } else {
+        // Multi-spec line: the `lorax sweep --json` cell-grid form.
+        let specs = parts
+            .iter()
+            .map(|p| p.parse::<ExperimentSpec>())
+            .collect::<Result<Vec<ExperimentSpec>>>()?;
+        if opts.process_workers > 0 {
+            let fabric = ProcessFabric::new(ProcessFabricConfig {
+                workers: opts.process_workers,
+                ..ProcessFabricConfig::default()
+            })?;
+            let report = session.sweep_cells_process(&specs, &fabric)?;
+            Ok(report.to_json(|cell| cell.clone()))
+        } else {
+            Ok(session.sweep_cells(&specs).to_json(AppRunReport::to_json))
+        }
+    }
+}
+
+/// Client side of the protocol (`lorax serve --query`): connect,
+/// submit one request line, shut down the write half, and return the
+/// server's full reply.
+pub fn query(socket: &Path, request: &str) -> Result<String> {
+    let mut stream = UnixStream::connect(socket)
+        .with_context(|| format!("connecting to {}", socket.display()))?;
+    stream.write_all(request.trim().as_bytes()).context("sending the request")?;
+    stream.write_all(b"\n").context("sending the request")?;
+    stream.shutdown(std::net::Shutdown::Write).context("closing the write half")?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_to_string(&mut reply).context("reading the reply")?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn scratch(name: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("lorax-serve-test-{}-{seq}-{name}", std::process::id()))
+    }
+
+    fn small_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.set("run", "scale", "0.02").unwrap();
+        cfg
+    }
+
+    #[test]
+    fn single_spec_reply_matches_run_json() {
+        let cfg = small_cfg();
+        let session = LoraxSession::new(&cfg);
+        let opts = ServeOptions::new(scratch("unused.sock"));
+        let spec: ExperimentSpec = "sobel:LORAX-OOK".parse().unwrap();
+        let expected = session.run(&spec).unwrap().to_json();
+        let got = answer(&session, "sobel:LORAX-OOK", &opts);
+        assert_eq!(got, expected);
+        assert!(got.ends_with('\n'));
+    }
+
+    #[test]
+    fn bad_spec_is_a_serve_error_line() {
+        let cfg = small_cfg();
+        let session = LoraxSession::new(&cfg);
+        let opts = ServeOptions::new(scratch("unused.sock"));
+        let got = answer(&session, "no-such-app:LORAX-OOK", &opts);
+        assert!(got.starts_with("{\"name\":\"serve_error\""), "got: {got}");
+        assert!(got.ends_with('\n'));
+        assert_eq!(got.lines().count(), 1);
+    }
+
+    #[test]
+    fn multi_spec_reply_matches_sweep_cells() {
+        let cfg = small_cfg();
+        let session = LoraxSession::new(&cfg);
+        let opts = ServeOptions::new(scratch("unused.sock"));
+        let specs: Vec<ExperimentSpec> =
+            vec!["sobel:LORAX-OOK".parse().unwrap(), "sobel:baseline".parse().unwrap()];
+        let expected = session.sweep_cells(&specs).to_json(AppRunReport::to_json);
+        let got = answer(&session, "sobel:LORAX-OOK sobel:baseline", &opts);
+        assert_eq!(got, expected);
+        assert!(got.contains("\"name\":\"fabric_health\""));
+    }
+
+    #[test]
+    fn serve_answers_queries_and_drains_on_stop() {
+        let cfg = small_cfg();
+        let socket = scratch("serve.sock");
+        let opts = ServeOptions::new(socket.clone());
+        let expected = {
+            let session = LoraxSession::new(&cfg);
+            let spec: ExperimentSpec = "sobel:LORAX-OOK".parse().unwrap();
+            session.run(&spec).unwrap().to_json()
+        };
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| serve(&cfg, &opts));
+            // Wait for the socket to come up.
+            let mut reply = None;
+            for _ in 0..200 {
+                std::thread::sleep(Duration::from_millis(25));
+                if socket.exists() {
+                    if let Ok(r) = query(&socket, "sobel:LORAX-OOK") {
+                        reply = Some(r);
+                        break;
+                    }
+                }
+            }
+            assert_eq!(reply.as_deref(), Some(expected.as_str()));
+            // In-process stand-in for SIGTERM: flip the same flag the
+            // signal handler sets, then watch the server drain.
+            STOP.store(true, Ordering::SeqCst);
+            server.join().unwrap().unwrap();
+        });
+        assert!(!socket.exists(), "socket file must be removed on drain");
+    }
+}

@@ -41,7 +41,8 @@ use crate::exec::fabric::{SweepFabric, SweepReport};
 use crate::exec::runner::{trace_replay_shard_size, DecisionTableCache, SweepRunner};
 use crate::exec::spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 use crate::exec::trace_buf::TraceBuffer;
-use crate::exec::trace_file::{fnv1a64, TraceFile};
+use crate::exec::trace_file::{fnv1a64, TraceFile, TraceFileWriter};
+use crate::exec::transport::{ProcessFabric, TransportError};
 use crate::exec::workload::{CachedWorkload, TraceCache, WorkloadCache};
 use crate::adapt::{AdaptController, AdaptSpec, AdaptiveRunReport};
 use crate::noc::sim::{SimReport, Simulator};
@@ -461,6 +462,48 @@ impl LoraxSession {
         }
     }
 
+    /// Stream-record a spec's trace straight to an `.ltrace` file via
+    /// the crash-safe [`TraceFileWriter`] (stage, fsync, atomic
+    /// rename) — `lorax trace record` without materializing a whole
+    /// [`TraceBuffer`] column set; returns the record count.  A crash
+    /// mid-record leaves nothing visible at `path`.
+    pub fn record_trace_to(&self, spec: &ExperimentSpec, path: &std::path::Path) -> Result<u64> {
+        spec.validate()?;
+        ensure!(
+            spec.topology == self.topology_spec,
+            "spec topology {} != session topology {}",
+            spec.topology,
+            self.topology_spec
+        );
+        let mut w = TraceFileWriter::create(path)?;
+        match &spec.traffic {
+            TrafficSpec::Synthetic(synth) => {
+                for rec in &generate(synth) {
+                    w.push(&self.topo, rec)?;
+                }
+            }
+            TrafficSpec::AppDriven => {
+                let policy = spec.resolved_policy();
+                let m = spec.resolved_modulation();
+                let table = self.decision_table(m, &policy);
+                let engine = self.engine(m);
+                let cached = self.workload(spec.app);
+                let mut ch = PhotonicChannel::with_decisions(
+                    engine,
+                    policy,
+                    NativeCorruptor,
+                    self.cfg.seed as u32,
+                    &table,
+                );
+                let _ = cached.workload.run(&mut ch);
+                for rec in &ch.take_trace() {
+                    w.push(&self.topo, rec)?;
+                }
+            }
+        }
+        Ok(w.finalize()?)
+    }
+
     /// Replay a recorded trace file under `spec`'s policy/modulation —
     /// the engine behind `lorax trace replay`.
     ///
@@ -528,6 +571,22 @@ impl LoraxSession {
             |i| self.run(&specs[i]).map_err(|e| format!("{e:#}")),
             |r| fnv1a64(r.to_json().as_bytes()),
         )
+    }
+
+    /// Run a spec grid across genuinely isolated worker subprocesses
+    /// via the process `fabric` (`lorax sweep --fabric --transport
+    /// process`; see [`crate::exec::transport`]).  Cells travel as spec
+    /// text forms; completions are the cells' NDJSON records — the same
+    /// bytes [`LoraxSession::run`]'s `to_json` (and therefore the
+    /// in-process sweep) produces, because each worker rebuilds this
+    /// session's exact config from [`SystemConfig::to_overrides`].
+    pub fn sweep_cells_process(
+        &self,
+        specs: &[ExperimentSpec],
+        fabric: &ProcessFabric,
+    ) -> Result<SweepReport<String>, TransportError> {
+        let cells: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+        fabric.run(&self.cfg, &cells)
     }
 
     /// Replay one recorded trace under many specs through the fabric,

@@ -230,7 +230,8 @@ impl fmt::Display for FaultPlan {
 
 /// Parse one `<kind>:<worker>@<shard>[+k]` event.
 fn parse_event(s: &str) -> anyhow::Result<FaultEvent> {
-    let usage = "expected <kind>:<worker>@<shard>[+k]";
+    let usage =
+        "expected <kind>:<worker>@<shard>[+k] with kind one of crash, drop, dup, delay, corrupt";
     let (kind_s, rest) = s.split_once(':').with_context(|| format!("fault event {s:?}: {usage}"))?;
     let (worker_s, loc) =
         rest.split_once('@').with_context(|| format!("fault event {s:?}: {usage}"))?;
@@ -394,6 +395,9 @@ pub struct FabricHealth {
     pub timeouts: u64,
     /// Workers the coordinator (ever) declared dead by heartbeat.
     pub crashed_workers: u64,
+    /// Worker processes respawned after a crash (always 0 for the
+    /// simulated fabric, whose crashed workers recover in place).
+    pub respawned_workers: u64,
     /// Completions dropped by idempotent acceptance (duplicate or
     /// already-finalized shard).
     pub duplicates_dropped: u64,
@@ -414,6 +418,7 @@ impl FabricHealth {
         format!(
             "{{\"name\":\"fabric_health\",\"workers\":{},\"shards\":{},\"steps\":{},\
              \"retries\":{},\"reassigned\":{},\"timeouts\":{},\"crashed_workers\":{},\
+             \"respawned_workers\":{},\
              \"duplicates_dropped\":{},\"results_dropped\":{},\"corrupt_payloads\":{},\
              \"degraded_cells\":{}}}\n",
             self.workers,
@@ -423,6 +428,7 @@ impl FabricHealth {
             self.reassigned,
             self.timeouts,
             self.crashed_workers,
+            self.respawned_workers,
             self.duplicates_dropped,
             self.results_dropped,
             self.corrupt_payloads,
@@ -550,8 +556,13 @@ struct InFlight {
 }
 
 /// Order-independent-inputs, order-dependent-fold fingerprint of a
-/// completion payload: cell results hashed in shard order.
-fn payload_checksum<O>(cells: &[Result<O, String>], fingerprint: &impl Fn(&O) -> u64) -> u64 {
+/// completion payload: cell results hashed in shard order.  Shared with
+/// [`crate::exec::transport`] so subprocess workers and the coordinator
+/// agree on the integrity check the simulated fabric pins.
+pub(crate) fn payload_checksum<O>(
+    cells: &[Result<O, String>],
+    fingerprint: &impl Fn(&O) -> u64,
+) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325u64;
     for c in cells {
         let v = match c {
@@ -1184,6 +1195,17 @@ mod tests {
     }
 
     #[test]
+    fn fault_plan_errors_list_valid_kinds() {
+        // A typo'd kind names every valid kind, like config key errors.
+        for bad in ["nope:0@1", "krash:0@1", "crash"] {
+            let err = format!("{:#}", bad.parse::<FaultPlan>().unwrap_err());
+            for kind in ["crash", "drop", "dup", "delay", "corrupt"] {
+                assert!(err.contains(kind), "error for {bad:?} should list {kind:?}: {err}");
+            }
+        }
+    }
+
+    #[test]
     fn seeded_plans_are_deterministic_and_varied() {
         let a = FaultPlan::seeded(7, 4, 32);
         let b = FaultPlan::seeded(7, 4, 32);
@@ -1218,6 +1240,7 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with("}\n"), "{j}");
         assert!(j.contains("\"name\":\"fabric_health\""), "{j}");
         assert!(j.contains("\"workers\":4"), "{j}");
+        assert!(j.contains("\"respawned_workers\":0"), "{j}");
         assert!(j.contains("\"degraded_cells\":0"), "{j}");
     }
 }

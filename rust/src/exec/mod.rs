@@ -32,7 +32,14 @@
 //!   per-worker mailboxes with heartbeats, bounded retry/backoff,
 //!   idempotent result acceptance and graceful degradation to a partial
 //!   [`fabric::SweepReport`], plus the [`fabric::FaultPlan`] crash
-//!   injection layer that keeps every schedule deterministic.
+//!   injection layer that keeps every schedule deterministic;
+//! * [`transport`] — the same coordinator contract over real OS
+//!   processes: [`transport::ProcessFabric`] spawns `lorax worker`
+//!   subprocesses and drives them through length-prefixed,
+//!   FNV-checksummed frames on pipes (`lorax sweep --fabric --transport
+//!   process`), with every frame/process failure a typed
+//!   [`transport::TransportError`] and crashed workers respawned with
+//!   their shards reassigned.
 //!
 //! `lorax run`/`lorax sweep` and all the `benches/` reproduction targets
 //! run on this engine; `SweepRunner::with_threads(1)` is the serial
@@ -44,6 +51,7 @@ pub mod runner;
 pub mod spec;
 pub mod trace_buf;
 pub mod trace_file;
+pub mod transport;
 pub mod workload;
 
 pub use fabric::{
@@ -54,5 +62,6 @@ pub use grid::{synth_stress_grid, AppScenario, SweepGrid, SynthScenario};
 pub use runner::{shard_cells, trace_replay_shard_size, DecisionTableCache, Shard, SweepRunner};
 pub use spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 pub use trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
-pub use trace_file::{TraceFile, TraceFileError};
+pub use trace_file::{TraceFile, TraceFileError, TraceFileWriter};
+pub use transport::{worker_main, ProcessFabric, ProcessFabricConfig, TransportError};
 pub use workload::{CachedWorkload, TraceCache, WorkloadCache};

@@ -61,6 +61,61 @@ impl TraceView<'_> {
     }
 }
 
+/// One record's replay columns with routing resolved — the unit both
+/// [`TraceBuffer::push`] and the streaming
+/// [`crate::exec::trace_file::TraceFileWriter`] append, so the pack
+/// step (and its range asserts) exists exactly once.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedRecord {
+    /// Injection cycle.
+    pub inject_cycle: u64,
+    /// Payload length in 32-bit words.
+    pub payload_words: u32,
+    /// Source cluster id.
+    pub src_cluster: u8,
+    /// Destination cluster id.
+    pub dst_cluster: u8,
+    /// Electrical hops on the route (from `topo.route`).
+    pub el_hops: u8,
+    /// [`FLAG_PHOTONIC`] | [`FLAG_APPROX`] bits.
+    pub flags: u8,
+    /// Payload classification.
+    pub kind: PayloadKind,
+}
+
+impl PackedRecord {
+    /// Pack one record, resolving routing against `topo` now so the
+    /// replay never has to.
+    pub fn pack(topo: &ClosTopology, rec: &TraceRecord) -> PackedRecord {
+        let pkt = &rec.packet;
+        let sc = topo.cluster_of(pkt.src);
+        let dc = topo.cluster_of(pkt.dst);
+        let (el_hops, uses_photonic) = topo.route(pkt.src, pkt.dst);
+        // Hard assert: the pack step runs once per record (not the hot
+        // loop), and silent u8 wrap-around would corrupt every replay.
+        assert!(
+            el_hops <= u8::MAX as u32 && sc <= u8::MAX as usize && dc <= u8::MAX as usize,
+            "route does not fit packed columns: el_hops={el_hops} sc={sc} dc={dc}"
+        );
+        let mut flags = 0u8;
+        if uses_photonic {
+            flags |= FLAG_PHOTONIC;
+        }
+        if pkt.approximable {
+            flags |= FLAG_APPROX;
+        }
+        PackedRecord {
+            inject_cycle: rec.inject_cycle,
+            payload_words: pkt.payload_words,
+            src_cluster: sc as u8,
+            dst_cluster: dc as u8,
+            el_hops: el_hops as u8,
+            flags,
+            kind: pkt.kind,
+        }
+    }
+}
+
 /// Packed, replay-ready trace columns (one index per packet, in
 /// injection order).
 #[derive(Clone, Debug, Default)]
@@ -103,30 +158,18 @@ impl TraceBuffer {
     /// Pack one record, resolving routing against `topo` now so the
     /// replay never has to.
     pub fn push(&mut self, topo: &ClosTopology, rec: &TraceRecord) {
-        let pkt = &rec.packet;
-        let sc = topo.cluster_of(pkt.src);
-        let dc = topo.cluster_of(pkt.dst);
-        let (el_hops, uses_photonic) = topo.route(pkt.src, pkt.dst);
-        // Hard assert: the pack step runs once per record (not the hot
-        // loop), and silent u8 wrap-around would corrupt every replay.
-        assert!(
-            el_hops <= u8::MAX as u32 && sc <= u8::MAX as usize && dc <= u8::MAX as usize,
-            "route does not fit packed columns: el_hops={el_hops} sc={sc} dc={dc}"
-        );
-        let mut flags = 0u8;
-        if uses_photonic {
-            flags |= FLAG_PHOTONIC;
-        }
-        if pkt.approximable {
-            flags |= FLAG_APPROX;
-        }
-        self.inject_cycle.push(rec.inject_cycle);
-        self.src_cluster.push(sc as u8);
-        self.dst_cluster.push(dc as u8);
-        self.el_hops.push(el_hops as u8);
-        self.flags.push(flags);
-        self.kind.push(pkt.kind);
-        self.payload_words.push(pkt.payload_words);
+        self.push_packed(PackedRecord::pack(topo, rec));
+    }
+
+    /// Append one already-packed record.
+    pub fn push_packed(&mut self, p: PackedRecord) {
+        self.inject_cycle.push(p.inject_cycle);
+        self.src_cluster.push(p.src_cluster);
+        self.dst_cluster.push(p.dst_cluster);
+        self.el_hops.push(p.el_hops);
+        self.flags.push(p.flags);
+        self.kind.push(p.kind);
+        self.payload_words.push(p.payload_words);
     }
 
     /// Pack a whole AoS trace.

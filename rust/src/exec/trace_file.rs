@@ -63,12 +63,14 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::fmt;
-use std::io::{self, Write};
-use std::path::Path;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
 
+use crate::topology::clos::ClosTopology;
 use crate::traffic::packet::PayloadKind;
+use crate::traffic::trace::TraceRecord;
 
-use super::trace_buf::{TraceBuffer, TraceView};
+use super::trace_buf::{PackedRecord, TraceBuffer, TraceView};
 
 /// File magic: "LORAX SoA trace, revision 1" spelled in 8 bytes.
 pub const MAGIC: &[u8; 8] = b"LXSOATR1";
@@ -564,6 +566,183 @@ enum Backing {
     Owned(TraceBuffer),
 }
 
+/// Name a sibling staging file for `path`: `<stem>.<label>.<pid>.<seq>`.
+/// The per-process sequence number keeps two threads of one process
+/// writing the same key from clobbering each other's staging files; the
+/// pid does the same across processes.
+fn staged_path(path: &Path, label: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    path.with_extension(format!(
+        "{label}.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Byte offset and width of each `.ltrace` column within one 17-byte
+/// staged AoS record, in on-disk SoA layout order (widest-first):
+/// inject_cycle, payload_words, src_cluster, dst_cluster, el_hops,
+/// flags, kind.
+const STAGE_COLS: [(usize, usize); 7] =
+    [(0, 8), (8, 4), (12, 1), (13, 1), (14, 1), (15, 1), (16, 1)];
+
+/// The typed error any use of an already-consumed writer gets.
+fn already_finalized() -> TraceFileError {
+    TraceFileError::Io(io::Error::new(io::ErrorKind::Other, "writer already finalized"))
+}
+
+/// Streaming, crash-safe `.ltrace` writer: records append one at a time
+/// (no whole-[`TraceBuffer`] materialization), and the finished file
+/// appears atomically or not at all.
+///
+/// The SoA layout puts the record count in the header and every column
+/// offset depends on it, so a pure forward stream cannot emit the final
+/// layout directly.  Records are therefore staged AoS
+/// ([`BYTES_PER_RECORD`] bytes each) to `<path>.stage.<pid>.<seq>`;
+/// [`TraceFileWriter::finalize`] transposes them column-by-column
+/// (seven sequential passes, O(1) memory — traces larger than RAM
+/// stream through) into `<path>.tmp.<pid>.<seq>`, fsyncs, and renames
+/// into place.  A crash or early drop at *any* point leaves no partial
+/// file at the final path, and the [`Drop`] guard removes the staging
+/// file, so concurrent processes (racing [`TraceCache`] spills,
+/// `lorax trace record`) never observe a torn `.ltrace`.
+///
+/// [`TraceCache`]: crate::exec::workload::TraceCache
+#[derive(Debug)]
+pub struct TraceFileWriter {
+    final_path: PathBuf,
+    stage_path: PathBuf,
+    stage: Option<io::BufWriter<std::fs::File>>,
+    n: u64,
+    min_clusters: u32,
+    finalized: bool,
+}
+
+impl TraceFileWriter {
+    /// Open a writer targeting `path`.  Nothing appears at `path` until
+    /// [`TraceFileWriter::finalize`] succeeds.
+    pub fn create(path: &Path) -> Result<TraceFileWriter, TraceFileError> {
+        let stage_path = staged_path(path, "stage");
+        let stage = io::BufWriter::with_capacity(1 << 16, std::fs::File::create(&stage_path)?);
+        Ok(TraceFileWriter {
+            final_path: path.to_path_buf(),
+            stage_path,
+            stage: Some(stage),
+            n: 0,
+            min_clusters: 0,
+            finalized: false,
+        })
+    }
+
+    /// Pack one record (resolving routing against `topo`) and append it.
+    pub fn push(&mut self, topo: &ClosTopology, rec: &TraceRecord) -> Result<(), TraceFileError> {
+        self.push_packed(PackedRecord::pack(topo, rec))
+    }
+
+    /// Append one already-packed record.
+    pub fn push_packed(&mut self, p: PackedRecord) -> Result<(), TraceFileError> {
+        let stage = match self.stage.as_mut() {
+            Some(s) => s,
+            None => return Err(already_finalized()),
+        };
+        let mut rec = [0u8; BYTES_PER_RECORD];
+        rec[0..8].copy_from_slice(&p.inject_cycle.to_le_bytes());
+        rec[8..12].copy_from_slice(&p.payload_words.to_le_bytes());
+        rec[12] = p.src_cluster;
+        rec[13] = p.dst_cluster;
+        rec[14] = p.el_hops;
+        rec[15] = p.flags;
+        rec[16] = p.kind as u8;
+        stage.write_all(&rec)?;
+        self.n += 1;
+        self.min_clusters = self
+            .min_clusters
+            .max(p.src_cluster as u32 + 1)
+            .max(p.dst_cluster as u32 + 1);
+        Ok(())
+    }
+
+    /// Append every record of an in-memory buffer (the
+    /// [`TraceFile::create`] path).
+    pub fn append_buffer(&mut self, buf: &TraceBuffer) -> Result<(), TraceFileError> {
+        for i in 0..buf.len() {
+            self.push_packed(PackedRecord {
+                inject_cycle: buf.inject_cycle[i],
+                payload_words: buf.payload_words[i],
+                src_cluster: buf.src_cluster[i],
+                dst_cluster: buf.dst_cluster[i],
+                el_hops: buf.el_hops[i],
+                flags: buf.flags[i],
+                kind: buf.kind[i],
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Records appended so far.
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    /// True when no records have been appended.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Transpose the staged records into the final SoA layout, fsync,
+    /// and atomically rename into place; returns the record count.  On
+    /// any failure both the staging and temporary files are removed and
+    /// the final path is untouched.
+    pub fn finalize(mut self) -> Result<u64, TraceFileError> {
+        let stage = match self.stage.take() {
+            Some(s) => s,
+            None => return Err(already_finalized()),
+        };
+        // Flush the staging stream fully before re-reading it.
+        stage.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+        let tmp = staged_path(&self.final_path, "tmp");
+        let transpose = || -> Result<(), TraceFileError> {
+            let mut w = io::BufWriter::with_capacity(1 << 16, std::fs::File::create(&tmp)?);
+            w.write_all(&encode_header(self.n, self.min_clusters))?;
+            for (off, width) in STAGE_COLS {
+                let mut r = io::BufReader::with_capacity(
+                    1 << 16,
+                    std::fs::File::open(&self.stage_path)?,
+                );
+                let mut rec = [0u8; BYTES_PER_RECORD];
+                for _ in 0..self.n {
+                    r.read_exact(&mut rec)?;
+                    w.write_all(&rec[off..off + width])?;
+                }
+            }
+            w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+            std::fs::rename(&tmp, &self.final_path)?;
+            Ok(())
+        };
+        let result = transpose();
+        if result.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        // Staging is consumed either way; the Drop guard is for the
+        // never-finalized case.
+        let _ = std::fs::remove_file(&self.stage_path);
+        self.finalized = true;
+        result.map(|()| self.n)
+    }
+}
+
+impl Drop for TraceFileWriter {
+    fn drop(&mut self) {
+        if !self.finalized {
+            // Close the staging handle before unlinking, then clean up:
+            // an abandoned writer leaves nothing behind.
+            self.stage = None;
+            let _ = std::fs::remove_file(&self.stage_path);
+        }
+    }
+}
+
 /// A replay-ready trace: either an mmap-ed `.ltrace` file or an owned
 /// [`TraceBuffer`], behind one [`TraceFile::view`] interface.
 ///
@@ -576,28 +755,17 @@ pub struct TraceFile {
 }
 
 impl TraceFile {
-    /// Write `buf` to `path` in the `.ltrace` format.
-    ///
-    /// The file is staged as `<path>.tmp.<pid>.<seq>` and renamed into
-    /// place, so concurrent readers (and racing [`TraceCache`] spills
-    /// across threads *and* processes) never observe a half-written
-    /// file — the per-process sequence number keeps two threads of one
-    /// process writing the same key from clobbering each other's
-    /// staging file.
+    /// Write `buf` to `path` in the `.ltrace` format, atomically, via
+    /// [`TraceFileWriter`] — staged, fsynced, renamed into place, with
+    /// every intermediate file cleaned up on failure.  Concurrent
+    /// readers (and racing [`TraceCache`] spills across threads *and*
+    /// processes) never observe a half-written file.
     ///
     /// [`TraceCache`]: crate::exec::workload::TraceCache
     pub fn create(path: &Path, buf: &TraceBuffer) -> Result<(), TraceFileError> {
-        use std::sync::atomic::{AtomicU64, Ordering};
-        static SEQ: AtomicU64 = AtomicU64::new(0);
-        let tmp = path.with_extension(format!(
-            "tmp.{}.{}",
-            std::process::id(),
-            SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        let mut w = io::BufWriter::new(std::fs::File::create(&tmp)?);
-        buf.write_to(&mut w)?;
-        w.into_inner().map_err(|e| e.into_error())?.sync_all()?;
-        std::fs::rename(&tmp, path)?;
+        let mut w = TraceFileWriter::create(path)?;
+        w.append_buffer(buf)?;
+        w.finalize()?;
         Ok(())
     }
 
@@ -905,5 +1073,93 @@ mod tests {
         assert_eq!(fnv1a32(b"a"), 0xE40C_292C);
         assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+
+    /// Every non-`.ltrace` sibling of `path` in the test directory
+    /// (stray `stage`/`tmp` files would match).
+    fn intermediates(path: &Path) -> Vec<std::path::PathBuf> {
+        let stem = path.file_stem().unwrap().to_string_lossy().into_owned();
+        let dir = path.parent().unwrap();
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p != path
+                    && p.file_name()
+                        .map(|f| f.to_string_lossy().starts_with(&format!("{stem}.")))
+                        .unwrap_or(false)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn streaming_writer_is_byte_identical_to_create() {
+        let topo = ClosTopology::default_64core();
+        let trace = generate(&SynthConfig { cycles: 600, seed: 21, ..Default::default() });
+        let buf = TraceBuffer::from_records(&topo, &trace);
+        let batch = tmp("writer_batch.ltrace");
+        let streamed = tmp("writer_streamed.ltrace");
+        TraceFile::create(&batch, &buf).unwrap();
+        let mut w = TraceFileWriter::create(&streamed).unwrap();
+        for rec in &trace {
+            w.push(&topo, rec).unwrap();
+        }
+        assert_eq!(w.len(), trace.len() as u64);
+        assert_eq!(w.finalize().unwrap(), trace.len() as u64);
+        assert_eq!(
+            std::fs::read(&batch).unwrap(),
+            std::fs::read(&streamed).unwrap(),
+            "streamed and batch files must be byte-identical"
+        );
+        // And it opens/replays like any other trace file.
+        assert_views_equal(TraceFile::open(&streamed).unwrap().view(), buf.view());
+        assert!(intermediates(&streamed).is_empty(), "no stage/tmp files remain");
+    }
+
+    #[test]
+    fn abandoned_writer_leaves_nothing_visible() {
+        let topo = ClosTopology::default_64core();
+        let trace = generate(&SynthConfig { cycles: 200, seed: 4, ..Default::default() });
+        let path = tmp("writer_abandoned.ltrace");
+        {
+            let mut w = TraceFileWriter::create(&path).unwrap();
+            for rec in &trace {
+                w.push(&topo, rec).unwrap();
+            }
+            // Dropped without finalize — the "crash" case.
+        }
+        assert!(!path.exists(), "no partial file may appear at the final path");
+        assert!(intermediates(&path).is_empty(), "drop cleans the staging file");
+    }
+
+    #[test]
+    fn empty_streaming_writer_finalizes_to_header_only() {
+        let path = tmp("writer_empty.ltrace");
+        let w = TraceFileWriter::create(&path).unwrap();
+        assert!(w.is_empty());
+        assert_eq!(w.finalize().unwrap(), 0);
+        let f = TraceFile::open(&path).unwrap();
+        assert!(f.is_empty());
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), HEADER_LEN as u64);
+    }
+
+    #[test]
+    fn push_after_finalize_is_a_typed_error() {
+        // finalize consumes the writer, so misuse is compile-checked;
+        // the internal already-finalized guard still must not panic.
+        let path = tmp("writer_reuse.ltrace");
+        let mut w = TraceFileWriter::create(&path).unwrap();
+        w.stage = None; // simulate a consumed stage
+        let p = PackedRecord {
+            inject_cycle: 0,
+            payload_words: 1,
+            src_cluster: 0,
+            dst_cluster: 1,
+            el_hops: 1,
+            flags: 0,
+            kind: PayloadKind::Float64,
+        };
+        assert!(matches!(w.push_packed(p), Err(TraceFileError::Io(_))));
     }
 }

@@ -1,0 +1,1566 @@
+//! Subprocess worker transport for the sweep fabric — real processes
+//! behind the PR-5 coordinator contract.
+//!
+//! [`crate::exec::fabric`] proved the coordinator/worker protocol
+//! (range-keyed shards, heartbeats, bounded retry/backoff, idempotent
+//! checksum-verified acceptance, graceful degradation) against a
+//! deterministic single-process simulation.  This module runs the same
+//! contract over **pipes to spawned `lorax worker` subprocesses**, so
+//! `lorax sweep --fabric --transport process` executes shards in
+//! genuinely isolated OS processes:
+//!
+//! * **frames** — every message is one length-prefixed frame:
+//!   `[u32 LE payload length][u64 LE FNV-1a-64 of payload][payload]`.
+//!   A truncated frame, a bit-flipped payload (checksum mismatch), an
+//!   oversized length prefix, or EOF mid-frame each surface as a typed
+//!   [`TransportError`] — never a panic (the module is under
+//!   `deny(unwrap_used, expect_used)` like `fabric` and `trace_file`);
+//! * **messages** — a registry-free binary codec (std only, like the
+//!   raw `mmap(2)` shim in [`crate::exec::trace_file`]) carrying the
+//!   fabric messages: cells travel as [`crate::exec::ExperimentSpec`]
+//!   text forms, results as `lorax run --json` NDJSON records, so
+//!   successful cells are **byte-identical** to the in-process sweep;
+//! * **failure mapping** — the simulated [`crate::exec::FaultPlan`]
+//!   kinds map onto real process faults: `crash` is a SIGKILLed or
+//!   aborted worker (detected by pipe EOF or wall-clock heartbeat
+//!   silence, respawned with its shard reassigned), `corrupt` is a
+//!   checksum-failed frame or payload (a failed attempt that retries),
+//!   `drop` is a lost completion (shard deadline, retry), `delay` is a
+//!   slow completion (idempotent late acceptance).  Workers opt into
+//!   deterministic self-faults via `LORAX_WORKER_FAULTS` (tests), and
+//!   the coordinator can SIGKILL a worker right after an assignment via
+//!   [`ProcessFabricConfig::kill_after_assign`];
+//! * **config shipping** — the coordinator sends its resolved
+//!   [`SystemConfig`] as `section.key=value` overrides
+//!   ([`SystemConfig::to_overrides`], lossless), so every worker builds
+//!   an identical session and the grid stays deterministic.
+//!
+//! The coordinator reuses the fabric's building blocks unchanged:
+//! [`crate::exec::runner::shard_cells`] sharding, the
+//! [`crate::exec::FabricHealth`] counters, the ordered
+//! [`crate::exec::SweepReport`] (with `O = String`, the opaque NDJSON
+//! record), and the same payload fingerprint fold.  See "Transport &
+//! serve" in docs/ARCHITECTURE.md.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::io::{self, BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::SystemConfig;
+
+use super::fabric::{payload_checksum, CellState, FabricError, FabricHealth, SweepReport};
+use super::runner::{shard_cells, Shard};
+use super::trace_file::fnv1a64;
+
+/// Frame header length: u32 payload length + u64 payload checksum.
+pub const FRAME_HEADER_LEN: usize = 12;
+
+/// Upper bound on one frame's payload (64 MiB) — a length prefix above
+/// this is rejected as [`TransportError::OversizedFrame`] instead of
+/// attempting the allocation (a corrupt length prefix must not OOM the
+/// coordinator).
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Typed failure taxonomy of the byte transport — every way a frame,
+/// a message, or a worker process can fail, as a value instead of a
+/// panic.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The underlying pipe/socket operation failed.
+    Io(io::Error),
+    /// The stream ended inside a frame (header or payload cut short) —
+    /// the classic truncated-frame / killed-peer signature.
+    MidFrameEof {
+        /// Bytes the reader needed to finish the current section.
+        wanted: usize,
+        /// Bytes actually available before EOF.
+        got: usize,
+    },
+    /// A frame's length prefix exceeds [`MAX_FRAME_LEN`].
+    OversizedFrame {
+        /// The declared payload length.
+        len: u64,
+        /// The configured maximum.
+        max: u64,
+    },
+    /// The payload bytes do not hash to the checksum in the frame
+    /// header (bit flip / corruption in transit).
+    ChecksumMismatch {
+        /// Checksum carried by the frame header.
+        stored: u64,
+        /// Checksum recomputed over the received payload.
+        computed: u64,
+    },
+    /// A frame's payload is not a well-formed protocol message.
+    BadMessage {
+        /// What the decoder choked on.
+        detail: String,
+    },
+    /// Spawning a worker subprocess failed.
+    Spawn {
+        /// Worker slot being spawned.
+        worker: usize,
+        /// The underlying OS error.
+        source: io::Error,
+    },
+    /// The process fabric was configured with zero workers.
+    NoWorkers,
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "transport I/O error: {e}"),
+            TransportError::MidFrameEof { wanted, got } => {
+                write!(f, "stream ended mid-frame: wanted {wanted} bytes, got {got}")
+            }
+            TransportError::OversizedFrame { len, max } => {
+                write!(f, "frame length {len} exceeds maximum {max}")
+            }
+            TransportError::ChecksumMismatch { stored, computed } => {
+                write!(f, "frame checksum {stored:#018x} != computed {computed:#018x}")
+            }
+            TransportError::BadMessage { detail } => write!(f, "bad transport message: {detail}"),
+            TransportError::Spawn { worker, source } => {
+                write!(f, "spawning worker {worker} failed: {source}")
+            }
+            TransportError::NoWorkers => {
+                write!(f, "process fabric configured with zero workers")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) | TransportError::Spawn { source: e, .. } => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> TransportError {
+        TransportError::Io(e)
+    }
+}
+
+/// Write one frame (`[len][checksum][payload]`) and flush.
+///
+/// The frame is composed into one buffer and written with a single
+/// `write_all`, so concurrent writers serialized by a mutex (the worker
+/// answers heartbeats from its reader thread while the main thread
+/// streams results) never interleave partial frames.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), TransportError> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(TransportError::OversizedFrame {
+            len: payload.len() as u64,
+            max: MAX_FRAME_LEN as u64,
+        });
+    }
+    let mut frame = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    frame.extend_from_slice(payload);
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read as many bytes as possible into `buf`; short count means EOF.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, TransportError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(TransportError::Io(e)),
+        }
+    }
+    Ok(got)
+}
+
+/// Read one frame.  `Ok(None)` is a clean EOF at a frame boundary (the
+/// peer closed the stream between messages); every other truncation is
+/// a typed error: EOF inside the header or payload is
+/// [`TransportError::MidFrameEof`], a length prefix over
+/// [`MAX_FRAME_LEN`] is [`TransportError::OversizedFrame`], and a
+/// payload that does not hash to the header's checksum is
+/// [`TransportError::ChecksumMismatch`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, TransportError> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let got = read_full(r, &mut header)?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < FRAME_HEADER_LEN {
+        return Err(TransportError::MidFrameEof { wanted: FRAME_HEADER_LEN, got });
+    }
+    let mut b4 = [0u8; 4];
+    b4.copy_from_slice(&header[0..4]);
+    let len = u32::from_le_bytes(b4) as usize;
+    let mut b8 = [0u8; 8];
+    b8.copy_from_slice(&header[4..12]);
+    let stored = u64::from_le_bytes(b8);
+    if len > MAX_FRAME_LEN {
+        return Err(TransportError::OversizedFrame { len: len as u64, max: MAX_FRAME_LEN as u64 });
+    }
+    let mut payload = vec![0u8; len];
+    let got = read_full(r, &mut payload)?;
+    if got < len {
+        return Err(TransportError::MidFrameEof { wanted: len, got });
+    }
+    let computed = fnv1a64(&payload);
+    if computed != stored {
+        return Err(TransportError::ChecksumMismatch { stored, computed });
+    }
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------------
+// Message codec
+// ---------------------------------------------------------------------------
+
+/// Messages the coordinator sends a worker subprocess.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ToWorker {
+    /// Handshake: the coordinator's resolved configuration as
+    /// `section.key=value` overrides; the worker builds its session and
+    /// answers [`FromWorker::Ready`].
+    Init {
+        /// [`SystemConfig::to_overrides`] of the coordinator's config.
+        overrides: Vec<String>,
+    },
+    /// Execute one shard of cells (each a spec text form); answered
+    /// with [`FromWorker::Done`].
+    Assign {
+        /// Shard id (the idempotency key).
+        shard: u32,
+        /// Attempt number (1-based), echoed back for staleness checks.
+        attempt: u32,
+        /// The shard's cells, in grid order.
+        cells: Vec<String>,
+    },
+    /// Liveness probe; answered with [`FromWorker::Pong`] from the
+    /// worker's reader thread even while a shard is computing.
+    Ping {
+        /// Echoed verbatim in the pong.
+        nonce: u64,
+    },
+    /// Orderly termination request.
+    Shutdown,
+}
+
+/// Messages a worker subprocess sends the coordinator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FromWorker {
+    /// Handshake reply: the worker built its session from
+    /// [`ToWorker::Init`] and is ready for assignments.
+    Ready {
+        /// The worker's OS process id (diagnostics).
+        pid: u32,
+    },
+    /// Heartbeat reply.
+    Pong {
+        /// The nonce from the matching [`ToWorker::Ping`].
+        nonce: u64,
+    },
+    /// One completed shard attempt.
+    Done {
+        /// Shard id from the assignment.
+        shard: u32,
+        /// Attempt number from the assignment.
+        attempt: u32,
+        /// Per-cell outcomes in shard order: `Ok` carries the cell's
+        /// NDJSON record, `Err` a deterministic execution error.
+        cells: Vec<Result<String, String>>,
+        /// [`crate::exec::fabric`]-style fingerprint fold over `cells`
+        /// (FNV-1a-64 of each record), verified before acceptance.
+        checksum: u64,
+    },
+}
+
+const TAG_INIT: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_PING: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_READY: u8 = 101;
+const TAG_PONG: u8 = 102;
+const TAG_DONE: u8 = 103;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian decoder over one message payload.
+struct Dec<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(bytes: &'a [u8]) -> Dec<'a> {
+        Dec { bytes, at: 0 }
+    }
+
+    fn bad(&self, what: &str) -> TransportError {
+        TransportError::BadMessage {
+            detail: format!("{what} at byte {} of a {}-byte message", self.at, self.bytes.len()),
+        }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], TransportError> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.bytes.len());
+        match end {
+            Some(end) => {
+                let s = &self.bytes[self.at..end];
+                self.at = end;
+                Ok(s)
+            }
+            None => Err(self.bad(what)),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, TransportError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, TransportError> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4, what)?);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, TransportError> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8, what)?);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String, TransportError> {
+        let len = self.u32(what)? as usize;
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.bad(what))
+    }
+
+    /// A list length, sanity-bounded so a corrupt count cannot drive a
+    /// huge preallocation (each element needs at least one byte).
+    fn list_len(&mut self, what: &str) -> Result<usize, TransportError> {
+        let n = self.u32(what)? as usize;
+        if n > self.bytes.len().saturating_sub(self.at) {
+            return Err(self.bad(what));
+        }
+        Ok(n)
+    }
+
+    fn finish(self) -> Result<(), TransportError> {
+        if self.at == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(TransportError::BadMessage {
+                detail: format!(
+                    "{} trailing bytes after a complete message",
+                    self.bytes.len() - self.at
+                ),
+            })
+        }
+    }
+}
+
+impl ToWorker {
+    /// Serialize to the binary payload form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ToWorker::Init { overrides } => {
+                out.push(TAG_INIT);
+                put_u32(&mut out, overrides.len() as u32);
+                for o in overrides {
+                    put_str(&mut out, o);
+                }
+            }
+            ToWorker::Assign { shard, attempt, cells } => {
+                out.push(TAG_ASSIGN);
+                put_u32(&mut out, *shard);
+                put_u32(&mut out, *attempt);
+                put_u32(&mut out, cells.len() as u32);
+                for c in cells {
+                    put_str(&mut out, c);
+                }
+            }
+            ToWorker::Ping { nonce } => {
+                out.push(TAG_PING);
+                put_u64(&mut out, *nonce);
+            }
+            ToWorker::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Decode a payload produced by [`ToWorker::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<ToWorker, TransportError> {
+        let mut d = Dec::new(bytes);
+        let msg = match d.u8("message tag")? {
+            TAG_INIT => {
+                let n = d.list_len("override count")?;
+                let mut overrides = Vec::with_capacity(n);
+                for _ in 0..n {
+                    overrides.push(d.str("override string")?);
+                }
+                ToWorker::Init { overrides }
+            }
+            TAG_ASSIGN => {
+                let shard = d.u32("shard id")?;
+                let attempt = d.u32("attempt")?;
+                let n = d.list_len("cell count")?;
+                let mut cells = Vec::with_capacity(n);
+                for _ in 0..n {
+                    cells.push(d.str("cell spec")?);
+                }
+                ToWorker::Assign { shard, attempt, cells }
+            }
+            TAG_PING => ToWorker::Ping { nonce: d.u64("ping nonce")? },
+            TAG_SHUTDOWN => ToWorker::Shutdown,
+            t => {
+                return Err(TransportError::BadMessage {
+                    detail: format!("unknown coordinator message tag {t}"),
+                })
+            }
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+impl FromWorker {
+    /// Serialize to the binary payload form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            FromWorker::Ready { pid } => {
+                out.push(TAG_READY);
+                put_u32(&mut out, *pid);
+            }
+            FromWorker::Pong { nonce } => {
+                out.push(TAG_PONG);
+                put_u64(&mut out, *nonce);
+            }
+            FromWorker::Done { shard, attempt, cells, checksum } => {
+                out.push(TAG_DONE);
+                put_u32(&mut out, *shard);
+                put_u32(&mut out, *attempt);
+                put_u64(&mut out, *checksum);
+                put_u32(&mut out, cells.len() as u32);
+                for c in cells {
+                    match c {
+                        Ok(s) => {
+                            out.push(0);
+                            put_str(&mut out, s);
+                        }
+                        Err(e) => {
+                            out.push(1);
+                            put_str(&mut out, e);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode a payload produced by [`FromWorker::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<FromWorker, TransportError> {
+        let mut d = Dec::new(bytes);
+        let msg = match d.u8("message tag")? {
+            TAG_READY => FromWorker::Ready { pid: d.u32("pid")? },
+            TAG_PONG => FromWorker::Pong { nonce: d.u64("pong nonce")? },
+            TAG_DONE => {
+                let shard = d.u32("shard id")?;
+                let attempt = d.u32("attempt")?;
+                let checksum = d.u64("checksum")?;
+                let n = d.list_len("cell count")?;
+                let mut cells = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let cell = match d.u8("cell outcome tag")? {
+                        0 => Ok(d.str("cell record")?),
+                        1 => Err(d.str("cell error")?),
+                        t => {
+                            return Err(TransportError::BadMessage {
+                                detail: format!("unknown cell outcome tag {t}"),
+                            })
+                        }
+                    };
+                    cells.push(cell);
+                }
+                FromWorker::Done { shard, attempt, cells, checksum }
+            }
+            t => {
+                return Err(TransportError::BadMessage {
+                    detail: format!("unknown worker message tag {t}"),
+                })
+            }
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// The fabric's fingerprint fold over a shard's cell outcomes, with the
+/// NDJSON-record fingerprint both the coordinator and workers use.
+pub fn cells_checksum(cells: &[Result<String, String>]) -> u64 {
+    payload_checksum(cells, &|s: &String| fnv1a64(s.as_bytes()))
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// Tuning for the subprocess coordinator.  The semantics mirror
+/// [`crate::exec::FabricConfig`], with the discrete scheduler *steps*
+/// replaced by wall-clock [`Duration`]s.
+#[derive(Clone, Debug)]
+pub struct ProcessFabricConfig {
+    /// Worker subprocesses to spawn (>= 1).
+    pub workers: usize,
+    /// Cells per shard (floor 1).
+    pub shard_size: usize,
+    /// Total attempts per shard before its cells degrade.
+    pub max_attempts: u32,
+    /// Heartbeat ping interval.
+    pub heartbeat_every: Duration,
+    /// Silence past this flips a worker to presumed-crashed (its pipe
+    /// EOF usually fires first; the timeout catches hung processes).
+    pub heartbeat_timeout: Duration,
+    /// Wall-clock deadline per shard attempt.
+    pub shard_timeout: Duration,
+    /// Base retry backoff (doubles per attempt, capped at
+    /// [`ProcessFabricConfig::backoff_cap`]).
+    pub backoff_base: Duration,
+    /// Retry backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Total wall-clock budget for the sweep; zero derives a generous
+    /// bound from the shard count and timeouts.  On expiry the
+    /// remaining cells degrade as [`FabricError::Stalled`].
+    pub max_wall: Duration,
+    /// Worker respawn budget across the whole sweep; once spent, dead
+    /// slots stay dead (and an all-dead pool degrades the remainder).
+    pub max_respawns: u32,
+    /// Worker executable; `None` spawns `std::env::current_exe()`
+    /// (the normal case — `lorax` re-invokes itself as `lorax worker`).
+    pub worker_bin: Option<PathBuf>,
+    /// Deterministic crash injection: right after assigning shard `s`
+    /// to worker slot `w`, SIGKILL that worker (each pair fires once).
+    /// This is the real-process analogue of a `crash:<w>@<s>`
+    /// [`crate::exec::FaultPlan`] event.
+    pub kill_after_assign: Vec<(usize, usize)>,
+    /// Worker-side fault events, forwarded as `LORAX_WORKER_FAULTS`
+    /// (see [`worker_main`]); empty clears the variable so spawned
+    /// workers never inherit stray faults from the environment.
+    pub worker_faults: Vec<String>,
+}
+
+impl Default for ProcessFabricConfig {
+    fn default() -> Self {
+        ProcessFabricConfig {
+            workers: 4,
+            shard_size: 1,
+            max_attempts: 4,
+            heartbeat_every: Duration::from_millis(100),
+            heartbeat_timeout: Duration::from_secs(10),
+            shard_timeout: Duration::from_secs(120),
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(1),
+            max_wall: Duration::ZERO,
+            max_respawns: 8,
+            worker_bin: None,
+            kill_after_assign: Vec::new(),
+            worker_faults: Vec::new(),
+        }
+    }
+}
+
+impl ProcessFabricConfig {
+    fn backoff(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        self.backoff_base.saturating_mul(1u32 << shift).min(self.backoff_cap)
+    }
+
+    fn wall_budget(&self, shards: usize) -> Duration {
+        if !self.max_wall.is_zero() {
+            return self.max_wall;
+        }
+        let attempts = (shards as u64).saturating_mul(self.max_attempts as u64).max(1);
+        self.shard_timeout
+            .saturating_mul(attempts.min(u32::MAX as u64) as u32)
+            .saturating_add(Duration::from_secs(60))
+    }
+}
+
+/// Events a worker's pipe-reader thread forwards to the coordinator
+/// loop (tagged with the slot's spawn generation so messages from a
+/// replaced process are discarded).
+enum Event {
+    Msg(FromWorker),
+    /// The worker's stdout closed (clean EOF or frame error): the
+    /// process is gone or its stream is unrecoverable (a length-framed
+    /// stream cannot resync after a bad frame), so the coordinator
+    /// kills and respawns.
+    Dead(Option<TransportError>),
+}
+
+/// One worker subprocess slot.
+struct Slot {
+    child: Child,
+    stdin: ChildStdin,
+    gen: u64,
+    alive: bool,
+    up: bool,
+    last_seen: Instant,
+    busy: Option<usize>,
+}
+
+/// Coordinator bookkeeping for one outstanding assignment.
+struct Flight {
+    worker: usize,
+    attempt: u32,
+    deadline: Instant,
+}
+
+/// The subprocess sweep fabric: spawns `lorax worker` children and
+/// drives the PR-5 coordinator contract over real pipes.  Construct
+/// with [`ProcessFabric::new`], execute with [`ProcessFabric::run`].
+pub struct ProcessFabric {
+    cfg: ProcessFabricConfig,
+}
+
+impl ProcessFabric {
+    /// Validate the config (>= 1 worker) and build a fabric.
+    pub fn new(cfg: ProcessFabricConfig) -> Result<ProcessFabric, TransportError> {
+        if cfg.workers == 0 {
+            return Err(TransportError::NoWorkers);
+        }
+        Ok(ProcessFabric { cfg })
+    }
+
+    /// The configuration this fabric runs with.
+    pub fn config(&self) -> &ProcessFabricConfig {
+        &self.cfg
+    }
+
+    /// Execute `cells` (spec text forms) across worker subprocesses
+    /// under `sys`, returning the ordered report.  Successful cells are
+    /// the exact `lorax run --json` NDJSON records the workers
+    /// produced — byte-identical to the in-process sweep — and cells
+    /// whose shards exhaust their budget degrade to
+    /// [`CellState::Unfinished`]; the fabric returns a partial report
+    /// rather than failing the sweep.  `Err` is reserved for setup
+    /// failures (initial spawns).
+    pub fn run(
+        &self,
+        sys: &SystemConfig,
+        cells: &[String],
+    ) -> Result<SweepReport<String>, TransportError> {
+        let shards = shard_cells(cells.len(), self.cfg.shard_size);
+        let health = FabricHealth {
+            workers: self.cfg.workers,
+            shards: shards.len(),
+            ..FabricHealth::default()
+        };
+        if shards.is_empty() {
+            return Ok(SweepReport { cells: Vec::new(), health });
+        }
+        let mut driver = Driver {
+            cfg: &self.cfg,
+            overrides: sys.to_overrides(),
+            cells_in: cells,
+            shards,
+            slots: Vec::new(),
+            tx: None,
+            out: vec![None; cells.len()],
+            finalized_shard: Vec::new(),
+            finalized: 0,
+            pending: VecDeque::new(),
+            in_flight: BTreeMap::new(),
+            last_worker: Vec::new(),
+            kills: self.cfg.kill_after_assign.clone(),
+            respawns_used: 0,
+            health,
+        };
+        let report = driver.drive()?;
+        Ok(report)
+    }
+}
+
+/// The coordinator event loop state (one [`ProcessFabric::run`]).
+struct Driver<'a> {
+    cfg: &'a ProcessFabricConfig,
+    overrides: Vec<String>,
+    cells_in: &'a [String],
+    shards: Vec<Shard>,
+    slots: Vec<Slot>,
+    tx: Option<Sender<(usize, u64, Event)>>,
+    out: Vec<Option<CellState<String>>>,
+    finalized_shard: Vec<bool>,
+    finalized: usize,
+    pending: VecDeque<(usize, u32, Instant)>,
+    in_flight: BTreeMap<usize, Flight>,
+    last_worker: Vec<Option<usize>>,
+    kills: Vec<(usize, usize)>,
+    respawns_used: u32,
+    health: FabricHealth,
+}
+
+impl Driver<'_> {
+    fn drive(&mut self) -> Result<SweepReport<String>, TransportError> {
+        let start = Instant::now();
+        let wall_deadline = start + self.cfg.wall_budget(self.shards.len());
+        let (tx, rx): (Sender<(usize, u64, Event)>, Receiver<(usize, u64, Event)>) =
+            mpsc::channel();
+        self.tx = Some(tx);
+        for w in 0..self.cfg.workers {
+            let slot = self.spawn_slot(w, 0)?;
+            self.slots.push(slot);
+        }
+        self.finalized_shard = vec![false; self.shards.len()];
+        self.last_worker = vec![None; self.shards.len()];
+        self.pending = self.shards.iter().map(|s| (s.id, 1, start)).collect();
+        let mut last_ping = start;
+        let mut nonce = 0u64;
+
+        while self.finalized < self.shards.len() {
+            self.health.steps += 1;
+            let now = Instant::now();
+            if now >= wall_deadline || self.pool_exhausted() {
+                let outstanding = self.shards.len() - self.finalized;
+                let err = FabricError::Stalled { step: self.health.steps, outstanding };
+                for sid in 0..self.shards.len() {
+                    if !self.finalized_shard[sid] {
+                        self.degrade(sid, err);
+                    }
+                }
+                break;
+            }
+
+            // 1. Drain worker events.
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(ev) => {
+                    self.handle_event(ev);
+                    while let Ok(ev) = rx.try_recv() {
+                        self.handle_event(ev);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {}
+            }
+            let now = Instant::now();
+
+            // 2. Heartbeats: ping every live worker (its reader thread
+            // answers even while a shard computes).
+            if now.duration_since(last_ping) >= self.cfg.heartbeat_every {
+                last_ping = now;
+                nonce += 1;
+                for w in 0..self.slots.len() {
+                    if self.slots[w].alive && self.slots[w].up {
+                        let msg = ToWorker::Ping { nonce };
+                        if write_frame(&mut self.slots[w].stdin, &msg.encode()).is_err() {
+                            self.on_worker_dead(w, self.slots[w].gen, None);
+                        }
+                    }
+                }
+            }
+
+            // 3. Failure detection: heartbeat silence past the timeout
+            // (covers hung-but-running processes; pipe EOF handles the
+            // dead ones first).
+            for w in 0..self.slots.len() {
+                if self.slots[w].alive
+                    && now.duration_since(self.slots[w].last_seen) > self.cfg.heartbeat_timeout
+                {
+                    self.on_worker_dead(w, self.slots[w].gen, None);
+                }
+            }
+
+            // 4. Attempt deadlines.
+            let expired: Vec<(usize, u32)> = self
+                .in_flight
+                .iter()
+                .filter(|(_, f)| now >= f.deadline)
+                .map(|(&sid, f)| (sid, f.attempt))
+                .collect();
+            for (sid, attempt) in expired {
+                if let Some(f) = self.in_flight.remove(&sid) {
+                    self.health.timeouts += 1;
+                    if self.slots[f.worker].busy == Some(sid) {
+                        self.slots[f.worker].busy = None;
+                    }
+                    self.retry_or_degrade(sid, attempt, now);
+                }
+            }
+
+            // 5. Assign ready shards to free workers.
+            self.assign_ready(now);
+        }
+
+        self.shutdown();
+        let cells = std::mem::take(&mut self.out)
+            .into_iter()
+            .map(|c| {
+                c.unwrap_or(CellState::Unfinished(FabricError::Stalled {
+                    step: self.health.steps,
+                    outstanding: 0,
+                }))
+            })
+            .collect();
+        Ok(SweepReport { cells, health: self.health })
+    }
+
+    /// True when every slot is dead and the respawn budget is spent —
+    /// nothing can make progress, so the remaining shards degrade now
+    /// instead of waiting out the wall clock.
+    fn pool_exhausted(&self) -> bool {
+        self.respawns_used >= self.cfg.max_respawns && self.slots.iter().all(|s| !s.alive)
+    }
+
+    fn spawn_slot(&self, worker: usize, respawns: u32) -> Result<Slot, TransportError> {
+        let bin = match &self.cfg.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| TransportError::Spawn { worker, source: e })?,
+        };
+        let mut cmd = Command::new(bin);
+        cmd.arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .env("LORAX_WORKER_SLOT", worker.to_string())
+            .env("LORAX_WORKER_RESPAWN", respawns.to_string());
+        if self.cfg.worker_faults.is_empty() {
+            cmd.env_remove("LORAX_WORKER_FAULTS");
+        } else {
+            cmd.env("LORAX_WORKER_FAULTS", self.cfg.worker_faults.join(","));
+        }
+        let mut child = cmd.spawn().map_err(|e| TransportError::Spawn { worker, source: e })?;
+        let mut stdin = match child.stdin.take() {
+            Some(s) => s,
+            None => {
+                return Err(TransportError::Spawn {
+                    worker,
+                    source: io::Error::new(io::ErrorKind::Other, "child stdin not piped"),
+                })
+            }
+        };
+        let stdout = match child.stdout.take() {
+            Some(s) => s,
+            None => {
+                return Err(TransportError::Spawn {
+                    worker,
+                    source: io::Error::new(io::ErrorKind::Other, "child stdout not piped"),
+                })
+            }
+        };
+        let gen = self.slots.get(worker).map(|s| s.gen + 1).unwrap_or(0);
+        let tx = match &self.tx {
+            Some(tx) => tx.clone(),
+            None => {
+                return Err(TransportError::Spawn {
+                    worker,
+                    source: io::Error::new(io::ErrorKind::Other, "driver not started"),
+                })
+            }
+        };
+        std::thread::spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match read_frame(&mut r) {
+                    Ok(None) => {
+                        let _ = tx.send((worker, gen, Event::Dead(None)));
+                        break;
+                    }
+                    Ok(Some(payload)) => match FromWorker::decode(&payload) {
+                        Ok(msg) => {
+                            if tx.send((worker, gen, Event::Msg(msg))).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send((worker, gen, Event::Dead(Some(e))));
+                            break;
+                        }
+                    },
+                    Err(e) => {
+                        let _ = tx.send((worker, gen, Event::Dead(Some(e))));
+                        break;
+                    }
+                }
+            }
+        });
+        // Handshake: ship the coordinator's config.  A write failure
+        // here surfaces as a Dead event from the reader thread, which
+        // triggers the normal respawn path.
+        let init = ToWorker::Init { overrides: self.overrides.clone() };
+        let _ = write_frame(&mut stdin, &init.encode());
+        Ok(Slot {
+            child,
+            stdin,
+            gen,
+            alive: true,
+            up: false,
+            last_seen: Instant::now(),
+            busy: None,
+        })
+    }
+
+    fn handle_event(&mut self, (worker, gen, event): (usize, u64, Event)) {
+        if worker >= self.slots.len() || self.slots[worker].gen != gen {
+            return; // stale: from a process this slot already replaced
+        }
+        match event {
+            Event::Msg(FromWorker::Ready { .. }) => {
+                self.slots[worker].up = true;
+                self.slots[worker].last_seen = Instant::now();
+            }
+            Event::Msg(FromWorker::Pong { .. }) => {
+                self.slots[worker].last_seen = Instant::now();
+            }
+            Event::Msg(FromWorker::Done { shard, attempt, cells, checksum }) => {
+                self.on_done(worker, shard as usize, attempt, cells, checksum);
+            }
+            Event::Dead(err) => {
+                if let Some(e) = &err {
+                    if matches!(
+                        e,
+                        TransportError::ChecksumMismatch { .. }
+                            | TransportError::MidFrameEof { .. }
+                            | TransportError::OversizedFrame { .. }
+                            | TransportError::BadMessage { .. }
+                    ) {
+                        // A mangled frame is indistinguishable from a
+                        // corrupt payload at the fabric level: count it
+                        // and fail the attempt via the crash path.
+                        self.health.corrupt_payloads += 1;
+                    }
+                }
+                self.on_worker_dead(worker, gen, err);
+            }
+        }
+    }
+
+    #[allow(clippy::needless_range_loop)]
+    fn on_done(
+        &mut self,
+        worker: usize,
+        shard: usize,
+        attempt: u32,
+        cells: Vec<Result<String, String>>,
+        checksum: u64,
+    ) {
+        self.slots[worker].last_seen = Instant::now();
+        if self.slots[worker].busy == Some(shard) {
+            self.slots[worker].busy = None;
+        }
+        if shard >= self.shards.len() {
+            self.health.corrupt_payloads += 1;
+            return;
+        }
+        if self.finalized_shard[shard] {
+            // Idempotent acceptance: completions for finalized shards
+            // drop (same rule as the simulated fabric).
+            self.health.duplicates_dropped += 1;
+            return;
+        }
+        let sh = self.shards[shard];
+        if cells_checksum(&cells) != checksum || cells.len() != sh.len {
+            self.health.corrupt_payloads += 1;
+            // A corrupt payload fails exactly the attempt it belongs
+            // to; stale attempts change nothing.
+            let current = self
+                .in_flight
+                .get(&shard)
+                .map(|f| f.worker == worker && f.attempt == attempt)
+                .unwrap_or(false);
+            if current {
+                self.in_flight.remove(&shard);
+                self.retry_or_degrade(shard, attempt, Instant::now());
+            }
+            return;
+        }
+        // Accept — even a late completion from a timed-out attempt
+        // (cell execution is deterministic, so the bytes are the same).
+        for (k, i) in sh.range().enumerate() {
+            self.out[i] = Some(match &cells[k] {
+                Ok(o) => CellState::Done(o.clone()),
+                Err(e) => CellState::Failed(e.clone()),
+            });
+        }
+        self.in_flight.remove(&shard);
+        self.finalized_shard[shard] = true;
+        self.finalized += 1;
+    }
+
+    fn on_worker_dead(&mut self, worker: usize, gen: u64, _err: Option<TransportError>) {
+        if self.slots[worker].gen != gen || !self.slots[worker].alive {
+            return;
+        }
+        self.health.crashed_workers += 1;
+        self.slots[worker].alive = false;
+        self.slots[worker].up = false;
+        let _ = self.slots[worker].child.kill();
+        let _ = self.slots[worker].child.wait();
+        // Reassign whatever it was computing as a failed attempt.
+        if let Some(sid) = self.slots[worker].busy.take() {
+            let stale = self.in_flight.get(&sid).map(|f| f.worker == worker).unwrap_or(false);
+            if stale {
+                if let Some(f) = self.in_flight.remove(&sid) {
+                    self.retry_or_degrade(sid, f.attempt, Instant::now());
+                }
+            }
+        }
+        // Respawn while budget remains.
+        if self.respawns_used < self.cfg.max_respawns {
+            self.respawns_used += 1;
+            match self.spawn_slot(worker, self.respawns_used) {
+                Ok(slot) => {
+                    self.health.respawned_workers += 1;
+                    self.slots[worker] = slot;
+                }
+                Err(_) => {
+                    // Slot stays dead; pool_exhausted() degrades the
+                    // sweep if nobody is left.
+                }
+            }
+        }
+    }
+
+    fn retry_or_degrade(&mut self, shard: usize, attempt: u32, now: Instant) {
+        if attempt >= self.cfg.max_attempts {
+            self.degrade(
+                shard,
+                FabricError::AttemptsExhausted { shard, attempts: attempt },
+            );
+        } else {
+            self.health.retries += 1;
+            self.pending.push_back((shard, attempt + 1, now + self.cfg.backoff(attempt)));
+        }
+    }
+
+    fn degrade(&mut self, shard: usize, err: FabricError) {
+        if self.finalized_shard[shard] {
+            return;
+        }
+        for i in self.shards[shard].range() {
+            self.out[i] = Some(CellState::Unfinished(err));
+        }
+        self.health.degraded_cells += self.shards[shard].len as u64;
+        self.finalized_shard[shard] = true;
+        self.finalized += 1;
+        self.in_flight.remove(&shard);
+    }
+
+    fn assign_ready(&mut self, now: Instant) {
+        for w in 0..self.slots.len() {
+            if !(self.slots[w].alive && self.slots[w].up && self.slots[w].busy.is_none()) {
+                continue;
+            }
+            let Some(pos) = self.pending.iter().position(|&(_, _, ready)| ready <= now) else {
+                return;
+            };
+            let Some((sid, attempt, _)) = self.pending.remove(pos) else {
+                return;
+            };
+            if self.finalized_shard[sid] {
+                continue;
+            }
+            let sh = self.shards[sid];
+            let msg = ToWorker::Assign {
+                shard: sid as u32,
+                attempt,
+                cells: self.cells_in[sh.range()].to_vec(),
+            };
+            if write_frame(&mut self.slots[w].stdin, &msg.encode()).is_err() {
+                self.pending.push_front((sid, attempt, now));
+                self.on_worker_dead(w, self.slots[w].gen, None);
+                continue;
+            }
+            if self.last_worker[sid].map(|prev| prev != w).unwrap_or(false) {
+                self.health.reassigned += 1;
+            }
+            self.last_worker[sid] = Some(w);
+            self.slots[w].busy = Some(sid);
+            self.in_flight.insert(
+                sid,
+                Flight { worker: w, attempt, deadline: now + self.cfg.shard_timeout },
+            );
+            // Deterministic SIGKILL-mid-shard knob: the worker got the
+            // assignment and dies before (or while) computing it.
+            if let Some(k) = self.kills.iter().position(|&(kw, ks)| kw == w && ks == sid) {
+                self.kills.remove(k);
+                let _ = self.slots[w].child.kill();
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for slot in &mut self.slots {
+            if slot.alive {
+                let _ = write_frame(&mut slot.stdin, &ToWorker::Shutdown.encode());
+            }
+        }
+        for slot in &mut self.slots {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                match slot.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = slot.child.kill();
+                        let _ = slot.child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// Worker-side fault kinds for `LORAX_WORKER_FAULTS` — the real-process
+/// analogue of [`crate::exec::FaultKind`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WorkerFaultKind {
+    /// `abort(2)` before computing the shard (a hard crash; the
+    /// coordinator sees pipe EOF).
+    Crash,
+    /// Compute the shard but never send the completion (the shard
+    /// deadline expires and retries).
+    Drop,
+    /// Send the completion with a corrupted checksum (fails the
+    /// attempt's integrity check and retries).
+    Corrupt,
+    /// Sleep before sending (a slow completion; exercises idempotent
+    /// late acceptance).
+    Delay,
+}
+
+/// One armed worker-side fault event.
+#[derive(Clone, Debug)]
+struct WorkerFault {
+    kind: WorkerFaultKind,
+    shard: u32,
+    always: bool,
+    armed: bool,
+}
+
+/// Deterministic worker self-faults parsed from `LORAX_WORKER_FAULTS`
+/// (`<kind>:<worker>@<shard>[:always]`, comma-separated — the
+/// [`crate::exec::FaultPlan`] grammar plus an `:always` re-arm flag).
+/// Events are filtered to this process's `LORAX_WORKER_SLOT`; one-shot
+/// events are dropped in respawned processes (`LORAX_WORKER_RESPAWN` >
+/// 0) so a crash fault does not crash-loop its slot.  Malformed entries
+/// are ignored — this is a test hook, not an input surface.
+struct WorkerFaults {
+    events: Vec<WorkerFault>,
+}
+
+impl WorkerFaults {
+    fn from_env() -> WorkerFaults {
+        let slot = std::env::var("LORAX_WORKER_SLOT").ok();
+        let respawned = std::env::var("LORAX_WORKER_RESPAWN")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+            .unwrap_or(0)
+            > 0;
+        let spec = std::env::var("LORAX_WORKER_FAULTS").unwrap_or_default();
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((kind_s, rest)) = part.split_once(':') else { continue };
+            let Some((worker_s, loc)) = rest.split_once('@') else { continue };
+            if slot.as_deref() != Some(worker_s.trim()) {
+                continue;
+            }
+            let (shard_s, always) = match loc.split_once(':') {
+                Some((s, "always")) => (s, true),
+                Some(_) => continue,
+                None => (loc, false),
+            };
+            let Ok(shard) = shard_s.trim().parse::<u32>() else { continue };
+            let kind = match kind_s.trim() {
+                "crash" => WorkerFaultKind::Crash,
+                "drop" => WorkerFaultKind::Drop,
+                "corrupt" => WorkerFaultKind::Corrupt,
+                "delay" => WorkerFaultKind::Delay,
+                _ => continue,
+            };
+            if respawned && !always {
+                continue;
+            }
+            events.push(WorkerFault { kind, shard, always, armed: true });
+        }
+        WorkerFaults { events }
+    }
+
+    fn fires(&mut self, kind: WorkerFaultKind, shard: u32) -> bool {
+        for e in &mut self.events {
+            if e.armed && e.kind == kind && e.shard == shard {
+                if !e.always {
+                    e.armed = false;
+                }
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Serialize one worker→coordinator frame through the shared stdout
+/// lock (the reader thread pongs heartbeats concurrently with the main
+/// thread's results — the mutex plus single-write framing keeps frames
+/// whole).
+fn send_msg(out: &Arc<Mutex<io::Stdout>>, msg: &FromWorker) -> Result<(), TransportError> {
+    let mut guard = out.lock().unwrap_or_else(|e| e.into_inner());
+    write_frame(&mut *guard, &msg.encode())
+}
+
+/// The `lorax worker` entry point: speak the framed protocol on
+/// stdin/stdout until EOF or [`ToWorker::Shutdown`].
+///
+/// `build` constructs the cell executor from the coordinator's shipped
+/// [`SystemConfig`] (the CLI passes a closure building a
+/// [`crate::coordinator::LoraxSession`] and running parsed specs); the
+/// executor maps one cell text form to its NDJSON record or a
+/// deterministic error string.
+///
+/// A dedicated reader thread answers [`ToWorker::Ping`] directly, so
+/// heartbeats stay live while the main thread computes a long shard —
+/// the coordinator's wall-clock liveness check never falsely declares a
+/// busy worker crashed.
+pub fn worker_main<F, R>(build: F) -> Result<(), TransportError>
+where
+    F: FnOnce(SystemConfig) -> R,
+    R: FnMut(&str) -> Result<String, String>,
+{
+    let mut faults = WorkerFaults::from_env();
+    let out = Arc::new(Mutex::new(io::stdout()));
+    let (tx, rx) = mpsc::channel::<ToWorker>();
+    let out_reader = Arc::clone(&out);
+    std::thread::spawn(move || -> Result<(), TransportError> {
+        let mut stdin = io::stdin().lock();
+        loop {
+            match read_frame(&mut stdin)? {
+                None => return Ok(()), // coordinator closed the pipe
+                Some(payload) => match ToWorker::decode(&payload)? {
+                    ToWorker::Ping { nonce } => {
+                        send_msg(&out_reader, &FromWorker::Pong { nonce })?
+                    }
+                    msg => {
+                        if tx.send(msg).is_err() {
+                            return Ok(());
+                        }
+                    }
+                },
+            }
+        }
+    });
+    let mut build = Some(build);
+    let mut exec: Option<R> = None;
+    for msg in rx {
+        match msg {
+            ToWorker::Init { overrides } => {
+                let mut cfg = SystemConfig::default();
+                for o in &overrides {
+                    cfg.apply_overrides([o.as_str()]).map_err(|e| {
+                        TransportError::BadMessage { detail: format!("bad Init override: {e:#}") }
+                    })?;
+                }
+                if let Some(b) = build.take() {
+                    exec = Some(b(cfg));
+                }
+                send_msg(&out, &FromWorker::Ready { pid: std::process::id() })?;
+            }
+            ToWorker::Assign { shard, attempt, cells } => {
+                if faults.fires(WorkerFaultKind::Crash, shard) {
+                    std::process::abort();
+                }
+                let Some(run) = exec.as_mut() else {
+                    return Err(TransportError::BadMessage {
+                        detail: "Assign received before Init".to_string(),
+                    });
+                };
+                let outs: Vec<Result<String, String>> =
+                    cells.iter().map(|c| run(c)).collect();
+                let mut checksum = cells_checksum(&outs);
+                if faults.fires(WorkerFaultKind::Corrupt, shard) {
+                    checksum ^= 0xDEAD_BEEF;
+                }
+                if faults.fires(WorkerFaultKind::Delay, shard) {
+                    std::thread::sleep(Duration::from_millis(250));
+                }
+                if faults.fires(WorkerFaultKind::Drop, shard) {
+                    continue;
+                }
+                send_msg(&out, &FromWorker::Done { shard, attempt, cells: outs, checksum })?;
+            }
+            ToWorker::Ping { nonce } => {
+                // Normally answered by the reader thread; kept total.
+                send_msg(&out, &FromWorker::Pong { nonce })?;
+            }
+            ToWorker::Shutdown => break,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, payload).unwrap();
+        buf
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        for payload in [&b""[..], b"x", b"hello frames", &[0u8; 4096][..]] {
+            let buf = frame_bytes(payload);
+            assert_eq!(buf.len(), FRAME_HEADER_LEN + payload.len());
+            let got = read_frame(&mut &buf[..]).unwrap().unwrap();
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame(&mut &empty[..]).unwrap().is_none());
+        // Two frames then EOF: both decode, then None.
+        let mut buf = frame_bytes(b"a");
+        buf.extend_from_slice(&frame_bytes(b"bb"));
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"a");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"bb");
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_header_is_mid_frame_eof() {
+        let buf = frame_bytes(b"payload");
+        for cut in 1..FRAME_HEADER_LEN {
+            let got = read_frame(&mut &buf[..cut]);
+            match got {
+                Err(TransportError::MidFrameEof { wanted, got }) => {
+                    assert_eq!(wanted, FRAME_HEADER_LEN);
+                    assert_eq!(got, cut);
+                }
+                other => panic!("cut {cut}: expected MidFrameEof, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mid_payload_eof_is_mid_frame_eof() {
+        let buf = frame_bytes(b"twelve bytes");
+        let cut = FRAME_HEADER_LEN + 5;
+        match read_frame(&mut &buf[..cut]) {
+            Err(TransportError::MidFrameEof { wanted, got }) => {
+                assert_eq!(wanted, 12);
+                assert_eq!(got, 5);
+            }
+            other => panic!("expected MidFrameEof, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bit_flipped_payload_is_checksum_mismatch() {
+        let mut buf = frame_bytes(b"sensitive bits");
+        let n = buf.len();
+        buf[n - 3] ^= 0x40;
+        match read_frame(&mut &buf[..]) {
+            Err(TransportError::ChecksumMismatch { stored, computed }) => {
+                assert_ne!(stored, computed);
+            }
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut buf = frame_bytes(b"ok");
+        buf[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut &buf[..]) {
+            Err(TransportError::OversizedFrame { len, max }) => {
+                assert_eq!(len, u32::MAX as u64);
+                assert_eq!(max, MAX_FRAME_LEN as u64);
+            }
+            other => panic!("expected OversizedFrame, got {other:?}"),
+        }
+        // Writer side enforces the same cap.
+        let huge = vec![0u8; MAX_FRAME_LEN + 1];
+        let mut sink = Vec::new();
+        assert!(matches!(
+            write_frame(&mut sink, &huge),
+            Err(TransportError::OversizedFrame { .. })
+        ));
+    }
+
+    #[test]
+    fn to_worker_codec_roundtrip() {
+        let msgs = [
+            ToWorker::Init {
+                overrides: vec!["run.seed=7".to_string(), "run.scale=0.5".to_string()],
+            },
+            ToWorker::Assign {
+                shard: 3,
+                attempt: 2,
+                cells: vec!["sobel:LORAX-OOK".to_string(), "fft:baseline".to_string()],
+            },
+            ToWorker::Ping { nonce: 0xDEAD },
+            ToWorker::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(ToWorker::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn from_worker_codec_roundtrip() {
+        let msgs = [
+            FromWorker::Ready { pid: 1234 },
+            FromWorker::Pong { nonce: 99 },
+            FromWorker::Done {
+                shard: 1,
+                attempt: 1,
+                cells: vec![
+                    Ok("{\"name\":\"run\"}\n".to_string()),
+                    Err("spec parse failed".to_string()),
+                ],
+                checksum: 0xFEED,
+            },
+        ];
+        for m in msgs {
+            assert_eq!(FromWorker::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn garbage_messages_are_typed_errors() {
+        assert!(matches!(
+            ToWorker::decode(&[]),
+            Err(TransportError::BadMessage { .. })
+        ));
+        assert!(matches!(
+            ToWorker::decode(&[0xFF]),
+            Err(TransportError::BadMessage { .. })
+        ));
+        assert!(matches!(
+            FromWorker::decode(&[TAG_DONE, 1, 2]),
+            Err(TransportError::BadMessage { .. })
+        ));
+        // Trailing junk after a complete message.
+        let mut buf = ToWorker::Shutdown.encode();
+        buf.push(0);
+        assert!(matches!(
+            ToWorker::decode(&buf),
+            Err(TransportError::BadMessage { .. })
+        ));
+        // A corrupt list length cannot drive a huge preallocation.
+        let mut buf = vec![TAG_ASSIGN];
+        put_u32(&mut buf, 0);
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, u32::MAX);
+        assert!(matches!(
+            ToWorker::decode(&buf),
+            Err(TransportError::BadMessage { .. })
+        ));
+        // Invalid UTF-8 in a string field.
+        let mut buf = vec![TAG_INIT];
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, 2);
+        buf.extend_from_slice(&[0xC3, 0x28]);
+        assert!(matches!(
+            ToWorker::decode(&buf),
+            Err(TransportError::BadMessage { .. })
+        ));
+    }
+
+    #[test]
+    fn zero_workers_is_typed_error() {
+        let cfg = ProcessFabricConfig { workers: 0, ..ProcessFabricConfig::default() };
+        assert!(matches!(ProcessFabric::new(cfg), Err(TransportError::NoWorkers)));
+    }
+
+    #[test]
+    fn empty_grid_is_empty_report_without_spawning() {
+        // worker_bin points nowhere: an empty grid must not spawn.
+        let cfg = ProcessFabricConfig {
+            workers: 2,
+            worker_bin: Some(PathBuf::from("/nonexistent/lorax")),
+            ..ProcessFabricConfig::default()
+        };
+        let fabric = ProcessFabric::new(cfg).unwrap();
+        let report = fabric.run(&SystemConfig::default(), &[]).unwrap();
+        assert!(report.cells.is_empty());
+        assert_eq!(report.health.shards, 0);
+    }
+
+    #[test]
+    fn worker_faults_parse_filters_and_arms() {
+        std::env::set_var("LORAX_WORKER_SLOT", "1");
+        std::env::set_var("LORAX_WORKER_RESPAWN", "0");
+        std::env::set_var(
+            "LORAX_WORKER_FAULTS",
+            "corrupt:1@0,crash:0@2,drop:1@3:always,nonsense,delay:1@",
+        );
+        let mut f = WorkerFaults::from_env();
+        // crash:0@2 is another slot's; malformed entries ignored.
+        assert_eq!(f.events.len(), 2);
+        assert!(f.fires(WorkerFaultKind::Corrupt, 0));
+        assert!(!f.fires(WorkerFaultKind::Corrupt, 0), "one-shot disarms");
+        assert!(f.fires(WorkerFaultKind::Drop, 3));
+        assert!(f.fires(WorkerFaultKind::Drop, 3), ":always re-arms");
+        // Respawned processes drop one-shot events.
+        std::env::set_var("LORAX_WORKER_RESPAWN", "1");
+        let f2 = WorkerFaults::from_env();
+        assert_eq!(f2.events.len(), 1);
+        assert_eq!(f2.events[0].kind, WorkerFaultKind::Drop);
+        std::env::remove_var("LORAX_WORKER_FAULTS");
+        std::env::remove_var("LORAX_WORKER_SLOT");
+        std::env::remove_var("LORAX_WORKER_RESPAWN");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = ProcessFabricConfig::default();
+        assert_eq!(cfg.backoff(1), Duration::from_millis(50));
+        assert_eq!(cfg.backoff(2), Duration::from_millis(100));
+        assert_eq!(cfg.backoff(40), cfg.backoff_cap);
+    }
+}

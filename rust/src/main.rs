@@ -14,6 +14,10 @@
 //! lorax sweep --json --apps all              # ordered cell grid as NDJSON
 //! lorax sweep --fabric --workers 4 --fault-plan crash:2@3 --json
 //!                                            # fault-tolerant sweep fabric
+//! lorax sweep --fabric --transport process --workers 4 --json
+//!                                            # same grid, worker subprocesses
+//! lorax serve --socket lorax.sock            # socket sweep service (NDJSON)
+//! lorax serve --socket lorax.sock --query sobel:LORAX-OOK   # one-shot client
 //! lorax tune                                 # Table 3 (sweep + select, all apps)
 //! lorax simulate --app fft --policy LORAX-OOK [--xla]
 //! lorax jpeg --outdir out/                   # Fig. 7 (writes PGMs)
@@ -175,11 +179,17 @@ fn run() -> Result<()> {
                 emit(&figures::signaling_comparison(&cfg, &app_refs, &mods)?, csv);
                 return Ok(());
             }
-            // --fabric / --fault-plan / --json switch to the cell-grid
-            // mode: an ordered (app x policy) ExperimentSpec sweep, run
-            // in-process or through the fault-tolerant fabric, with the
-            // fabric health record appended to the report.
-            if args.flag("fabric") || args.flag("json") || args.get("fault-plan").is_some() {
+            // --fabric / --fault-plan / --json / --transport switch to
+            // the cell-grid mode: an ordered (app x policy)
+            // ExperimentSpec sweep, run in-process, through the
+            // fault-tolerant simulated fabric, or over real worker
+            // subprocesses, with the fabric health record appended to
+            // the report.
+            if args.flag("fabric")
+                || args.flag("json")
+                || args.get("fault-plan").is_some()
+                || args.get("transport").is_some()
+            {
                 return sweep_cells_cmd(&cfg, &args, csv);
             }
             let (bits, reds) = grid(&args);
@@ -249,6 +259,20 @@ fn run() -> Result<()> {
             println!("PGM images written to {}", outdir.display());
         }
         "trace" => trace_cmd(&cfg, &args)?,
+        "serve" => return serve_cmd(&cfg, &args),
+        // Hidden: `lorax worker` is what the process fabric spawns; it
+        // speaks the framed-pipe protocol on stdin/stdout and gets its
+        // SystemConfig from the coordinator's Init message, not argv.
+        "worker" => {
+            lorax::exec::worker_main(|cfg| {
+                let session = LoraxSession::new(&cfg);
+                move |text: &str| {
+                    let spec: ExperimentSpec =
+                        text.parse().map_err(|e: anyhow::Error| format!("{e:#}"))?;
+                    session.run(&spec).map(|r| r.to_json()).map_err(|e| format!("{e:#}"))
+                }
+            })?;
+        }
         "reproduce" => {
             let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             reproduce(&cfg, what, &args, csv)?;
@@ -355,6 +379,12 @@ fn sweep_cells_cmd(cfg: &SystemConfig, args: &Args, csv: bool) -> Result<()> {
         .flat_map(|&app| kinds.iter().map(move |&kind| ExperimentSpec::new(app, kind)))
         .collect();
     let session = LoraxSession::new(cfg);
+    if let Some(transport) = args.get("transport") {
+        if transport != "process" {
+            bail!("unknown --transport {transport:?} (known: process)");
+        }
+        return sweep_cells_process_cmd(&session, &specs, args, csv);
+    }
     let report = if args.flag("fabric") || args.get("fault-plan").is_some() {
         let workers = args.get_u64("workers", 4)? as usize;
         let shard_size = args.get_u64("shard-size", 1)? as usize;
@@ -394,6 +424,92 @@ fn sweep_cells_cmd(cfg: &SystemConfig, args: &Args, csv: bool) -> Result<()> {
     Ok(())
 }
 
+/// `lorax sweep ... --transport process` — the cell grid over real
+/// worker subprocesses.
+///
+/// Same ordered (app × policy) grid as [`sweep_cells_cmd`], but each
+/// shard executes in a spawned `lorax worker` process driven through
+/// the framed-pipe transport.  Successful cells are the exact
+/// `lorax run --json` NDJSON lines the workers rendered — byte-identical
+/// to the in-process sweep, which the CI transport smoke diffs (while
+/// SIGKILLing a worker mid-sweep via `--kill-worker <w>@<s>`).
+fn sweep_cells_process_cmd(
+    session: &LoraxSession,
+    specs: &[ExperimentSpec],
+    args: &Args,
+    csv: bool,
+) -> Result<()> {
+    use lorax::exec::{CellState, ProcessFabric, ProcessFabricConfig};
+
+    let workers = args.get_u64("workers", 4)? as usize;
+    let shard_size = args.get_u64("shard-size", 1)? as usize;
+    let kill_after_assign = match args.get("kill-worker") {
+        Some(s) => {
+            let (w, sh) = s
+                .split_once('@')
+                .with_context(|| format!("--kill-worker {s:?}: expected <worker>@<shard>"))?;
+            vec![(
+                w.parse::<usize>().with_context(|| format!("--kill-worker worker {w:?}"))?,
+                sh.parse::<usize>().with_context(|| format!("--kill-worker shard {sh:?}"))?,
+            )]
+        }
+        None => Vec::new(),
+    };
+    let killing = !kill_after_assign.is_empty();
+    let fabric = ProcessFabric::new(ProcessFabricConfig {
+        workers,
+        shard_size,
+        kill_after_assign,
+        ..ProcessFabricConfig::default()
+    })?;
+    eprintln!(
+        "sweeping {} cell(s) over {workers} worker subprocess(es){}",
+        specs.len(),
+        if killing { " with SIGKILL injection" } else { "" }
+    );
+    let report = session.sweep_cells_process(specs, &fabric)?;
+    if args.flag("json") {
+        print!("{}", report.to_json(|cell| cell.clone()));
+    } else {
+        for (i, cell) in report.cells.iter().enumerate() {
+            match cell {
+                // Done cells are already rendered NDJSON records
+                // (newline-terminated) — print them verbatim.
+                CellState::Done(r) => print!("{r}"),
+                CellState::Failed(e) => println!("cell {i} ({}) failed: {e}", specs[i]),
+                CellState::Unfinished(e) => println!("cell {i} ({}) unfinished: {e}", specs[i]),
+            }
+        }
+        println!();
+        emit(&lorax::report::fabric_health_table(&report.health), csv);
+    }
+    Ok(())
+}
+
+/// `lorax serve` — the socket sweep service, or (with `--query`) its
+/// one-shot client.
+///
+/// Server: `lorax serve --socket <path> [--max-inflight <n>]
+/// [--timeout-ms <n>] [--process-workers <n>]` binds the socket and
+/// answers NDJSON until SIGTERM/SIGINT, then drains cleanly.
+/// Client: `lorax serve --socket <path> --query "<spec...>"` submits
+/// one request line and prints the server's reply verbatim.
+fn serve_cmd(cfg: &SystemConfig, args: &Args) -> Result<()> {
+    use lorax::coordinator::{query, serve, ServeOptions};
+
+    let socket = PathBuf::from(args.get_or("socket", "lorax.sock"));
+    if let Some(q) = args.get("query") {
+        print!("{}", query(&socket, q)?);
+        return Ok(());
+    }
+    let mut opts = ServeOptions::new(socket);
+    opts.max_inflight = args.get_u64("max-inflight", opts.max_inflight as u64)? as usize;
+    opts.timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 30_000)?);
+    opts.process_workers =
+        args.get_u64("process-workers", opts.process_workers as u64)? as usize;
+    serve(cfg, &opts)
+}
+
 /// `lorax trace record|replay` — the `.ltrace` file surface.
 ///
 /// * `record --spec S --out f.ltrace` packs S's traffic (synthetic:
@@ -414,15 +530,14 @@ fn trace_cmd(cfg: &SystemConfig, args: &Args) -> Result<()> {
             let out = PathBuf::from(
                 args.get("out").context("--out <file.ltrace> required for trace record")?,
             );
-            let buf = session.record_trace(&spec)?;
-            TraceFile::create(&out, &buf)
+            // Streams through TraceFileWriter: records never
+            // materialize as a whole TraceBuffer, and a crash
+            // mid-record leaves no partial .ltrace behind.
+            let n = session
+                .record_trace_to(&spec, &out)
                 .with_context(|| format!("writing trace to {}", out.display()))?;
             let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
-            eprintln!(
-                "recorded {} packets ({bytes} bytes) for {spec} to {}",
-                buf.len(),
-                out.display()
-            );
+            eprintln!("recorded {n} packets ({bytes} bytes) for {spec} to {}", out.display());
         }
         "replay" => {
             let path = args
@@ -540,6 +655,10 @@ COMMANDS
                    [--policies <a,b>] [--fault-plan crash:2@3,...]
                  (fault kinds: crash:<w>@<s>[+k] drop dup delay corrupt;
                   --json emits one record per cell + fabric_health);
+                 with --transport process the cell grid runs in spawned
+                 `lorax worker` subprocesses over the framed-pipe
+                 transport ([--workers <n>] [--shard-size <n>]
+                 [--kill-worker <w>@<s>] injects a real SIGKILL);
                  with --patterns <uniform,hotspot<n>,transpose,neighbor>
                  runs the traffic-shape study instead ([--profile
                  stationary|bursty<p>x<d>|diurnal<p>|flash<a>x<w>x<x>|
@@ -551,7 +670,16 @@ COMMANDS
   trace          record/replay mmap-able SoA trace files:
                  trace record --spec <spec> --out <f.ltrace>
                  trace replay <f.ltrace> --spec <spec> [--json]
-                 (replay is zero-copy; LORAX_TRACE_MMAP=0 forces reads)
+                 (replay is zero-copy; LORAX_TRACE_MMAP=0 forces reads;
+                  record streams crash-safely: stage, fsync, rename)
+  serve          sweep service on a Unix-domain socket — one spec (or a
+                 whitespace-separated sweep) per request line, NDJSON
+                 replies byte-identical to run/sweep --json:
+                 serve --socket <path> [--max-inflight <n>]
+                 [--timeout-ms <n>] [--process-workers <n>]
+                 (SIGTERM drains in-flight requests, removes the socket);
+                 serve --socket <path> --query \"<spec ...>\" is the
+                 one-shot client
   reproduce      regenerate [fig2|fig6|table3|fig7|fig8|headline|all]
   verify-bridge  assert native channel == AOT/PJRT channel bit-for-bit
                  (needs a build with `--features xla`)

@@ -94,7 +94,7 @@ impl Table {
 /// counterpart of [`FabricHealth::to_json`] in `lorax sweep` output.
 pub fn fabric_health_table(h: &FabricHealth) -> Table {
     let mut t = Table::new("sweep fabric health", &["metric", "value"]);
-    let rows: [(&str, u64); 11] = [
+    let rows: [(&str, u64); 12] = [
         ("workers", h.workers as u64),
         ("shards", h.shards as u64),
         ("scheduler steps", h.steps),
@@ -102,6 +102,7 @@ pub fn fabric_health_table(h: &FabricHealth) -> Table {
         ("reassigned shards", h.reassigned),
         ("timeouts", h.timeouts),
         ("crashed workers", h.crashed_workers),
+        ("respawned workers", h.respawned_workers),
         ("duplicates dropped", h.duplicates_dropped),
         ("results dropped", h.results_dropped),
         ("corrupt payloads", h.corrupt_payloads),
@@ -129,10 +130,11 @@ mod tests {
             ..FabricHealth::default()
         };
         let t = fabric_health_table(&h);
-        assert_eq!(t.n_rows(), 11);
+        assert_eq!(t.n_rows(), 12);
         let r = t.render();
         assert!(r.contains("== sweep fabric health =="));
         assert!(r.contains("reassigned shards"));
+        assert!(r.contains("respawned workers"));
         assert!(r.contains("degraded cells"));
         let csv = t.to_csv();
         assert!(csv.contains("retries,2"));

@@ -1,0 +1,226 @@
+//! Integration: the subprocess transport and the socket service against
+//! the in-process sweep — the robustness acceptance criteria of
+//! `exec::transport` and `coordinator::serve`.
+//!
+//! * fault-free process-fabric output is byte-identical to
+//!   `sweep_cells` (real `lorax worker` subprocesses, framed pipes);
+//! * a worker SIGKILLed right after taking a shard is respawned, its
+//!   shard is reassigned, and the successful cells stay byte-identical;
+//! * a corrupt frame checksum forces a retry and still converges;
+//! * a shard that is corrupt on every attempt exhausts its budget and
+//!   degrades to a partial report — the other cells stay exact;
+//! * `lorax serve` answers a socket query with the exact
+//!   `lorax run --json` bytes, survives a bad request, and drains
+//!   cleanly on SIGTERM (socket removed, exit 0).
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use lorax::approx::policy::PolicyKind;
+use lorax::apps::AppId;
+use lorax::config::SystemConfig;
+use lorax::coordinator::{AppRunReport, LoraxSession};
+use lorax::exec::{CellState, ExperimentSpec, ProcessFabric, ProcessFabricConfig};
+
+fn cfg() -> SystemConfig {
+    SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
+}
+
+fn spec_grid() -> Vec<ExperimentSpec> {
+    let apps = [AppId::Sobel, AppId::Fft];
+    let policies = [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4];
+    apps.iter()
+        .flat_map(|&a| policies.iter().map(move |&p| ExperimentSpec::new(a, p)))
+        .collect()
+}
+
+/// The compiled `lorax` binary — both the worker the fabric spawns and
+/// the server the serve smoke drives.
+fn lorax_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_lorax"))
+}
+
+fn fabric(tweak: impl FnOnce(&mut ProcessFabricConfig)) -> ProcessFabric {
+    let mut c = ProcessFabricConfig {
+        workers: 3,
+        worker_bin: Some(lorax_bin()),
+        ..ProcessFabricConfig::default()
+    };
+    tweak(&mut c);
+    ProcessFabric::new(c).unwrap()
+}
+
+/// The in-process reference: every cell's `lorax run --json` bytes.
+fn expected_cells(session: &LoraxSession, specs: &[ExperimentSpec]) -> String {
+    session.sweep_cells(specs).cells_json(AppRunReport::to_json)
+}
+
+#[test]
+fn fault_free_process_fabric_matches_in_process_sweep() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let expected = expected_cells(&session, &specs);
+    let report = session.sweep_cells_process(&specs, &fabric(|_| {})).unwrap();
+    assert_eq!(
+        report.cells_json(|s| s.clone()),
+        expected,
+        "fault-free subprocess sweep must be byte-identical"
+    );
+    assert_eq!(report.health.degraded_cells, 0);
+    assert_eq!(report.health.crashed_workers, 0);
+    assert_eq!(report.health.respawned_workers, 0);
+    assert_eq!(report.health.workers, 3);
+    assert_eq!(report.health.shards, specs.len());
+}
+
+#[test]
+fn sigkilled_worker_is_respawned_and_bytes_match() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let expected = expected_cells(&session, &specs);
+    // Worker slot 1 is SIGKILLed immediately after shard 1 is assigned
+    // to it: the coordinator must detect the death, respawn the slot,
+    // reassign the shard, and converge to the exact fault-free bytes.
+    let f = fabric(|c| c.kill_after_assign = vec![(1, 1)]);
+    let report = session.sweep_cells_process(&specs, &f).unwrap();
+    assert_eq!(
+        report.cells_json(|s| s.clone()),
+        expected,
+        "SIGKILL mid-sweep must not change any successful cell"
+    );
+    assert_eq!(report.health.degraded_cells, 0);
+    assert!(report.health.crashed_workers >= 1, "death undetected: {:?}", report.health);
+    assert!(report.health.respawned_workers >= 1, "no respawn: {:?}", report.health);
+    assert!(report.health.retries >= 1, "killed shard must retry: {:?}", report.health);
+}
+
+#[test]
+fn corrupt_frame_retries_then_converges() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let expected = expected_cells(&session, &specs);
+    // Worker slot 0 XORs its shard-0 Done checksum once: the
+    // coordinator must count the corrupt payload, retry the shard, and
+    // still converge byte-identically.
+    let f = fabric(|c| c.worker_faults = vec!["corrupt:0@0".to_string()]);
+    let report = session.sweep_cells_process(&specs, &f).unwrap();
+    assert_eq!(
+        report.cells_json(|s| s.clone()),
+        expected,
+        "one corrupt frame must not change any cell"
+    );
+    assert_eq!(report.health.degraded_cells, 0);
+    assert!(report.health.corrupt_payloads >= 1, "corruption uncounted: {:?}", report.health);
+    assert!(report.health.retries >= 1, "corrupt shard must retry: {:?}", report.health);
+}
+
+#[test]
+fn always_corrupt_shard_degrades_to_partial_report() {
+    let session = LoraxSession::new(&cfg());
+    let specs = spec_grid();
+    let expected = session.sweep_cells(&specs);
+    // One worker, and shard 0's checksum is corrupted on *every*
+    // attempt: its cell must exhaust the 2-attempt budget and degrade,
+    // while every other cell stays exact — graceful degradation, not a
+    // failed sweep.
+    let f = fabric(|c| {
+        c.workers = 1;
+        c.max_attempts = 2;
+        c.worker_faults = vec!["corrupt:0@0:always".to_string()];
+    });
+    let report = session.sweep_cells_process(&specs, &f).unwrap();
+    assert_eq!(report.cells.len(), specs.len());
+    assert!(
+        matches!(&report.cells[0], CellState::Unfinished(_)),
+        "shard 0 must degrade: {:?}",
+        report.health
+    );
+    for (i, cell) in report.cells.iter().enumerate().skip(1) {
+        match (cell, &expected.cells[i]) {
+            (CellState::Done(got), CellState::Done(want)) => {
+                assert_eq!(got, &want.to_json(), "cell {i} diverged");
+            }
+            other => panic!("cell {i}: unexpected states {other:?}"),
+        }
+    }
+    assert_eq!(report.health.degraded_cells, 1);
+    assert!(report.health.corrupt_payloads >= 2, "{:?}", report.health);
+    let json = report.to_json(|s| s.clone());
+    assert!(json.contains("\"cell_unfinished\""));
+    assert!(json.contains("\"fabric_health\""));
+}
+
+/// Kill a child on scope exit so a failing assert never leaks a server.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn query_socket(socket: &std::path::Path, request: &str) -> std::io::Result<String> {
+    let mut stream = UnixStream::connect(socket)?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.write_all(request.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.shutdown(std::net::Shutdown::Write)?;
+    let mut reply = String::new();
+    stream.read_to_string(&mut reply)?;
+    Ok(reply)
+}
+
+#[test]
+fn serve_replies_match_run_json_and_sigterm_drains() {
+    let socket = std::env::temp_dir()
+        .join(format!("lorax-it-serve-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&socket);
+    let child = Command::new(lorax_bin())
+        .args(["serve", "--socket"])
+        .arg(&socket)
+        .args(["--scale", "0.02", "--seed", "7"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let pid = child.id();
+    let mut child = KillOnDrop(child);
+    // Wait for the socket to accept connections.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let reply = loop {
+        if let Ok(r) = query_socket(&socket, "sobel:LORAX-OOK") {
+            break r;
+        }
+        assert!(Instant::now() < deadline, "server never came up on {}", socket.display());
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let session = LoraxSession::new(&cfg());
+    let spec: ExperimentSpec = "sobel:LORAX-OOK".parse().unwrap();
+    let expected = session.run(&spec).unwrap().to_json();
+    assert_eq!(reply, expected, "serve reply must be the exact run --json bytes");
+    // A bad request answers with one serve_error line and leaves the
+    // server healthy.
+    let err_reply = query_socket(&socket, "no-such-app:LORAX-OOK").unwrap();
+    assert!(err_reply.starts_with("{\"name\":\"serve_error\""), "got: {err_reply}");
+    assert_eq!(query_socket(&socket, "sobel:LORAX-OOK").unwrap(), expected);
+    // SIGTERM: the server must drain, remove the socket and exit 0.
+    let killed = Command::new("kill")
+        .args(["-TERM", &pid.to_string()])
+        .status()
+        .unwrap();
+    assert!(killed.success());
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let status = loop {
+        if let Some(status) = child.0.try_wait().unwrap() {
+            break status;
+        }
+        assert!(Instant::now() < deadline, "server did not exit after SIGTERM");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "drain must exit cleanly, got {status:?}");
+    assert!(!socket.exists(), "socket file must be removed on drain");
+}
