@@ -142,6 +142,40 @@ fn main() {
     });
     report_and_record(&r, trace.len() as f64, "pkts");
 
+    // --- telemetry overhead on the replay hot path ----------------------
+    // The telemetry contract (docs/ARCHITECTURE.md): recording on the
+    // replay hot path costs < 2% — one span per replay call plus three
+    // relaxed counter adds, never per-packet work.  Measured on the
+    // same SoA + memoized-table loop with the runtime kill switch
+    // flipped; min-of-iters damps scheduler noise.  BENCH_replay.json
+    // feeds `lorax perf-gate`, which holds rate_pkts_per_s to the
+    // per-host baseline and telemetry_overhead_pct under 2.0.
+    let t_iters = if smoke { 5 } else { 9 };
+    lorax::telemetry::set_enabled(true);
+    let r_on = bench("sim:replay SoA (telemetry on)", 1, t_iters, || {
+        black_box(sim.replay(&packed, &policy, &table));
+    });
+    report_and_record(&r_on, trace.len() as f64, "pkts");
+    lorax::telemetry::set_enabled(false);
+    let r_off = bench("sim:replay SoA (telemetry off)", 1, t_iters, || {
+        black_box(sim.replay(&packed, &policy, &table));
+    });
+    lorax::telemetry::set_enabled(true);
+    report_and_record(&r_off, trace.len() as f64, "pkts");
+    let overhead_pct = (r_on.min_s() / r_off.min_s() - 1.0) * 100.0;
+    println!("  (telemetry overhead on min times: {overhead_pct:.2}%)");
+    let payload = format!(
+        "{{\"name\":\"replay\",\"packets\":{},\"rate_pkts_per_s\":{},\
+         \"rate_off_pkts_per_s\":{},\"telemetry_overhead_pct\":{}}}\n",
+        trace.len(),
+        lorax::util::bench::json_f64(trace.len() as f64 / r_on.min_s()),
+        lorax::util::bench::json_f64(trace.len() as f64 / r_off.min_s()),
+        lorax::util::bench::json_f64((overhead_pct * 100.0).round() / 100.0),
+    );
+    if let Err(e) = lorax::util::bench::write_json_payload("replay", &payload) {
+        eprintln!("warning: could not write BENCH_replay.json: {e}");
+    }
+
     // --- trace file: in-memory vs file-backed zero-copy replay ---------
     // Same columns, three backings: the in-memory TraceBuffer, the
     // mmap-ed .ltrace file (zero-copy, pages in on demand), and the

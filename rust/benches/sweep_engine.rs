@@ -76,12 +76,18 @@ fn main() {
         scenarios.len(),
         100.0 * wc.hit_rate()
     );
+    // serial_rate_per_s / parallel_rate_per_s ride into the payload so
+    // `lorax perf-gate` can hold parallel throughput to the per-host
+    // baseline (BENCH_sweep_engine.json is one of its gated records).
     let payload = format!(
         "{{\"name\":\"sweep_engine\",\"scenarios\":{},\"threads\":{},\
+         \"serial_rate_per_s\":{},\"parallel_rate_per_s\":{},\
          \"workload_synths\":{},\"workload_hits\":{},\"workload_hit_rate\":{},\
          \"decision_tables\":{}}}\n",
         scenarios.len(),
         parallel.threads(),
+        json_f64(scenarios.len() as f64 / rs.min_s()),
+        json_f64(scenarios.len() as f64 / rp.min_s()),
         wc.misses(),
         wc.hits(),
         json_f64(wc.hit_rate()),

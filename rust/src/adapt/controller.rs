@@ -242,6 +242,7 @@ impl<'s> EpochHook<'s> for AdaptController<'s> {
     }
 
     fn on_epoch(&mut self, obs: &EpochObservation) -> Option<ReplayTuning<'s>> {
+        crate::metric_counter!("adapt.epochs").inc();
         let red = self.tuning.power_reduction_pct;
         let mut rec = EpochRecord::from_observation(obs, self.rules.fabric, red);
         if self.rules.spec.monitor_only() || !self.current_policy().loss_aware() {
@@ -257,8 +258,10 @@ impl<'s> EpochHook<'s> for AdaptController<'s> {
             return None;
         }
         self.retunes += 1;
+        crate::metric_counter!("adapt.retunes").inc();
         if next_m != prev_fabric {
             self.mod_switches += 1;
+            crate::metric_counter!("adapt.mod_switches").inc();
             // The LORAX family is modulation-bound: moving the fabric
             // moves the policy's native order with it, so the decision
             // table is rebuilt (once, then cached) for the new eye.

@@ -18,7 +18,10 @@
 //!   [`ProcessFabric`] subprocess transport when
 //!   [`ServeOptions::process_workers`] is non-zero;
 //! * a request that cannot be parsed or executed answers with a single
-//!   `{"name":"serve_error",...}` line — the connection stays usable.
+//!   `{"name":"serve_error",...}` line — the connection stays usable;
+//! * the literal request `metrics` answers with the process's
+//!   `telemetry_snapshot` NDJSON line, and `metrics text` with the
+//!   Prometheus-style rendering ([`crate::report::metrics_text`]).
 //!
 //! Robustness contract: accepted connections are bounded by
 //! [`ServeOptions::max_inflight`] (excess connections queue in the
@@ -47,7 +50,9 @@ use super::session::{AppRunReport, LoraxSession};
 /// How [`serve`] listens, bounds and degrades.
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
-    /// Unix-domain socket path to bind (a stale file is replaced).
+    /// Unix-domain socket path to bind.  A stale file left by a
+    /// SIGKILLed predecessor is detected (connect-probe refused) and
+    /// replaced; a path with a *live* server behind it is an error.
     pub socket: PathBuf,
     /// Maximum concurrently served connections; further accepted
     /// connections wait for a slot before their first request is read.
@@ -126,29 +131,52 @@ impl Gate {
             n = guard;
         }
         *n += 1;
+        crate::metric_gauge!("serve.inflight").add(1);
         true
     }
 
     fn release(&self) {
         let mut n = self.n.lock().unwrap_or_else(|e| e.into_inner());
         *n = n.saturating_sub(1);
+        crate::metric_gauge!("serve.inflight").sub(1);
         self.freed.notify_one();
+    }
+}
+
+/// True when the socket file at `path` has a live server behind it.
+///
+/// A Unix-socket file outlives its process: a SIGKILLed server leaves
+/// the file on disk, and a blind `remove_file` on restart would also
+/// clobber a *running* server's socket (stranding it listening on an
+/// unlinked inode).  A connect probe tells the two apart: connect
+/// succeeding (or queueing — `EAGAIN` on a full backlog) means someone
+/// is listening; `ECONNREFUSED` and friends mean the file is stale.
+fn socket_is_live(path: &Path) -> bool {
+    match UnixStream::connect(path) {
+        Ok(_) => true,
+        Err(e) => e.kind() == io::ErrorKind::WouldBlock,
     }
 }
 
 /// Run the sweep service until `SIGTERM`/`SIGINT`, then drain in-flight
 /// requests, remove the socket file and return.
 ///
-/// The bound socket is created fresh (a stale file from a previous
-/// crashed server is removed first), so two concurrent servers on the
-/// same path are last-writer-wins — deliberate, matching the crash-safe
-/// "restart replaces" semantics of the trace writer.
+/// A stale socket file left by a crashed (e.g. SIGKILLed) predecessor
+/// is removed after a connect probe confirms nobody is listening; a
+/// live server on the path is an error, never clobbered.
 pub fn serve(cfg: &SystemConfig, opts: &ServeOptions) -> Result<()> {
     STOP.store(false, Ordering::SeqCst);
     install_stop_handler();
     if opts.socket.exists() {
+        if socket_is_live(&opts.socket) {
+            anyhow::bail!(
+                "{} already has a live server listening; refusing to replace it",
+                opts.socket.display()
+            );
+        }
         std::fs::remove_file(&opts.socket)
             .with_context(|| format!("removing stale socket {}", opts.socket.display()))?;
+        eprintln!("lorax serve: removed stale socket {}", opts.socket.display());
     }
     let listener = UnixListener::bind(&opts.socket)
         .with_context(|| format!("binding {}", opts.socket.display()))?;
@@ -249,9 +277,14 @@ fn handle_connection(
 /// One reply for one request line — never an error: failures become a
 /// `serve_error` NDJSON line so the connection survives bad requests.
 fn answer(session: &LoraxSession, text: &str, opts: &ServeOptions) -> String {
+    crate::metric_counter!("serve.requests").inc();
+    let _span = crate::metric_histogram!("serve.latency_us").span();
     match run_request(session, text, opts) {
         Ok(ndjson) => ndjson,
-        Err(e) => serve_error_line(text, &format!("{e:#}")),
+        Err(e) => {
+            crate::metric_counter!("serve.errors").inc();
+            serve_error_line(text, &format!("{e:#}"))
+        }
     }
 }
 
@@ -263,6 +296,14 @@ fn serve_error_line(request: &str, error: &str) -> String {
 
 /// Execute one request line against the shared session.
 fn run_request(session: &LoraxSession, text: &str, opts: &ServeOptions) -> Result<String> {
+    // Introspection queries answer from the process-global registry;
+    // everything else is experiment specs.
+    if text == "metrics" {
+        return Ok(crate::telemetry::global().snapshot().to_ndjson());
+    }
+    if text == "metrics text" {
+        return Ok(crate::report::metrics_text(&crate::telemetry::global().snapshot()));
+    }
     let parts: Vec<&str> = text.split_whitespace().collect();
     if parts.len() == 1 {
         // Single spec: byte-identical to `lorax run --json`.
@@ -310,6 +351,11 @@ pub fn query(socket: &Path, request: &str) -> Result<String> {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    /// Serializes the tests that run the accept loop: `STOP` is
+    /// process-global, and one test's `serve()` entry resetting it
+    /// would strand another test's drain.
+    static SERVE_LOCK: Mutex<()> = Mutex::new(());
 
     fn scratch(name: &str) -> PathBuf {
         static SEQ: AtomicU64 = AtomicU64::new(0);
@@ -360,7 +406,64 @@ mod tests {
     }
 
     #[test]
+    fn metrics_query_returns_snapshot_line() {
+        // Serializes with the lib tests that toggle the global kill
+        // switch, so the request recorded here is visible.
+        let _guard = crate::telemetry::test_lock();
+        let cfg = small_cfg();
+        let session = LoraxSession::new(&cfg);
+        let opts = ServeOptions::new(scratch("unused.sock"));
+        let got = answer(&session, "metrics", &opts);
+        assert!(got.starts_with("{\"record\":\"telemetry_snapshot\""), "got: {got}");
+        assert!(got.ends_with("}\n"));
+        #[cfg(not(feature = "notelemetry"))]
+        assert!(got.contains("\"serve.requests\":"), "got: {got}");
+        let text = answer(&session, "metrics text", &opts);
+        #[cfg(not(feature = "notelemetry"))]
+        assert!(text.contains("lorax_serve_requests"), "got: {text}");
+        #[cfg(feature = "notelemetry")]
+        let _ = text;
+    }
+
+    #[test]
+    fn stale_socket_is_replaced_but_live_server_is_not() {
+        let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = small_cfg();
+        let socket = scratch("stale.sock");
+        // A bound-then-dropped listener models a SIGKILLed server: the
+        // file stays behind with nobody listening.
+        drop(UnixListener::bind(&socket).unwrap());
+        assert!(socket.exists(), "dropped listener must leave the file");
+        assert!(!socket_is_live(&socket));
+        let opts = ServeOptions::new(socket.clone());
+        std::thread::scope(|scope| {
+            let server = scope.spawn(|| serve(&cfg, &opts));
+            let mut live = false;
+            for _ in 0..200 {
+                std::thread::sleep(Duration::from_millis(25));
+                if socket_is_live(&socket) {
+                    live = true;
+                    break;
+                }
+            }
+            assert!(live, "server must replace the stale socket and come up");
+            // A second server on the same path must refuse, not
+            // clobber the live one.
+            let second = serve(&cfg, &opts);
+            assert!(second.is_err(), "live socket must not be replaced");
+            assert!(
+                format!("{:#}", second.unwrap_err()).contains("live server"),
+                "error should say why"
+            );
+            STOP.store(true, Ordering::SeqCst);
+            server.join().unwrap().unwrap();
+        });
+        assert!(!socket.exists());
+    }
+
+    #[test]
     fn serve_answers_queries_and_drains_on_stop() {
+        let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let cfg = small_cfg();
         let socket = scratch("serve.sock");
         let opts = ServeOptions::new(socket.clone());

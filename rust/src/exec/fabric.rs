@@ -628,6 +628,7 @@ fn retry_or_degrade<O>(
         degrade_shard(shard, err, cells, health, finalized_shard, finalized);
     } else {
         health.retries += 1;
+        crate::metric_counter!("fabric.retries").inc();
         pending.push_back((shard.id, attempt + 1, now + cfg.backoff(attempt)));
     }
 }
@@ -840,6 +841,7 @@ impl SweepFabric {
                 if believed_up[w] && step.saturating_sub(last_seen[w]) > cfg.heartbeat_timeout {
                     believed_up[w] = false;
                     health.crashed_workers += 1;
+                    crate::metric_counter!("fabric.crashes").inc();
                 }
             }
             // ... and its in-flight shards reassign immediately.
@@ -874,6 +876,7 @@ impl SweepFabric {
             for (sid, attempt) in expired {
                 in_flight.remove(&sid);
                 health.timeouts += 1;
+                crate::metric_counter!("fabric.timeouts").inc();
                 retry_or_degrade(
                     shards[sid],
                     attempt,

@@ -63,5 +63,5 @@ pub use runner::{shard_cells, trace_replay_shard_size, DecisionTableCache, Shard
 pub use spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 pub use trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
 pub use trace_file::{TraceFile, TraceFileError, TraceFileWriter};
-pub use transport::{worker_main, ProcessFabric, ProcessFabricConfig, TransportError};
+pub use transport::{worker_main, ProcessFabric, ProcessFabricConfig, TransportError, WorkerObit};
 pub use workload::{CachedWorkload, TraceCache, WorkloadCache};

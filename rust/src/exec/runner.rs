@@ -124,10 +124,12 @@ impl DecisionTableCache {
         }
         let key = (m, policy.kind, policy.tuning);
         if let Some(t) = self.map.lock().unwrap().get(&key) {
+            crate::metric_counter!("session.tables.hits").inc();
             return Arc::clone(t);
         }
         // Built outside the lock: duplicate work on a race is benign
         // (tables are pure) and the first insert wins.
+        crate::metric_counter!("session.tables.misses").inc();
         let built = Arc::new(DecisionTable::build(engine, policy));
         Arc::clone(self.map.lock().unwrap().entry(key).or_insert(built))
     }

@@ -112,6 +112,20 @@ pub enum TransportError {
     },
     /// The process fabric was configured with zero workers.
     NoWorkers,
+    /// A worker process died (pipe EOF, frame error, or heartbeat
+    /// silence), with the last bytes it wrote to stderr attached so
+    /// the respawn log says *why* — an abort message, a panic
+    /// backtrace — instead of just "worker gone".
+    WorkerDied {
+        /// Worker slot that died.
+        worker: usize,
+        /// What the coordinator observed (the triggering frame error,
+        /// or the liveness mechanism that fired).
+        reason: String,
+        /// Bounded tail of the process's captured stderr (empty when
+        /// it died silently).
+        stderr_tail: String,
+    },
 }
 
 impl fmt::Display for TransportError {
@@ -133,6 +147,14 @@ impl fmt::Display for TransportError {
             }
             TransportError::NoWorkers => {
                 write!(f, "process fabric configured with zero workers")
+            }
+            TransportError::WorkerDied { worker, reason, stderr_tail } => {
+                write!(f, "worker {worker} died: {reason}")?;
+                if stderr_tail.is_empty() {
+                    write!(f, " (no stderr output)")
+                } else {
+                    write!(f, "; stderr tail: {}", stderr_tail.trim_end())
+                }
             }
         }
     }
@@ -172,6 +194,8 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), TransportE
     frame.extend_from_slice(payload);
     w.write_all(&frame)?;
     w.flush()?;
+    crate::metric_counter!("transport.frames_sent").inc();
+    crate::metric_counter!("transport.bytes_sent").add(frame.len() as u64);
     Ok(())
 }
 
@@ -221,8 +245,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, TransportError>
     }
     let computed = fnv1a64(&payload);
     if computed != stored {
+        crate::metric_counter!("transport.checksum_failures").inc();
         return Err(TransportError::ChecksumMismatch { stored, computed });
     }
+    crate::metric_counter!("transport.frames_received").inc();
+    crate::metric_counter!("transport.bytes_received")
+        .add((FRAME_HEADER_LEN + payload.len()) as u64);
     Ok(Some(payload))
 }
 
@@ -286,6 +314,12 @@ pub enum FromWorker {
         /// [`crate::exec::fabric`]-style fingerprint fold over `cells`
         /// (FNV-1a-64 of each record), verified before acceptance.
         checksum: u64,
+        /// Telemetry delta since the worker's last shipped snapshot,
+        /// in [`crate::telemetry::Snapshot::to_pairs`] wire form.  The
+        /// worker advances its shipped mark only after a send goes
+        /// out, so a dropped completion's counts ride the next one and
+        /// fleet totals stay exact across retries.
+        metrics: Vec<(String, u64)>,
     },
 }
 
@@ -463,7 +497,7 @@ impl FromWorker {
                 out.push(TAG_PONG);
                 put_u64(&mut out, *nonce);
             }
-            FromWorker::Done { shard, attempt, cells, checksum } => {
+            FromWorker::Done { shard, attempt, cells, checksum, metrics } => {
                 out.push(TAG_DONE);
                 put_u32(&mut out, *shard);
                 put_u32(&mut out, *attempt);
@@ -480,6 +514,11 @@ impl FromWorker {
                             put_str(&mut out, e);
                         }
                     }
+                }
+                put_u32(&mut out, metrics.len() as u32);
+                for (name, v) in metrics {
+                    put_str(&mut out, name);
+                    put_u64(&mut out, *v);
                 }
             }
         }
@@ -510,7 +549,14 @@ impl FromWorker {
                     };
                     cells.push(cell);
                 }
-                FromWorker::Done { shard, attempt, cells, checksum }
+                let mn = d.list_len("metric count")?;
+                let mut metrics = Vec::with_capacity(mn);
+                for _ in 0..mn {
+                    let name = d.str("metric name")?;
+                    let v = d.u64("metric value")?;
+                    metrics.push((name, v));
+                }
+                FromWorker::Done { shard, attempt, cells, checksum, metrics }
             }
             t => {
                 return Err(TransportError::BadMessage {
@@ -626,6 +672,54 @@ enum Event {
     Dead(Option<TransportError>),
 }
 
+/// Post-mortem for one dead worker process: what the coordinator
+/// observed and the last bytes the process wrote to stderr.  Collected
+/// per run and retrievable via [`ProcessFabric::last_obits`].
+#[derive(Clone, Debug)]
+pub struct WorkerObit {
+    /// Worker slot that died.
+    pub worker: usize,
+    /// Spawn generation of the dead process (0 = original spawn).
+    pub gen: u64,
+    /// Why the coordinator declared it dead.
+    pub reason: String,
+    /// Bounded tail of the process's captured stderr.
+    pub stderr_tail: String,
+}
+
+/// Bytes of worker stderr retained for the obit tail.
+const STDERR_TAIL_CAP: usize = 4096;
+
+/// Tee a worker's piped stderr through to the coordinator's stderr
+/// (preserving the old `Stdio::inherit` visibility) while keeping a
+/// bounded tail for the obit.  Returns the pump thread's handle; it
+/// terminates at pipe EOF, so joining after the child is reaped is
+/// bounded.
+fn pump_stderr(
+    mut stderr: std::process::ChildStderr,
+    tail: Arc<Mutex<Vec<u8>>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut buf = [0u8; 1024];
+        loop {
+            match stderr.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    let _ = io::stderr().write_all(&buf[..n]);
+                    let mut t = tail.lock().unwrap_or_else(|e| e.into_inner());
+                    t.extend_from_slice(&buf[..n]);
+                    if t.len() > STDERR_TAIL_CAP {
+                        let cut = t.len() - STDERR_TAIL_CAP;
+                        t.drain(..cut);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    })
+}
+
 /// One worker subprocess slot.
 struct Slot {
     child: Child,
@@ -635,6 +729,8 @@ struct Slot {
     up: bool,
     last_seen: Instant,
     busy: Option<usize>,
+    stderr_tail: Arc<Mutex<Vec<u8>>>,
+    stderr_pump: Option<std::thread::JoinHandle<()>>,
 }
 
 /// Coordinator bookkeeping for one outstanding assignment.
@@ -649,6 +745,8 @@ struct Flight {
 /// with [`ProcessFabric::new`], execute with [`ProcessFabric::run`].
 pub struct ProcessFabric {
     cfg: ProcessFabricConfig,
+    fleet: Mutex<Vec<(String, u64)>>,
+    obits: Mutex<Vec<WorkerObit>>,
 }
 
 impl ProcessFabric {
@@ -657,12 +755,26 @@ impl ProcessFabric {
         if cfg.workers == 0 {
             return Err(TransportError::NoWorkers);
         }
-        Ok(ProcessFabric { cfg })
+        Ok(ProcessFabric { cfg, fleet: Mutex::new(Vec::new()), obits: Mutex::new(Vec::new()) })
     }
 
     /// The configuration this fabric runs with.
     pub fn config(&self) -> &ProcessFabricConfig {
         &self.cfg
+    }
+
+    /// The concatenated telemetry-delta pairs absorbed from workers
+    /// during the last [`ProcessFabric::run`] (exactly what was merged
+    /// into the coordinator's global registry — one entry per metric
+    /// per accepted completion).
+    pub fn last_fleet(&self) -> Vec<(String, u64)> {
+        self.fleet.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Obits for every worker process declared dead during the last
+    /// [`ProcessFabric::run`].
+    pub fn last_obits(&self) -> Vec<WorkerObit> {
+        self.obits.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Execute `cells` (spec text forms) across worker subprocesses
@@ -703,8 +815,12 @@ impl ProcessFabric {
             kills: self.cfg.kill_after_assign.clone(),
             respawns_used: 0,
             health,
+            fleet: Vec::new(),
+            obits: Vec::new(),
         };
         let report = driver.drive()?;
+        *self.fleet.lock().unwrap_or_else(|e| e.into_inner()) = std::mem::take(&mut driver.fleet);
+        *self.obits.lock().unwrap_or_else(|e| e.into_inner()) = std::mem::take(&mut driver.obits);
         Ok(report)
     }
 }
@@ -726,6 +842,8 @@ struct Driver<'a> {
     kills: Vec<(usize, usize)>,
     respawns_used: u32,
     health: FabricHealth,
+    fleet: Vec<(String, u64)>,
+    obits: Vec<WorkerObit>,
 }
 
 impl Driver<'_> {
@@ -780,6 +898,7 @@ impl Driver<'_> {
                 for w in 0..self.slots.len() {
                     if self.slots[w].alive && self.slots[w].up {
                         let msg = ToWorker::Ping { nonce };
+                        crate::metric_counter!("fabric.heartbeats").inc();
                         if write_frame(&mut self.slots[w].stdin, &msg.encode()).is_err() {
                             self.on_worker_dead(w, self.slots[w].gen, None);
                         }
@@ -808,6 +927,7 @@ impl Driver<'_> {
             for (sid, attempt) in expired {
                 if let Some(f) = self.in_flight.remove(&sid) {
                     self.health.timeouts += 1;
+                    crate::metric_counter!("fabric.timeouts").inc();
                     if self.slots[f.worker].busy == Some(sid) {
                         self.slots[f.worker].busy = None;
                     }
@@ -849,7 +969,7 @@ impl Driver<'_> {
         cmd.arg("worker")
             .stdin(Stdio::piped())
             .stdout(Stdio::piped())
-            .stderr(Stdio::inherit())
+            .stderr(Stdio::piped())
             .env("LORAX_WORKER_SLOT", worker.to_string())
             .env("LORAX_WORKER_RESPAWN", respawns.to_string());
         if self.cfg.worker_faults.is_empty() {
@@ -876,6 +996,11 @@ impl Driver<'_> {
                 })
             }
         };
+        let stderr_tail = Arc::new(Mutex::new(Vec::new()));
+        let stderr_pump = child
+            .stderr
+            .take()
+            .map(|s| pump_stderr(s, Arc::clone(&stderr_tail)));
         let gen = self.slots.get(worker).map(|s| s.gen + 1).unwrap_or(0);
         let tx = match &self.tx {
             Some(tx) => tx.clone(),
@@ -925,6 +1050,8 @@ impl Driver<'_> {
             up: false,
             last_seen: Instant::now(),
             busy: None,
+            stderr_tail,
+            stderr_pump,
         })
     }
 
@@ -940,8 +1067,8 @@ impl Driver<'_> {
             Event::Msg(FromWorker::Pong { .. }) => {
                 self.slots[worker].last_seen = Instant::now();
             }
-            Event::Msg(FromWorker::Done { shard, attempt, cells, checksum }) => {
-                self.on_done(worker, shard as usize, attempt, cells, checksum);
+            Event::Msg(FromWorker::Done { shard, attempt, cells, checksum, metrics }) => {
+                self.on_done(worker, shard as usize, attempt, cells, checksum, metrics);
             }
             Event::Dead(err) => {
                 if let Some(e) = &err {
@@ -971,8 +1098,19 @@ impl Driver<'_> {
         attempt: u32,
         cells: Vec<Result<String, String>>,
         checksum: u64,
+        metrics: Vec<(String, u64)>,
     ) {
         self.slots[worker].last_seen = Instant::now();
+        // Absorb the worker's telemetry delta regardless of what
+        // happens to the cells: the worker advances its shipped mark
+        // once per send, so every completion — duplicate shards and
+        // corrupt payloads included — carries a disjoint slice of
+        // worker-side work, and absorbing each exactly once keeps
+        // fleet totals exact.
+        if !metrics.is_empty() {
+            crate::telemetry::global().absorb_pairs(&metrics);
+            self.fleet.extend(metrics);
+        }
         if self.slots[worker].busy == Some(shard) {
             self.slots[worker].busy = None;
         }
@@ -1015,15 +1153,37 @@ impl Driver<'_> {
         self.finalized += 1;
     }
 
-    fn on_worker_dead(&mut self, worker: usize, gen: u64, _err: Option<TransportError>) {
+    fn on_worker_dead(&mut self, worker: usize, gen: u64, err: Option<TransportError>) {
         if self.slots[worker].gen != gen || !self.slots[worker].alive {
             return;
         }
         self.health.crashed_workers += 1;
+        crate::metric_counter!("transport.worker_deaths").inc();
         self.slots[worker].alive = false;
         self.slots[worker].up = false;
         let _ = self.slots[worker].child.kill();
         let _ = self.slots[worker].child.wait();
+        // The child is reaped, so its stderr pipe is at EOF: joining
+        // the pump is bounded and guarantees the tail holds everything
+        // the process managed to write.
+        if let Some(h) = self.slots[worker].stderr_pump.take() {
+            let _ = h.join();
+        }
+        let tail = {
+            let t = self.slots[worker].stderr_tail.lock().unwrap_or_else(|e| e.into_inner());
+            String::from_utf8_lossy(&t).into_owned()
+        };
+        let reason = match &err {
+            Some(e) => e.to_string(),
+            None => "pipe closed or heartbeat silence".to_string(),
+        };
+        let died = TransportError::WorkerDied {
+            worker,
+            reason: reason.clone(),
+            stderr_tail: tail.clone(),
+        };
+        eprintln!("lorax: {died}; respawning");
+        self.obits.push(WorkerObit { worker, gen, reason, stderr_tail: tail });
         // Reassign whatever it was computing as a failed attempt.
         if let Some(sid) = self.slots[worker].busy.take() {
             let stale = self.in_flight.get(&sid).map(|f| f.worker == worker).unwrap_or(false);
@@ -1039,6 +1199,7 @@ impl Driver<'_> {
             match self.spawn_slot(worker, self.respawns_used) {
                 Ok(slot) => {
                     self.health.respawned_workers += 1;
+                    crate::metric_counter!("fabric.respawns").inc();
                     self.slots[worker] = slot;
                 }
                 Err(_) => {
@@ -1057,6 +1218,7 @@ impl Driver<'_> {
             );
         } else {
             self.health.retries += 1;
+            crate::metric_counter!("fabric.retries").inc();
             self.pending.push_back((shard, attempt + 1, now + self.cfg.backoff(attempt)));
         }
     }
@@ -1289,6 +1451,10 @@ where
     });
     let mut build = Some(build);
     let mut exec: Option<R> = None;
+    // Telemetry shipped so far: each Done carries the delta since this
+    // mark, and the mark only advances after a send goes out — a
+    // dropped completion's counts ride the next one.
+    let mut last_shipped = crate::telemetry::Snapshot::default();
     for msg in rx {
         match msg {
             ToWorker::Init { overrides } => {
@@ -1312,6 +1478,8 @@ where
                         detail: "Assign received before Init".to_string(),
                     });
                 };
+                crate::metric_counter!("worker.shards_run").inc();
+                crate::metric_counter!("worker.cells_run").add(cells.len() as u64);
                 let outs: Vec<Result<String, String>> =
                     cells.iter().map(|c| run(c)).collect();
                 let mut checksum = cells_checksum(&outs);
@@ -1324,7 +1492,13 @@ where
                 if faults.fires(WorkerFaultKind::Drop, shard) {
                     continue;
                 }
-                send_msg(&out, &FromWorker::Done { shard, attempt, cells: outs, checksum })?;
+                let snap = crate::telemetry::global().snapshot();
+                let metrics = snap.diff(&last_shipped).to_pairs();
+                send_msg(
+                    &out,
+                    &FromWorker::Done { shard, attempt, cells: outs, checksum, metrics },
+                )?;
+                last_shipped = snap;
             }
             ToWorker::Ping { nonce } => {
                 // Normally answered by the reader thread; kept total.
@@ -1463,6 +1637,17 @@ mod tests {
                     Err("spec parse failed".to_string()),
                 ],
                 checksum: 0xFEED,
+                metrics: vec![
+                    ("c:worker.cells_run".to_string(), 2),
+                    ("h:replay.wall_us:n".to_string(), 2),
+                ],
+            },
+            FromWorker::Done {
+                shard: 2,
+                attempt: 1,
+                cells: vec![Ok("{}".to_string())],
+                checksum: 0,
+                metrics: Vec::new(),
             },
         ];
         for m in msgs {

@@ -76,6 +76,7 @@ impl WorkloadCache {
         let key = (app, seed, scale.to_bits());
         if let Some(w) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::metric_counter!("session.workloads.hits").inc();
             return Arc::clone(w);
         }
         // Synthesized outside the lock: duplicate synthesis on a race is
@@ -87,10 +88,12 @@ impl WorkloadCache {
         match self.map.lock().unwrap().entry(key) {
             Entry::Occupied(e) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::metric_counter!("session.workloads.hits").inc();
                 Arc::clone(e.get())
             }
             Entry::Vacant(v) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::metric_counter!("session.workloads.misses").inc();
                 Arc::clone(v.insert(built))
             }
         }
@@ -182,6 +185,7 @@ impl TraceCache {
     ) -> Arc<TraceFile> {
         if let Some(f) = self.map.lock().unwrap().get(key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::metric_counter!("session.traces.hits").inc();
             return Arc::clone(f);
         }
         // Materialized outside the lock: a racing duplicate is benign
@@ -191,10 +195,12 @@ impl TraceCache {
         match self.map.lock().unwrap().entry(key.to_string()) {
             Entry::Occupied(e) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::metric_counter!("session.traces.hits").inc();
                 Arc::clone(e.get())
             }
             Entry::Vacant(v) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::metric_counter!("session.traces.misses").inc();
                 Arc::clone(v.insert(built))
             }
         }

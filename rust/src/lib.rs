@@ -57,6 +57,15 @@
 //! exercised against the non-stationary [`traffic::synth`] profiles
 //! (bursty, diurnal, flash-crowd, phase-shifting).
 //!
+//! Every layer records into the registry-free [`telemetry`] subsystem
+//! (relaxed-atomic counters, log2 histograms, span timers): session
+//! cache hit rates, replay throughput, fabric retries/respawns,
+//! transport frames/bytes and serve latency surface as one
+//! `telemetry_snapshot` NDJSON record (`lorax run --metrics`,
+//! `lorax sweep --metrics`, the `metrics` serve query) or
+//! Prometheus-style text ([`report::metrics_text`]) — with the off
+//! path pinned byte-identical to uninstrumented output.
+//!
 //! Quickstart (see also `examples/quickstart.rs`):
 //!
 //! ```no_run
@@ -85,6 +94,7 @@ pub mod noc;
 pub mod phys;
 pub mod report;
 pub mod runtime;
+pub mod telemetry;
 pub mod topology;
 pub mod traffic;
 pub mod util;

@@ -25,6 +25,9 @@
 //! lorax trace replay f.ltrace --spec app:policy [--json] # zero-copy replay
 //! lorax reproduce [fig2|fig6|table3|fig7|fig8|headline|all]
 //! lorax verify-bridge                        # native channel == AOT/PJRT channel
+//! lorax run --spec ... --json --metrics      # + telemetry_snapshot record
+//! lorax perf-gate [--record]                 # bench records vs per-host baselines
+//! lorax serve --socket s --query metrics     # server's live telemetry snapshot
 //!
 //! Common options: --config <file>  --set section.key=value[,..]
 //!                 --scale <f>  --seed <n>  --csv  --jobs <n>
@@ -93,6 +96,23 @@ fn emit(table: &lorax::report::Table, csv: bool) {
     }
 }
 
+/// `--metrics` (run/sweep): append this process's telemetry snapshot
+/// after the command's own output — one `telemetry_snapshot` NDJSON
+/// record under `--json`, an aligned text block otherwise.  Purely
+/// additive: the records before it are byte-identical with or without
+/// the flag (the CI metrics smoke diffs exactly that).
+fn emit_metrics(args: &Args) {
+    if !args.flag("metrics") {
+        return;
+    }
+    let snap = lorax::telemetry::global().snapshot();
+    if args.flag("json") {
+        print!("{}", snap.to_ndjson());
+    } else {
+        print!("telemetry:\n{}", snap.to_text());
+    }
+}
+
 fn run() -> Result<()> {
     let args = Args::from_env();
     let cfg = load_config(&args)?;
@@ -145,6 +165,7 @@ fn run() -> Result<()> {
                     println!("{}", report.sim.summary());
                 }
             }
+            emit_metrics(&args);
         }
         "sweep" => {
             // --patterns turns the sweep into a traffic-shape study:
@@ -177,6 +198,7 @@ fn run() -> Result<()> {
                 };
                 let app_refs: Vec<&str> = apps.iter().map(|s| s.as_str()).collect();
                 emit(&figures::signaling_comparison(&cfg, &app_refs, &mods)?, csv);
+                emit_metrics(&args);
                 return Ok(());
             }
             // --fabric / --fault-plan / --json / --transport switch to
@@ -230,6 +252,7 @@ fn run() -> Result<()> {
                     sel.trunc_bits
                 );
             }
+            emit_metrics(&args);
         }
         "tune" => {
             let (bits, reds) = grid(&args);
@@ -278,6 +301,7 @@ fn run() -> Result<()> {
             reproduce(&cfg, what, &args, csv)?;
         }
         "verify-bridge" => verify_bridge(&cfg)?,
+        "perf-gate" => perf_gate_cmd(&args)?,
         _ => {
             println!("{}", main_doc());
         }
@@ -342,6 +366,7 @@ fn sweep_patterns_cmd(cfg: &SystemConfig, args: &Args) -> Result<()> {
             }
         }
     }
+    emit_metrics(args);
     Ok(())
 }
 
@@ -421,6 +446,7 @@ fn sweep_cells_cmd(cfg: &SystemConfig, args: &Args, csv: bool) -> Result<()> {
         println!();
         emit(&lorax::report::fabric_health_table(&report.health), csv);
     }
+    emit_metrics(args);
     Ok(())
 }
 
@@ -483,6 +509,10 @@ fn sweep_cells_process_cmd(
         println!();
         emit(&lorax::report::fabric_health_table(&report.health), csv);
     }
+    // With the process transport the snapshot includes the worker
+    // deltas absorbed from every Done frame, so the fleet-wide totals
+    // (worker.cells_run across all subprocesses) appear here.
+    emit_metrics(args);
     Ok(())
 }
 
@@ -630,6 +660,46 @@ fn verify_bridge(cfg: &SystemConfig) -> Result<()> {
     Ok(())
 }
 
+/// `lorax perf-gate` — compare fresh `bench_out/` records against the
+/// committed per-host baselines and fail on regression.
+///
+/// `--fresh-dir` (default `bench_out`) is where the bench targets
+/// wrote their `BENCH_*.json` payloads; `--baseline-dir` (default
+/// `bench_baselines`) is the committed root, resolved per host with a
+/// `default/` fallback.  `--tolerance` is the allowed fractional drop
+/// for higher-is-better rates (default 0.5 — CI machines are noisy).
+/// `--record` promotes the fresh records to this host's baseline
+/// instead of gating.
+fn perf_gate_cmd(args: &Args) -> Result<()> {
+    use lorax::util::perf_gate;
+
+    let fresh = PathBuf::from(args.get_or("fresh-dir", "bench_out"));
+    let root = PathBuf::from(args.get_or("baseline-dir", "bench_baselines"));
+    let baseline = perf_gate::host_baseline_dir(&root);
+    let checks = perf_gate::default_checks();
+    if args.flag("record") {
+        let copied = perf_gate::record_baseline(&fresh, &baseline, &checks)
+            .map_err(anyhow::Error::msg)?;
+        println!("recorded {} baseline record(s) to {}", copied.len(), baseline.display());
+        return Ok(());
+    }
+    let tolerance = args.get_f64("tolerance", 0.5)?;
+    let report = perf_gate::run_gate(&fresh, &baseline, tolerance, &checks)
+        .map_err(anyhow::Error::msg)?;
+    for line in &report.lines {
+        println!("{line}");
+    }
+    if report.failures > 0 {
+        bail!("perf-gate: {} check(s) failed against {}", report.failures, baseline.display());
+    }
+    println!(
+        "perf-gate OK: {} check(s) compared against {} (tolerance {tolerance})",
+        report.checked,
+        baseline.display()
+    );
+    Ok(())
+}
+
 fn main_doc() -> &'static str {
     "lorax — LORAX PNoC reproduction
 USAGE: lorax <command> [options]
@@ -683,6 +753,12 @@ COMMANDS
   reproduce      regenerate [fig2|fig6|table3|fig7|fig8|headline|all]
   verify-bridge  assert native channel == AOT/PJRT channel bit-for-bit
                  (needs a build with `--features xla`)
+  perf-gate      diff fresh bench records against committed per-host
+                 baselines ([--fresh-dir bench_out]
+                 [--baseline-dir bench_baselines] [--tolerance 0.5]);
+                 --record promotes the fresh records to this host's
+                 baseline; fails on rate regression beyond tolerance or
+                 telemetry overhead above its 2% ceiling
 
 OPTIONS
   --config <file>    TOML-subset config file
@@ -692,5 +768,13 @@ OPTIONS
   --jobs <n>         sweep worker threads for every sweep-running command
                      (0 = auto; env LORAX_SWEEP_THREADS)
   --csv              emit tables as CSV
-  --json             (run, sweep, trace replay) emit JSON records"
+  --json             (run, sweep, trace replay) emit JSON records
+  --metrics          (run, sweep) append this process's telemetry
+                     snapshot after the output — a telemetry_snapshot
+                     NDJSON record with --json, an aligned text block
+                     otherwise; with --transport process the snapshot
+                     includes fleet-wide totals absorbed from worker
+                     deltas (LORAX_TELEMETRY=0 or the `notelemetry`
+                     feature empties it; outputs are otherwise
+                     byte-identical with or without the flag)"
 }

@@ -301,6 +301,9 @@ impl<'a> Simulator<'a> {
         let n_clusters = self.engine.topo.n_clusters;
         assert!(n_clusters <= MAX_CLUSTERS, "topology too large for replay state");
         assert!(decisions.n_clusters() >= n_clusters, "decision table too small");
+        // One timer per replay call — never per-packet — so telemetry
+        // cost is amortized over the whole hot loop.
+        let _replay_span = crate::metric_histogram!("replay.wall_us").span();
         // Per-source-cluster waveguide next-free time.
         let mut wg_free = [0u64; MAX_CLUSTERS];
         let mut energy = EnergyBreakdown::default();
@@ -453,6 +456,9 @@ impl<'a> Simulator<'a> {
         };
         let epb_pj = if energy.bits_delivered == 0 { 0.0 } else { energy.epb_pj() };
         let latency_p95 = if hist.total() == 0 { 0.0 } else { hist.quantile(0.95) };
+        crate::metric_counter!("replay.calls").inc();
+        crate::metric_counter!("replay.packets").add(buf.len() as u64);
+        crate::metric_counter!("replay.cycles").add(last_finish);
         SimReport {
             policy_name: policy.kind.name(),
             packets: buf.len() as u64,

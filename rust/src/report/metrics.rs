@@ -1,0 +1,89 @@
+//! Prometheus-style text exposition of a telemetry [`Snapshot`].
+//!
+//! The format follows the Prometheus text exposition conventions —
+//! `# TYPE` comments, `lorax_`-prefixed snake_case metric names,
+//! cumulative `_bucket{le="..."}` histogram series — so the output of
+//! the serve `metrics` query can be scraped or eyeballed directly.
+//! This is a rendering only: the stable machine contract is the
+//! `telemetry_snapshot` NDJSON record
+//! ([`crate::telemetry::Snapshot::to_ndjson`]).
+
+use crate::telemetry::{Histogram, Snapshot};
+
+/// `serve.latency_us` → `lorax_serve_latency_us`.
+fn mangle(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 6);
+    out.push_str("lorax_");
+    for c in name.chars() {
+        out.push(if c.is_ascii_alphanumeric() { c } else { '_' });
+    }
+    out
+}
+
+/// Render a snapshot as Prometheus-style exposition text.
+///
+/// Counters render as `counter`, gauges as `gauge`, histograms as
+/// `histogram` with cumulative log2 `le` buckets plus `_sum` and
+/// `_count` series.  Deterministic: metrics appear in sorted name
+/// order.
+pub fn metrics_text(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let m = mangle(name);
+        out.push_str(&format!("# TYPE {m} counter\n{m} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        let m = mangle(name);
+        out.push_str(&format!("# TYPE {m} gauge\n{m} {v}\n"));
+    }
+    for (name, h) in &snap.histograms {
+        let m = mangle(name);
+        out.push_str(&format!("# TYPE {m} histogram\n"));
+        let mut cumulative = 0u64;
+        for &(i, n) in &h.buckets {
+            cumulative += n;
+            let le = Histogram::bucket_bound(i as usize);
+            out.push_str(&format!("{m}_bucket{{le=\"{le}\"}} {cumulative}\n"));
+        }
+        out.push_str(&format!("{m}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{m}_sum {}\n{m}_count {}\n", h.sum, h.count));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    #[test]
+    fn renders_all_three_kinds() {
+        let reg = Registry::new();
+        // absorb() bypasses the process-global kill switch, so this
+        // test is independent of concurrently running toggle tests.
+        reg.absorb_pairs(&[("c:serve.requests".to_string(), 3)]);
+        let snap = {
+            let mut s = reg.snapshot();
+            s.gauges.insert("serve.inflight".into(), 2);
+            let h = crate::telemetry::HistogramSnapshot {
+                count: 3,
+                sum: 12,
+                buckets: vec![(1, 1), (3, 2)],
+            };
+            s.histograms.insert("serve.latency_us".into(), h);
+            s
+        };
+        let text = metrics_text(&snap);
+        assert!(text.contains("# TYPE lorax_serve_requests counter"));
+        assert!(text.contains("lorax_serve_requests 3"));
+        assert!(text.contains("# TYPE lorax_serve_inflight gauge"));
+        assert!(text.contains("lorax_serve_inflight 2"));
+        assert!(text.contains("# TYPE lorax_serve_latency_us histogram"));
+        assert!(text.contains("lorax_serve_latency_us_bucket{le=\"1\"} 1"));
+        // Buckets are cumulative: the bit-length-3 bucket adds on top.
+        assert!(text.contains("lorax_serve_latency_us_bucket{le=\"7\"} 3"));
+        assert!(text.contains("lorax_serve_latency_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("lorax_serve_latency_us_sum 12"));
+        assert!(text.contains("lorax_serve_latency_us_count 3"));
+    }
+}

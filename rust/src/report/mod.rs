@@ -3,6 +3,8 @@
 //! (shared by the `lorax reproduce` CLI and the bench harness).
 
 pub mod figures;
+pub mod metrics;
 pub mod table;
 
+pub use metrics::metrics_text;
 pub use table::{fabric_health_table, Table};

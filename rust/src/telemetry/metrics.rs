@@ -1,0 +1,282 @@
+//! The atomic metric primitives: [`Counter`], [`Gauge`], [`Histogram`]
+//! and the [`Span`] timer.
+//!
+//! All recording goes through `Ordering::Relaxed` atomics — metrics
+//! are monotone tallies, not synchronization — and every recording
+//! entry point early-returns when [`super::enabled`] is false, so the
+//! no-op mode costs one relaxed load.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Number of log2 buckets a [`Histogram`] carries: bucket `i` counts
+/// values whose bit length is `i` (bucket 0 counts zero), i.e. value
+/// `v > 0` lands in bucket `64 - v.leading_zeros()`, capped at
+/// `HIST_BUCKETS - 1`.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A monotonically increasing event tally.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A counter at zero.
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    /// Count one event.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Count `n` events.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Merge a snapshot delta in, bypassing the kill switch: fleet
+    /// aggregation must not drop worker deltas just because the
+    /// coordinator's own recording is off.
+    pub(crate) fn absorb(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// A signed point-in-time level (e.g. requests currently in flight).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    /// A gauge at zero.
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    /// Set the level.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if super::enabled() {
+            self.v.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Move the level up by `n`.
+    #[inline]
+    pub fn add(&self, n: i64) {
+        if super::enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Move the level down by `n`.
+    #[inline]
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-size log2-bucket histogram of `u64` samples (latencies in
+/// microseconds by convention — name metrics `*_us`).
+///
+/// Fixed buckets keep recording allocation-free and snapshots
+/// mergeable bucket-by-bucket; log2 spacing covers nanoseconds to
+/// hours in [`HIST_BUCKETS`] slots at ≤ 2x quantile resolution.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Bucket index for a sample (its bit length, capped).
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (0 for the zero bucket).
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if super::enabled() {
+            self.count.fetch_add(1, Ordering::Relaxed);
+            self.sum.fetch_add(v, Ordering::Relaxed);
+            self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Raw bucket counts (index = bit length of the sample).
+    pub fn buckets(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Start a wall-clock [`Span`] that records elapsed microseconds
+    /// into this histogram when dropped.
+    pub fn span(&self) -> Span<'_> {
+        Span { hist: self, start: Instant::now() }
+    }
+
+    /// Merge snapshot data in (fleet aggregation; bypasses the kill
+    /// switch like [`Counter::absorb`]).
+    pub(crate) fn absorb(&self, count: u64, sum: u64, buckets: &[(u8, u64)]) {
+        self.count.fetch_add(count, Ordering::Relaxed);
+        self.sum.fetch_add(sum, Ordering::Relaxed);
+        for &(i, n) in buckets {
+            let i = (i as usize).min(HIST_BUCKETS - 1);
+            self.buckets[i].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A lightweight wall-clock timer: created by [`Histogram::span`],
+/// records elapsed **microseconds** into its histogram on drop.
+///
+/// ```
+/// let hist = lorax::telemetry::global().histogram("doc.example.phase_us");
+/// {
+///     let _span = hist.span();
+///     // ... timed phase ...
+/// } // drop records the elapsed time
+/// ```
+#[must_use = "a Span records on drop; binding it to _ drops it immediately"]
+#[derive(Debug)]
+pub struct Span<'h> {
+    hist: &'h Histogram,
+    start: Instant,
+}
+
+impl Span<'_> {
+    /// Microseconds elapsed so far.
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.elapsed_us());
+    }
+}
+
+#[cfg(all(test, not(feature = "notelemetry")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let _guard = crate::telemetry::test_lock();
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.add(3);
+        g.sub(5);
+        assert_eq!(g.get(), -2);
+        g.set(9);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_by_bit_length() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // Bounds are the inclusive top of each bucket.
+        assert_eq!(Histogram::bucket_bound(0), 0);
+        assert_eq!(Histogram::bucket_bound(1), 1);
+        assert_eq!(Histogram::bucket_bound(10), 1023);
+        assert_eq!(Histogram::bucket_bound(63), u64::MAX);
+        for v in [0u64, 1, 2, 3, 7, 8, 1000, 123_456_789] {
+            let i = Histogram::bucket_index(v);
+            assert!(v <= Histogram::bucket_bound(i), "{v} above bound of bucket {i}");
+            if i > 0 {
+                assert!(v > Histogram::bucket_bound(i - 1), "{v} fits bucket {}", i - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_spans() {
+        let _guard = crate::telemetry::test_lock();
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 5, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1011);
+        let b = h.buckets();
+        assert_eq!(b[0], 1);
+        assert_eq!(b[1], 1);
+        assert_eq!(b[3], 2);
+        assert_eq!(b[10], 1);
+        {
+            let _span = h.span();
+        }
+        assert_eq!(h.count(), 6);
+    }
+}

@@ -1,0 +1,154 @@
+//! Registry-free (std-only) runtime telemetry: counters, gauges,
+//! log2-bucket histograms and span timers behind one process-global
+//! [`Registry`] of named metrics.
+//!
+//! Design contract (see `docs/ARCHITECTURE.md` § Telemetry):
+//!
+//! * **O(1) hot path.** Recording is a handful of `Relaxed` atomic
+//!   adds on a pre-registered handle — no locks, no allocation, no
+//!   formatting.  Registration (name → handle) takes a mutex once per
+//!   call site; the [`metric_counter!`]/[`metric_gauge!`]/
+//!   [`metric_histogram!`] macros cache the handle in a `OnceLock`
+//!   static so steady-state recording never touches the registry map.
+//! * **Write-only.** Nothing in the simulation, the sweep fabric or
+//!   the serve loop ever *reads* a metric to make a decision, so the
+//!   no-op mode is pinned to have zero effect on outputs: `lorax run
+//!   --json` and `lorax sweep --json` are byte-identical with
+//!   telemetry enabled, disabled ([`set_enabled`], `LORAX_TELEMETRY=0`)
+//!   or compiled out (`--features notelemetry`).
+//! * **Mergeable snapshots.** [`Registry::snapshot`] captures every
+//!   metric; [`Snapshot`] supports `diff` (worker deltas), `merge`
+//!   (fleet totals) and a flat `(name, u64)` pairs codec so subprocess
+//!   workers ship their registry deltas to the coordinator over the
+//!   existing `FromWorker` protocol (`exec::transport`).
+//!
+//! Rendered surfaces: [`Snapshot::to_ndjson`] (the stable
+//! `{"record":"telemetry_snapshot",...}` line behind `lorax run
+//! --metrics` / `lorax sweep --metrics` and the `metrics` query on the
+//! `lorax serve` socket) and [`crate::report::metrics_text`]
+//! (Prometheus-style text exposition).
+
+mod metrics;
+mod registry;
+
+pub use metrics::{Counter, Gauge, Histogram, Span, HIST_BUCKETS};
+pub use registry::{HistogramSnapshot, Registry, Snapshot};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// The process-global registry every instrumented layer records into.
+///
+/// One per process by design: subprocess `lorax worker`s accumulate
+/// into their own and ship deltas back to the coordinator, which
+/// absorbs them here so fleet-wide totals come out of one snapshot.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Runtime kill switch (default on).  `LORAX_TELEMETRY=0` in the
+/// environment pins it off for the whole process lifetime.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("LORAX_TELEMETRY").map(|v| v != "0").unwrap_or(true))
+}
+
+/// True when recording primitives are live.  Always false under the
+/// `notelemetry` compile-out feature.
+#[inline]
+pub fn enabled() -> bool {
+    #[cfg(feature = "notelemetry")]
+    {
+        false
+    }
+    #[cfg(not(feature = "notelemetry"))]
+    {
+        env_enabled() && ENABLED.load(Ordering::Relaxed)
+    }
+}
+
+/// Turn recording on or off at runtime (used by the overhead bench and
+/// the byte-identity tests).  Has no effect under `notelemetry` or when
+/// `LORAX_TELEMETRY=0` pinned the process off.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// A cached `&'static Counter` handle for a fixed metric name: the
+/// registry lookup runs once per call site, every later hit is one
+/// `OnceLock` load.  Usable anywhere in the crate:
+///
+/// ```
+/// lorax::metric_counter!("doc.example.events").inc();
+/// ```
+#[macro_export]
+macro_rules! metric_counter {
+    ($name:expr) => {{
+        static CELL: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Counter>> =
+            std::sync::OnceLock::new();
+        &**CELL.get_or_init(|| $crate::telemetry::global().counter($name))
+    }};
+}
+
+/// A cached `&'static Gauge` handle for a fixed metric name (see
+/// [`metric_counter!`]).
+#[macro_export]
+macro_rules! metric_gauge {
+    ($name:expr) => {{
+        static CELL: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Gauge>> =
+            std::sync::OnceLock::new();
+        &**CELL.get_or_init(|| $crate::telemetry::global().gauge($name))
+    }};
+}
+
+/// A cached `&'static Histogram` handle for a fixed metric name (see
+/// [`metric_counter!`]).
+#[macro_export]
+macro_rules! metric_histogram {
+    ($name:expr) => {{
+        static CELL: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Histogram>> =
+            std::sync::OnceLock::new();
+        &**CELL.get_or_init(|| $crate::telemetry::global().histogram($name))
+    }};
+}
+
+/// Serializes tests that toggle [`set_enabled`] or assert recorded
+/// values against the rest of the in-process test suite (the kill
+/// switch is process-global, so a concurrent toggle would make any
+/// recording assertion flaky).
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(all(test, not(feature = "notelemetry")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_macros_and_kill_switch() {
+        let _guard = test_lock();
+        // The macro handle and a direct registry lookup alias the same
+        // counter.
+        let a = metric_counter!("telemetry.test.shared");
+        let b = global().counter("telemetry.test.shared");
+        a.add(3);
+        b.add(4);
+        assert_eq!(a.get(), b.get());
+        assert_eq!(a.get(), 7);
+        // The kill switch stops recording without touching stored
+        // values, and re-enabling resumes exactly where it left off.
+        let c = metric_counter!("telemetry.test.kill_switch");
+        set_enabled(false);
+        assert!(!enabled());
+        c.inc();
+        assert_eq!(c.get(), 0);
+        set_enabled(true);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+}

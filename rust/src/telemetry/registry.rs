@@ -1,0 +1,426 @@
+//! [`Registry`] — named metric handles — and [`Snapshot`], the
+//! point-in-time capture with diff/merge semantics and the stable
+//! `telemetry_snapshot` NDJSON rendering.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::bench::json_f64;
+
+use super::metrics::{Counter, Gauge, Histogram, HIST_BUCKETS};
+
+fn lock<'m, T>(m: &'m Mutex<T>) -> std::sync::MutexGuard<'m, T> {
+    // A poisoned registry map only means another thread panicked
+    // mid-registration; the map itself is always in a valid state.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A group of named metrics.
+///
+/// Keys are dotted lowercase paths, `layer.subject[_unit]` —
+/// `serve.requests`, `transport.bytes_sent`, `replay.wall_us` — unique
+/// across all three kinds (registering `x` as both a counter and a
+/// gauge is a caller bug and panics in debug builds only via the
+/// distinct maps; the snapshot would render both).  Registration
+/// get-or-creates behind a mutex; the returned `Arc` handle is the
+/// O(1) hot-path recording surface.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// An empty registry (the process-global one is
+    /// [`super::global`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = lock(&self.counters);
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Get or register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = lock(&self.gauges);
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Get or register the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = lock(&self.histograms);
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Capture every registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters =
+            lock(&self.counters).iter().map(|(k, c)| (k.clone(), c.get())).collect();
+        let gauges = lock(&self.gauges).iter().map(|(k, g)| (k.clone(), g.get())).collect();
+        let histograms = lock(&self.histograms)
+            .iter()
+            .map(|(k, h)| {
+                let buckets: Vec<(u8, u64)> = h
+                    .buckets()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &n)| n > 0)
+                    .map(|(i, &n)| (i as u8, n))
+                    .collect();
+                (k.clone(), HistogramSnapshot { count: h.count(), sum: h.sum(), buckets })
+            })
+            .collect();
+        Snapshot { counters, gauges, histograms }
+    }
+
+    /// Merge a flat-pairs delta (see [`Snapshot::to_pairs`]) into this
+    /// registry's live metrics — how the coordinator folds subprocess
+    /// worker deltas into the fleet-wide totals.  Bypasses the kill
+    /// switch: a worker's already-recorded delta must not be dropped
+    /// by the coordinator's own enable state.  Unknown key prefixes
+    /// are ignored (forward compatibility).
+    pub fn absorb_pairs(&self, pairs: &[(String, u64)]) {
+        let mut hists: BTreeMap<&str, (u64, u64, Vec<(u8, u64)>)> = BTreeMap::new();
+        for (key, v) in pairs {
+            if let Some(name) = key.strip_prefix("c:") {
+                self.counter(name).absorb(*v);
+            } else if let Some(rest) = key.strip_prefix("h:") {
+                let Some((name, field)) = rest.rsplit_once(':') else { continue };
+                let slot = hists.entry(name).or_default();
+                match field {
+                    "n" => slot.0 += v,
+                    "s" => slot.1 += v,
+                    b => {
+                        if let Some(i) = b.strip_prefix('b').and_then(|s| s.parse::<u8>().ok())
+                        {
+                            slot.2.push((i, *v));
+                        }
+                    }
+                }
+            }
+        }
+        for (name, (count, sum, buckets)) in hists {
+            self.histogram(name).absorb(count, sum, &buckets);
+        }
+    }
+}
+
+/// One histogram's captured state: total count, total sum and the
+/// sparse nonzero log2 buckets as `(bucket index, count)` pairs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of recorded samples.
+    pub sum: u64,
+    /// Nonzero buckets, ascending index (index = sample bit length).
+    pub buckets: Vec<(u8, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Approximate quantile `q` in `[0, 1]`: the inclusive upper bound
+    /// of the first bucket whose cumulative count reaches
+    /// `ceil(q * count)` (0 when empty).  Log2 buckets bound the
+    /// overestimate at 2x.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for &(i, n) in &self.buckets {
+            seen += n;
+            if seen >= target {
+                return Histogram::bucket_bound(i as usize);
+            }
+        }
+        self.max()
+    }
+
+    /// Upper bound of the highest nonzero bucket (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.buckets.last().map(|&(i, _)| Histogram::bucket_bound(i as usize)).unwrap_or(0)
+    }
+
+    fn saturating_sub(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut old: BTreeMap<u8, u64> = earlier.buckets.iter().copied().collect();
+        let buckets: Vec<(u8, u64)> = self
+            .buckets
+            .iter()
+            .map(|&(i, n)| (i, n.saturating_sub(old.remove(&i).unwrap_or(0))))
+            .filter(|&(_, n)| n > 0)
+            .collect();
+        HistogramSnapshot {
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+            buckets,
+        }
+    }
+
+    fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        let mut map: BTreeMap<u8, u64> = self.buckets.iter().copied().collect();
+        for &(i, n) in &other.buckets {
+            *map.entry(i).or_insert(0) += n;
+        }
+        self.buckets = map.into_iter().filter(|&(_, n)| n > 0).collect();
+    }
+}
+
+/// A point-in-time capture of a [`Registry`].
+///
+/// Counters and histograms are cumulative, so `later.diff(&earlier)`
+/// is the activity in between (the worker-delta primitive) and
+/// `merge` adds two captures (the fleet-total primitive).  Gauges are
+/// levels: diff keeps the later level, merge sums.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge levels by name.
+    pub gauges: BTreeMap<String, i64>,
+    /// Histogram captures by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl Snapshot {
+    /// True when nothing was ever registered or every tally is zero.
+    pub fn is_empty(&self) -> bool {
+        self.counters.values().all(|&v| v == 0)
+            && self.gauges.values().all(|&v| v == 0)
+            && self.histograms.values().all(|h| h.count == 0)
+    }
+
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// What happened between `earlier` and `self` (saturating per
+    /// key; keys only in `self` pass through whole).
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), v.saturating_sub(earlier.counter(k))))
+            .filter(|&(_, v)| v > 0)
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let d = match earlier.histograms.get(k) {
+                    Some(e) => h.saturating_sub(e),
+                    None => h.clone(),
+                };
+                (k.clone(), d)
+            })
+            .filter(|(_, h)| h.count > 0)
+            .collect();
+        Snapshot { counters, gauges: self.gauges.clone(), histograms }
+    }
+
+    /// Add `other`'s tallies into `self`.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, &v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, &v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Flatten to `(key, u64)` pairs for the wire: counters as
+    /// `c:<name>`, histograms as `h:<name>:n` / `h:<name>:s` /
+    /// `h:<name>:b<i>`.  Gauges are point-in-time levels and do not
+    /// travel.  Inverse of [`Snapshot::from_pairs`].
+    pub fn to_pairs(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::new();
+        for (k, &v) in &self.counters {
+            if v > 0 {
+                out.push((format!("c:{k}"), v));
+            }
+        }
+        for (k, h) in &self.histograms {
+            if h.count == 0 {
+                continue;
+            }
+            out.push((format!("h:{k}:n"), h.count));
+            out.push((format!("h:{k}:s"), h.sum));
+            for &(i, n) in &h.buckets {
+                out.push((format!("h:{k}:b{i}"), n));
+            }
+        }
+        out
+    }
+
+    /// Rebuild a snapshot from [`Snapshot::to_pairs`] output.
+    /// Unknown key prefixes are ignored.
+    pub fn from_pairs(pairs: &[(String, u64)]) -> Snapshot {
+        let reg = Registry::new();
+        reg.absorb_pairs(pairs);
+        reg.snapshot()
+    }
+
+    /// The stable machine-readable rendering: one newline-terminated
+    /// `{"record":"telemetry_snapshot",...}` object with flat sorted
+    /// keys — counters and gauges by name, histograms as
+    /// `<name>.count` / `<name>.sum` / `<name>.p50` / `<name>.p95` /
+    /// `<name>.max` (quantiles are log2-bucket upper bounds; schema in
+    /// docs/BENCHMARKS.md).  Printed by `lorax run --metrics`,
+    /// `lorax sweep --metrics` and the `metrics` serve query.
+    pub fn to_ndjson(&self) -> String {
+        let mut out = String::from("{\"record\":\"telemetry_snapshot\"");
+        for (k, v) in &self.counters {
+            out.push_str(&format!(",{k:?}:{v}"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!(",{k:?}:{v}"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                ",\"{k}.count\":{},\"{k}.sum\":{},\"{k}.p50\":{},\"{k}.p95\":{},\
+                 \"{k}.max\":{}",
+                h.count,
+                h.sum,
+                h.quantile(0.5),
+                h.quantile(0.95),
+                h.max(),
+            ));
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Human-oriented multi-line rendering (used by the non-JSON
+    /// `--metrics` output; one aligned `name value` row per metric).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("  {k:<36} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("  {k:<36} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            let mean = if h.count > 0 { h.sum as f64 / h.count as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "  {k:<36} n={} mean={} p95<={} max<={}\n",
+                h.count,
+                json_f64((mean * 10.0).round() / 10.0),
+                h.quantile(0.95),
+                h.max(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(all(test, not(feature = "notelemetry")))]
+mod tests {
+    use super::*;
+
+    fn sample() -> Registry {
+        let reg = Registry::new();
+        reg.counter("a.hits").add(5);
+        reg.counter("a.misses").add(2);
+        reg.gauge("b.level").set(-3);
+        let h = reg.histogram("c.lat_us");
+        for v in [1u64, 3, 3, 900, 70_000] {
+            h.record(v);
+        }
+        reg
+    }
+
+    #[test]
+    fn snapshot_captures_everything() {
+        let _guard = crate::telemetry::test_lock();
+        let s = sample().snapshot();
+        assert_eq!(s.counter("a.hits"), 5);
+        assert_eq!(s.counter("a.misses"), 2);
+        assert_eq!(s.counter("nope"), 0);
+        assert_eq!(s.gauges["b.level"], -3);
+        let h = &s.histograms["c.lat_us"];
+        assert_eq!(h.count, 5);
+        assert_eq!(h.sum, 70_907);
+        assert!(!s.is_empty());
+        assert!(Registry::new().snapshot().is_empty());
+    }
+
+    #[test]
+    fn diff_and_merge_are_inverse_ish() {
+        let _guard = crate::telemetry::test_lock();
+        let reg = sample();
+        let before = reg.snapshot();
+        reg.counter("a.hits").add(10);
+        reg.counter("d.new").add(1);
+        reg.histogram("c.lat_us").record(900);
+        let after = reg.snapshot();
+        let delta = after.diff(&before);
+        assert_eq!(delta.counter("a.hits"), 10);
+        assert_eq!(delta.counter("d.new"), 1);
+        assert_eq!(delta.counter("a.misses"), 0); // unchanged keys drop out
+        assert_eq!(delta.histograms["c.lat_us"].count, 1);
+        assert_eq!(delta.histograms["c.lat_us"].sum, 900);
+        let mut rebuilt = before.clone();
+        rebuilt.merge(&delta);
+        assert_eq!(rebuilt.counter("a.hits"), after.counter("a.hits"));
+        assert_eq!(rebuilt.histograms["c.lat_us"], after.histograms["c.lat_us"]);
+    }
+
+    #[test]
+    fn pairs_round_trip_and_absorb() {
+        let _guard = crate::telemetry::test_lock();
+        let s = sample().snapshot();
+        let pairs = s.to_pairs();
+        let back = Snapshot::from_pairs(&pairs);
+        assert_eq!(back.counters, s.counters);
+        assert_eq!(back.histograms, s.histograms);
+        assert!(back.gauges.is_empty(), "gauges must not travel");
+        // Absorbing the same delta twice doubles the tallies.
+        let reg = Registry::new();
+        reg.absorb_pairs(&pairs);
+        reg.absorb_pairs(&pairs);
+        let twice = reg.snapshot();
+        assert_eq!(twice.counter("a.hits"), 10);
+        assert_eq!(twice.histograms["c.lat_us"].count, 10);
+        // Unknown prefixes are ignored.
+        reg.absorb_pairs(&[("x:weird".to_string(), 7), ("h:broken".to_string(), 7)]);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_upper_bounds() {
+        let s = sample().snapshot();
+        let h = &s.histograms["c.lat_us"];
+        // Samples 1, 3, 3, 900, 70000 -> p50 is in the bit-length-2
+        // bucket (bound 3); max is in the 70k bucket (bound 131071).
+        assert_eq!(h.quantile(0.5), 3);
+        assert_eq!(h.max(), 131_071);
+        assert!(h.quantile(0.95) >= 900);
+        assert_eq!(HistogramSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn ndjson_is_one_flat_sorted_record() {
+        let _guard = crate::telemetry::test_lock();
+        let line = sample().snapshot().to_ndjson();
+        assert!(line.starts_with("{\"record\":\"telemetry_snapshot\""));
+        assert!(line.ends_with("}\n"));
+        assert_eq!(line.matches('\n').count(), 1);
+        assert!(line.contains("\"a.hits\":5"));
+        assert!(line.contains("\"b.level\":-3"));
+        assert!(line.contains("\"c.lat_us.count\":5"));
+        assert!(line.contains("\"c.lat_us.sum\":70907"));
+        let text = sample().snapshot().to_text();
+        assert!(text.contains("a.hits"));
+        assert!(text.contains("n=5"));
+    }
+}

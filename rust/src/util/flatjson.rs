@@ -1,0 +1,217 @@
+//! A minimal parser for the *flat* JSON objects this repo emits —
+//! `bench_out/BENCH_*.json` payloads and `telemetry_snapshot` records:
+//! one object, string keys, scalar values (number / string / bool /
+//! null), no nesting.  Registry-free by design (the offline build has
+//! no serde); nested containers are a parse error, not a silent skip,
+//! so the perf gate cannot misread a record whose schema drifted.
+
+use std::collections::BTreeMap;
+
+/// One scalar value of a flat JSON object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlatValue {
+    /// A JSON number (parsed as `f64`; the payloads we read stay well
+    /// inside the exact-integer range).
+    Num(f64),
+    /// A JSON string (escapes decoded).
+    Str(String),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `null`.
+    Null,
+}
+
+impl FlatValue {
+    /// The numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            FlatValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one flat JSON object into sorted `key -> value` entries.
+///
+/// Accepts exactly the subset the repo writes: an object of scalar
+/// members with arbitrary whitespace.  Everything else — arrays,
+/// nested objects, trailing garbage, duplicate-quote confusion —
+/// returns a descriptive `Err`.
+pub fn parse_flat(text: &str) -> Result<BTreeMap<String, FlatValue>, String> {
+    let mut p = Parser { bytes: text.as_bytes(), at: 0 };
+    p.skip_ws();
+    p.expect(b'{')?;
+    let mut out = BTreeMap::new();
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.at += 1;
+    } else {
+        loop {
+            p.skip_ws();
+            let key = p.string()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            let value = p.value()?;
+            out.insert(key, value);
+            p.skip_ws();
+            match p.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                other => {
+                    return Err(format!(
+                        "expected ',' or '}}' at byte {}, found {:?}",
+                        p.at,
+                        other.map(char::from)
+                    ))
+                }
+            }
+        }
+    }
+    p.skip_ws();
+    if p.at != p.bytes.len() {
+        return Err(format!("trailing input after the object at byte {}", p.at));
+    }
+    Ok(out)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.at).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.at += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.at += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        match self.next() {
+            Some(b) if b == want => Ok(()),
+            other => Err(format!(
+                "expected {:?} at byte {}, found {:?}",
+                char::from(want),
+                self.at,
+                other.map(char::from)
+            )),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    other => {
+                        return Err(format!(
+                            "unsupported escape {:?} at byte {}",
+                            other.map(char::from),
+                            self.at
+                        ))
+                    }
+                },
+                Some(b) => out.push(char::from(b)),
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<FlatValue, String> {
+        match self.peek() {
+            Some(b'"') => Ok(FlatValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", FlatValue::Bool(true)),
+            Some(b'f') => self.literal("false", FlatValue::Bool(false)),
+            Some(b'n') => self.literal("null", FlatValue::Null),
+            Some(b'{') | Some(b'[') => {
+                Err(format!("nested containers are not flat (byte {})", self.at))
+            }
+            Some(_) => {
+                let start = self.at;
+                while matches!(
+                    self.peek(),
+                    Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+                ) {
+                    self.at += 1;
+                }
+                let s = std::str::from_utf8(&self.bytes[start..self.at])
+                    .map_err(|_| "non-UTF-8 number".to_string())?;
+                s.parse::<f64>()
+                    .map(FlatValue::Num)
+                    .map_err(|_| format!("bad number {s:?} at byte {start}"))
+            }
+            None => Err("unexpected end of input in value".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: FlatValue) -> Result<FlatValue, String> {
+        let end = self.at + word.len();
+        if self.bytes.len() >= end && &self.bytes[self.at..end] == word.as_bytes() {
+            self.at = end;
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.at))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_bench_payload_shape() {
+        let m = parse_flat(
+            "{\"name\":\"replay\",\"packets\":50000,\"rate_pkts_per_s\":1.25e6,\
+             \"telemetry_overhead_pct\":-0.4,\"ok\":true,\"skip\":null}",
+        )
+        .unwrap();
+        assert_eq!(m["name"], FlatValue::Str("replay".to_string()));
+        assert_eq!(m["packets"].as_f64(), Some(50_000.0));
+        assert_eq!(m["rate_pkts_per_s"].as_f64(), Some(1.25e6));
+        assert_eq!(m["telemetry_overhead_pct"].as_f64(), Some(-0.4));
+        assert_eq!(m["ok"], FlatValue::Bool(true));
+        assert_eq!(m["skip"], FlatValue::Null);
+        assert!(parse_flat("{}").unwrap().is_empty());
+        assert!(parse_flat("  { \"a\" : 1 }\n").unwrap().contains_key("a"));
+    }
+
+    #[test]
+    fn escapes_decode() {
+        let m = parse_flat("{\"k\":\"a\\\"b\\\\c\\n\"}").unwrap();
+        assert_eq!(m["k"], FlatValue::Str("a\"b\\c\n".to_string()));
+    }
+
+    #[test]
+    fn rejects_what_it_cannot_represent() {
+        assert!(parse_flat("{\"a\":[1,2]}").is_err());
+        assert!(parse_flat("{\"a\":{\"b\":1}}").is_err());
+        assert!(parse_flat("{\"a\":1} extra").is_err());
+        assert!(parse_flat("{\"a\":}").is_err());
+        assert!(parse_flat("{\"a\":1,}").is_err());
+        assert!(parse_flat("not json").is_err());
+        assert!(parse_flat("{\"a\":nope}").is_err());
+        assert!(parse_flat("{\"unterminated).is_err\":1").is_err());
+    }
+}

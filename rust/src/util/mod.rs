@@ -5,9 +5,14 @@
 //! SplitMix64, the murmur3 `fmix32` mixer shared bit-for-bit with the
 //! Pallas kernel, numerically solid `erfc`/normal-tail helpers for the BER
 //! model, streaming statistics, and a miniature property-testing harness.
+//! [`flatjson`] parses the flat JSON records the repo itself emits and
+//! [`perf_gate`] diffs fresh bench records against committed per-host
+//! baselines (`lorax perf-gate`).
 
 pub mod bench;
+pub mod flatjson;
 pub mod math;
+pub mod perf_gate;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

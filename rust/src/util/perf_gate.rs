@@ -1,0 +1,332 @@
+//! The CI perf gate: diff fresh `bench_out/BENCH_*.json` records
+//! against per-host committed baselines and fail on regression beyond
+//! a tolerance.
+//!
+//! Benchmarks write flat JSON payloads (see [`super::bench`]); this
+//! module re-reads them with the registry-free [`super::flatjson`]
+//! parser and compares a small fixed set of gated keys:
+//!
+//! * `BENCH_replay.json` — `rate_pkts_per_s` (higher is better) and
+//!   `telemetry_overhead_pct` (absolute ceiling: the telemetry layer's
+//!   contract is < 2% replay overhead with metrics on);
+//! * `BENCH_sweep_engine.json` — `parallel_rate_per_s` (higher is
+//!   better).
+//!
+//! Baselines live under `bench_baselines/<host>/` with
+//! `bench_baselines/default/` as the fallback, because a rate is only
+//! comparable on the machine that recorded it.  A missing baseline
+//! *passes with a warning* (first run on a new host must not block CI);
+//! a missing fresh record *fails* (the bench step upstream broke).
+//! `lorax perf-gate --record` promotes the fresh records to the host's
+//! baseline.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::flatjson::{parse_flat, FlatValue};
+
+/// How one gated key is judged.
+#[derive(Clone, Copy, Debug)]
+pub enum CheckKind {
+    /// Fresh must be at least `baseline * (1 - tolerance)`.
+    HigherBetter,
+    /// Fresh must not exceed this fixed ceiling (no baseline needed).
+    AbsoluteMax(f64),
+}
+
+/// One gated `(file, key)` pair.
+#[derive(Clone, Copy, Debug)]
+pub struct GateCheck {
+    /// Bench record file name, e.g. `BENCH_replay.json`.
+    pub file: &'static str,
+    /// Flat key inside the record.
+    pub key: &'static str,
+    /// Pass/fail rule.
+    pub kind: CheckKind,
+}
+
+/// The standard gated set (see the module docs).
+pub fn default_checks() -> Vec<GateCheck> {
+    vec![
+        GateCheck {
+            file: "BENCH_replay.json",
+            key: "rate_pkts_per_s",
+            kind: CheckKind::HigherBetter,
+        },
+        GateCheck {
+            file: "BENCH_replay.json",
+            key: "telemetry_overhead_pct",
+            kind: CheckKind::AbsoluteMax(2.0),
+        },
+        GateCheck {
+            file: "BENCH_sweep_engine.json",
+            key: "parallel_rate_per_s",
+            kind: CheckKind::HigherBetter,
+        },
+    ]
+}
+
+/// The gate's verdict: human lines plus machine-checkable tallies.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// One line per check (PASS/WARN/FAIL prefixed) plus any summary.
+    pub lines: Vec<String>,
+    /// Checks that failed (regression, ceiling breach, missing fresh).
+    pub failures: usize,
+    /// Checks actually compared against a baseline or ceiling.
+    pub checked: usize,
+}
+
+impl GateReport {
+    fn note(&mut self, line: String) {
+        self.lines.push(line);
+    }
+}
+
+/// `<root>/<hostname>` when that directory exists, else
+/// `<root>/default` — baselines are per-host because a throughput
+/// number is only comparable on the machine that recorded it.
+pub fn host_baseline_dir(root: &Path) -> PathBuf {
+    let host = hostname();
+    let host_dir = root.join(&host);
+    if host_dir.is_dir() {
+        host_dir
+    } else {
+        root.join("default")
+    }
+}
+
+/// Best-effort hostname: `$HOSTNAME`, then the kernel's, then
+/// `"default"`.
+pub fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    if let Ok(h) = fs::read_to_string("/proc/sys/kernel/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    "default".to_string()
+}
+
+/// Load and flat-parse `dir/file`; `Ok(None)` when the file is absent.
+fn load(dir: &Path, file: &str) -> Result<Option<BTreeMap<String, FlatValue>>, String> {
+    let path = dir.join(file);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text =
+        fs::read_to_string(&path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+    parse_flat(&text).map(Some).map_err(|e| format!("parsing {}: {e}", path.display()))
+}
+
+/// Run every check in `checks`: fresh records from `fresh_dir`,
+/// baselines from `baseline_dir`, with `tolerance` the allowed
+/// fractional drop for higher-is-better keys (0.5 = may halve).
+///
+/// `Err` is reserved for unreadable/unparseable files; regressions are
+/// counted in [`GateReport::failures`] so the caller renders every
+/// verdict before failing.
+pub fn run_gate(
+    fresh_dir: &Path,
+    baseline_dir: &Path,
+    tolerance: f64,
+    checks: &[GateCheck],
+) -> Result<GateReport, String> {
+    let mut report = GateReport::default();
+    if !baseline_dir.is_dir() {
+        report.note(format!(
+            "WARN no baseline directory {} — all checks pass vacuously \
+             (run `lorax perf-gate --record` to create it)",
+            baseline_dir.display()
+        ));
+    }
+    for c in checks {
+        let fresh = load(fresh_dir, c.file)?;
+        let Some(fresh) = fresh else {
+            report.failures += 1;
+            report.note(format!(
+                "FAIL {}: missing from {} (did the bench step run?)",
+                c.file,
+                fresh_dir.display()
+            ));
+            continue;
+        };
+        let Some(got) = fresh.get(c.key).and_then(FlatValue::as_f64) else {
+            report.failures += 1;
+            report.note(format!("FAIL {} {}: key missing from the fresh record", c.file, c.key));
+            continue;
+        };
+        match c.kind {
+            CheckKind::AbsoluteMax(bound) => {
+                report.checked += 1;
+                if got <= bound {
+                    report.note(format!("PASS {} {} = {got} <= {bound}", c.file, c.key));
+                } else {
+                    report.failures += 1;
+                    report.note(format!(
+                        "FAIL {} {} = {got} exceeds the {bound} ceiling",
+                        c.file, c.key
+                    ));
+                }
+            }
+            CheckKind::HigherBetter => {
+                let base = load(baseline_dir, c.file)?
+                    .and_then(|m| m.get(c.key).and_then(FlatValue::as_f64));
+                let Some(base) = base else {
+                    report.note(format!(
+                        "WARN {} {}: no baseline value — passing (fresh = {got})",
+                        c.file, c.key
+                    ));
+                    continue;
+                };
+                report.checked += 1;
+                let floor = base * (1.0 - tolerance);
+                if got >= floor {
+                    report.note(format!(
+                        "PASS {} {} = {got} (baseline {base}, floor {floor})",
+                        c.file, c.key
+                    ));
+                } else {
+                    report.failures += 1;
+                    report.note(format!(
+                        "FAIL {} {} = {got} regressed below floor {floor} \
+                         (baseline {base}, tolerance {tolerance})",
+                        c.file, c.key
+                    ));
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Promote the fresh records named by `checks` into `baseline_dir`
+/// (created as needed).  Returns the files copied; a gated file
+/// missing from `fresh_dir` is an error — recording a partial baseline
+/// would make the next gate pass vacuously.
+pub fn record_baseline(
+    fresh_dir: &Path,
+    baseline_dir: &Path,
+    checks: &[GateCheck],
+) -> Result<Vec<String>, String> {
+    fs::create_dir_all(baseline_dir)
+        .map_err(|e| format!("creating {}: {e}", baseline_dir.display()))?;
+    let mut files: Vec<&str> = checks.iter().map(|c| c.file).collect();
+    files.dedup();
+    let mut copied = Vec::new();
+    for file in files {
+        let from = fresh_dir.join(file);
+        if !from.exists() {
+            return Err(format!("cannot record: {} is missing", from.display()));
+        }
+        let to = baseline_dir.join(file);
+        fs::copy(&from, &to)
+            .map_err(|e| format!("copying {} -> {}: {e}", from.display(), to.display()))?;
+        copied.push(file.to_string());
+    }
+    Ok(copied)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn scratch(name: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("lorax-gate-test-{}-{seq}-{name}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write(dir: &Path, file: &str, body: &str) {
+        fs::write(dir.join(file), body).unwrap();
+    }
+
+    const REPLAY_OK: &str =
+        "{\"name\":\"replay\",\"rate_pkts_per_s\":1000000.0,\"telemetry_overhead_pct\":0.5}";
+    const SWEEP_OK: &str = "{\"name\":\"sweep_engine\",\"parallel_rate_per_s\":4.0}";
+
+    #[test]
+    fn passes_within_tolerance_and_fails_beyond() {
+        let fresh = scratch("fresh");
+        let base = scratch("base");
+        write(&base, "BENCH_replay.json", REPLAY_OK);
+        write(&base, "BENCH_sweep_engine.json", SWEEP_OK);
+        // 40% slower than baseline: inside a 0.5 tolerance.
+        write(
+            &fresh,
+            "BENCH_replay.json",
+            "{\"rate_pkts_per_s\":600000.0,\"telemetry_overhead_pct\":1.9}",
+        );
+        write(&fresh, "BENCH_sweep_engine.json", "{\"parallel_rate_per_s\":3.9}");
+        let r = run_gate(&fresh, &base, 0.5, &default_checks()).unwrap();
+        assert_eq!(r.failures, 0, "{:?}", r.lines);
+        assert_eq!(r.checked, 3);
+        // 60% slower: beyond it.  Overhead ceiling breached too.
+        write(
+            &fresh,
+            "BENCH_replay.json",
+            "{\"rate_pkts_per_s\":400000.0,\"telemetry_overhead_pct\":2.5}",
+        );
+        let r = run_gate(&fresh, &base, 0.5, &default_checks()).unwrap();
+        assert_eq!(r.failures, 2, "{:?}", r.lines);
+        assert!(r.lines.iter().any(|l| l.starts_with("FAIL") && l.contains("regressed")));
+        assert!(r.lines.iter().any(|l| l.contains("ceiling")));
+    }
+
+    #[test]
+    fn missing_baseline_warns_but_missing_fresh_fails() {
+        let fresh = scratch("fresh");
+        let base = scratch("base"); // exists but empty
+        write(&fresh, "BENCH_replay.json", REPLAY_OK);
+        write(&fresh, "BENCH_sweep_engine.json", SWEEP_OK);
+        let r = run_gate(&fresh, &base, 0.5, &default_checks()).unwrap();
+        assert_eq!(r.failures, 0, "{:?}", r.lines);
+        // Only the absolute-ceiling check ran; the rate checks warned.
+        assert_eq!(r.checked, 1);
+        assert!(r.lines.iter().any(|l| l.starts_with("WARN")));
+        // Now drop a fresh record: that's a hard failure.
+        fs::remove_file(fresh.join("BENCH_sweep_engine.json")).unwrap();
+        let r = run_gate(&fresh, &base, 0.5, &default_checks()).unwrap();
+        assert_eq!(r.failures, 1, "{:?}", r.lines);
+        assert!(r.lines.iter().any(|l| l.contains("did the bench step run")));
+    }
+
+    #[test]
+    fn record_then_gate_round_trips() {
+        let fresh = scratch("fresh");
+        let base = scratch("base").join("host-x");
+        write(&fresh, "BENCH_replay.json", REPLAY_OK);
+        write(&fresh, "BENCH_sweep_engine.json", SWEEP_OK);
+        let copied = record_baseline(&fresh, &base, &default_checks()).unwrap();
+        assert_eq!(copied.len(), 2);
+        let r = run_gate(&fresh, &base, 0.0, &default_checks()).unwrap();
+        assert_eq!(r.failures, 0, "{:?}", r.lines);
+        assert_eq!(r.checked, 3);
+        // Recording with a gated record missing refuses.
+        fs::remove_file(fresh.join("BENCH_replay.json")).unwrap();
+        assert!(record_baseline(&fresh, &base, &default_checks()).is_err());
+    }
+
+    #[test]
+    fn host_dir_falls_back_to_default() {
+        let root = scratch("root");
+        fs::create_dir_all(root.join("default")).unwrap();
+        let picked = host_baseline_dir(&root);
+        // Whatever the host is, the fallback must resolve under root.
+        assert!(picked.starts_with(&root));
+        if !root.join(hostname()).is_dir() {
+            assert_eq!(picked, root.join("default"));
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Integration: the telemetry subsystem's two load-bearing contracts.
+//!
+//! * **Output neutrality** — telemetry is write-only: `run --json` and
+//!   `sweep --json` bytes are identical with recording enabled,
+//!   disabled at runtime, or compiled out (`notelemetry`), and a
+//!   disabled registry does not advance at all;
+//! * **Fleet-wide totals** — in a process-fabric sweep the coordinator's
+//!   absorbed counters equal the sum of the per-`Done` deltas the
+//!   workers shipped, under a dropped-completion fault plan and under a
+//!   real SIGKILL (`exec::transport`'s delta protocol: the mark only
+//!   advances after a send goes out).
+//!
+//! Every test that reads or toggles the process-global registry holds
+//! [`lock`]; the tests in this binary run on parallel threads.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use lorax::approx::policy::PolicyKind;
+use lorax::apps::AppId;
+use lorax::config::SystemConfig;
+use lorax::coordinator::{AppRunReport, LoraxSession};
+use lorax::exec::{CellState, ExperimentSpec, ProcessFabric, ProcessFabricConfig};
+
+/// Serializes the tests in this binary around the process-global
+/// registry and its kill switch.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg() -> SystemConfig {
+    SystemConfig { scale: 0.02, seed: 7, ..Default::default() }
+}
+
+fn spec_grid() -> Vec<ExperimentSpec> {
+    let apps = [AppId::Sobel, AppId::Fft];
+    let policies = [PolicyKind::Baseline, PolicyKind::LORAX_OOK, PolicyKind::LORAX_PAM4];
+    apps.iter()
+        .flat_map(|&a| policies.iter().map(move |&p| ExperimentSpec::new(a, p)))
+        .collect()
+}
+
+fn lorax_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_lorax"))
+}
+
+fn fabric(tweak: impl FnOnce(&mut ProcessFabricConfig)) -> ProcessFabric {
+    let mut c = ProcessFabricConfig {
+        workers: 2,
+        worker_bin: Some(lorax_bin()),
+        ..ProcessFabricConfig::default()
+    };
+    tweak(&mut c);
+    ProcessFabric::new(c).unwrap()
+}
+
+/// Recording on vs off must not change a single output byte, and the
+/// disabled registry must not move.  Fresh sessions on both sides so
+/// neither run can hide behind the other's caches.
+#[test]
+fn metrics_off_is_byte_identical_and_registry_freezes() {
+    let _g = lock();
+    let spec: ExperimentSpec = "sobel:LORAX-OOK".parse().unwrap();
+    let specs = spec_grid();
+    lorax::telemetry::set_enabled(true);
+    let run_on = LoraxSession::new(&cfg()).run(&spec).unwrap().to_json();
+    let sweep_on =
+        LoraxSession::new(&cfg()).sweep_cells(&specs).to_json(AppRunReport::to_json);
+
+    lorax::telemetry::set_enabled(false);
+    let frozen = lorax::telemetry::global().snapshot();
+    let run_off = LoraxSession::new(&cfg()).run(&spec).unwrap().to_json();
+    let sweep_off =
+        LoraxSession::new(&cfg()).sweep_cells(&specs).to_json(AppRunReport::to_json);
+    let still = lorax::telemetry::global().snapshot();
+    lorax::telemetry::set_enabled(true);
+
+    assert_eq!(run_on, run_off, "run --json must not depend on the kill switch");
+    assert_eq!(sweep_on, sweep_off, "sweep --json must not depend on the kill switch");
+    assert_eq!(frozen, still, "a disabled registry must not advance");
+}
+
+/// The snapshot NDJSON is a flat object our own parser round-trips —
+/// the same schema contract docs/BENCHMARKS.md pins for the CI smokes.
+#[test]
+fn snapshot_ndjson_is_flat_parseable() {
+    let _g = lock();
+    lorax::telemetry::set_enabled(true);
+    let spec: ExperimentSpec = "fft:LORAX-OOK".parse().unwrap();
+    LoraxSession::new(&cfg()).run(&spec).unwrap();
+    let line = lorax::telemetry::global().snapshot().to_ndjson();
+    let map = lorax::util::flatjson::parse_flat(&line).expect("snapshot must parse flat");
+    assert_eq!(
+        map.get("record").and_then(|v| match v {
+            lorax::util::flatjson::FlatValue::Str(s) => Some(s.as_str()),
+            _ => None,
+        }),
+        Some("telemetry_snapshot")
+    );
+    #[cfg(not(feature = "notelemetry"))]
+    {
+        let hits = map
+            .get("session.workloads.hits")
+            .or_else(|| map.get("session.workloads.misses"));
+        assert!(hits.is_some(), "a run must leave session cache counters: {line}");
+    }
+}
+
+/// Coordinator totals == the sum of what the workers shipped, with a
+/// dropped completion in the plan: the dropped Done's delta must ride
+/// that worker's next send instead of vanishing.
+#[test]
+fn fleet_totals_equal_worker_delta_sum_under_drop_fault() {
+    let _g = lock();
+    lorax::telemetry::set_enabled(true);
+    let specs = spec_grid();
+    let f = fabric(|c| {
+        c.worker_faults = vec!["drop:0@1".to_string()];
+        c.shard_timeout = Duration::from_secs(2);
+    });
+    let before = lorax::telemetry::global().snapshot().counter("worker.cells_run");
+    let report = LoraxSession::new(&cfg()).sweep_cells_process(&specs, &f).unwrap();
+    let after = lorax::telemetry::global().snapshot().counter("worker.cells_run");
+    assert!(report.cells.iter().all(|c| matches!(c, CellState::Done(_))), "{:?}", report.health);
+    assert!(report.health.retries >= 1, "the dropped shard must retry: {:?}", report.health);
+    let shipped: u64 = f
+        .last_fleet()
+        .iter()
+        .filter(|(k, _)| k == "c:worker.cells_run")
+        .map(|(_, v)| v)
+        .sum();
+    assert_eq!(
+        after - before,
+        shipped,
+        "absorbed totals must equal the shipped deltas exactly"
+    );
+    #[cfg(not(feature = "notelemetry"))]
+    assert!(
+        shipped >= specs.len() as u64,
+        "every completed shard ships its cells: {shipped} < {}",
+        specs.len()
+    );
+}
+
+/// Same invariant under a real SIGKILL: the dead worker's unshipped
+/// counts are gone (those cells never completed), the respawned
+/// worker's re-execution is shipped, and the stderr-tail obit explains
+/// the death.
+#[test]
+fn fleet_totals_survive_sigkill_and_obit_names_the_cause() {
+    let _g = lock();
+    lorax::telemetry::set_enabled(true);
+    let specs = spec_grid();
+    let f = fabric(|c| c.kill_after_assign = vec![(1, 1)]);
+    let before = lorax::telemetry::global().snapshot().counter("worker.cells_run");
+    let report = LoraxSession::new(&cfg()).sweep_cells_process(&specs, &f).unwrap();
+    let after = lorax::telemetry::global().snapshot().counter("worker.cells_run");
+    assert!(report.cells.iter().all(|c| matches!(c, CellState::Done(_))), "{:?}", report.health);
+    assert!(report.health.respawned_workers >= 1, "{:?}", report.health);
+    let shipped: u64 = f
+        .last_fleet()
+        .iter()
+        .filter(|(k, _)| k == "c:worker.cells_run")
+        .map(|(_, v)| v)
+        .sum();
+    assert_eq!(after - before, shipped);
+    #[cfg(not(feature = "notelemetry"))]
+    assert!(shipped >= specs.len() as u64);
+    let obits = f.last_obits();
+    assert!(!obits.is_empty(), "a SIGKILLed worker must leave an obit");
+    assert_eq!(obits[0].worker, 1);
+    assert!(
+        !obits[0].reason.is_empty(),
+        "the obit must say why the worker died: {:?}",
+        obits[0]
+    );
+}
