@@ -50,6 +50,11 @@ fn main() {
     ];
     let iters = if smoke { 3 } else { 7 };
     let mut buf = base.clone();
+    // Gated kernel rates (BENCH_replay.json): the stochastic 16-bit-mask
+    // regime is the representative hot case — a partial mask with both
+    // thresholds live, so neither fast path applies.
+    let mut kernel_words_per_s = 0.0f64;
+    let mut kernel_scalar_words_per_s = 0.0f64;
     for &(name, mask, t10, t01, stochastic) in regimes {
         let r = bench(&format!("native:{name}"), 1, iters, || {
             buf.copy_from_slice(&base);
@@ -72,6 +77,10 @@ fn main() {
             corrupt_f32_words(&mut buf, mask, t10, t01, 7);
             assert_eq!(buf, scalar_buf, "vectorized != scalar on {name}");
             record_speedup(&format!("kernel {name}"), rs.mean_s(), r.mean_s(), 0, n);
+            if name == "stochastic 16-bit mask" {
+                kernel_words_per_s = n as f64 / r.min_s();
+                kernel_scalar_words_per_s = n as f64 / rs.min_s();
+            }
         }
     }
 
@@ -148,8 +157,9 @@ fn main() {
     // relaxed counter adds, never per-packet work.  Measured on the
     // same SoA + memoized-table loop with the runtime kill switch
     // flipped; min-of-iters damps scheduler noise.  BENCH_replay.json
-    // feeds `lorax perf-gate`, which holds rate_pkts_per_s to the
-    // per-host baseline and telemetry_overhead_pct under 2.0.
+    // feeds `lorax perf-gate`, which holds rate_pkts_per_s and
+    // kernel_words_per_s to the per-host baseline and
+    // telemetry_overhead_pct under 2.0.
     let t_iters = if smoke { 5 } else { 9 };
     lorax::telemetry::set_enabled(true);
     let r_on = bench("sim:replay SoA (telemetry on)", 1, t_iters, || {
@@ -166,11 +176,14 @@ fn main() {
     println!("  (telemetry overhead on min times: {overhead_pct:.2}%)");
     let payload = format!(
         "{{\"name\":\"replay\",\"packets\":{},\"rate_pkts_per_s\":{},\
-         \"rate_off_pkts_per_s\":{},\"telemetry_overhead_pct\":{}}}\n",
+         \"rate_off_pkts_per_s\":{},\"telemetry_overhead_pct\":{},\
+         \"kernel_words_per_s\":{},\"kernel_scalar_words_per_s\":{}}}\n",
         trace.len(),
         lorax::util::bench::json_f64(trace.len() as f64 / r_on.min_s()),
         lorax::util::bench::json_f64(trace.len() as f64 / r_off.min_s()),
         lorax::util::bench::json_f64((overhead_pct * 100.0).round() / 100.0),
+        lorax::util::bench::json_f64(kernel_words_per_s),
+        lorax::util::bench::json_f64(kernel_scalar_words_per_s),
     );
     if let Err(e) = lorax::util::bench::write_json_payload("replay", &payload) {
         eprintln!("warning: could not write BENCH_replay.json: {e}");

@@ -276,6 +276,7 @@ impl<'s> EpochHook<'s> for AdaptController<'s> {
             engine: session.engine(next_m),
             policy,
             decisions: session.decision_table(next_m, &policy),
+            kernels: session.kernel_table(next_m, &policy),
         })
     }
 }

@@ -150,91 +150,34 @@ pub fn f32_words_to_f64s(words: &[u32]) -> Vec<f64> {
 /// same (mask, thresholds); keys come from the word index within the
 /// transfer.
 ///
-/// Hot path of the whole stack (§Perf).  Regime dispatch happens **once
-/// per transfer**, not per word: identity, truncation and full-inversion
-/// transfers never touch the RNG, and the stochastic regimes run
-/// bit-major over chunks of words with fully branchless inner loops so
-/// LLVM auto-vectorizes the `fmix32` + compare + select across words
-/// (the `t01 == 0` regime — reduced-power LSBs with no `0→1` noise —
-/// gets its own tighter loop).  Bit-for-bit identical to the scalar
-/// [`corrupt_word`] / [`corrupt_word_fast`] (property-tested) and to the
-/// Pallas kernel.
+/// Thin one-shot wrapper over the batched kernel: it resolves a
+/// [`KernelDescriptor`](crate::approx::kernel::KernelDescriptor) for the
+/// triple and runs it once.  Hot-path callers that reuse a (policy,
+/// tuning, modulation) decision across transfers should build the
+/// descriptor once (see [`crate::coordinator::gwi::KernelTable`]) and
+/// call [`crate::approx::kernel::corrupt_words_batched`] per transfer
+/// instead, skipping the regime dispatch and masked-bit enumeration
+/// entirely.  Bit-for-bit identical to the scalar [`corrupt_word`] /
+/// [`corrupt_word_fast`] (property-tested, plus the differential
+/// harness in `tests/differential_kernels.rs`) and to the Pallas
+/// kernel.
 pub fn corrupt_f32_words(words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32) {
-    // --- per-transfer fast paths --------------------------------------
     if mask == 0 || (t10 == 0 && t01 == 0) {
-        return; // error-free
+        return; // error-free: skip even the descriptor build
     }
-    if t10 == ALWAYS && t01 == 0 {
-        for w in words.iter_mut() {
-            *w &= !mask; // exact truncation
-        }
-        return;
-    }
-    if t10 == ALWAYS && t01 == ALWAYS {
-        for w in words.iter_mut() {
-            *w = (*w & !mask) | (!*w & mask); // every masked bit inverts
-        }
-        return;
-    }
-    // --- stochastic regimes -------------------------------------------
-    const CHUNK: usize = 512;
-    let t10_always = (t10 == ALWAYS) as u32;
-    let t01_always = (t01 == ALWAYS) as u32;
-    let t01_zero = t01 == 0;
-    let mut keys = [0u32; CHUNK];
-    let mut acc = [0u32; CHUNK];
-    let n = words.len();
-    let mut start = 0;
-    while start < n {
-        let m = CHUNK.min(n - start);
-        for (j, k) in keys[..m].iter_mut().enumerate() {
-            *k = make_word_key(seed, (start + j) as u32);
-        }
-        for a in acc[..m].iter_mut() {
-            *a = 0;
-        }
-        let mut mbits = mask;
-        while mbits != 0 {
-            let b = mbits.trailing_zeros();
-            mbits &= mbits - 1;
-            let cb = (b + 1).wrapping_mul(crate::util::rng::GOLDEN);
-            let chunk = &words[start..start + m];
-            if t01_zero {
-                // Sent '0' bits can never flip to '1': the received bit
-                // is simply `sent & (r >= t10)` — fewer ops per lane.
-                for j in 0..m {
-                    let r = fmix32_inline(keys[j] ^ cb);
-                    let sent = (chunk[j] >> b) & 1;
-                    let keep = ((r >= t10) as u32) & (t10_always ^ 1);
-                    acc[j] |= (sent & keep) << b;
-                }
-            } else {
-                for j in 0..m {
-                    let r = fmix32_inline(keys[j] ^ cb);
-                    let sent = (chunk[j] >> b) & 1;
-                    let flip10 = ((r < t10) as u32) | t10_always;
-                    let set01 = ((r < t01) as u32) | t01_always;
-                    let recv1 = (sent & (flip10 ^ 1)) | ((sent ^ 1) & set01);
-                    acc[j] |= recv1 << b;
-                }
-            }
-        }
-        for j in 0..m {
-            words[start + j] = (words[start + j] & !mask) | acc[j];
-        }
-        start += m;
-    }
+    crate::approx::kernel::KernelDescriptor::new(mask, t10, t01).corrupt(words, seed);
 }
 
-/// Local always-inline fmix32 copy for the vectorized loop.
-#[inline(always)]
-fn fmix32_inline(mut x: u32) -> u32 {
-    x ^= x >> 16;
-    x = x.wrapping_mul(0x85EB_CA6B);
-    x ^= x >> 13;
-    x = x.wrapping_mul(0xC2B2_AE35);
-    x ^= x >> 16;
-    x
+/// The per-word scalar reference kernel: [`corrupt_word`] applied to
+/// every word with its transfer-indexed key, no transfer-level dispatch,
+/// no batching.  This is the **oracle** the batched path is pinned
+/// byte-identical against (differential harness + property tests), and
+/// what `LORAX_KERNEL=scalar` routes the whole stack through for
+/// bisection (see [`crate::approx::kernel::kernel_mode`]).
+pub fn corrupt_words_scalar(words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32) {
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = corrupt_word(*w, mask, t10, t01, make_word_key(seed, i as u32));
+    }
 }
 
 /// Flatten doubles to the double-precision `[lo, hi]` word layout

@@ -1,0 +1,350 @@
+//! Precomputed, batched corruption kernels — the transfer-granular hot
+//! path behind [`crate::approx::float_bits::corrupt_f32_words`].
+//!
+//! The per-transfer regime dispatch (identity / truncation / inversion /
+//! stochastic, plus the Gray-threshold parameters the GWI decision
+//! resolved from [`crate::phys::signaling::SignalingScheme`]) is hoisted
+//! **out of the corruption call entirely** into a [`KernelDescriptor`]:
+//! one immutable value per (policy, tuning, modulation) decision that
+//! callers build once — next to the decision itself — and reuse for
+//! every transfer (see [`crate::coordinator::gwi::KernelTable`] and the
+//! descriptor cache inside
+//! [`crate::coordinator::channel::PhotonicChannel`]).
+//!
+//! [`KernelDescriptor::corrupt`] then processes the whole transfer in
+//! wide lanes:
+//!
+//! * **Truncate/Invert** pack adjacent u32 wire words into u64 pairs and
+//!   apply one doubled mask per lane (registry-free `std` only — no
+//!   `std::simd` nightly feature needed);
+//! * the **stochastic** regimes run bit-major over 512-word chunks with
+//!   branchless inner loops (LLVM auto-vectorizes the `fmix32` +
+//!   compare + select across words), iterating a *precomputed* list of
+//!   masked bit positions and their RNG salts instead of re-walking
+//!   `trailing_zeros` per chunk.
+//!
+//! **Bit-identity contract:** every regime is byte-identical to the
+//! per-word scalar oracle
+//! ([`crate::approx::float_bits::corrupt_word`] /
+//! [`corrupt_words_scalar`](crate::approx::float_bits::corrupt_words_scalar)),
+//! because the RNG is keyed by absolute word index within the transfer
+//! and each masked bit contributes an independent `acc |=` term — lane
+//! packing and bit reordering cannot change outcomes.  The differential
+//! harness (`tests/differential_kernels.rs`) pins this across all
+//! modulations × the paper's five policies × edge payloads × ragged
+//! lengths, and `LORAX_KERNEL=scalar` (see [`kernel_mode`]) keeps the
+//! oracle runnable end-to-end for bisection.
+
+use std::sync::OnceLock;
+
+use crate::util::rng::{make_word_key, ALWAYS, GOLDEN};
+
+/// Which corruption regime a (mask, t10, t01) triple resolves to.
+///
+/// Resolved once per descriptor — the per-word kernel never re-examines
+/// the thresholds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelRegime {
+    /// No masked bits, or both thresholds zero: words pass unchanged.
+    Identity,
+    /// `t10 == ALWAYS && t01 == 0`: masked bits read as 0 (wavelengths
+    /// off) — pure mask AND, no RNG.
+    Truncate,
+    /// `t10 == t01 == ALWAYS`: every masked bit inverts — pure mask
+    /// XOR, no RNG.
+    Invert,
+    /// Stochastic with `t01 == 0` (reduced-power LSBs, no 0→1 noise):
+    /// the tighter `sent & keep` inner loop.
+    ReducedNoSet,
+    /// General stochastic regime (both thresholds in play).
+    Stochastic,
+}
+
+/// A fully-resolved corruption kernel for one transfer class: the
+/// (mask, thresholds) triple of a GWI decision plus everything the
+/// batched kernel precomputes from it — regime, masked-bit list with
+/// RNG salts, and the replay-side quality-loss proxy.
+///
+/// `Copy` by design: descriptors are small immutable values cached in
+/// dense tables ([`crate::coordinator::gwi::KernelTable`]) and inline
+/// arrays, exactly like [`crate::coordinator::gwi::Decision`].
+#[derive(Clone, Copy, Debug)]
+pub struct KernelDescriptor {
+    /// Low-word mask of approximated bits.
+    pub mask: u32,
+    /// 1→0 flip threshold for the masked bits (probability × 2^32).
+    pub t10: u32,
+    /// 0→1 flip threshold for the masked bits (probability × 2^32).
+    pub t01: u32,
+    /// The regime the thresholds resolve to (dispatch hoisted here).
+    pub regime: KernelRegime,
+    /// Replay-side quality-loss proxy in [0, 1]:
+    /// `popcount(mask)/32 × t10/ALWAYS`.  Bit-exact equal to
+    /// [`crate::noc::sim::quality_loss_fraction`] for every decision the
+    /// GWI engine produces (full-power decisions carry `mask == 0`;
+    /// truncated ones carry `t10 == ALWAYS`, and `x × 1.0 == x` exactly
+    /// in f64) — pinned by `tests/differential_kernels.rs`.
+    pub quality_loss: f64,
+    /// Number of masked bits (valid prefix of `bit_pos`/`bit_salt`).
+    n_bits: u8,
+    /// Masked bit positions, ascending.
+    bit_pos: [u8; 32],
+    /// Per-bit RNG salts: `(b + 1) * GOLDEN`, precomputed.
+    bit_salt: [u32; 32],
+}
+
+impl KernelDescriptor {
+    /// The do-nothing kernel (what a full-power decision runs).
+    pub const IDENTITY: KernelDescriptor = KernelDescriptor {
+        mask: 0,
+        t10: 0,
+        t01: 0,
+        regime: KernelRegime::Identity,
+        quality_loss: 0.0,
+        n_bits: 0,
+        bit_pos: [0; 32],
+        bit_salt: [0; 32],
+    };
+
+    /// Resolve `(mask, t10, t01)` into a ready-to-run kernel: regime
+    /// dispatch, masked-bit enumeration and RNG salts all happen here,
+    /// once, instead of inside every transfer.
+    pub fn new(mask: u32, t10: u32, t01: u32) -> KernelDescriptor {
+        let regime = if mask == 0 || (t10 == 0 && t01 == 0) {
+            KernelRegime::Identity
+        } else if t10 == ALWAYS && t01 == 0 {
+            KernelRegime::Truncate
+        } else if t10 == ALWAYS && t01 == ALWAYS {
+            KernelRegime::Invert
+        } else if t01 == 0 {
+            KernelRegime::ReducedNoSet
+        } else {
+            KernelRegime::Stochastic
+        };
+        let mut bit_pos = [0u8; 32];
+        let mut bit_salt = [0u32; 32];
+        let mut n_bits = 0u8;
+        if matches!(regime, KernelRegime::ReducedNoSet | KernelRegime::Stochastic) {
+            let mut m = mask;
+            while m != 0 {
+                let b = m.trailing_zeros();
+                m &= m - 1;
+                bit_pos[n_bits as usize] = b as u8;
+                bit_salt[n_bits as usize] = (b + 1).wrapping_mul(GOLDEN);
+                n_bits += 1;
+            }
+        }
+        let quality_loss = (mask.count_ones() as f64 / 32.0) * (t10 as f64 / ALWAYS as f64);
+        KernelDescriptor { mask, t10, t01, regime, quality_loss, n_bits, bit_pos, bit_salt }
+    }
+
+    /// Corrupt a whole transfer in place — the batched hot path.
+    ///
+    /// Bit-identical to running the scalar oracle per word with keys
+    /// `make_word_key(seed, index)` (see the module-level contract).
+    pub fn corrupt(&self, words: &mut [u32], seed: u32) {
+        match self.regime {
+            KernelRegime::Identity => {}
+            KernelRegime::Truncate => {
+                let keep = !self.mask;
+                let keep64 = (keep as u64) << 32 | keep as u64;
+                let mut lanes = words.chunks_exact_mut(2);
+                for pair in lanes.by_ref() {
+                    let v = ((pair[1] as u64) << 32 | pair[0] as u64) & keep64;
+                    pair[0] = v as u32;
+                    pair[1] = (v >> 32) as u32;
+                }
+                for w in lanes.into_remainder() {
+                    *w &= keep;
+                }
+            }
+            KernelRegime::Invert => {
+                // `(w & !mask) | (!w & mask)` is `w ^ mask`.
+                let mask64 = (self.mask as u64) << 32 | self.mask as u64;
+                let mut lanes = words.chunks_exact_mut(2);
+                for pair in lanes.by_ref() {
+                    let v = ((pair[1] as u64) << 32 | pair[0] as u64) ^ mask64;
+                    pair[0] = v as u32;
+                    pair[1] = (v >> 32) as u32;
+                }
+                for w in lanes.into_remainder() {
+                    *w ^= self.mask;
+                }
+            }
+            KernelRegime::ReducedNoSet | KernelRegime::Stochastic => {
+                self.corrupt_stochastic(words, seed);
+            }
+        }
+    }
+
+    /// The stochastic regimes: bit-major over 512-word chunks, iterating
+    /// the precomputed masked-bit list.  Same keys, same per-bit salts
+    /// and same `acc |=` composition as the historical transfer kernel,
+    /// so outputs are byte-identical by construction.
+    fn corrupt_stochastic(&self, words: &mut [u32], seed: u32) {
+        const CHUNK: usize = 512;
+        let t10 = self.t10;
+        let t01 = self.t01;
+        let mask = self.mask;
+        let t10_always = (t10 == ALWAYS) as u32;
+        let t01_always = (t01 == ALWAYS) as u32;
+        let t01_zero = t01 == 0;
+        let bits = &self.bit_pos[..self.n_bits as usize];
+        let salts = &self.bit_salt[..self.n_bits as usize];
+        let mut keys = [0u32; CHUNK];
+        let mut acc = [0u32; CHUNK];
+        let n = words.len();
+        let mut start = 0;
+        while start < n {
+            let m = CHUNK.min(n - start);
+            for (j, k) in keys[..m].iter_mut().enumerate() {
+                *k = make_word_key(seed, (start + j) as u32);
+            }
+            for a in acc[..m].iter_mut() {
+                *a = 0;
+            }
+            for (&b, &cb) in bits.iter().zip(salts.iter()) {
+                let b = b as u32;
+                let chunk = &words[start..start + m];
+                if t01_zero {
+                    // Sent '0' bits can never flip to '1': the received
+                    // bit is `sent & (r >= t10)` — fewer ops per lane.
+                    for j in 0..m {
+                        let r = fmix32_inline(keys[j] ^ cb);
+                        let sent = (chunk[j] >> b) & 1;
+                        let keep = ((r >= t10) as u32) & (t10_always ^ 1);
+                        acc[j] |= (sent & keep) << b;
+                    }
+                } else {
+                    for j in 0..m {
+                        let r = fmix32_inline(keys[j] ^ cb);
+                        let sent = (chunk[j] >> b) & 1;
+                        let flip10 = ((r < t10) as u32) | t10_always;
+                        let set01 = ((r < t01) as u32) | t01_always;
+                        let recv1 = (sent & (flip10 ^ 1)) | ((sent ^ 1) & set01);
+                        acc[j] |= recv1 << b;
+                    }
+                }
+            }
+            for j in 0..m {
+                words[start + j] = (words[start + j] & !mask) | acc[j];
+            }
+            start += m;
+        }
+    }
+}
+
+/// Batched transfer corruption through a prebuilt descriptor — the
+/// entry point `Simulator`-side callers use once per transfer after
+/// hoisting [`KernelDescriptor::new`] out of the loop.
+#[inline]
+pub fn corrupt_words_batched(words: &mut [u32], desc: &KernelDescriptor, seed: u32) {
+    desc.corrupt(words, seed);
+}
+
+/// Which kernel implementation the in-process corruption path runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The batched wide-lane kernel (default).
+    Batched,
+    /// The per-word scalar oracle — the bisection escape hatch
+    /// (`LORAX_KERNEL=scalar`), byte-identical by contract.
+    Scalar,
+}
+
+/// Process-wide kernel selection, read once from `LORAX_KERNEL`
+/// (`"scalar"` selects the oracle; anything else — including unset —
+/// selects the batched kernel).
+///
+/// An env knob rather than a constructor flag because
+/// [`crate::coordinator::channel::NativeCorruptor`] is a unit struct
+/// built at dozens of call sites; the escape hatch must not require
+/// threading configuration through all of them to be usable for
+/// bisection.
+pub fn kernel_mode() -> KernelMode {
+    static MODE: OnceLock<KernelMode> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("LORAX_KERNEL").as_deref() {
+        Ok("scalar") => KernelMode::Scalar,
+        _ => KernelMode::Batched,
+    })
+}
+
+/// Local always-inline fmix32 copy for the vectorized loops.
+#[inline(always)]
+fn fmix32_inline(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::float_bits::{corrupt_words_scalar, mask_for_lsbs};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn regimes_resolve_correctly() {
+        assert_eq!(KernelDescriptor::new(0, ALWAYS, ALWAYS).regime, KernelRegime::Identity);
+        assert_eq!(KernelDescriptor::new(0xFF, 0, 0).regime, KernelRegime::Identity);
+        assert_eq!(KernelDescriptor::new(0xFF, ALWAYS, 0).regime, KernelRegime::Truncate);
+        assert_eq!(KernelDescriptor::new(0xFF, ALWAYS, ALWAYS).regime, KernelRegime::Invert);
+        assert_eq!(KernelDescriptor::new(0xFF, 7, 0).regime, KernelRegime::ReducedNoSet);
+        assert_eq!(KernelDescriptor::new(0xFF, 7, 3).regime, KernelRegime::Stochastic);
+        assert_eq!(KernelDescriptor::IDENTITY.regime, KernelRegime::Identity);
+    }
+
+    #[test]
+    fn batched_matches_scalar_oracle_across_regimes() {
+        check("kernel-batched-vs-scalar", 64, |g| {
+            let n = g.usize(0, 1100); // crosses the 512-word chunk boundary
+            let mask = if g.bool() { mask_for_lsbs(g.usize(0, 32) as u32) } else { g.u32() };
+            let (t10, t01, seed) = (g.u32(), g.u32(), g.u32());
+            let mut batched: Vec<u32> = g.vec(n, |g| g.u32());
+            let mut scalar = batched.clone();
+            let desc = KernelDescriptor::new(mask, t10, t01);
+            corrupt_words_batched(&mut batched, &desc, seed);
+            corrupt_words_scalar(&mut scalar, mask, t10, t01, seed);
+            assert_eq!(batched, scalar, "mask={mask:#x} t10={t10:#x} t01={t01:#x}");
+        });
+    }
+
+    #[test]
+    fn lane_tail_and_tiny_transfers() {
+        // Odd lengths exercise the u64-pair remainder in Truncate and
+        // Invert; 0 and 1 are the degenerate transfers.
+        for n in [0usize, 1, 2, 3, 5, 63, 64, 65] {
+            for (t10, t01) in [(ALWAYS, 0u32), (ALWAYS, ALWAYS)] {
+                let mut batched: Vec<u32> =
+                    (0..n as u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+                let mut scalar = batched.clone();
+                let desc = KernelDescriptor::new(0x00FF_FF00, t10, t01);
+                corrupt_words_batched(&mut batched, &desc, 9);
+                corrupt_words_scalar(&mut scalar, 0x00FF_FF00, t10, t01, 9);
+                assert_eq!(batched, scalar, "n={n} t10={t10:#x} t01={t01:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quality_loss_formula() {
+        assert_eq!(KernelDescriptor::IDENTITY.quality_loss, 0.0);
+        assert_eq!(KernelDescriptor::new(0xFFFF, 0, 0).quality_loss, 0.0);
+        // Truncation: t10 == ALWAYS, so exactly popcount/32.
+        assert_eq!(KernelDescriptor::new(0xFFFF, ALWAYS, 0).quality_loss, 0.5);
+        let d = KernelDescriptor::new(0xFFFF, ALWAYS / 2 + 1, 0);
+        assert!(d.quality_loss > 0.25 && d.quality_loss < 0.2500001, "{}", d.quality_loss);
+    }
+
+    #[test]
+    fn kernel_mode_defaults_to_batched() {
+        // CI never sets LORAX_KERNEL for the test run; the scalar path
+        // is exercised end-to-end by the workflow's escape-hatch smoke.
+        if std::env::var("LORAX_KERNEL").is_err() {
+            assert_eq!(kernel_mode(), KernelMode::Batched);
+        }
+    }
+}

@@ -6,9 +6,11 @@
 
 pub mod channel;
 pub mod float_bits;
+pub mod kernel;
 pub mod policy;
 pub mod tuning;
 
 pub use channel::{Channel, ChannelStats, IdentityChannel};
 pub use float_bits::{corrupt_f64_slice, corrupt_word, corrupt_word_fast, mask_for_lsbs};
+pub use kernel::{corrupt_words_batched, kernel_mode, KernelDescriptor, KernelMode, KernelRegime};
 pub use policy::{AppTuning, Policy, PolicyKind, TransferMode};

@@ -9,7 +9,10 @@
 //! three layers compose.
 
 use crate::approx::channel::{packetize, Channel, ChannelStats};
-use crate::approx::float_bits::{corrupt_f32_words, f32_words_to_f64s, f64s_to_f32_words};
+use crate::approx::float_bits::{
+    corrupt_f32_words, corrupt_words_scalar, f32_words_to_f64s, f64s_to_f32_words,
+};
+use crate::approx::kernel::{corrupt_words_batched, kernel_mode, KernelDescriptor, KernelMode};
 use crate::approx::policy::{Policy, TransferMode};
 use crate::topology::clos::NodeId;
 use crate::traffic::packet::PayloadKind;
@@ -28,17 +31,40 @@ pub trait Corruptor {
     /// `t01 / 2^32`, keyed by `(seed, word index)`.
     fn corrupt_words(&mut self, words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32);
 
+    /// Corrupt one transfer through a precomputed [`KernelDescriptor`]
+    /// (regime dispatch already hoisted).  The default forwards to
+    /// [`Corruptor::corrupt_words`] so backends that serialize raw
+    /// (mask, thresholds) — like the AOT/PJRT executor — keep working
+    /// unchanged; the native backend overrides it with the batched
+    /// wide-lane kernel.
+    fn corrupt_transfer(&mut self, words: &mut [u32], desc: &KernelDescriptor, seed: u32) {
+        self.corrupt_words(words, desc.mask, desc.t10, desc.t01, seed);
+    }
+
     /// Backend name for reports ("native", "xla", ...).
     fn name(&self) -> &'static str;
 }
 
-/// In-process corruption via [`corrupt_f32_words`].
+/// In-process corruption: the batched wide-lane kernel by default, or
+/// the per-word scalar oracle under `LORAX_KERNEL=scalar` (byte-identical
+/// by contract; the env escape hatch exists for bisection — see
+/// [`kernel_mode`]).
 #[derive(Default)]
 pub struct NativeCorruptor;
 
 impl Corruptor for NativeCorruptor {
     fn corrupt_words(&mut self, words: &mut [u32], mask: u32, t10: u32, t01: u32, seed: u32) {
-        corrupt_f32_words(words, mask, t10, t01, seed);
+        match kernel_mode() {
+            KernelMode::Batched => corrupt_f32_words(words, mask, t10, t01, seed),
+            KernelMode::Scalar => corrupt_words_scalar(words, mask, t10, t01, seed),
+        }
+    }
+
+    fn corrupt_transfer(&mut self, words: &mut [u32], desc: &KernelDescriptor, seed: u32) {
+        match kernel_mode() {
+            KernelMode::Batched => corrupt_words_batched(words, desc, seed),
+            KernelMode::Scalar => corrupt_words_scalar(words, desc.mask, desc.t10, desc.t01, seed),
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -62,6 +88,11 @@ pub struct PhotonicChannel<'a, C: Corruptor> {
     /// Memoized decisions per (src, dst) cluster pair (§Perf: decisions
     /// are pure, and the dBm math behind them is not free).
     decision_cache: [[Option<super::gwi::Decision>; 8]; 8],
+    /// Memoized corruption kernels mirroring `decision_cache` — one
+    /// descriptor per non-full-power (src, dst) pair, so the per-word
+    /// hot path never re-runs regime dispatch (tentpole of the batched
+    /// kernel rewrite; only filled for transfers that corrupt).
+    kernel_cache: [[Option<KernelDescriptor>; 8]; 8],
 }
 
 impl<'a, C: Corruptor> PhotonicChannel<'a, C> {
@@ -84,6 +115,7 @@ impl<'a, C: Corruptor> PhotonicChannel<'a, C> {
             transfer_index: 0,
             lut_accesses: 0,
             decision_cache: [[None; 8]; 8],
+            kernel_cache: [[None; 8]; 8],
         }
     }
 
@@ -106,7 +138,11 @@ impl<'a, C: Corruptor> PhotonicChannel<'a, C> {
         for s in 0..n {
             for d in 0..n {
                 if s != d {
-                    ch.decision_cache[s][d] = Some(*table.get(s, d));
+                    let dec = *table.get(s, d);
+                    if dec.mode != TransferMode::FullPower {
+                        ch.kernel_cache[s][d] = Some(dec.kernel());
+                    }
+                    ch.decision_cache[s][d] = Some(dec);
                 }
             }
         }
@@ -145,8 +181,11 @@ impl<'a, C: Corruptor> Channel for PhotonicChannel<'a, C> {
         // the SP words, convert back to compute precision.
         let mut words = f64s_to_f32_words(data);
         if decision.mode != TransferMode::FullPower {
-            self.corruptor
-                .corrupt_words(&mut words, decision.mask, decision.t10, decision.t01, seed);
+            // Only corrupting (approximable, non-full-power) transfers
+            // reach this cache, so keying by (src, dst) cluster alone is
+            // sound: the non-approximable path never corrupts at all.
+            let desc = *self.kernel_cache[sc][dc].get_or_insert_with(|| decision.kernel());
+            self.corruptor.corrupt_transfer(&mut words, &desc, seed);
         }
         data.copy_from_slice(&f32_words_to_f64s(&words));
         packetize(

@@ -8,6 +8,7 @@
 //! entirely (truncation), commanding the VCSEL drivers accordingly.
 
 use crate::approx::float_bits::mask_for_lsbs;
+use crate::approx::kernel::KernelDescriptor;
 use crate::approx::policy::{Policy, PolicyKind, TransferMode};
 use crate::phys::params::{Modulation, PhotonicParams};
 use crate::phys::signaling::BitErrorProbs;
@@ -47,6 +48,22 @@ impl Decision {
             t10: prob_to_threshold(probs.p10),
             t01: prob_to_threshold(probs.p01),
             level,
+        }
+    }
+
+    /// Resolve this decision into a ready-to-run batched corruption
+    /// kernel (regime dispatch, masked-bit lists and the quality-loss
+    /// proxy all precomputed — see [`KernelDescriptor`]).
+    ///
+    /// Full-power transfers map to [`KernelDescriptor::IDENTITY`]; for
+    /// every decision the engine produces the descriptor's
+    /// `quality_loss` equals
+    /// [`crate::noc::sim::quality_loss_fraction`] bit-for-bit (pinned
+    /// by `tests/differential_kernels.rs`).
+    pub fn kernel(&self) -> KernelDescriptor {
+        match self.mode {
+            TransferMode::FullPower => KernelDescriptor::IDENTITY,
+            _ => KernelDescriptor::new(self.mask, self.t10, self.t01),
         }
     }
 }
@@ -173,6 +190,43 @@ impl DecisionTable {
     /// The memoized decision for one (src, dst) cluster pair.
     #[inline]
     pub fn get(&self, src_cluster: usize, dst_cluster: usize) -> &Decision {
+        &self.cells[src_cluster * self.n_clusters + dst_cluster]
+    }
+
+    /// Table dimension (clusters per side).
+    pub fn n_clusters(&self) -> usize {
+        self.n_clusters
+    }
+}
+
+/// Dense per-(src, dst)-cluster table of precomputed corruption kernels
+/// — [`DecisionTable`]'s batched-kernel twin.  Built once per (policy,
+/// tuning, modulation) from a decision table (see
+/// [`crate::exec::runner::KernelCache`]) and shared read-only, so the
+/// replay epoch loop and the live channel read hoisted regime dispatch
+/// and quality-loss values instead of re-deriving them per transfer.
+#[derive(Clone, Debug)]
+pub struct KernelTable {
+    n_clusters: usize,
+    cells: Vec<KernelDescriptor>,
+}
+
+impl KernelTable {
+    /// Resolve every cell of `table` through [`Decision::kernel`].
+    pub fn build(table: &DecisionTable) -> KernelTable {
+        let n = table.n_clusters();
+        let mut cells = Vec::with_capacity(n * n);
+        for s in 0..n {
+            for d in 0..n {
+                cells.push(table.get(s, d).kernel());
+            }
+        }
+        KernelTable { n_clusters: n, cells }
+    }
+
+    /// The precomputed kernel for one (src, dst) cluster pair.
+    #[inline]
+    pub fn get(&self, src_cluster: usize, dst_cluster: usize) -> &KernelDescriptor {
         &self.cells[src_cluster * self.n_clusters + dst_cluster]
     }
 
@@ -320,6 +374,27 @@ mod tests {
             for d in 0..8 {
                 let want = if s == d { Decision::FULL } else { e.decide(&p, s, d) };
                 assert_eq!(*t.get(s, d), want, "({s},{d})");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_table_mirrors_decision_table() {
+        let e = engine(Modulation::OOK);
+        let p = lorax_ook(24, 91);
+        let t = DecisionTable::build(&e, &p);
+        let k = KernelTable::build(&t);
+        assert_eq!(k.n_clusters(), t.n_clusters());
+        for s in 0..8 {
+            for d in 0..8 {
+                let dec = t.get(s, d);
+                let desc = k.get(s, d);
+                let want = if dec.mode == TransferMode::FullPower {
+                    (0, 0, 0)
+                } else {
+                    (dec.mask, dec.t10, dec.t01)
+                };
+                assert_eq!((desc.mask, desc.t10, desc.t01), want, "({s},{d})");
             }
         }
     }

@@ -25,7 +25,7 @@ pub mod session;
 pub mod system;
 
 pub use channel::{Corruptor, NativeCorruptor, PhotonicChannel};
-pub use gwi::{Decision, DecisionTable, GwiDecisionEngine};
+pub use gwi::{Decision, DecisionTable, GwiDecisionEngine, KernelTable};
 pub use serve::{query, serve, ServeOptions};
 pub use session::{AppRunReport, LoraxSession};
 pub use system::LoraxSystem;

@@ -7,7 +7,9 @@
 //!   that only ever runs OOK policies never pays for the PAM4 waveguide
 //!   calibration (and vice versa);
 //! * the [`DecisionTableCache`], memoizing GWI decision tables per
-//!   (modulation, policy kind, tuning);
+//!   (modulation, policy kind, tuning), and its batched-corruption twin
+//!   the [`KernelCache`], memoizing the precomputed
+//!   [`KernelTable`] each decision table resolves to;
 //! * the [`WorkloadCache`], memoizing synthesized datasets and their
 //!   golden outputs per (app, seed, scale) so parallel sweeps stop
 //!   re-synthesizing inputs per scenario;
@@ -38,7 +40,7 @@ use crate::approx::policy::{Policy, PolicyKind};
 use crate::apps::{output_error_pct, AppId};
 use crate::config::SystemConfig;
 use crate::exec::fabric::{SweepFabric, SweepReport};
-use crate::exec::runner::{trace_replay_shard_size, DecisionTableCache, SweepRunner};
+use crate::exec::runner::{trace_replay_shard_size, DecisionTableCache, KernelCache, SweepRunner};
 use crate::exec::spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 use crate::exec::trace_buf::TraceBuffer;
 use crate::exec::trace_file::{fnv1a64, TraceFile, TraceFileWriter};
@@ -52,7 +54,7 @@ use crate::traffic::synth::{generate, SynthConfig};
 use crate::util::bench::json_f64;
 
 use super::channel::{Corruptor, NativeCorruptor, PhotonicChannel};
-use super::gwi::{DecisionTable, GwiDecisionEngine};
+use super::gwi::{DecisionTable, GwiDecisionEngine, KernelTable};
 
 /// Results of one experiment run.
 #[derive(Clone, Debug)]
@@ -129,6 +131,7 @@ pub struct LoraxSession {
     /// around inline).
     engines: [OnceLock<Box<GwiDecisionEngine>>; Modulation::N_KNOWN],
     tables: DecisionTableCache,
+    kernels: KernelCache,
     workloads: WorkloadCache,
     traces: TraceCache,
 }
@@ -147,6 +150,7 @@ impl LoraxSession {
             topo: spec.build(),
             engines: Default::default(),
             tables: DecisionTableCache::new(),
+            kernels: KernelCache::new(),
             workloads: WorkloadCache::new(),
             traces: TraceCache::new(),
         }
@@ -199,6 +203,14 @@ impl LoraxSession {
         self.tables.get_or_build(self.engine(m), policy)
     }
 
+    /// The memoized batched-corruption [`KernelTable`] for `policy` on
+    /// the `m` engine — resolved from the matching decision table, built
+    /// at most once per (modulation, kind, tuning).
+    pub fn kernel_table(&self, m: Modulation, policy: &Policy) -> Arc<KernelTable> {
+        let table = self.decision_table(m, policy);
+        self.kernels.get_or_build(m, policy, &table)
+    }
+
     /// The memoized workload for `app` at this session's (seed, scale).
     pub fn workload(&self, app: AppId) -> Arc<CachedWorkload> {
         self.workloads.get_or_synth(app, self.cfg.seed, self.cfg.scale)
@@ -212,6 +224,11 @@ impl LoraxSession {
     /// The session's memoized decision tables.
     pub fn decision_tables(&self) -> &DecisionTableCache {
         &self.tables
+    }
+
+    /// The session's memoized batched-corruption kernel tables.
+    pub fn kernel_tables(&self) -> &KernelCache {
+        &self.kernels
     }
 
     /// The session's packed-trace cache.
@@ -260,6 +277,7 @@ impl LoraxSession {
         let policy = spec.resolved_policy();
         let m = spec.resolved_modulation();
         let table = self.decision_table(m, &policy);
+        let kernels = self.kernel_table(m, &policy);
         let engine = self.engine(m);
         let mut hook = AdaptController::new(self, adapt, policy, m);
         let report = match &spec.traffic {
@@ -282,7 +300,8 @@ impl LoraxSession {
                 let buf = TraceBuffer::from_records(&self.topo, &ch.take_trace());
                 let mut sim = Simulator::new(engine);
                 sim.energy_params = self.cfg.energy.clone();
-                let sim_report = sim.replay_view_hooked(buf.view(), &policy, &table, &mut hook);
+                let sim_report =
+                    sim.replay_view_hooked(buf.view(), &policy, &table, Some(&kernels), &mut hook);
                 AppRunReport {
                     app: spec.app.name().to_string(),
                     policy,
@@ -298,7 +317,8 @@ impl LoraxSession {
                 });
                 let mut sim = Simulator::new(engine);
                 sim.energy_params = self.cfg.energy.clone();
-                let sim_report = sim.replay_view_hooked(file.view(), &policy, &table, &mut hook);
+                let sim_report =
+                    sim.replay_view_hooked(file.view(), &policy, &table, Some(&kernels), &mut hook);
                 AppRunReport {
                     app: spec.app.name().to_string(),
                     policy,

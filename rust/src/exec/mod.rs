@@ -14,7 +14,9 @@
 //! * [`runner`] — [`SweepRunner`], an order-preserving scoped-thread
 //!   executor (results are independent of thread count), plus the
 //!   [`runner::DecisionTableCache`] that memoizes GWI decision tables
-//!   per (modulation, policy kind, tuning);
+//!   per (modulation, policy kind, tuning) and the [`runner::KernelCache`]
+//!   that memoizes their batched-corruption [`crate::coordinator::KernelTable`]s
+//!   under the same key;
 //! * [`workload`] — [`workload::WorkloadCache`], memoizing synthesized
 //!   datasets and their golden outputs per (app, seed, scale) so sweeps
 //!   pay dataset synthesis once per app instead of once per scenario;
@@ -59,7 +61,9 @@ pub use fabric::{
     SweepFabric, SweepReport,
 };
 pub use grid::{synth_stress_grid, AppScenario, SweepGrid, SynthScenario};
-pub use runner::{shard_cells, trace_replay_shard_size, DecisionTableCache, Shard, SweepRunner};
+pub use runner::{
+    shard_cells, trace_replay_shard_size, DecisionTableCache, KernelCache, Shard, SweepRunner,
+};
 pub use spec::{ExperimentSpec, TopologySpec, TrafficSpec};
 pub use trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
 pub use trace_file::{TraceFile, TraceFileError, TraceFileWriter};

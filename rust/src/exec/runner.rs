@@ -26,7 +26,7 @@ use crate::approx::tuning::{SensitivitySurface, SweepPoint};
 use crate::apps::{output_error_pct, AppId};
 use crate::config::SystemConfig;
 use crate::coordinator::channel::{NativeCorruptor, PhotonicChannel};
-use crate::coordinator::gwi::{DecisionTable, GwiDecisionEngine};
+use crate::coordinator::gwi::{DecisionTable, GwiDecisionEngine, KernelTable};
 use crate::coordinator::session::{AppRunReport, LoraxSession};
 use crate::noc::sim::SimReport;
 use crate::phys::params::{Modulation, PhotonicParams};
@@ -140,6 +140,56 @@ impl DecisionTableCache {
     }
 
     /// True when no table has been built yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Memoized [`KernelTable`]s — the batched-corruption twin of
+/// [`DecisionTableCache`], living right next to it in the session.
+///
+/// Keyed the same way, (modulation, policy kind, tuning), because a
+/// kernel table is a pure function of its decision table.  No owner
+/// guard of its own: every call passes the decision table the caller
+/// already fetched through [`DecisionTableCache::get_or_build`], which
+/// enforces the (topology, params) identity.
+#[derive(Default)]
+pub struct KernelCache {
+    map: Mutex<HashMap<(Modulation, PolicyKind, AppTuning), Arc<KernelTable>>>,
+}
+
+impl KernelCache {
+    /// An empty cache.
+    pub fn new() -> KernelCache {
+        KernelCache::default()
+    }
+
+    /// Fetch the kernel table for `policy` at modulation `m`, resolving
+    /// it from `decisions` at most once per distinct key.
+    pub fn get_or_build(
+        &self,
+        m: Modulation,
+        policy: &Policy,
+        decisions: &DecisionTable,
+    ) -> Arc<KernelTable> {
+        let key = (m, policy.kind, policy.tuning);
+        if let Some(t) = self.map.lock().unwrap().get(&key) {
+            crate::metric_counter!("session.kernels.hits").inc();
+            return Arc::clone(t);
+        }
+        // Built outside the lock: duplicate work on a race is benign
+        // (kernel tables are pure) and the first insert wins.
+        crate::metric_counter!("session.kernels.misses").inc();
+        let built = Arc::new(KernelTable::build(decisions));
+        Arc::clone(self.map.lock().unwrap().entry(key).or_insert(built))
+    }
+
+    /// Distinct kernel tables built so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when no kernel table has been built yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -21,7 +21,7 @@
 use std::sync::Arc;
 
 use crate::approx::policy::{Policy, TransferMode};
-use crate::coordinator::gwi::{Decision, DecisionTable, GwiDecisionEngine};
+use crate::coordinator::gwi::{Decision, DecisionTable, GwiDecisionEngine, KernelTable};
 use crate::energy::breakdown::EnergyBreakdown;
 use crate::energy::params::EnergyParams;
 use crate::exec::trace_buf::{TraceBuffer, TraceView, FLAG_APPROX, FLAG_PHOTONIC};
@@ -142,6 +142,10 @@ pub struct ReplayTuning<'e> {
     pub policy: Policy,
     /// Decision table matching (engine, policy).
     pub decisions: Arc<DecisionTable>,
+    /// Precomputed corruption kernels matching `decisions` (swapped
+    /// coherently with the table so epoch quality-loss accounting stays
+    /// a table lookup after a retune).
+    pub kernels: Arc<KernelTable>,
 }
 
 /// Epoch-boundary callback driving mid-replay retuning — the monitor
@@ -279,7 +283,7 @@ impl<'a> Simulator<'a> {
         policy: &Policy,
         decisions: &DecisionTable,
     ) -> SimReport {
-        self.replay_view_hooked(buf, policy, decisions, &mut StaticEpochs)
+        self.replay_view_hooked(buf, policy, decisions, None, &mut StaticEpochs)
     }
 
     /// [`Simulator::replay_view`] with an [`EpochHook`] observing (and
@@ -291,16 +295,26 @@ impl<'a> Simulator<'a> {
     /// used for all later packets; the queueing state (per-waveguide
     /// next-free cycles) carries across untouched, so a modulation
     /// switch models in-flight reconfiguration, not a restart.
+    ///
+    /// `kernels` is the precomputed [`KernelTable`] matching
+    /// `decisions`: when present, epoch quality-loss accounting reads
+    /// the hoisted per-cell `quality_loss` instead of recomputing
+    /// [`quality_loss_fraction`] per packet (identical values — pinned
+    /// by tests); when `None`, the fallback computes it inline.
     pub fn replay_view_hooked<'e, H: EpochHook<'e>>(
         &self,
         buf: TraceView<'_>,
         policy: &Policy,
         decisions: &DecisionTable,
+        kernels: Option<&KernelTable>,
         hook: &mut H,
     ) -> SimReport {
         let n_clusters = self.engine.topo.n_clusters;
         assert!(n_clusters <= MAX_CLUSTERS, "topology too large for replay state");
         assert!(decisions.n_clusters() >= n_clusters, "decision table too small");
+        if let Some(k) = kernels {
+            assert!(k.n_clusters() >= n_clusters, "kernel table too small");
+        }
         // One timer per replay call — never per-packet — so telemetry
         // cost is amortized over the whole hot loop.
         let _replay_span = crate::metric_histogram!("replay.wall_us").span();
@@ -320,6 +334,7 @@ impl<'a> Simulator<'a> {
         let mut cur_engine = self.engine;
         let mut cur_policy = *policy;
         let mut cur_table: Option<Arc<DecisionTable>> = None;
+        let mut cur_kernels: Option<Arc<KernelTable>> = None;
         let mut loss_aware = cur_policy.loss_aware();
 
         // Epoch accounting (entirely skipped when epoch_len == 0).
@@ -348,6 +363,7 @@ impl<'a> Simulator<'a> {
                         cur_engine = t.engine;
                         cur_policy = t.policy;
                         cur_table = Some(t.decisions);
+                        cur_kernels = Some(t.kernels);
                         loss_aware = cur_policy.loss_aware();
                     }
                     ep = EpochCounters::default();
@@ -403,7 +419,13 @@ impl<'a> Simulator<'a> {
                     ep.occupancy += occupancy;
                     if approximable {
                         ep.approximable += 1;
-                        ep.q_sum += quality_loss_fraction(&decision);
+                        // Hoisted quality loss: the kernel table carries
+                        // the precomputed per-cell value; the fallback
+                        // (no table supplied) computes it inline.
+                        ep.q_sum += match cur_kernels.as_deref().or(kernels) {
+                            Some(k) => k.get(sc, dc).quality_loss,
+                            None => quality_loss_fraction(&decision),
+                        };
                         match decision.mode {
                             TransferMode::Reduced { .. } => ep.reduced += 1,
                             TransferMode::Truncated => ep.truncated += 1,
@@ -647,7 +669,7 @@ mod tests {
         let table = DecisionTable::build(&e, &p);
         let a = sim.replay_view(buf.view(), &p, &table);
         let mut hook = MonitorHook { epoch_cycles: 500, seen: Vec::new() };
-        let b = sim.replay_view_hooked(buf.view(), &p, &table, &mut hook);
+        let b = sim.replay_view_hooked(buf.view(), &p, &table, None, &mut hook);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.energy.total_pj(), b.energy.total_pj());
         assert_eq!(a.latency_p95, b.latency_p95);
@@ -676,10 +698,36 @@ mod tests {
         let table = DecisionTable::build(&e, &p);
         let a = sim.replay_view(buf.view(), &p, &table);
         let mut hook = MonitorHook { epoch_cycles: 0, seen: Vec::new() };
-        let b = sim.replay_view_hooked(buf.view(), &p, &table, &mut hook);
+        let b = sim.replay_view_hooked(buf.view(), &p, &table, None, &mut hook);
         assert!(hook.seen.is_empty(), "zero epoch length must never fire the hook");
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+    }
+
+    #[test]
+    fn kernel_table_epoch_accounting_matches_fallback() {
+        // The hoisted per-cell quality_loss must reproduce the inline
+        // quality_loss_fraction path bit-for-bit, epoch by epoch.
+        let e = engine(Modulation::OOK);
+        let sim = Simulator::new(&e);
+        let t = trace();
+        let p = Policy::new(PolicyKind::LORAX_OOK, "blackscholes");
+        let buf = TraceBuffer::from_records(&e.topo, &t);
+        let table = DecisionTable::build(&e, &p);
+        let kernels = KernelTable::build(&table);
+        let mut inline_hook = MonitorHook { epoch_cycles: 500, seen: Vec::new() };
+        let a = sim.replay_view_hooked(buf.view(), &p, &table, None, &mut inline_hook);
+        let mut hoisted_hook = MonitorHook { epoch_cycles: 500, seen: Vec::new() };
+        let b = sim.replay_view_hooked(buf.view(), &p, &table, Some(&kernels), &mut hoisted_hook);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+        assert_eq!(inline_hook.seen.len(), hoisted_hook.seen.len());
+        let mut saw_nonzero = false;
+        for (x, y) in inline_hook.seen.iter().zip(hoisted_hook.seen.iter()) {
+            assert_eq!(x.quality_loss_pct, y.quality_loss_pct, "epoch {}", x.epoch);
+            saw_nonzero |= x.quality_loss_pct > 0.0;
+        }
+        assert!(saw_nonzero, "trace never exercised a lossy decision");
     }
 
     #[test]

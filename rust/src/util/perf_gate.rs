@@ -6,9 +6,11 @@
 //! module re-reads them with the registry-free [`super::flatjson`]
 //! parser and compares a small fixed set of gated keys:
 //!
-//! * `BENCH_replay.json` — `rate_pkts_per_s` (higher is better) and
+//! * `BENCH_replay.json` — `rate_pkts_per_s` (higher is better),
 //!   `telemetry_overhead_pct` (absolute ceiling: the telemetry layer's
-//!   contract is < 2% replay overhead with metrics on);
+//!   contract is < 2% replay overhead with metrics on) and
+//!   `kernel_words_per_s` (higher is better: the batched corruption
+//!   kernel's throughput on the stochastic 16-bit-mask regime);
 //! * `BENCH_sweep_engine.json` — `parallel_rate_per_s` (higher is
 //!   better).
 //!
@@ -58,6 +60,11 @@ pub fn default_checks() -> Vec<GateCheck> {
             file: "BENCH_replay.json",
             key: "telemetry_overhead_pct",
             kind: CheckKind::AbsoluteMax(2.0),
+        },
+        GateCheck {
+            file: "BENCH_replay.json",
+            key: "kernel_words_per_s",
+            kind: CheckKind::HigherBetter,
         },
         GateCheck {
             file: "BENCH_sweep_engine.json",
@@ -252,8 +259,8 @@ mod tests {
         fs::write(dir.join(file), body).unwrap();
     }
 
-    const REPLAY_OK: &str =
-        "{\"name\":\"replay\",\"rate_pkts_per_s\":1000000.0,\"telemetry_overhead_pct\":0.5}";
+    const REPLAY_OK: &str = "{\"name\":\"replay\",\"rate_pkts_per_s\":1000000.0,\
+         \"telemetry_overhead_pct\":0.5,\"kernel_words_per_s\":50000000.0}";
     const SWEEP_OK: &str = "{\"name\":\"sweep_engine\",\"parallel_rate_per_s\":4.0}";
 
     #[test]
@@ -266,20 +273,23 @@ mod tests {
         write(
             &fresh,
             "BENCH_replay.json",
-            "{\"rate_pkts_per_s\":600000.0,\"telemetry_overhead_pct\":1.9}",
+            "{\"rate_pkts_per_s\":600000.0,\"telemetry_overhead_pct\":1.9,\
+             \"kernel_words_per_s\":30000000.0}",
         );
         write(&fresh, "BENCH_sweep_engine.json", "{\"parallel_rate_per_s\":3.9}");
         let r = run_gate(&fresh, &base, 0.5, &default_checks()).unwrap();
         assert_eq!(r.failures, 0, "{:?}", r.lines);
-        assert_eq!(r.checked, 3);
-        // 60% slower: beyond it.  Overhead ceiling breached too.
+        assert_eq!(r.checked, 4);
+        // 60% slower: beyond it.  Overhead ceiling breached too, and the
+        // kernel rate regressed past the floor.
         write(
             &fresh,
             "BENCH_replay.json",
-            "{\"rate_pkts_per_s\":400000.0,\"telemetry_overhead_pct\":2.5}",
+            "{\"rate_pkts_per_s\":400000.0,\"telemetry_overhead_pct\":2.5,\
+             \"kernel_words_per_s\":20000000.0}",
         );
         let r = run_gate(&fresh, &base, 0.5, &default_checks()).unwrap();
-        assert_eq!(r.failures, 2, "{:?}", r.lines);
+        assert_eq!(r.failures, 3, "{:?}", r.lines);
         assert!(r.lines.iter().any(|l| l.starts_with("FAIL") && l.contains("regressed")));
         assert!(r.lines.iter().any(|l| l.contains("ceiling")));
     }
@@ -312,7 +322,7 @@ mod tests {
         assert_eq!(copied.len(), 2);
         let r = run_gate(&fresh, &base, 0.0, &default_checks()).unwrap();
         assert_eq!(r.failures, 0, "{:?}", r.lines);
-        assert_eq!(r.checked, 3);
+        assert_eq!(r.checked, 4);
         // Recording with a gated record missing refuses.
         fs::remove_file(fresh.join("BENCH_replay.json")).unwrap();
         assert!(record_baseline(&fresh, &base, &default_checks()).is_err());

@@ -1,0 +1,252 @@
+//! Differential harness for the batched wide-lane corruption kernel.
+//!
+//! Pins `approx::kernel` byte-identical to the per-word scalar oracle
+//! (`corrupt_word` / `corrupt_words_scalar`) over a seeded corpus that
+//! spans every kernel the shipped stack can produce: all
+//! `Modulation::KNOWN` fabrics × the paper's five policies × a tuning
+//! grid, driven over edge payloads (NaN / ±Inf / subnormal / ±0) and
+//! ragged transfer lengths — plus the quality-loss accounting contract:
+//! every descriptor's precomputed `quality_loss` must equal
+//! `noc::sim::quality_loss_fraction` bit-for-bit, so the hoisted epoch
+//! accounting cannot drift from the per-decision formula.
+//!
+//! A mismatch here means the batched path changed observable corruption
+//! (or its accounting) — fix the kernel, never the oracle.
+
+use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, corrupt_words_scalar};
+use lorax::approx::kernel::{corrupt_words_batched, KernelDescriptor, KernelRegime};
+use lorax::approx::policy::{AppTuning, Policy, PolicyKind, TransferMode};
+use lorax::coordinator::{DecisionTable, GwiDecisionEngine, KernelTable};
+use lorax::noc::sim::quality_loss_fraction;
+use lorax::phys::params::{Modulation, PhotonicParams};
+use lorax::topology::clos::ClosTopology;
+use lorax::util::rng::{make_word_key, ALWAYS};
+use lorax::util::Rng;
+
+/// IEEE-754 single-precision edge words: quiet/signaling NaN, ±Inf, the
+/// smallest subnormal, ±0 and the largest finite value.  Corruption is
+/// pure bit manipulation, so these must round-trip like any other word.
+const EDGE_WORDS: [u32; 8] = [
+    0x7FC0_0000, // quiet NaN
+    0x7F80_0001, // signaling NaN
+    0x7F80_0000, // +Inf
+    0xFF80_0000, // -Inf
+    0x0000_0001, // smallest subnormal
+    0x0000_0000, // +0
+    0x8000_0000, // -0
+    0x7F7F_FFFF, // largest finite
+];
+
+/// The tuning grid the corpus sweeps: the paper's LSB axis endpoints
+/// plus the interior points the Fig.-6 sensitivity sweeps use.
+const BITS: [u32; 4] = [0, 4, 16, 32];
+const REDUCTIONS: [u32; 5] = [0, 40, 80, 91, 100];
+
+fn grid_policies() -> Vec<Policy> {
+    let mut out = Vec::new();
+    for kind in PolicyKind::ALL {
+        for bits in BITS {
+            for red in REDUCTIONS {
+                out.push(Policy::with_tuning(
+                    kind,
+                    AppTuning { approx_bits: bits, power_reduction_pct: red, trunc_bits: bits },
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn regime_rank(mask: u32, t10: u32, t01: u32) -> u8 {
+    match KernelDescriptor::new(mask, t10, t01).regime {
+        KernelRegime::Identity => 0,
+        KernelRegime::Truncate => 1,
+        KernelRegime::Invert => 2,
+        KernelRegime::ReducedNoSet => 3,
+        KernelRegime::Stochastic => 4,
+    }
+}
+
+/// The (mask, t10, t01) corpus: every triple the grid's decision tables
+/// produce across all known fabrics, stratified to a bounded set —
+/// grouped by (mask, regime), each group keeping up to 8 evenly-spaced
+/// representatives of its sorted threshold spread.  Full mask and
+/// regime coverage survives; the cap keeps the harness fast in debug
+/// builds (the thresholds vary per (src, dst) pair, so the raw set runs
+/// to thousands of near-identical triples).
+fn corpus_triples() -> Vec<(u32, u32, u32)> {
+    let mut all: Vec<(u32, u32, u32)> = Vec::new();
+    for m in Modulation::KNOWN {
+        let engine =
+            GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), m);
+        for policy in grid_policies() {
+            let table = DecisionTable::build(&engine, &policy);
+            for s in 0..table.n_clusters() {
+                for d in 0..table.n_clusters() {
+                    let dec = table.get(s, d);
+                    all.push((dec.mask, dec.t10, dec.t01));
+                }
+            }
+        }
+    }
+    all.sort_unstable();
+    all.dedup();
+    let mut groups: std::collections::BTreeMap<(u32, u8), Vec<(u32, u32, u32)>> =
+        std::collections::BTreeMap::new();
+    for t in all {
+        groups.entry((t.0, regime_rank(t.0, t.1, t.2))).or_default().push(t);
+    }
+    let mut out = Vec::new();
+    for group in groups.values() {
+        let take = group.len().min(8);
+        for i in 0..take {
+            out.push(group[i * group.len() / take]);
+        }
+    }
+    out
+}
+
+/// A deterministic payload mixing every edge word into seeded random
+/// words, long enough to slice ragged prefixes from.
+fn corpus_payload(len: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|i| if i % 7 == 0 { EDGE_WORDS[(i / 7) % EDGE_WORDS.len()] } else { rng.next_u32() })
+        .collect()
+}
+
+fn assert_batched_matches_scalar(mask: u32, t10: u32, t01: u32, payload: &[u32], seed: u32) {
+    let desc = KernelDescriptor::new(mask, t10, t01);
+    let mut batched = payload.to_vec();
+    let mut dispatched = payload.to_vec();
+    let mut scalar = payload.to_vec();
+    corrupt_words_batched(&mut batched, &desc, seed);
+    corrupt_f32_words(&mut dispatched, mask, t10, t01, seed);
+    corrupt_words_scalar(&mut scalar, mask, t10, t01, seed);
+    assert_eq!(
+        batched, scalar,
+        "batched != scalar: n={} mask={mask:#x} t10={t10:#x} t01={t01:#x} seed={seed}",
+        payload.len()
+    );
+    assert_eq!(
+        dispatched, scalar,
+        "corrupt_f32_words != scalar: n={} mask={mask:#x} t10={t10:#x} t01={t01:#x}",
+        payload.len()
+    );
+}
+
+#[test]
+fn engine_kernels_byte_identical_over_ragged_corpus() {
+    // Every kernel the decision engines can emit, over every ragged
+    // length 0..=67 (crossing the u64-pair lane boundary at every
+    // parity) of the edge-word corpus.
+    let triples = corpus_triples();
+    assert!(triples.len() >= 8, "corpus collapsed: {triples:?}");
+    let payload = corpus_payload(67, 0x1D1F);
+    for &(mask, t10, t01) in &triples {
+        for n in 0..=payload.len() {
+            assert_batched_matches_scalar(mask, t10, t01, &payload[..n], 0xC0FF_EE00 | n as u32);
+        }
+    }
+}
+
+#[test]
+fn engine_kernels_byte_identical_across_chunk_boundaries() {
+    // The stochastic path runs 512-word chunks: pin lengths straddling
+    // one and two chunk boundaries for every corpus triple.
+    let triples = corpus_triples();
+    for n in [511usize, 512, 513, 1025] {
+        let payload = corpus_payload(n, n as u64);
+        for &(mask, t10, t01) in &triples {
+            assert_batched_matches_scalar(mask, t10, t01, &payload, 7);
+        }
+    }
+}
+
+#[test]
+fn synthetic_regimes_byte_identical_on_edge_payloads() {
+    // Hand-picked triples forcing each regime, including ones no engine
+    // emits today (Invert, partial masks with both thresholds live).
+    let cases: [(u32, u32, u32, KernelRegime); 7] = [
+        (0, ALWAYS, ALWAYS, KernelRegime::Identity),
+        (0x0000_FFFF, 0, 0, KernelRegime::Identity),
+        (0x00FF_FF00, ALWAYS, 0, KernelRegime::Truncate),
+        (0xFFFF_FFFF, ALWAYS, ALWAYS, KernelRegime::Invert),
+        (0x0000_FFFF, 0x2000_0000, 0, KernelRegime::ReducedNoSet),
+        (0x0000_FFFF, 0x2000_0000, 0x0010_0000, KernelRegime::Stochastic),
+        (0xAAAA_5555, ALWAYS - 1, ALWAYS, KernelRegime::Stochastic),
+    ];
+    for &(mask, t10, t01, regime) in &cases {
+        assert_eq!(KernelDescriptor::new(mask, t10, t01).regime, regime, "{mask:#x}");
+        for n in [0usize, 1, 2, 3, EDGE_WORDS.len(), 65] {
+            let payload = corpus_payload(n, 99);
+            assert_batched_matches_scalar(mask, t10, t01, &payload, 0x5EED);
+        }
+        // The pure edge-word payload, verbatim.
+        assert_batched_matches_scalar(mask, t10, t01, &EDGE_WORDS, 0x5EED);
+    }
+}
+
+#[test]
+fn empty_and_single_word_transfers() {
+    // The degenerate transfers every `corrupt_f32_words` caller can
+    // produce (empty float payloads, single-value sends) — explicit for
+    // each regime rather than relying on the random corpus to hit them.
+    for (mask, t10, t01) in [
+        (0x0000_FFFF, 0, 0),
+        (0x00FF_FF00, ALWAYS, 0),
+        (0xFFFF_FFFF, ALWAYS, ALWAYS),
+        (0x0000_FFFF, 0x2000_0000, 0),
+        (0x0000_FFFF, 0x2000_0000, 0x0010_0000),
+    ] {
+        let desc = KernelDescriptor::new(mask, t10, t01);
+        let mut empty: [u32; 0] = [];
+        corrupt_words_batched(&mut empty, &desc, 3);
+        corrupt_f32_words(&mut empty, mask, t10, t01, 3);
+        for w in EDGE_WORDS {
+            let mut one = [w];
+            corrupt_words_batched(&mut one, &desc, 3);
+            assert_eq!(
+                one[0],
+                corrupt_word(w, mask, t10, t01, make_word_key(3, 0)),
+                "single-word transfer diverged: w={w:#x} mask={mask:#x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quality_loss_accounting_is_bit_identical() {
+    // The hoisted epoch accounting reads KernelDescriptor::quality_loss;
+    // the unhoisted path computes quality_loss_fraction(decision).  They
+    // must agree to the last bit for every decision every engine in the
+    // corpus produces, through both Decision::kernel() and the dense
+    // KernelTable the replay actually consumes.
+    let mut checked = 0usize;
+    for m in Modulation::KNOWN {
+        let engine =
+            GwiDecisionEngine::new(ClosTopology::default_64core(), PhotonicParams::default(), m);
+        for policy in grid_policies() {
+            let table = DecisionTable::build(&engine, &policy);
+            let kernels = KernelTable::build(&table);
+            for s in 0..table.n_clusters() {
+                for d in 0..table.n_clusters() {
+                    let dec = table.get(s, d);
+                    let want = quality_loss_fraction(dec);
+                    let direct = dec.kernel().quality_loss;
+                    let cached = kernels.get(s, d).quality_loss;
+                    assert_eq!(
+                        direct.to_bits(),
+                        want.to_bits(),
+                        "{m} {policy:?} ({s},{d}): kernel {direct} vs fraction {want}"
+                    );
+                    assert_eq!(cached.to_bits(), want.to_bits(), "{m} {policy:?} ({s},{d})");
+                    if dec.mode != TransferMode::FullPower {
+                        checked += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked > 1000, "corpus too small: only {checked} corrupting decisions");
+}

@@ -2,7 +2,10 @@
 //! `util::proptest`).  Replay a failing case with
 //! `LORAX_PROPTEST_SEED=<seed> cargo test --test properties`.
 
-use lorax::approx::float_bits::{corrupt_f32_words, corrupt_word, corrupt_word_fast, mask_for_lsbs};
+use lorax::approx::float_bits::{
+    corrupt_f32_words, corrupt_word, corrupt_word_fast, corrupt_words_scalar, mask_for_lsbs,
+};
+use lorax::approx::kernel::{corrupt_words_batched, KernelDescriptor};
 use lorax::approx::policy::{AppTuning, Policy, PolicyKind, TransferMode};
 use lorax::apps::AppId;
 use lorax::coordinator::GwiDecisionEngine;
@@ -54,6 +57,53 @@ fn prop_corrupt_word_fast_matches_reference() {
             corrupt_word_fast(w, mask, t10, t01, key),
             corrupt_word(w, mask, t10, t01, key),
             "w={w:#x} mask={mask:#x} t10={t10:#x} t01={t01:#x}"
+        );
+    });
+}
+
+#[test]
+fn prop_batched_kernel_differential_with_shrinking() {
+    // Fuzz-style differential: random (mask, thresholds, transfer)
+    // cases through the batched wide-lane kernel vs the per-word scalar
+    // oracle.  On divergence, shrink the transfer by halving (RNG keys
+    // come from absolute word indices, so every prefix is itself a
+    // valid transfer; failure need not be monotone in length, so halve
+    // only while the half still fails) and report the minimal failing
+    // prefix plus the first mismatching word index.
+    check("batched-kernel-differential", 96, |g| {
+        let mask = match g.usize(0, 3) {
+            0 => mask_for_lsbs(g.usize(0, 32) as u32),
+            1 => g.u32(),
+            2 => 0,
+            _ => u32::MAX,
+        };
+        let random_t = g.u32();
+        let cands = [0u32, 1, 0x0010_0000, 0x2000_0000, ALWAYS - 1, ALWAYS, random_t];
+        let t10 = *g.choose(&cands);
+        let t01 = *g.choose(&cands);
+        let seed = g.u32();
+        let n = g.usize(0, 1400); // crosses the 512-word chunk boundary
+        let words: Vec<u32> = g.vec(n, |g| g.u32());
+        let first_mismatch = |len: usize| -> Option<usize> {
+            let desc = KernelDescriptor::new(mask, t10, t01);
+            let mut batched = words[..len].to_vec();
+            let mut scalar = words[..len].to_vec();
+            corrupt_words_batched(&mut batched, &desc, seed);
+            corrupt_words_scalar(&mut scalar, mask, t10, t01, seed);
+            batched.iter().zip(scalar.iter()).position(|(b, s)| b != s)
+        };
+        if first_mismatch(n).is_none() {
+            return;
+        }
+        let mut fail_len = n;
+        while fail_len > 1 && first_mismatch(fail_len / 2).is_some() {
+            fail_len /= 2;
+        }
+        let at = first_mismatch(fail_len).expect("shrunk prefix stopped failing");
+        panic!(
+            "batched kernel diverged from the scalar oracle: mask={mask:#x} t10={t10:#x} \
+             t01={t01:#x} seed={seed} n={n}; minimal failing prefix len={fail_len}, \
+             first mismatch at word {at}"
         );
     });
 }
